@@ -1,0 +1,47 @@
+//! Quickstart: partition a model, inspect the window-size sweep, and run
+//! a 10-second multi-DNN simulation under all three schedulers.
+//!
+//!     cargo run --release --example quickstart
+
+use adms::analyzer;
+use adms::experiments::common::{run_framework, Framework};
+use adms::metrics::{comparison_table, fps_table};
+use adms::sim::{App, SimConfig};
+use adms::soc::dimensity9000;
+use adms::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let soc = dimensity9000();
+
+    // 1. Partition a model and look at its unit subgraphs.
+    let model = zoo::deeplab_v3();
+    println!("== partitioning {} on {} ==", model.name, soc.device);
+    for ws in [1, 5, 10] {
+        let p = analyzer::partition(&model, &soc, ws);
+        println!(
+            "  ws={ws:2}: {:3} units, {:4} merged candidates, {:4} total subgraphs",
+            p.units.len(),
+            p.merged_candidates,
+            p.total_subgraphs
+        );
+    }
+    let (best, _) = analyzer::tune_window_size(&model, &soc, 12);
+    println!("  tuned window size: {best}");
+
+    // 2. Serve three concurrent models for 10 simulated seconds.
+    let apps = vec![
+        App::closed_loop("mobilenet_v2"),
+        App::closed_loop("east"),
+        App::with_slo("arcface_mobile", 30.0),
+    ];
+    let cfg = SimConfig { duration_ms: 10_000.0, ..Default::default() };
+    println!("\n== 10 s simulation: MobileNetV2 + East + ArcFace ==");
+    let reports: Vec<_> = Framework::ALL
+        .iter()
+        .map(|&fw| run_framework(&soc, fw, apps.clone(), cfg.clone()))
+        .collect();
+    let refs: Vec<&_> = reports.iter().collect();
+    println!("{}", fps_table("Per-model FPS", &refs).render());
+    println!("{}", comparison_table("Summary", &refs).render());
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! The paper's ROS scenario (§4.4): MobileNetV2 + EfficientNet +
+//! InceptionV4 classifying a continuous video stream, with SLOs attached,
+//! across all three frameworks on both evaluation devices.
+//!
+//!     cargo run --release --example ros_workload
+
+use adms::experiments::common::{run_framework, Framework};
+use adms::metrics::{comparison_table, fps_table};
+use adms::sim::{App, SimConfig};
+use adms::soc::soc_by_name;
+
+fn main() -> anyhow::Result<()> {
+    for soc_name in ["dimensity9000", "kirin970"] {
+        let soc = soc_by_name(soc_name).unwrap();
+        println!("==== ROS on {} ====", soc.device);
+        let apps = vec![
+            App::with_slo("mobilenet_v2", 50.0),
+            App::with_slo("efficientnet4", 200.0),
+            App::with_slo("inception_v4", 400.0),
+        ];
+        let cfg = SimConfig { duration_ms: 30_000.0, ..Default::default() };
+        let reports: Vec<_> = Framework::ALL
+            .iter()
+            .map(|&fw| run_framework(&soc, fw, apps.clone(), cfg.clone()))
+            .collect();
+        let refs: Vec<&_> = reports.iter().collect();
+        println!("{}", fps_table("Per-model FPS", &refs).render());
+        println!("{}", comparison_table("Summary", &refs).render());
+        for r in &reports {
+            let slos: Vec<String> = r
+                .sessions
+                .iter()
+                .map(|s| {
+                    format!(
+                        "{} {:.1}%",
+                        s.model,
+                        100.0 * s.slo_satisfaction.unwrap_or(0.0)
+                    )
+                })
+                .collect();
+            println!("{:>8} SLO satisfaction: {}", r.scheduler, slos.join(", "));
+        }
+        println!();
+    }
+    Ok(())
+}

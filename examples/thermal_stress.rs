@@ -1,0 +1,55 @@
+//! The paper's §4.8 thermal stress test: a heavy 6-model workload at
+//! 35 °C ambient, with live temperature / frequency / throttling readout
+//! for TFLite vs ADMS on the Redmi K50 Pro.
+//!
+//!     cargo run --release --example thermal_stress
+
+use adms::experiments::common::{run_framework, Framework};
+use adms::sim::SimConfig;
+use adms::soc::dimensity9000;
+use adms::util::table::{ascii_chart, fnum};
+use adms::workload::stress_mix;
+
+fn main() -> anyhow::Result<()> {
+    let soc = dimensity9000();
+    let cfg = SimConfig {
+        duration_ms: 600_000.0, // 10 minutes
+        ambient_c: Some(35.0),
+        ..Default::default()
+    };
+    for fw in [Framework::Tflite, Framework::Adms] {
+        let r = run_framework(&soc, fw, stress_mix(6), cfg.clone());
+        println!("==== {} — 10 min @ 35 °C ambient ====", r.scheduler);
+        println!(
+            "completed {} requests, failure rate {}%, pipeline {} FPS",
+            r.total_completed(),
+            fnum(100.0 * r.failure_rate(), 2),
+            fnum(r.pipeline_fps(), 2)
+        );
+        for (i, p) in r.procs.iter().enumerate() {
+            println!(
+                "  {:22} busy {:5.1}%  peak {:5.1} °C  min freq {:6} MHz  throttle events {:4}  first throttle {}",
+                p.name,
+                100.0 * p.busy_frac,
+                p.temp.max(),
+                fnum(p.freq.min(), 0),
+                p.throttle_events,
+                p.first_throttle_ms
+                    .map(|t| format!("{} min", fnum(t / 60_000.0, 1)))
+                    .unwrap_or_else(|| "never".into()),
+            );
+            let _ = i;
+        }
+        let cpu_t = r.procs[0].temp.downsample(70);
+        let gpu_t = r.procs[1].temp.downsample(70);
+        println!(
+            "{}",
+            ascii_chart(
+                "temperature (°C) over 10 min",
+                &[("cpu", &cpu_t.values), ("gpu", &gpu_t.values)],
+                9
+            )
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+"""AOT export: lower the Layer-2 model to HLO text for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <stage>.hlo.txt   one per stage: stem, body, head, full
+  manifest.json     stage list, input/output shapes, pipeline order,
+                    and a numerics probe (input + expected output) the
+                    Rust side uses as an end-to-end correctness check.
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked model weights live in the HLO as
+    # literal constants; the default printer elides them as `{...}`,
+    # which the text parser would silently read back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.init_params(args.seed)
+    fns = model.stage_fns(params)
+    shapes = model.stage_input_shapes()
+
+    manifest = {
+        "model": "mobilenet_tiny",
+        "seed": args.seed,
+        "pipeline": ["stem", "body", "head"],
+        "stages": {},
+    }
+
+    # Lower every stage and record shapes.
+    outputs = {}
+    for name, fn in fns.items():
+        spec = jax.ShapeDtypeStruct(shapes[name], jnp.float32)
+        text = to_hlo_text(fn, spec)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Output shape from an eval on zeros (cheap at these sizes).
+        out = fn(jnp.zeros(shapes[name], jnp.float32))[0]
+        outputs[name] = out
+        manifest["stages"][name] = {
+            "file": f"{name}.hlo.txt",
+            "input_shape": list(shapes[name]),
+            "output_shape": list(out.shape),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Numerics probe: a fixed input and the fused model's output, plus the
+    # staged composition (must agree) — the Rust integration test replays
+    # both paths through PJRT and asserts against these.
+    rng = np.random.RandomState(1234)
+    x = rng.uniform(-1.0, 1.0, size=shapes["full"]).astype(np.float32)
+    fused = np.asarray(fns["full"](jnp.asarray(x))[0])
+    staged = np.asarray(
+        fns["head"](fns["body"](fns["stem"](jnp.asarray(x))[0])[0])[0]
+    )
+    np.testing.assert_allclose(fused, staged, rtol=1e-5, atol=1e-5)
+    manifest["probe"] = {
+        "input": x.reshape(-1).tolist(),
+        "expected_logits": fused.reshape(-1).tolist(),
+    }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"wrote manifest with {len(manifest['stages'])} stages; "
+          f"staged==fused verified (max logit {float(np.abs(fused).max()):.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernels: the fused depthwise-separable block.
+
+TPU adaptation of the paper's mobile hot path (DESIGN.md §2). The
+MobileNet-family models the paper serves spend almost all their FLOPs in
+depthwise-separable convolutions. On a mobile GPU these are threadblock
+kernels over shared memory; on TPU we restructure:
+
+* the 1x1 **pointwise** stage is an (HW, C) x (C, Cout) matmul tiled for
+  the MXU systolic array — ``pointwise_matmul`` below is a classic
+  BlockSpec-tiled matmul whose (block_hw, block_cout) output tile and its
+  (block_hw, C) / (C, block_cout) operand slabs are sized to sit in VMEM;
+* the 3x3 **depthwise** stage is elementwise-heavy VPU work: 9 shifted
+  multiply-accumulates over an (H+2, W+2, C) padded slab, fused with the
+  folded batch-norm affine and ReLU6.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path
+(numerics identical); real-TPU efficiency is estimated from the BlockSpec
+footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly default tile sizes (f32): a (256, 128) output tile plus
+# its operand slabs stays well under ~4 MiB for C <= 1024.
+BLOCK_HW = 256
+BLOCK_COUT = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (block_hw, block_cout) output tile: full-K matmul on the MXU."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_hw", "block_cout"))
+def pointwise_matmul(x, w, *, block_hw=BLOCK_HW, block_cout=BLOCK_COUT):
+    """Tiled (HW, C) @ (C, Cout) matmul via Pallas.
+
+    Pads HW and Cout up to tile multiples, grids over output tiles, and
+    slices the result back. The BlockSpec index maps express the
+    HBM->VMEM schedule: each grid step streams one x-row-slab and one
+    w-column-slab into VMEM and writes one output tile.
+    """
+    hw, c = x.shape
+    c2, cout = w.shape
+    assert c == c2, f"contraction mismatch {c} vs {c2}"
+    bh = min(block_hw, _ceil_to(hw, 8))
+    bc = min(block_cout, _ceil_to(cout, 8))
+    hw_p = _ceil_to(hw, bh)
+    cout_p = _ceil_to(cout, bc)
+    xp = jnp.pad(x, ((0, hw_p - hw), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, cout_p - cout)))
+    grid = (hw_p // bh, cout_p // bc)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bh, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, bc), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bh, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((hw_p, cout_p), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:hw, :cout]
+
+
+def _dws_kernel(xp_ref, dw_ref, scale_ref, bias_ref, o_ref, *, h, w):
+    """Depthwise 3x3 + BN + ReLU6 over the full (padded) activation slab.
+
+    The padded input (H+2, W+2, C) sits in VMEM; the 3x3 stencil unrolls
+    into 9 shifted multiply-adds — pure VPU work with unit-stride access.
+    """
+    acc = jnp.zeros_like(o_ref[...])
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + xp_ref[di : di + h, dj : dj + w, :] * dw_ref[di, dj, :]
+    o_ref[...] = jnp.clip(acc * scale_ref[...] + bias_ref[...], 0.0, 6.0)
+
+
+@jax.jit
+def depthwise_bn_relu6(x, dw, scale, bias):
+    """Fused depthwise 3x3 (SAME, stride 1) + folded-BN affine + ReLU6.
+
+    x: (H, W, C); dw: (3, 3, C); scale/bias: (C,). Returns (H, W, C).
+    """
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(_dws_kernel, h=h, w=w)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        interpret=True,
+    )(xp, dw, scale, bias)
+
+
+def dws_block(x, dw, scale, bias, pw):
+    """The fused depthwise-separable block (Layer-1 entry point).
+
+    depthwise 3x3 -> BN/ReLU6 (VPU stage) -> pointwise 1x1 (MXU stage).
+    Matches ``ref.dws_block_ref`` bit-for-bit up to f32 accumulation
+    ordering.
+    """
+    h, w, _ = x.shape
+    a = depthwise_bn_relu6(x, dw, scale, bias)
+    o = pointwise_matmul(a.reshape(h * w, a.shape[-1]), pw)
+    return o.reshape(h, w, pw.shape[1])
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

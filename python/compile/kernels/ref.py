@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes and dtypes).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def depthwise3x3_ref(x, w):
+    """Depthwise 3x3 convolution, SAME padding, stride 1, NHWC.
+
+    x: (H, W, C); w: (3, 3, C). Returns (H, W, C).
+    """
+    xb = x[None]  # (1, H, W, C)
+    # lax depthwise conv: feature_group_count = C, kernel (3, 3, 1, C).
+    kernel = w[:, :, None, :]
+    out = lax.conv_general_dilated(
+        xb,
+        kernel,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out[0]
+
+
+def bn_relu6_ref(x, scale, bias):
+    """Per-channel affine + ReLU6 (the BN-at-inference fold)."""
+    return jnp.clip(x * scale + bias, 0.0, 6.0)
+
+
+def pointwise_ref(x, w):
+    """1x1 convolution as a matmul. x: (H, W, C); w: (C, Cout)."""
+    h, wdt, c = x.shape
+    return (x.reshape(h * wdt, c) @ w).reshape(h, wdt, w.shape[1])
+
+
+def dws_block_ref(x, dw, scale, bias, pw):
+    """Fused depthwise-separable block: depthwise 3x3 -> BN/ReLU6 ->
+    pointwise 1x1 (the MobileNet building block, the paper's dominant
+    compute — Table 1 shows C2D+DW ops are 70-78% of these models)."""
+    d = depthwise3x3_ref(x, dw)
+    a = bn_relu6_ref(d, scale, bias)
+    return pointwise_ref(a, pw)

@@ -1,0 +1,104 @@
+"""Layer-2 JAX model: MobileNet-tiny built from the Layer-1 kernels.
+
+A small (~0.4 MFLOP/px) MobileNet-style classifier that the Rust
+coordinator serves end-to-end through PJRT. The network is split into
+three stages matching the subgraph-serving story: *stem* (dense conv),
+*body* (a chain of Pallas depthwise-separable blocks), and *head*
+(global pool + classifier matmul). ``aot.py`` lowers each stage — and
+the fused full model — to HLO text; the Rust side chains them across
+worker "processors" and checks the staged composition against the fused
+output.
+
+Weights are generated deterministically from a seed and baked into the
+lowered HLO as constants, so the served artifact is self-contained.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dws_conv
+
+# Default architecture: 32x32 input, 3->C stem, BLOCKS dws blocks, 10-way
+# classifier — big enough to exercise every kernel path, small enough to
+# AOT and serve in milliseconds on the CPU PJRT backend.
+INPUT_HW = 32
+WIDTH = 16
+BLOCKS = 4
+CLASSES = 10
+
+
+def init_params(seed: int = 0, width: int = WIDTH, blocks: int = BLOCKS,
+                classes: int = CLASSES):
+    """Deterministic parameter pytree."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3 + 4 * blocks)
+    k = iter(keys)
+    scale = 0.3
+    params = {
+        "stem_w": jax.random.normal(next(k), (3, 3, 3, width)) * scale,
+        "head_w": jax.random.normal(next(k), (width, classes)) * scale,
+        "head_b": jax.random.normal(next(k), (classes,)) * 0.01,
+        "blocks": [],
+    }
+    for _ in range(blocks):
+        params["blocks"].append({
+            "dw": jax.random.normal(next(k), (3, 3, width)) * scale,
+            "scale": jnp.ones((width,)) + 0.1 * jax.random.normal(next(k), (width,)),
+            "bias": 0.1 * jax.random.normal(next(k), (width,)),
+            "pw": jax.random.normal(jax.random.fold_in(next(k), 7),
+                                    (width, width)) * scale,
+        })
+    return params
+
+
+def stem(params, x):
+    """Dense 3x3 stride-1 conv + ReLU6. x: (H, W, 3) -> (H, W, width)."""
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        params["stem_w"],
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    return jnp.clip(out, 0.0, 6.0)
+
+
+def body(params, h):
+    """The Pallas hot path: a chain of fused depthwise-separable blocks
+    with residual connections."""
+    for blk in params["blocks"]:
+        o = dws_conv.dws_block(h, blk["dw"], blk["scale"], blk["bias"], blk["pw"])
+        h = h + o  # residual (width-preserving blocks)
+    return h
+
+
+def head(params, h):
+    """Global average pool + classifier (Pallas pointwise matmul)."""
+    pooled = jnp.mean(h, axis=(0, 1), keepdims=False)  # (width,)
+    logits = dws_conv.pointwise_matmul(pooled[None, :], params["head_w"])[0]
+    return logits + params["head_b"]
+
+
+def full(params, x):
+    """Fused end-to-end forward pass."""
+    return head(params, body(params, stem(params, x)))
+
+
+def stage_fns(params):
+    """The three serving stages with parameters closed over (baked into
+    the HLO as constants), plus the fused reference."""
+    return {
+        "stem": lambda x: (stem(params, x),),
+        "body": lambda h: (body(params, h),),
+        "head": lambda h: (head(params, h),),
+        "full": lambda x: (full(params, x),),
+    }
+
+
+def stage_input_shapes(width: int = WIDTH, hw: int = INPUT_HW):
+    """Input shape per stage (single example, NHWC without N)."""
+    return {
+        "stem": (hw, hw, 3),
+        "body": (hw, hw, width),
+        "head": (hw, hw, width),
+        "full": (hw, hw, 3),
+    }

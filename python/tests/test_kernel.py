@@ -1,0 +1,108 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every kernel must match ``ref.py`` to f32
+accumulation tolerance. This is the core correctness signal for the
+compute path the Rust coordinator serves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dws_conv, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    c=st.integers(1, 8),
+)
+def test_depthwise_matches_ref(h, w, c):
+    x = rand(1, (h, w, c))
+    dw = rand(2, (3, 3, c))
+    scale = rand(3, (c,), 0.5, 1.5)
+    bias = rand(4, (c,), -0.5, 0.5)
+    ours = dws_conv.depthwise_bn_relu6(x, dw, scale, bias)
+    want = ref.bn_relu6_ref(ref.depthwise3x3_ref(x, dw), scale, bias)
+    np.testing.assert_allclose(ours, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hw=st.integers(1, 96),
+    c=st.integers(1, 16),
+    cout=st.integers(1, 24),
+)
+def test_pointwise_matmul_matches_ref(hw, c, cout):
+    x = rand(5, (hw, c))
+    w = rand(6, (c, cout))
+    ours = dws_conv.pointwise_matmul(x, w)
+    want = x @ w
+    np.testing.assert_allclose(ours, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.integers(260, 600),  # force multi-tile grids (BLOCK_HW = 256)
+    cout=st.integers(130, 200),  # force multi-tile Cout (BLOCK_COUT = 128)
+)
+def test_pointwise_matmul_multi_tile_grid(hw, cout):
+    c = 8
+    x = rand(7, (hw, c))
+    w = rand(8, (c, cout))
+    ours = dws_conv.pointwise_matmul(x, w)
+    np.testing.assert_allclose(ours, x @ w, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 10),
+    w=st.integers(4, 10),
+    c=st.integers(2, 8),
+    cout=st.integers(1, 12),
+)
+def test_dws_block_matches_ref(h, w, c, cout):
+    x = rand(10, (h, w, c))
+    dw = rand(11, (3, 3, c))
+    scale = rand(12, (c,), 0.5, 1.5)
+    bias = rand(13, (c,), -0.5, 0.5)
+    pw = rand(14, (c, cout))
+    ours = dws_conv.dws_block(x, dw, scale, bias, pw)
+    want = ref.dws_block_ref(x, dw, scale, bias, pw)
+    assert ours.shape == (h, w, cout)
+    np.testing.assert_allclose(ours, want, rtol=1e-4, atol=1e-5)
+
+
+def test_relu6_clamps_both_sides():
+    x = jnp.array([[[-100.0, 0.5, 100.0]]])
+    dw = jnp.zeros((3, 3, 3)).at[1, 1, :].set(1.0)  # identity stencil
+    scale = jnp.ones((3,))
+    bias = jnp.zeros((3,))
+    out = dws_conv.depthwise_bn_relu6(x, dw, scale, bias)
+    np.testing.assert_allclose(out[0, 0], [0.0, 0.5, 6.0], atol=1e-6)
+
+
+def test_identity_depthwise_stencil():
+    x = rand(20, (6, 6, 4))
+    dw = jnp.zeros((3, 3, 4)).at[1, 1, :].set(1.0)
+    out = dws_conv.depthwise_bn_relu6(x, dw, jnp.ones((4,)), jnp.zeros((4,)))
+    np.testing.assert_allclose(out, jnp.clip(x, 0, 6), atol=1e-6)
+
+
+@pytest.mark.parametrize("block_hw,block_cout", [(8, 8), (16, 32), (256, 128)])
+def test_matmul_tile_size_invariance(block_hw, block_cout):
+    x = rand(30, (50, 12))
+    w = rand(31, (12, 20))
+    out = dws_conv.pointwise_matmul(x, w, block_hw=block_hw,
+                                    block_cout=block_cout)
+    np.testing.assert_allclose(out, x @ w, rtol=1e-4, atol=1e-5)

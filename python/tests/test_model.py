@@ -1,0 +1,66 @@
+"""Layer-2 correctness: model stages, staged-vs-fused equivalence, and
+AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_stage_shapes():
+    params = model.init_params(0)
+    shapes = model.stage_input_shapes()
+    x = jnp.zeros(shapes["full"], jnp.float32)
+    s = model.stem(params, x)
+    assert s.shape == (model.INPUT_HW, model.INPUT_HW, model.WIDTH)
+    b = model.body(params, s)
+    assert b.shape == s.shape
+    logits = model.head(params, b)
+    assert logits.shape == (model.CLASSES,)
+
+
+def test_staged_equals_fused():
+    params = model.init_params(0)
+    x = jax.random.uniform(jax.random.PRNGKey(9),
+                           model.stage_input_shapes()["full"],
+                           minval=-1, maxval=1)
+    fused = model.full(params, x)
+    staged = model.head(params, model.body(params, model.stem(params, x)))
+    np.testing.assert_allclose(fused, staged, rtol=1e-5, atol=1e-5)
+
+
+def test_different_seeds_give_different_weights():
+    a = model.init_params(0)
+    b = model.init_params(1)
+    assert not np.allclose(a["stem_w"], b["stem_w"])
+
+
+def test_deterministic_params():
+    a = model.init_params(0)
+    b = model.init_params(0)
+    np.testing.assert_array_equal(a["stem_w"], b["stem_w"])
+    np.testing.assert_array_equal(a["blocks"][0]["pw"], b["blocks"][0]["pw"])
+
+
+def test_aot_lowering_produces_hlo_text():
+    params = model.init_params(0)
+    fns = model.stage_fns(params)
+    spec = jax.ShapeDtypeStruct(model.stage_input_shapes()["head"], jnp.float32)
+    text = aot.to_hlo_text(fns["head"], spec)
+    assert "HloModule" in text
+    assert "f32" in text
+    # Tuple-rooted (return_tuple=True) so the Rust side can to_tuple1().
+    assert "tuple" in text.lower()
+
+
+def test_full_output_is_finite_and_nontrivial():
+    params = model.init_params(0)
+    x = jax.random.uniform(jax.random.PRNGKey(3),
+                           model.stage_input_shapes()["full"],
+                           minval=-1, maxval=1)
+    logits = model.full(params, x)
+    assert np.all(np.isfinite(logits))
+    assert float(np.abs(logits).max()) > 1e-3

@@ -1,0 +1,32 @@
+//! Analyzer hot path: unit formation, merged-candidate counting, and the
+//! window-size tuner across the zoo. These run once per (model, device)
+//! at install time in the paper's system but sit on the critical path of
+//! the experiment harness, so they are first-class perf targets.
+
+use adms::analyzer;
+use adms::soc::dimensity9000;
+use adms::testing::bench::Bench;
+use adms::zoo;
+
+fn main() {
+    let soc = dimensity9000();
+    let mut b = Bench::new("analyzer");
+    for name in ["mobilenet_v1", "deeplab_v3", "yolo_v3"] {
+        let g = zoo::by_name(name).unwrap();
+        b.bench(&format!("unit_subgraphs/{name}"), || {
+            std::hint::black_box(analyzer::get_unit_subgraphs(&g, &soc, 1));
+        });
+        let units = analyzer::get_unit_subgraphs(&g, &soc, 1);
+        b.bench(&format!("merged_candidates/{name}"), || {
+            std::hint::black_box(analyzer::count_merged_candidates(&units));
+        });
+        b.bench(&format!("full_partition_ws5/{name}"), || {
+            std::hint::black_box(analyzer::partition(&g, &soc, 5));
+        });
+    }
+    let g = zoo::deeplab_v3();
+    b.bench("tune_window_size/deeplab_v3", || {
+        std::hint::black_box(analyzer::tune_window_size(&g, &soc, 12));
+    });
+    b.finish();
+}

@@ -1,0 +1,32 @@
+//! End-to-end wall-clock serving throughput through the coordinator +
+//! PJRT (the `frs_serving` example's hot path), across worker counts.
+
+use adms::coordinator::{serve_probe, ServeConfig};
+use adms::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use adms::testing::bench::Bench;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("SKIP bench_e2e: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let art = rt.load_dir(&default_artifact_dir()).expect("artifacts");
+    let mut b = Bench::new("e2e");
+    for workers in [1usize, 2, 4] {
+        let cfg = ServeConfig { workers, requests: 64, verify: false };
+        b.bench(&format!("serve_64req/{workers}workers"), || {
+            let r = serve_probe(&art, &cfg).unwrap();
+            assert_eq!(r.errors, 0);
+            std::hint::black_box(r);
+        });
+    }
+    // Verified serving (adds the response-check cost).
+    let cfg = ServeConfig { workers: 2, requests: 64, verify: true };
+    b.bench("serve_64req/2workers_verified", || {
+        let r = serve_probe(&art, &cfg).unwrap();
+        assert_eq!(r.verify_failures, 0);
+        std::hint::black_box(r);
+    });
+    b.finish();
+}

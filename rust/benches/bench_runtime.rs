@@ -1,0 +1,37 @@
+//! PJRT execution latency of the AOT artifacts (the real-compute hot
+//! path behind `adms serve`). Skips when `make artifacts` has not run.
+
+use adms::runtime::{artifacts_available, default_artifact_dir, Runtime};
+use adms::testing::bench::Bench;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("SKIP bench_runtime: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let art = rt.load_dir(&default_artifact_dir()).expect("artifacts");
+    let probe = art.probe.clone().expect("probe");
+    let mut b = Bench::new("runtime");
+    for name in ["stem", "body", "head", "full"] {
+        let stage = art.stage(name).unwrap();
+        let input = if name == "stem" || name == "full" {
+            probe.input.clone()
+        } else {
+            vec![0.1f32; stage.input_len()]
+        };
+        b.bench(&format!("execute/{name}"), || {
+            std::hint::black_box(stage.execute_f32(&input).unwrap());
+        });
+    }
+    // Staged pipeline end-to-end.
+    let stages = art.pipeline_stages().unwrap();
+    b.bench("execute/pipeline_staged", || {
+        let mut buf = probe.input.clone();
+        for s in &stages {
+            buf = s.execute_f32(&buf).unwrap();
+        }
+        std::hint::black_box(buf);
+    });
+    b.finish();
+}

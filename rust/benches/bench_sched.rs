@@ -1,0 +1,66 @@
+//! Scheduler decision latency: one `schedule()` call under a realistic
+//! ready-queue (the paper's Loop_call_size trade-off). The coordinator's
+//! dispatch loop runs this on every task completion, so decision time
+//! bounds achievable scheduling throughput.
+
+use adms::monitor::ProcView;
+use adms::sched::{Adms, Band, ModelPlan, PendingTask, SchedCtx, Scheduler, VanillaTflite};
+use adms::soc::dimensity9000;
+use adms::testing::bench::Bench;
+use adms::zoo;
+use std::sync::Arc;
+
+fn main() {
+    let soc = dimensity9000();
+    let plans: Vec<ModelPlan> = ["retinaface", "arcface_mobile", "arcface_resnet50"]
+        .iter()
+        .map(|m| ModelPlan::build(Arc::new(zoo::by_name(m).unwrap()), &soc, 5))
+        .collect();
+    let views: Vec<ProcView> = soc
+        .processors
+        .iter()
+        .enumerate()
+        .map(|(id, p)| ProcView {
+            id,
+            kind: p.kind,
+            temp_c: 45.0,
+            freq_mhz: p.max_freq(),
+            freq_scale: 1.0,
+            offline: false,
+            load: 0.25,
+            backlog_ms: 8.0,
+            active_sessions: 2,
+            util: 0.5,
+            headroom_c: p.throttle_temp_c - 45.0,
+        })
+        .collect();
+    // A 12-task ready queue across the three sessions.
+    let ready: Vec<PendingTask> = (0..12)
+        .map(|i| PendingTask {
+            req: i as u64,
+            session: i % 3,
+            unit: (i / 3) % plans[i % 3].num_units(),
+            ready_at: 0.0,
+            req_arrival: 0.0,
+            slo_ms: Some(40.0),
+            remaining_ms: 6.0,
+            dep_procs: vec![],
+        })
+        .collect();
+    let ctx = SchedCtx { now: 10.0, soc: &soc, plans: &plans, procs: &views };
+
+    let mut b = Bench::new("sched");
+    let mut adms = Adms::default();
+    b.bench("adms/decision_12ready", || {
+        std::hint::black_box(adms.schedule(&ctx, &ready));
+    });
+    let mut band = Band::new();
+    b.bench("band/decision_12ready", || {
+        std::hint::black_box(band.schedule(&ctx, &ready));
+    });
+    let mut tfl = VanillaTflite::default_for(&soc, 3);
+    b.bench("tflite/decision_12ready", || {
+        std::hint::black_box(tfl.schedule(&ctx, &ready));
+    });
+    b.finish();
+}

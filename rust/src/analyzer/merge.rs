@@ -1,0 +1,128 @@
+//! Merged-subgraph candidate enumeration (Band's behaviour, paper §3.2 /
+//! Tables 3 and 5).
+//!
+//! Band materializes, ahead of time, a schedulable subgraph for every
+//! contiguous range of unit subgraphs whose processor supports intersect,
+//! one per processor in the intersection. On fragmented models this
+//! explodes combinatorially (DeepLabV3: 65 units → thousands of merged
+//! candidates), which is exactly the memory / scheduling-complexity
+//! problem ADMS's window-size filter removes at the source.
+
+use super::UnitSubgraph;
+use crate::soc::ProcId;
+
+/// Common support of a unit range, or empty when the intersection dies.
+fn common_support(units: &[UnitSubgraph], lo: usize, hi: usize) -> Vec<ProcId> {
+    let mut acc: Vec<ProcId> = units[lo].support.clone();
+    for u in &units[lo + 1..=hi] {
+        acc.retain(|p| u.support.contains(p));
+        if acc.is_empty() {
+            break;
+        }
+    }
+    acc
+}
+
+/// Number of merged candidates: one per (contiguous range of ≥ 2 units,
+/// processor in the range's common support).
+pub fn count_merged_candidates(units: &[UnitSubgraph]) -> usize {
+    let n = units.len();
+    let mut count = 0;
+    for lo in 0..n {
+        // Maintain the intersection incrementally; stop once empty (it can
+        // never come back for a larger range).
+        let mut acc = units[lo].support.clone();
+        for hi in lo + 1..n {
+            acc.retain(|p| units[hi].support.contains(p));
+            if acc.is_empty() {
+                break;
+            }
+            count += acc.len();
+        }
+    }
+    count
+}
+
+/// Table 3's "Total" column: per-processor unit instances plus merged
+/// candidates (each unit is materialized once per supporting processor).
+pub fn count_total_subgraphs(units: &[UnitSubgraph]) -> usize {
+    let unit_instances: usize = units.iter().map(|u| u.support.len()).sum();
+    unit_instances + count_merged_candidates(units)
+}
+
+/// Materialize the merged candidate op lists for a range (used when a
+/// scheduler actually dispatches a merged subgraph).
+pub fn merged_ops(units: &[UnitSubgraph], lo: usize, hi: usize) -> Option<Vec<usize>> {
+    if lo > hi || hi >= units.len() {
+        return None;
+    }
+    if common_support(units, lo, hi).is_empty() {
+        return None;
+    }
+    let mut ops = Vec::new();
+    for u in &units[lo..=hi] {
+        ops.extend_from_slice(&u.ops);
+    }
+    Some(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(ops: &[usize], support: &[usize]) -> UnitSubgraph {
+        UnitSubgraph { ops: ops.to_vec(), support: support.to_vec() }
+    }
+
+    #[test]
+    fn single_unit_has_no_merges() {
+        let units = [unit(&[0, 1, 2], &[0, 1, 2, 3])];
+        assert_eq!(count_merged_candidates(&units), 0);
+        // Paper Table 3, East: 1 unit × 4 processors, 0 merged → total 4.
+        assert_eq!(count_total_subgraphs(&units), 4);
+    }
+
+    #[test]
+    fn two_units_merge_once_per_common_processor() {
+        let units = [unit(&[0], &[0, 1, 2, 3]), unit(&[1], &[0, 1, 2, 3])];
+        // Paper Table 5, MobileNetV1 under ADMS: 2 units, 4 merged.
+        assert_eq!(count_merged_candidates(&units), 4);
+    }
+
+    #[test]
+    fn disjoint_support_blocks_merging() {
+        let units = [unit(&[0], &[1]), unit(&[1], &[2]), unit(&[2], &[1])];
+        assert_eq!(count_merged_candidates(&units), 0);
+        assert_eq!(count_total_subgraphs(&units), 3);
+    }
+
+    #[test]
+    fn intersection_is_monotone_over_ranges() {
+        // Ranges crossing a CPU-only unit can only merge on the CPU.
+        let units = [
+            unit(&[0], &[0, 1]),
+            unit(&[1], &[0]), // CPU-only
+            unit(&[2], &[0, 1]),
+        ];
+        // Ranges: (0,1)->{0}: 1; (0,2)->{0}: 1; (1,2)->{0}: 1. Total 3.
+        assert_eq!(count_merged_candidates(&units), 3);
+    }
+
+    #[test]
+    fn quadratic_growth_on_uniform_support() {
+        // n units all supported by p processors: p·n(n−1)/2 candidates —
+        // the Band explosion the paper measures.
+        let n = 30;
+        let units: Vec<UnitSubgraph> =
+            (0..n).map(|i| unit(&[i], &[0, 1, 2])).collect();
+        assert_eq!(count_merged_candidates(&units), 3 * n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn merged_ops_concatenates_in_order() {
+        let units = [unit(&[0, 1], &[0, 1]), unit(&[2], &[0, 1]), unit(&[3], &[2])];
+        assert_eq!(merged_ops(&units, 0, 1).unwrap(), vec![0, 1, 2]);
+        assert!(merged_ops(&units, 1, 2).is_none()); // no common support
+        assert!(merged_ops(&units, 0, 9).is_none()); // out of range
+    }
+}

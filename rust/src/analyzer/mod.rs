@@ -1,0 +1,307 @@
+//! Model Analyzer (paper §3.2): subgraph partitioning with hardware
+//! granularity control.
+//!
+//! Pipeline:
+//! 1. **Support resolution** — per op, the set of processors whose
+//!    support table covers its kind.
+//! 2. **Window-size filtering** (the ADMS contribution) — for each
+//!    accelerator, maximal topo-contiguous runs of ops it supports that
+//!    are *shorter than `window_size`* are ignored: the accelerator is
+//!    removed from those ops' support sets (running a 2-op island on the
+//!    DSP costs more in transfers than it saves). `window_size = 1`
+//!    disables filtering and reproduces Band's behaviour.
+//! 3. **Unit formation** — maximal topo-contiguous runs with identical
+//!    (filtered) support signatures become unit subgraphs (Algorithm 1's
+//!    `ResolveSubgraphs`).
+//! 4. **Merged-candidate enumeration** — Band materializes a scheduling
+//!    candidate for every contiguous unit range with common processor
+//!    support, per processor in that common set; the count of these
+//!    candidates is the paper's "Merged Subgraphs" metric (Tables 3/5)
+//!    and the driver of its memory/scheduling-complexity findings.
+
+pub mod merge;
+pub mod tuner;
+
+pub use merge::{count_merged_candidates, count_total_subgraphs};
+pub use tuner::{estimate_chain_latency_ms, tune_window_size, TunedConfig};
+
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::soc::{ProcId, SocSpec};
+
+/// One unit subgraph: a topo-contiguous op run with a uniform support set.
+#[derive(Debug, Clone)]
+pub struct UnitSubgraph {
+    /// Ops in topological order (contiguous ids).
+    pub ops: Vec<NodeId>,
+    /// Processors that support every op in this unit (always non-empty:
+    /// the CPU supports everything).
+    pub support: Vec<ProcId>,
+}
+
+impl UnitSubgraph {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+    pub fn supports(&self, p: ProcId) -> bool {
+        self.support.contains(&p)
+    }
+}
+
+/// Result of partitioning one model for one SoC at one window size.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub window_size: usize,
+    pub units: Vec<UnitSubgraph>,
+    /// Band's merged-candidate count (Tables 3/5 "Merged Subgraphs").
+    pub merged_candidates: usize,
+    /// units-weighted-by-support + merged (Table 3 "Total").
+    pub total_subgraphs: usize,
+}
+
+/// Per-op processor support sets after window-size filtering.
+pub fn op_support_table(g: &Graph, soc: &SocSpec, window_size: usize) -> Vec<Vec<ProcId>> {
+    let n = g.nodes.len();
+    let cpu = soc.cpu_id();
+    // Raw support.
+    let mut table: Vec<Vec<ProcId>> = (0..n)
+        .map(|i| {
+            let kind = g.nodes[i].kind;
+            (0..soc.num_processors())
+                .filter(|&p| soc.processors[p].support.supports(kind))
+                .collect()
+        })
+        .collect();
+    // Window-size filtering per accelerator (Algorithm 1 lines 9-15):
+    // drop accelerator support on runs shorter than the window.
+    if window_size > 1 {
+        for p in 0..soc.num_processors() {
+            if p == cpu {
+                continue; // the CPU is the fallback target, never filtered
+            }
+            let mut i = 0;
+            while i < n {
+                if table[i].contains(&p) && g.nodes[i].kind != OpKind::Input {
+                    let start = i;
+                    while i < n && table[i].contains(&p) && g.nodes[i].kind != OpKind::Input {
+                        i += 1;
+                    }
+                    if i - start < window_size {
+                        for t in table.iter_mut().take(i).skip(start) {
+                            t.retain(|&q| q != p);
+                        }
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    table
+}
+
+/// Does any processor fail to support some op (paper Algorithm 1's
+/// `NeedFallbackSubgraph`)? If not, every processor can run the whole
+/// model as a single subgraph.
+pub fn needs_fallback(g: &Graph, soc: &SocSpec) -> bool {
+    g.nodes.iter().any(|node| {
+        node.kind != OpKind::Input
+            && soc
+                .processors
+                .iter()
+                .any(|p| !p.support.supports(node.kind))
+    })
+}
+
+/// Algorithm 1: produce unit subgraphs for a model on an SoC.
+pub fn get_unit_subgraphs(g: &Graph, soc: &SocSpec, window_size: usize) -> Vec<UnitSubgraph> {
+    let all_ops: Vec<NodeId> = g
+        .nodes
+        .iter()
+        .filter(|n| n.kind != OpKind::Input)
+        .map(|n| n.id)
+        .collect();
+    if all_ops.is_empty() {
+        return Vec::new();
+    }
+    if !needs_fallback(g, soc) {
+        // Lines 3-7: one unit containing the whole model, supported by all.
+        return vec![UnitSubgraph {
+            ops: all_ops,
+            support: (0..soc.num_processors()).collect(),
+        }];
+    }
+    // Lines 9-19: build the filtered support table, then resolve maximal
+    // runs of identical signatures.
+    let table = op_support_table(g, soc, window_size);
+    let mut units: Vec<UnitSubgraph> = Vec::new();
+    for &op in &all_ops {
+        let sig = &table[op];
+        match units.last_mut() {
+            Some(u) if u.support == *sig && *u.ops.last().unwrap() == op - 1 => {
+                u.ops.push(op);
+            }
+            _ => units.push(UnitSubgraph { ops: vec![op], support: sig.clone() }),
+        }
+    }
+    units
+}
+
+/// Full partitioning entry point: units + Band's merged-candidate census.
+pub fn partition(g: &Graph, soc: &SocSpec, window_size: usize) -> Partition {
+    let units = get_unit_subgraphs(g, soc, window_size);
+    let merged = count_merged_candidates(&units);
+    let total = count_total_subgraphs(&units);
+    Partition { window_size, units, merged_candidates: merged, total_subgraphs: total }
+}
+
+/// Dependencies between units: `deps[j]` lists units that must complete
+/// before unit `j` may start (derived from op-level edges).
+pub fn unit_deps(g: &Graph, units: &[UnitSubgraph]) -> Vec<Vec<usize>> {
+    // Map op -> unit.
+    let mut op_unit = vec![usize::MAX; g.nodes.len()];
+    for (ui, u) in units.iter().enumerate() {
+        for &op in &u.ops {
+            op_unit[op] = ui;
+        }
+    }
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); units.len()];
+    for (ui, u) in units.iter().enumerate() {
+        for &op in &u.ops {
+            for &inp in &g.nodes[op].inputs {
+                let pu = op_unit[inp];
+                if pu != usize::MAX && pu != ui && !deps[ui].contains(&pu) {
+                    deps[ui].push(pu);
+                }
+            }
+        }
+        deps[ui].sort_unstable();
+    }
+    deps
+}
+
+/// Bytes that flow from unit `from` into unit `to` (tensors produced in
+/// `from` consumed by ops in `to`) — the transfer cost when the two units
+/// execute on different processors.
+pub fn inter_unit_bytes(g: &Graph, units: &[UnitSubgraph], from: usize, to: usize) -> u64 {
+    let from_set: std::collections::HashSet<NodeId> = units[from].ops.iter().copied().collect();
+    let mut counted = std::collections::HashSet::new();
+    let mut bytes = 0;
+    for &op in &units[to].ops {
+        for &inp in &g.nodes[op].inputs {
+            if from_set.contains(&inp) && counted.insert(inp) {
+                bytes += g.nodes[inp].out_bytes(g.dtype_bytes);
+            }
+        }
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::dimensity9000;
+    use crate::zoo;
+
+    #[test]
+    fn units_cover_all_ops_exactly_once() {
+        let soc = dimensity9000();
+        for g in zoo::all_models() {
+            for ws in [1, 4, 8] {
+                let units = get_unit_subgraphs(&g, &soc, ws);
+                let mut seen = std::collections::HashSet::new();
+                for u in &units {
+                    assert!(!u.is_empty());
+                    assert!(!u.support.is_empty(), "{}: unit with empty support", g.name);
+                    for &op in &u.ops {
+                        assert!(seen.insert(op), "{}: op {op} in two units", g.name);
+                    }
+                }
+                assert_eq!(seen.len(), g.num_real_ops(), "{} ws={ws}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_unit_supports_cpu() {
+        let soc = dimensity9000();
+        let cpu = soc.cpu_id();
+        for g in zoo::all_models() {
+            for u in get_unit_subgraphs(&g, &soc, 5) {
+                assert!(u.supports(cpu), "{}: unit without CPU fallback", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn window_size_reduces_unit_count_monotonically_in_trend() {
+        let soc = dimensity9000();
+        let g = zoo::deeplab_v3();
+        let u1 = get_unit_subgraphs(&g, &soc, 1).len();
+        let u5 = get_unit_subgraphs(&g, &soc, 5).len();
+        let u100 = get_unit_subgraphs(&g, &soc, 100).len();
+        assert!(u1 > u5, "ws=1 gives {u1}, ws=5 gives {u5}");
+        // Paper Fig 6: at the largest window the graph consolidates.
+        assert!(u100 <= 3, "ws=100 still has {u100} units");
+    }
+
+    #[test]
+    fn fragmentation_ranking_matches_table3() {
+        // Paper Table 3 (Band, ws=1): DeepLabV3 is by far the most
+        // fragmented model; MobileNetV1 and East are among the least.
+        let soc = dimensity9000();
+        let units =
+            |name: &str| get_unit_subgraphs(&zoo::by_name(name).unwrap(), &soc, 1).len();
+        let deeplab = units("deeplab_v3");
+        let mnv1 = units("mobilenet_v1");
+        let east = units("east");
+        assert!(deeplab > 2 * east, "deeplab {deeplab} vs east {east}");
+        assert!(deeplab > 2 * mnv1, "deeplab {deeplab} vs mnv1 {mnv1}");
+        assert!(deeplab >= 10, "deeplab should fragment heavily, got {deeplab}");
+        assert!(mnv1 <= 4, "mnv1 {mnv1} (paper: 4 units)");
+        assert!(east <= 12, "east {east}");
+    }
+
+    #[test]
+    fn unit_deps_are_acyclic_and_backward_only() {
+        let soc = dimensity9000();
+        let g = zoo::yolo_v3();
+        let units = get_unit_subgraphs(&g, &soc, 3);
+        let deps = unit_deps(&g, &units);
+        for (ui, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                assert!(d < ui, "unit {ui} depends on later/self unit {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn inter_unit_bytes_positive_across_boundary() {
+        let soc = dimensity9000();
+        let g = zoo::deeplab_v3();
+        let units = get_unit_subgraphs(&g, &soc, 1);
+        let deps = unit_deps(&g, &units);
+        let mut found = false;
+        for (ui, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                if inter_unit_bytes(&g, &units, d, ui) > 0 {
+                    found = true;
+                }
+            }
+        }
+        assert!(found, "no tensor bytes cross any unit boundary");
+    }
+
+    #[test]
+    fn filtering_never_removes_cpu() {
+        let soc = dimensity9000();
+        let g = zoo::deeplab_v3();
+        let table = op_support_table(&g, &soc, 50);
+        let cpu = soc.cpu_id();
+        for (i, sup) in table.iter().enumerate() {
+            assert!(sup.contains(&cpu), "op {i} lost CPU support");
+        }
+    }
+}

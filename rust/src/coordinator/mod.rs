@@ -1,0 +1,158 @@
+//! Wall-clock serving coordinator: the Layer-3 request path.
+//!
+//! Where [`crate::sim`] reproduces the paper's *evaluation* against the
+//! calibrated SoC model, this module is the real serving runtime: it
+//! loads the AOT-compiled HLO stages ([`crate::runtime`]), fans requests
+//! out to a pool of worker threads (the "processors"), executes each
+//! request's stage pipeline through PJRT, and reports latency and
+//! throughput. Python never runs here.
+
+use crate::runtime::{ArtifactSet, Stage};
+use crate::util::stats::Summary;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads (simulated processors).
+    pub workers: usize,
+    /// Total requests to serve.
+    pub requests: usize,
+    /// Verify each response against the expected logits (when the
+    /// workload replays the manifest probe input).
+    pub verify: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, requests: 64, verify: true }
+    }
+}
+
+/// Serving results.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub completed: u64,
+    pub errors: u64,
+    pub verify_failures: u64,
+    /// End-to-end request latency (ms).
+    pub latency: Summary,
+    /// Requests per second over the serving window.
+    pub throughput_rps: f64,
+    pub wall_ms: f64,
+    pub workers: usize,
+}
+
+/// One in-flight request: an input tensor and its (optional) expected
+/// output for verification.
+#[derive(Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub expected: Option<Vec<f32>>,
+}
+
+/// Serve `cfg.requests` copies of the manifest probe input through the
+/// staged pipeline (stem → body → head) on a pool of worker threads.
+/// Every response is checked against the fused-model logits exported at
+/// AOT time, proving the three layers compose with real numerics.
+pub fn serve_probe(artifacts: &ArtifactSet, cfg: &ServeConfig) -> Result<ServeReport> {
+    let probe = artifacts
+        .probe
+        .as_ref()
+        .ok_or_else(|| anyhow!("manifest has no probe"))?;
+    let stages = artifacts.pipeline_stages()?;
+    anyhow::ensure!(!stages.is_empty(), "empty pipeline");
+    let requests: Vec<Request> = (0..cfg.requests as u64)
+        .map(|id| Request {
+            id,
+            input: probe.input.clone(),
+            expected: if cfg.verify { Some(probe.expected_logits.clone()) } else { None },
+        })
+        .collect();
+    serve(&stages, requests, cfg.workers)
+}
+
+/// Generic pipeline serving: execute each request through `stages` in
+/// order, spread across `workers` threads.
+pub fn serve(stages: &[Arc<Stage>], requests: Vec<Request>, workers: usize) -> Result<ServeReport> {
+    let workers = workers.max(1);
+    let (tx, rx) = mpsc::channel::<Request>();
+    let rx = Arc::new(Mutex::new(rx));
+    let completed = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let verify_failures = Arc::new(AtomicU64::new(0));
+    let latencies = Arc::new(Mutex::new(Summary::new()));
+
+    let n = requests.len();
+    for r in requests {
+        tx.send(r).expect("queue send");
+    }
+    drop(tx);
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let completed = Arc::clone(&completed);
+            let errors = Arc::clone(&errors);
+            let verify_failures = Arc::clone(&verify_failures);
+            let latencies = Arc::clone(&latencies);
+            let stages = stages.to_vec();
+            scope.spawn(move || loop {
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(req) = req else { break };
+                let start = Instant::now();
+                let mut buf = req.input;
+                let mut ok = true;
+                for stage in &stages {
+                    match stage.execute_f32(&buf) {
+                        Ok(out) => buf = out,
+                        Err(e) => {
+                            log::warn!("request {}: {e}", req.id);
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                if let Some(exp) = &req.expected {
+                    let close = exp.len() == buf.len()
+                        && exp
+                            .iter()
+                            .zip(&buf)
+                            .all(|(a, b)| (a - b).abs() <= 1e-4 + 1e-4 * a.abs().max(b.abs()));
+                    if !close {
+                        verify_failures.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+                let ms = start.elapsed().as_secs_f64() * 1e3;
+                latencies.lock().unwrap().add(ms);
+                completed.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    Ok(ServeReport {
+        completed: completed.load(Ordering::Relaxed),
+        errors: errors.load(Ordering::Relaxed),
+        verify_failures: verify_failures.load(Ordering::Relaxed),
+        latency: Arc::try_unwrap(latencies)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|arc| arc.lock().unwrap().clone()),
+        throughput_rps: n as f64 / (wall_ms / 1e3),
+        wall_ms,
+        workers,
+    })
+}

@@ -1,0 +1,83 @@
+//! Shared helpers for the experiment modules: framework construction
+//! (TFLite / Band / ADMS arms) and simulation wrappers.
+
+use crate::analyzer::tuner;
+use crate::graph::Graph;
+use crate::sched::{Adms, Band, Scheduler, VanillaTflite};
+use crate::sim::{App, Engine, SimConfig, SimReport};
+use crate::soc::SocSpec;
+
+/// The paper's three evaluation arms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    Tflite,
+    Band,
+    Adms,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 3] = [Framework::Tflite, Framework::Band, Framework::Adms];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Framework::Tflite => "TFLite",
+            Framework::Band => "Band",
+            Framework::Adms => "ADMS",
+        }
+    }
+
+    /// Partitioning granularity: TFLite/Band use raw (ws = 1) partitions;
+    /// ADMS tunes the window per model-SoC pair (paper §3.2).
+    pub fn window_size(self, g: &Graph, soc: &SocSpec) -> usize {
+        match self {
+            Framework::Tflite | Framework::Band => 1,
+            Framework::Adms => tuner::tune_window_size(g, soc, 12).0,
+        }
+    }
+
+    pub fn scheduler(self, soc: &SocSpec, sessions: usize) -> Box<dyn Scheduler> {
+        match self {
+            Framework::Tflite => Box::new(VanillaTflite::default_for(soc, sessions)),
+            Framework::Band => Box::new(Band::new()),
+            Framework::Adms => Box::new(Adms::default()),
+        }
+    }
+}
+
+/// Run one framework arm over a workload.
+pub fn run_framework(
+    soc: &SocSpec,
+    fw: Framework,
+    apps: Vec<App>,
+    cfg: SimConfig,
+) -> SimReport {
+    let sched = fw.scheduler(soc, apps.len());
+    let soc2 = soc.clone();
+    let mut report = Engine::new(
+        soc.clone(),
+        cfg,
+        apps,
+        sched,
+        &|g| fw.window_size(g, &soc2),
+    )
+    .expect("engine build")
+    .run();
+    report.scheduler = fw.label().to_string();
+    report
+}
+
+/// Duration helper: full seconds in recorded runs, compressed for CI.
+pub fn duration_ms(quick: bool, full_ms: f64) -> f64 {
+    if quick {
+        (full_ms / 20.0).max(400.0)
+    } else {
+        full_ms
+    }
+}
+
+/// Solo closed-loop mean latency of one model under one framework.
+pub fn solo_latency_ms(soc: &SocSpec, fw: Framework, model: &str, dur_ms: f64) -> f64 {
+    let cfg = SimConfig { duration_ms: dur_ms, ..Default::default() };
+    let r = run_framework(soc, fw, vec![App::closed_loop(model)], cfg);
+    r.sessions[0].latency.mean()
+}

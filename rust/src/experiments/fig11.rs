@@ -1,0 +1,46 @@
+//! Paper Fig 11: power-consumption trend during 60 s of continuous FRS
+//! inference on the Redmi K50 Pro.
+//!
+//! Expected shape: Band shows the highest peaks and largest swings,
+//! TFLite the lowest average but deep dips (idle stalls), ADMS a tight
+//! band (paper: 7.7–8.1 W) — the stability metric is the trace's
+//! standard deviation.
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::sim::{SimConfig, SimReport};
+use crate::soc::dimensity9000;
+use crate::util::table::{ascii_chart, fnum, Table};
+use crate::workload::frs;
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let dur = duration_ms(quick, 60_000.0);
+    let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+    let reports: Vec<SimReport> = Framework::ALL
+        .iter()
+        .map(|&fw| run_framework(&soc, fw, frs(), cfg.clone()))
+        .collect();
+    let mut t = Table::new(
+        "Fig 11 — Power trace statistics, 60 s FRS on Redmi K50 Pro",
+        &["Framework", "Mean (W)", "Min (W)", "Max (W)", "Std (W)"],
+    );
+    let mut series = Vec::new();
+    for r in &reports {
+        t.row(&[
+            r.scheduler.clone(),
+            fnum(r.power.mean(), 2),
+            fnum(r.power.min(), 2),
+            fnum(r.power.max(), 2),
+            fnum(r.power.std(), 3),
+        ]);
+        series.push((r.scheduler.clone(), r.power.downsample(70)));
+    }
+    let mut out = t.render();
+    out.push('\n');
+    let chart_series: Vec<(&str, &[f64])> = series
+        .iter()
+        .map(|(n, s)| (n.as_str(), s.values.as_slice()))
+        .collect();
+    out.push_str(&ascii_chart("device power (W) over time", &chart_series, 10));
+    out
+}

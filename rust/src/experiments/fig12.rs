@@ -1,0 +1,71 @@
+//! Paper Fig 12: temperature and processor-frequency dynamics during a
+//! 10-minute thermal stress test on the Redmi K50 Pro.
+//!
+//! Expected shape: under TFLite the CPU/GPU hit the 68 °C throttle
+//! threshold within ~2-3 minutes — CPU frequency collapsing toward 1 GHz
+//! and the GPU periodically cutting out; ADMS spreads load and stays
+//! below the threshold through most of the window.
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::sim::{SimConfig, SimReport};
+use crate::soc::{dimensity9000, ProcKind};
+use crate::util::table::{ascii_chart, fnum, Table};
+use crate::workload::stress_mix;
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let dur = duration_ms(quick, 600_000.0);
+    let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+    let mut out = String::new();
+    let mut t = Table::new(
+        "Fig 12 — Thermal stress summary (10 min, Redmi K50 Pro)",
+        &[
+            "Framework",
+            "CPU max °C",
+            "GPU max °C",
+            "CPU min MHz",
+            "GPU min MHz",
+            "Throttle events",
+            "First throttle (min)",
+        ],
+    );
+    let mut traces: Vec<(String, SimReport)> = Vec::new();
+    for fw in [Framework::Tflite, Framework::Adms] {
+        let r = run_framework(&soc, fw, stress_mix(6), cfg.clone());
+        let cpu = soc.proc_by_kind(ProcKind::Cpu).unwrap();
+        let gpu = soc.proc_by_kind(ProcKind::Gpu).unwrap();
+        t.row(&[
+            r.scheduler.clone(),
+            fnum(r.procs[cpu].temp.max(), 1),
+            fnum(r.procs[gpu].temp.max(), 1),
+            fnum(r.procs[cpu].freq.min(), 0),
+            fnum(r.procs[gpu].freq.min(), 0),
+            r.procs.iter().map(|p| p.throttle_events).sum::<u64>().to_string(),
+            r.first_throttle_ms()
+                .map(|t| fnum(t / 60_000.0, 2))
+                .unwrap_or_else(|| "never".into()),
+        ]);
+        traces.push((r.scheduler.clone(), r));
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    for (name, r) in &traces {
+        let cpu = soc.proc_by_kind(ProcKind::Cpu).unwrap();
+        let gpu = soc.proc_by_kind(ProcKind::Gpu).unwrap();
+        let ct = r.procs[cpu].temp.downsample(70);
+        let gt = r.procs[gpu].temp.downsample(70);
+        out.push_str(&ascii_chart(
+            &format!("{name}: temperature (°C)"),
+            &[("cpu", &ct.values), ("gpu", &gt.values)],
+            8,
+        ));
+        let cf = r.procs[cpu].freq.downsample(70);
+        let gf = r.procs[gpu].freq.downsample(70);
+        out.push_str(&ascii_chart(
+            &format!("{name}: frequency (MHz)"),
+            &[("cpu", &cf.values), ("gpu", &gf.values)],
+            8,
+        ));
+    }
+    out
+}

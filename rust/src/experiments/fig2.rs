@@ -1,0 +1,40 @@
+//! Paper Fig 2: support for different operation types by the processors
+//! of the Redmi K50 Pro (Dimensity 9000).
+
+use crate::graph::OpKind;
+use crate::soc::dimensity9000;
+use crate::util::table::Table;
+
+pub fn run() -> String {
+    let soc = dimensity9000();
+    let mut header = vec!["Op type"];
+    let names: Vec<String> = soc.processors.iter().map(|p| p.kind.label().to_string()).collect();
+    for n in &names {
+        header.push(n);
+    }
+    let mut t = Table::new(
+        &format!("Fig 2 — Op support by processor ({})", soc.device),
+        &header,
+    );
+    for k in OpKind::ALL {
+        if k == OpKind::Input {
+            continue;
+        }
+        let mut cells = vec![k.label().to_string()];
+        for p in &soc.processors {
+            cells.push(if p.support.supports(k) { "yes".into() } else { "-".into() });
+        }
+        t.row(&cells);
+    }
+    let mut out = t.render();
+    out.push('\n');
+    for p in &soc.processors {
+        out.push_str(&format!(
+            "{}: {} / {} op types supported\n",
+            p.name,
+            p.support.num_supported(),
+            OpKind::ALL.len() - 1
+        ));
+    }
+    out
+}

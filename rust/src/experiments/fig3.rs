@@ -1,0 +1,66 @@
+//! Paper Fig 3: average DNN inference latency on single processors vs
+//! multi-processor execution, MobileNet and EfficientDet on Kirin 970 and
+//! Dimensity 9000.
+//!
+//! Expected shape: on the Dimensity 9000 accelerators dominate the CPU
+//! (NPU up to ~23× on MobileNet); on the Kirin 970, fallback-heavy
+//! multi-processor execution can be *slower* than the CPU alone
+//! (EfficientDet), reproducing the paper's "multi-processor inference is
+//! not always ideal" insight.
+
+use super::common::duration_ms;
+use crate::sim::{App, Engine, SimConfig};
+use crate::sched::{Pinned, VanillaTflite};
+use crate::soc::{soc_by_name, ProcKind};
+use crate::util::table::{fnum, Table};
+
+pub fn run(quick: bool) -> String {
+    let dur = duration_ms(quick, 10_000.0);
+    let mut out = String::new();
+    for soc_name in ["kirin970", "dimensity9000"] {
+        let soc = soc_by_name(soc_name).unwrap();
+        let mut t = Table::new(
+            &format!("Fig 3 — Avg latency (ms), {}", soc.device),
+            &["Model", "CPU", "GPU", "DSP", "NPU", "Multi-proc (TFLite)"],
+        );
+        for model in ["mobilenet_v1_quant", "efficientdet"] {
+            let mut cells = vec![crate::zoo::display_name(model).to_string()];
+            for kind in ProcKind::ALL {
+                let cell = match soc.proc_by_kind(kind) {
+                    None => "-".to_string(),
+                    Some(pid) => {
+                        let cfg = SimConfig { duration_ms: dur, fail_mult: 1e12, ..Default::default() };
+                        let r = Engine::new(
+                            soc.clone(),
+                            cfg,
+                            vec![App::closed_loop(model)],
+                            Box::new(Pinned::new(pid, soc.cpu_id())),
+                            &|_| 1,
+                        )
+                        .unwrap()
+                        .run();
+                        fnum(r.sessions[0].latency.mean(), 2)
+                    }
+                };
+                cells.push(cell);
+            }
+            // Multi-processor arm: TFLite with the NNAPI delegate enabled
+            // (the paper's §2.2 measurement-study configuration).
+            let cfg = SimConfig { duration_ms: dur, fail_mult: 1e12, ..Default::default() };
+            let r = Engine::new(
+                soc.clone(),
+                cfg,
+                vec![App::closed_loop(model)],
+                Box::new(VanillaTflite::best_accelerator(&soc, 1)),
+                &|_| 1,
+            )
+            .unwrap()
+            .run();
+            cells.push(fnum(r.sessions[0].latency.mean(), 2));
+            t.row(&cells);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}

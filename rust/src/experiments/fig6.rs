@@ -1,0 +1,77 @@
+//! Paper Fig 6: relationship between window size, inference latency, and
+//! subgraph count for DeepLabV3 on the Redmi K50 Pro.
+//!
+//! Expected shape: subgraph count collapses as ws grows; latency improves
+//! to an optimum (paper: ws = 5), then degrades as large windows push
+//! accelerator-viable work back onto the CPU.
+
+use super::common::duration_ms;
+use crate::analyzer::tuner::sweep_window_sizes;
+use crate::sched::Adms;
+use crate::sim::{App, Engine, SimConfig};
+use crate::soc::dimensity9000;
+use crate::util::table::{ascii_chart, fnum, Table};
+use crate::zoo;
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let g = zoo::deeplab_v3();
+    let dur = duration_ms(quick, 8_000.0);
+    let max_ws = if quick { 8 } else { 12 };
+    let sweep = sweep_window_sizes(&g, &soc, max_ws);
+    let mut t = Table::new(
+        "Fig 6 — Window size vs latency and subgraph count (DeepLabV3, Redmi K50 Pro)",
+        &["ws", "Units", "Merged", "Total", "Est latency (ms)", "Measured (ms)", "FPS"],
+    );
+    let mut lat_series = Vec::new();
+    let mut cnt_series = Vec::new();
+    let mut best: Option<(usize, f64)> = None;
+    for p in &sweep {
+        let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+        let ws = p.window_size;
+        let r = Engine::new(
+            soc.clone(),
+            cfg,
+            vec![App::closed_loop("deeplab_v3")],
+            Box::new(Adms::default()),
+            &|_| ws,
+        )
+        .unwrap()
+        .run();
+        let measured = r.sessions[0].latency.mean();
+        let fps = r.sessions[0].fps;
+        if best.map(|(_, b)| measured < b).unwrap_or(true) {
+            best = Some((ws, measured));
+        }
+        lat_series.push(measured);
+        cnt_series.push(p.total as f64);
+        t.row(&[
+            ws.to_string(),
+            p.units.to_string(),
+            p.merged.to_string(),
+            p.total.to_string(),
+            fnum(p.est_latency_ms, 2),
+            fnum(measured, 2),
+            fnum(fps, 2),
+        ]);
+    }
+    let mut out = t.render();
+    out.push('\n');
+    out.push_str(&ascii_chart(
+        "measured latency (ms) over window size",
+        &[("latency", &lat_series)],
+        8,
+    ));
+    out.push_str(&ascii_chart(
+        "total subgraph candidates over window size",
+        &[("candidates", &cnt_series)],
+        8,
+    ));
+    if let Some((ws, ms)) = best {
+        out.push_str(&format!(
+            "\noptimal window size: {ws} ({} ms; paper reports the optimum at ws=5)\n",
+            fnum(ms, 2)
+        ));
+    }
+    out
+}

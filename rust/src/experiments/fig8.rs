@@ -1,0 +1,66 @@
+//! Paper Fig 8: processing frame rates (FPS) for the FRS and ROS
+//! parallel-inference workloads on the Redmi K50 Pro and Huawei P20,
+//! TFLite vs Band vs ADMS. Includes the paper's §4.4 ablation: ADMS with
+//! subgraph partitioning disabled (model-level scheduling only).
+//!
+//! Expected shape: ADMS > Band > TFLite everywhere; ADMS-without-
+//! partitioning lands *below* Band.
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::metrics::fps_table;
+use crate::sched::Adms;
+use crate::sim::{Engine, SimConfig, SimReport};
+use crate::soc::soc_by_name;
+use crate::util::table::fnum;
+use crate::workload::{frs, ros};
+
+/// ADMS with partitioning disabled: whole-model units (huge ws) but the
+/// same multi-factor scheduler — the §4.4 ablation arm.
+fn adms_no_partition(soc: &crate::soc::SocSpec, apps: Vec<crate::sim::App>, cfg: SimConfig) -> SimReport {
+    let mut r = Engine::new(
+        soc.clone(),
+        cfg,
+        apps,
+        Box::new(Adms::default()),
+        &|g| g.num_real_ops() + 1, // window larger than any run → 1-2 units
+    )
+    .unwrap()
+    .run();
+    r.scheduler = "ADMS w/o part.".into();
+    r
+}
+
+pub fn run(quick: bool) -> String {
+    let dur = duration_ms(quick, 60_000.0);
+    let mut out = String::new();
+    for (scen_name, apps_fn) in [("FRS", frs as fn() -> _), ("ROS", ros as fn() -> _)] {
+        for soc_name in ["dimensity9000", "kirin970"] {
+            let soc = soc_by_name(soc_name).unwrap();
+            let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+            let reports: Vec<SimReport> = Framework::ALL
+                .iter()
+                .map(|&fw| run_framework(&soc, fw, apps_fn(), cfg.clone()))
+                .collect();
+            let ablation = adms_no_partition(&soc, apps_fn(), cfg);
+            let mut all: Vec<&SimReport> = reports.iter().collect();
+            all.push(&ablation);
+            out.push_str(
+                &fps_table(
+                    &format!("Fig 8 — {scen_name} FPS on {}", soc.device),
+                    &all,
+                )
+                .render(),
+            );
+            let tfl = reports[0].pipeline_fps();
+            let adms = reports[2].pipeline_fps();
+            if tfl > 0.0 {
+                out.push_str(&format!(
+                    "pipeline-FPS gains — ADMS vs TFLite: {}x   ADMS vs Band: {}x\n\n",
+                    fnum(adms / tfl, 2),
+                    fnum(adms / reports[1].pipeline_fps().max(1e-9), 2)
+                ));
+            }
+        }
+    }
+    out
+}

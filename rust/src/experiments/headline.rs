@@ -1,0 +1,55 @@
+//! The paper's headline claims (abstract / §6):
+//! * up to 4.04× lower multi-DNN inference latency than TFLite
+//!   (equivalently, 404 % FPS on the FRS workload);
+//! * 24.2 % better energy efficiency (frames/joule) than Band.
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::sim::{SimConfig, SimReport};
+use crate::soc::dimensity9000;
+use crate::util::table::{fnum, Table};
+use crate::workload::frs;
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let dur = duration_ms(quick, 60_000.0);
+    let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+    let reports: Vec<SimReport> = Framework::ALL
+        .iter()
+        .map(|&fw| run_framework(&soc, fw, frs(), cfg.clone()))
+        .collect();
+    let (tfl, band, adms) = (&reports[0], &reports[1], &reports[2]);
+    let mut t = Table::new(
+        "Headline — ADMS vs baselines (FRS, Redmi K50 Pro)",
+        &["Claim", "Paper", "Measured"],
+    );
+    t.row(&[
+        "Latency/FPS gain vs TFLite".into(),
+        "4.04x".into(),
+        format!("{}x", fnum(adms.pipeline_fps() / tfl.pipeline_fps().max(1e-9), 2)),
+    ]);
+    t.row(&[
+        "FPS gain vs Band".into(),
+        "1.21x".into(),
+        format!("{}x", fnum(adms.pipeline_fps() / band.pipeline_fps().max(1e-9), 2)),
+    ]);
+    t.row(&[
+        "Energy efficiency vs Band".into(),
+        "+24.2%".into(),
+        format!(
+            "{}%",
+            fnum(
+                100.0 * (adms.pipeline_frames_per_joule() / band.pipeline_frames_per_joule().max(1e-9) - 1.0),
+                1
+            )
+        ),
+    ]);
+    t.row(&[
+        "Energy efficiency vs TFLite".into(),
+        "3.68x".into(),
+        format!(
+            "{}x",
+            fnum(adms.pipeline_frames_per_joule() / tfl.pipeline_frames_per_joule().max(1e-9), 2)
+        ),
+    ]);
+    t.render()
+}

@@ -1,0 +1,41 @@
+//! Paper Table 1: proportional distribution of operation types in the
+//! evaluation models (ADD / C2D / DLG / DW / Others percentages).
+
+use crate::graph::OpCategory;
+use crate::util::table::{fnum, Table};
+use crate::zoo;
+
+const MODELS: [&str; 8] = [
+    "arcface_mobile",
+    "deeplab_v3",
+    "east",
+    "efficientnet4",
+    "handlmk",
+    "icn_quant",
+    "inception_v4",
+    "mobilenet_v2",
+];
+
+pub fn run() -> String {
+    let mut t = Table::new(
+        "Table 1 — Proportional distribution of operation types (%)",
+        &["Model", "ADD", "C2D", "DLG", "DW", "Others", "Ops"],
+    );
+    for name in MODELS {
+        let g = zoo::by_name(name).unwrap();
+        let pct = g.category_percentages();
+        let get = |c: OpCategory| {
+            pct.iter().find(|(k, _)| *k == c).map(|(_, p)| *p).unwrap_or(0.0)
+        };
+        t.row(&[
+            zoo::display_name(name).to_string(),
+            fnum(get(OpCategory::Add), 2),
+            fnum(get(OpCategory::Conv2d), 2),
+            fnum(get(OpCategory::Dlg), 2),
+            fnum(get(OpCategory::DepthwiseConv), 2),
+            fnum(get(OpCategory::Others), 2),
+            g.num_real_ops().to_string(),
+        ]);
+    }
+    t.render()
+}

@@ -1,0 +1,62 @@
+//! Paper Table 2: impact of parallel inference on latency — average
+//! latency (ms) for MobileNetV1 at 1 / 2 / 4 concurrent models on each
+//! accelerator of the three devices.
+//!
+//! Expected shape: near-flat scaling on the Adreno 540 and MediaTek NPU,
+//! dramatic collapse on the Hexagon 682 DSP (paper: 46.77 → 609.44 ms)
+//! and the Kirin 970 NPU.
+
+use super::common::duration_ms;
+use crate::sched::Pinned;
+use crate::sim::{Engine, SimConfig};
+use crate::soc::{soc_by_name, ProcKind, SocSpec};
+use crate::util::table::{fnum, Table};
+use crate::workload::concurrent_copies;
+
+fn avg_latency(soc: &SocSpec, kind: ProcKind, n: usize, dur: f64) -> Option<f64> {
+    let pid = soc.proc_by_kind(kind)?;
+    // Measurement study: no deadline semantics, never abort.
+    let cfg = SimConfig { duration_ms: dur, fail_mult: 1e12, ..Default::default() };
+    let r = Engine::new(
+        soc.clone(),
+        cfg,
+        concurrent_copies("mobilenet_v1_quant", n),
+        Box::new(Pinned::new(pid, soc.cpu_id())),
+        &|_| 1,
+    )
+    .ok()?
+    .run();
+    let means: Vec<f64> = r.sessions.iter().map(|s| s.latency.mean()).collect();
+    Some(means.iter().sum::<f64>() / means.len() as f64)
+}
+
+pub fn run(quick: bool) -> String {
+    let dur = duration_ms(quick, 10_000.0);
+    let mut t = Table::new(
+        "Table 2 — MobileNetV1(quant) avg latency (ms) under concurrency",
+        &["Device", "Accelerator", "1 model", "2 models", "4 models"],
+    );
+    let cases: [(&str, ProcKind); 7] = [
+        ("dimensity9000", ProcKind::Gpu),
+        ("dimensity9000", ProcKind::Dsp),
+        ("dimensity9000", ProcKind::Npu),
+        ("kirin970", ProcKind::Gpu),
+        ("kirin970", ProcKind::Npu),
+        ("snapdragon835", ProcKind::Gpu),
+        ("snapdragon835", ProcKind::Dsp),
+    ];
+    for (soc_name, kind) in cases {
+        let soc = soc_by_name(soc_name).unwrap();
+        let pid = soc.proc_by_kind(kind).unwrap();
+        let mut cells = vec![soc.device.clone(), soc.processors[pid].name.clone()];
+        for n in [1usize, 2, 4] {
+            cells.push(
+                avg_latency(&soc, kind, n, dur)
+                    .map(|v| fnum(v, 2))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&cells);
+    }
+    t.render()
+}

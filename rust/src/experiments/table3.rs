@@ -1,0 +1,31 @@
+//! Paper Table 3: subgraph and operation counts for the six evaluation
+//! models under Band-style (window size 1) partitioning on the Redmi
+//! K50 Pro — the candidate-explosion measurement motivating ADMS.
+
+use crate::analyzer;
+use crate::soc::dimensity9000;
+use crate::util::table::Table;
+use crate::zoo;
+
+const MODELS: [&str; 6] =
+    ["east", "yolo_v3", "mobilenet_v1", "mobilenet_v2", "icn_quant", "deeplab_v3"];
+
+pub fn run() -> String {
+    let soc = dimensity9000();
+    let mut t = Table::new(
+        "Table 3 — Subgraph and op counts, Band partitioning (ws=1), Redmi K50 Pro",
+        &["Model", "Operations", "Unit", "Merged", "Total"],
+    );
+    for name in MODELS {
+        let g = zoo::by_name(name).unwrap();
+        let p = analyzer::partition(&g, &soc, 1);
+        t.row(&[
+            zoo::display_name(name).to_string(),
+            g.num_real_ops().to_string(),
+            p.units.len().to_string(),
+            p.merged_candidates.to_string(),
+            p.total_subgraphs.to_string(),
+        ]);
+    }
+    t.render()
+}

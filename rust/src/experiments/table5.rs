@@ -1,0 +1,56 @@
+//! Paper Table 5: subgraph partitioning and single-model inference
+//! latency, Band vs ADMS, on the Redmi K50 Pro.
+//!
+//! Expected shape: ADMS produces far fewer unit/merged subgraphs (its
+//! window-size filter) and lower latency on every model.
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::analyzer::{self, tuner};
+use crate::sim::{App, SimConfig};
+use crate::soc::dimensity9000;
+use crate::util::table::{fnum, Table};
+use crate::zoo;
+
+const MODELS: [&str; 5] =
+    ["mobilenet_v1", "icn_quant", "deeplab_v3", "mobilenet_v2", "yolo_v3"];
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let dur = duration_ms(quick, 10_000.0);
+    let mut t = Table::new(
+        "Table 5 — Band vs ADMS: partitions and single-model latency (Redmi K50 Pro)",
+        &[
+            "Model",
+            "Units B",
+            "Units A",
+            "Merged B",
+            "Merged A",
+            "Latency B (ms)",
+            "Latency A (ms)",
+            "Δ",
+        ],
+    );
+    for name in MODELS {
+        let g = zoo::by_name(name).unwrap();
+        let band_p = analyzer::partition(&g, &soc, 1);
+        let (ws, _) = tuner::tune_window_size(&g, &soc, 12);
+        let adms_p = analyzer::partition(&g, &soc, ws);
+        let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+        let band_r =
+            run_framework(&soc, Framework::Band, vec![App::closed_loop(name)], cfg.clone());
+        let adms_r = run_framework(&soc, Framework::Adms, vec![App::closed_loop(name)], cfg);
+        let lb = band_r.sessions[0].latency.mean();
+        let la = adms_r.sessions[0].latency.mean();
+        t.row(&[
+            zoo::display_name(name).to_string(),
+            band_p.units.len().to_string(),
+            adms_p.units.len().to_string(),
+            band_p.merged_candidates.to_string(),
+            adms_p.merged_candidates.to_string(),
+            fnum(lb, 2),
+            fnum(la, 2),
+            format!("{}%", fnum(100.0 * (lb - la) / lb, 1)),
+        ]);
+    }
+    t.render()
+}

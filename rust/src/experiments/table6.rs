@@ -1,0 +1,28 @@
+//! Paper Table 6: average power consumption and energy efficiency during
+//! the FRS workload on the Redmi K50 Pro.
+//!
+//! Expected shape: TFLite lowest power but dismal FPS; Band highest
+//! power; ADMS slightly below Band in power with the highest FPS and the
+//! best frames/joule (paper: 5.74 vs 4.62 vs 1.56).
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::metrics::comparison_table;
+use crate::sim::{SimConfig, SimReport};
+use crate::soc::dimensity9000;
+use crate::workload::frs;
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let dur = duration_ms(quick, 60_000.0);
+    let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+    let reports: Vec<SimReport> = Framework::ALL
+        .iter()
+        .map(|&fw| run_framework(&soc, fw, frs(), cfg.clone()))
+        .collect();
+    let refs: Vec<&SimReport> = reports.iter().collect();
+    comparison_table(
+        "Table 6 — Power and energy efficiency, FRS on Redmi K50 Pro",
+        &refs,
+    )
+    .render()
+}

@@ -1,0 +1,84 @@
+//! Paper Table 7: system robustness under stress on the Redmi K50 Pro —
+//! failure rate over a long run, maximum concurrent models, and time to
+//! thermal throttling at 35 °C ambient.
+//!
+//! Expected shape: ADMS < Band < TFLite on failure rate; ADMS sustains
+//! the most concurrent models; TFLite throttles within minutes while
+//! ADMS lasts several times longer.
+
+use super::common::{duration_ms, run_framework, Framework};
+use crate::sim::SimConfig;
+use crate::soc::dimensity9000;
+use crate::util::table::{fnum, Table};
+use crate::workload::stress_mix;
+
+/// Highest concurrency (4..=limit) sustained with < 5 % failures.
+fn max_concurrent(fw: Framework, dur: f64, limit: usize) -> String {
+    let soc = dimensity9000();
+    let mut best = 0;
+    for n in (4..=limit).step_by(2) {
+        let cfg = SimConfig { duration_ms: dur, ..Default::default() };
+        let r = run_framework(&soc, fw, stress_mix(n), cfg);
+        if r.failure_rate() < 0.05 && r.total_completed() > 0 {
+            best = n;
+        } else {
+            break;
+        }
+    }
+    if best >= limit {
+        format!("{limit}+")
+    } else if best == 0 {
+        "<4".into()
+    } else {
+        best.to_string()
+    }
+}
+
+pub fn run(quick: bool) -> String {
+    let soc = dimensity9000();
+    let long_dur = duration_ms(quick, 600_000.0); // stand-in for the 30-min run
+    let conc_dur = duration_ms(quick, 8_000.0);
+    let therm_dur = duration_ms(quick, 900_000.0);
+    let limit = if quick { 6 } else { 12 };
+    let mut t = Table::new(
+        "Table 7 — Robustness under stress (Redmi K50 Pro)",
+        &[
+            "Metric",
+            Framework::Tflite.label(),
+            Framework::Band.label(),
+            Framework::Adms.label(),
+        ],
+    );
+    // Long-duration failure rate (tight SLO-free abort budget).
+    let mut fail_cells = vec!["Failure rate (long run, %)".to_string()];
+    let mut throttle_cells = vec!["Time to thermal throttling (min)".to_string()];
+    for fw in Framework::ALL {
+        let cfg = SimConfig {
+            duration_ms: long_dur,
+            fail_mult: 12.0,
+            ..Default::default()
+        };
+        let r = run_framework(&soc, fw, stress_mix(6), cfg);
+        fail_cells.push(fnum(100.0 * r.failure_rate(), 2));
+        // Thermal: 35 °C ambient per the paper's chamber test.
+        let cfg = SimConfig {
+            duration_ms: therm_dur,
+            ambient_c: Some(35.0),
+            ..Default::default()
+        };
+        let r = run_framework(&soc, fw, stress_mix(6), cfg);
+        throttle_cells.push(
+            r.first_throttle_ms()
+                .map(|t| fnum(t / 60_000.0, 1))
+                .unwrap_or_else(|| format!(">{}", fnum(therm_dur / 60_000.0, 0))),
+        );
+    }
+    t.row(&fail_cells);
+    let mut conc_cells = vec!["Max concurrent models".to_string()];
+    for fw in Framework::ALL {
+        conc_cells.push(max_concurrent(fw, conc_dur, limit));
+    }
+    t.row(&conc_cells);
+    t.row(&throttle_cells);
+    t.render()
+}

@@ -1,0 +1,358 @@
+//! Fluent graph construction. Zoo model builders use this API; each
+//! method appends one op node, computes its output shape and FLOPs/param
+//! annotations, and returns the new node's id.
+
+use super::ops::OpKind;
+use super::shape::{conv2d_flops, depthwise_flops, fc_flops, TensorShape};
+use super::{Graph, Node, NodeId};
+
+/// Builder for a [`Graph`]. Nodes are appended in topological order by
+/// construction.
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+    dtype_bytes: u64,
+}
+
+impl GraphBuilder {
+    /// `dtype_bytes`: 4 for float32 models, 1 for int8-quantized models.
+    pub fn new(name: &str, dtype_bytes: u64) -> Self {
+        GraphBuilder { name: name.to_string(), nodes: Vec::new(), dtype_bytes }
+    }
+
+    fn shape(&self, id: NodeId) -> TensorShape {
+        self.nodes[id].out_shape
+    }
+
+    /// Output shape of an already-added node (for builders that need to
+    /// size later ops from earlier ones).
+    pub fn peek_shape(&self, id: NodeId) -> TensorShape {
+        self.shape(id)
+    }
+
+    fn push(
+        &mut self,
+        kind: OpKind,
+        inputs: Vec<NodeId>,
+        out_shape: TensorShape,
+        flops: u64,
+        param_bytes: u64,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        let name = format!("{}_{}", kind.label().to_lowercase(), id);
+        self.nodes.push(Node { id, kind, name, inputs, out_shape, flops, param_bytes });
+        id
+    }
+
+    pub fn input(&mut self, dims: [u64; 4]) -> NodeId {
+        let s = TensorShape::new(&dims);
+        self.push(OpKind::Input, vec![], s, 0, 0)
+    }
+
+    pub fn input_vec(&mut self, dims: &[u64]) -> NodeId {
+        let s = TensorShape::new(dims);
+        self.push(OpKind::Input, vec![], s, 0, 0)
+    }
+
+    /// SAME-padded convolution, square kernel `k`, stride `s`.
+    pub fn conv2d(&mut self, x: NodeId, c_out: u64, k: u64, stride: u64) -> NodeId {
+        self.conv_like(OpKind::Conv2d, x, c_out, k, stride, 1)
+    }
+
+    /// Atrous convolution with the given dilation rate (stride 1).
+    pub fn dilated_conv2d(&mut self, x: NodeId, c_out: u64, k: u64, dilation: u64) -> NodeId {
+        self.conv_like(OpKind::DilatedConv2d, x, c_out, k, 1, dilation)
+    }
+
+    fn conv_like(
+        &mut self,
+        kind: OpKind,
+        x: NodeId,
+        c_out: u64,
+        k: u64,
+        stride: u64,
+        _dilation: u64,
+    ) -> NodeId {
+        let s = self.shape(x);
+        let (oh, ow) = s.conv_out(stride);
+        let flops = conv2d_flops(oh, ow, s.c(), c_out, k);
+        let params = (s.c() * c_out * k * k + c_out) * self.dtype_bytes;
+        self.push(kind, vec![x], TensorShape::nhwc(s.n(), oh, ow, c_out), flops, params)
+    }
+
+    /// SAME-padded depthwise convolution (channel multiplier 1).
+    pub fn depthwise_conv2d(&mut self, x: NodeId, k: u64, stride: u64) -> NodeId {
+        let s = self.shape(x);
+        let (oh, ow) = s.conv_out(stride);
+        let flops = depthwise_flops(oh, ow, s.c(), k);
+        let params = (s.c() * k * k + s.c()) * self.dtype_bytes;
+        self.push(
+            OpKind::DepthwiseConv2d,
+            vec![x],
+            TensorShape::nhwc(s.n(), oh, ow, s.c()),
+            flops,
+            params,
+        )
+    }
+
+    /// Transposed convolution that doubles spatial dims.
+    pub fn transpose_conv2d(&mut self, x: NodeId, c_out: u64, k: u64) -> NodeId {
+        let s = self.shape(x);
+        let (oh, ow) = (s.h() * 2, s.w() * 2);
+        let flops = conv2d_flops(oh, ow, s.c(), c_out, k);
+        let params = (s.c() * c_out * k * k + c_out) * self.dtype_bytes;
+        self.push(
+            OpKind::TransposeConv2d,
+            vec![x],
+            TensorShape::nhwc(s.n(), oh, ow, c_out),
+            flops,
+            params,
+        )
+    }
+
+    pub fn fully_connected(&mut self, x: NodeId, c_out: u64) -> NodeId {
+        let s = self.shape(x);
+        let c_in = s.elements() / s.n();
+        let flops = s.n() * fc_flops(c_in, c_out);
+        let params = (c_in * c_out + c_out) * self.dtype_bytes;
+        self.push(
+            OpKind::FullyConnected,
+            vec![x],
+            TensorShape::new(&[s.n(), c_out]),
+            flops,
+            params,
+        )
+    }
+
+    fn eltwise(&mut self, kind: OpKind, a: NodeId, b: NodeId) -> NodeId {
+        let sa = self.shape(a);
+        let sb = self.shape(b);
+        // Broadcasting: output takes the larger element count.
+        let out = if sa.elements() >= sb.elements() { sa } else { sb };
+        self.push(kind, vec![a, b], out, out.elements(), 0)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.eltwise(OpKind::Add, a, b)
+    }
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.eltwise(OpKind::Sub, a, b)
+    }
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.eltwise(OpKind::Mul, a, b)
+    }
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.eltwise(OpKind::Div, a, b)
+    }
+
+    fn unary(&mut self, kind: OpKind, x: NodeId, flops_per_elem: u64) -> NodeId {
+        let s = self.shape(x);
+        self.push(kind, vec![x], s, s.elements() * flops_per_elem, 0)
+    }
+
+    pub fn relu(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Relu, x, 1)
+    }
+    pub fn relu6(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Relu6, x, 1)
+    }
+    pub fn logistic(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Logistic, x, 4)
+    }
+    pub fn tanh(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Tanh, x, 4)
+    }
+    pub fn hard_swish(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::HardSwish, x, 3)
+    }
+    pub fn softmax(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Softmax, x, 5)
+    }
+    pub fn batch_norm(&mut self, x: NodeId) -> NodeId {
+        let s = self.shape(x);
+        let params = 4 * s.c() * self.dtype_bytes;
+        self.push(OpKind::BatchNorm, vec![x], s, 2 * s.elements(), params)
+    }
+    pub fn quantize(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Quantize, x, 1)
+    }
+    pub fn dequantize(&mut self, x: NodeId) -> NodeId {
+        self.unary(OpKind::Dequantize, x, 1)
+    }
+
+    pub fn max_pool2d(&mut self, x: NodeId, k: u64, stride: u64) -> NodeId {
+        self.pool(OpKind::MaxPool2d, x, k, stride)
+    }
+    pub fn avg_pool2d(&mut self, x: NodeId, k: u64, stride: u64) -> NodeId {
+        self.pool(OpKind::AvgPool2d, x, k, stride)
+    }
+
+    fn pool(&mut self, kind: OpKind, x: NodeId, k: u64, stride: u64) -> NodeId {
+        let s = self.shape(x);
+        let (oh, ow) = s.conv_out(stride);
+        let flops = oh * ow * s.c() * k * k;
+        self.push(kind, vec![x], TensorShape::nhwc(s.n(), oh, ow, s.c()), flops, 0)
+    }
+
+    /// Global spatial mean (keepdims=false): NHWC -> [N, C].
+    pub fn mean(&mut self, x: NodeId) -> NodeId {
+        let s = self.shape(x);
+        self.push(
+            OpKind::Mean,
+            vec![x],
+            TensorShape::new(&[s.n(), s.c()]),
+            s.elements(),
+            0,
+        )
+    }
+
+    /// Channel-axis concatenation.
+    pub fn concat(&mut self, xs: &[NodeId]) -> NodeId {
+        assert!(!xs.is_empty());
+        let first = self.shape(xs[0]);
+        let c: u64 = xs.iter().map(|&x| self.shape(x).c()).sum();
+        let out = TensorShape::nhwc(first.n(), first.h(), first.w(), c);
+        self.push(OpKind::Concat, xs.to_vec(), out, 0, 0)
+    }
+
+    pub fn reshape(&mut self, x: NodeId, dims: &[u64]) -> NodeId {
+        let s = self.shape(x);
+        let out = TensorShape::new(dims);
+        assert_eq!(s.elements(), out.elements(), "reshape must preserve elements");
+        self.push(OpKind::Reshape, vec![x], out, 0, 0)
+    }
+
+    pub fn squeeze(&mut self, x: NodeId) -> NodeId {
+        let s = self.shape(x);
+        let dims: Vec<u64> =
+            s.dims[..s.rank].iter().copied().filter(|&d| d != 1).collect();
+        let out = if dims.is_empty() { TensorShape::new(&[1]) } else { TensorShape::new(&dims) };
+        self.push(OpKind::Squeeze, vec![x], out, 0, 0)
+    }
+
+    pub fn pad(&mut self, x: NodeId, amount: u64) -> NodeId {
+        let s = self.shape(x);
+        let out = TensorShape::nhwc(s.n(), s.h() + 2 * amount, s.w() + 2 * amount, s.c());
+        self.push(OpKind::Pad, vec![x], out, 0, 0)
+    }
+
+    pub fn strided_slice(&mut self, x: NodeId, keep_c: u64) -> NodeId {
+        let s = self.shape(x);
+        let out = TensorShape::nhwc(s.n(), s.h(), s.w(), keep_c.min(s.c()));
+        self.push(OpKind::StridedSlice, vec![x], out, 0, 0)
+    }
+
+    pub fn resize_bilinear(&mut self, x: NodeId, h: u64, w: u64) -> NodeId {
+        let s = self.shape(x);
+        let out = TensorShape::nhwc(s.n(), h, w, s.c());
+        self.push(OpKind::ResizeBilinear, vec![x], out, out.elements() * 4, 0)
+    }
+
+    /// Splits channels evenly into `n` parts; returns the part node ids.
+    pub fn split(&mut self, x: NodeId, n: u64) -> Vec<NodeId> {
+        let s = self.shape(x);
+        let c = s.c() / n;
+        let out = TensorShape::nhwc(s.n(), s.h(), s.w(), c.max(1));
+        (0..n).map(|_| self.push(OpKind::Split, vec![x], out, 0, 0)).collect()
+    }
+
+    pub fn pack(&mut self, xs: &[NodeId]) -> NodeId {
+        let s = self.shape(xs[0]);
+        let out = TensorShape::nhwc(s.n() * xs.len() as u64, s.h(), s.w(), s.c());
+        self.push(OpKind::Pack, xs.to_vec(), out, 0, 0)
+    }
+
+    /// Number of ops added so far.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn finish(self) -> Graph {
+        let g = Graph { name: self.name, nodes: self.nodes, dtype_bytes: self.dtype_bytes };
+        g.validate().expect("builder produced an invalid graph");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn conv_shapes_and_params() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 224, 224, 3]);
+        let c = b.conv2d(x, 32, 3, 2);
+        let g = b.finish();
+        assert_eq!(g.nodes[c].out_shape, TensorShape::nhwc(1, 112, 112, 32));
+        assert_eq!(g.nodes[c].param_bytes, (3 * 32 * 9 + 32) * 4);
+        assert_eq!(g.nodes[c].flops, 2 * 112 * 112 * 32 * 3 * 9);
+    }
+
+    #[test]
+    fn depthwise_preserves_channels() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 56, 56, 64]);
+        let d = b.depthwise_conv2d(x, 3, 2);
+        let g = b.finish();
+        assert_eq!(g.nodes[d].out_shape, TensorShape::nhwc(1, 28, 28, 64));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 14, 14, 32]);
+        let a = b.conv2d(x, 64, 1, 1);
+        let c = b.conv2d(x, 96, 3, 1);
+        let cat = b.concat(&[a, c]);
+        let g = b.finish();
+        assert_eq!(g.nodes[cat].out_shape.c(), 160);
+    }
+
+    #[test]
+    fn fully_connected_flattens() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 7, 7, 1024]);
+        let m = b.mean(x);
+        let f = b.fully_connected(m, 1000);
+        let g = b.finish();
+        assert_eq!(g.nodes[m].out_shape, TensorShape::new(&[1, 1024]));
+        assert_eq!(g.nodes[f].out_shape, TensorShape::new(&[1, 1000]));
+        assert_eq!(g.nodes[f].flops, 2 * 1024 * 1000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_reshape_panics() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 4, 4, 4]);
+        b.reshape(x, &[1, 65]);
+    }
+
+    #[test]
+    fn split_divides_channels() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 8, 8, 32]);
+        let parts = b.split(x, 4);
+        let g = b.finish();
+        assert_eq!(parts.len(), 4);
+        for p in parts {
+            assert_eq!(g.nodes[p].out_shape.c(), 8);
+            assert_eq!(g.nodes[p].kind, OpKind::Split);
+        }
+    }
+
+    #[test]
+    fn quantized_dtype_params() {
+        let mut b = GraphBuilder::new("q", 1);
+        let x = b.input([1, 16, 16, 8]);
+        let c = b.conv2d(x, 8, 1, 1);
+        let g = b.finish();
+        assert_eq!(g.nodes[c].param_bytes, 8 * 8 + 8);
+        assert_eq!(g.dtype_bytes, 1);
+    }
+}

@@ -1,0 +1,64 @@
+//! Graphviz DOT export for debugging partitions (`adms partition --dot`).
+
+use super::Graph;
+
+/// Render the graph in DOT format. `partition` optionally assigns a color
+/// class per node (e.g. the subgraph index from the analyzer).
+pub fn to_dot(g: &Graph, partition: Option<&[usize]>) -> String {
+    const PALETTE: [&str; 8] = [
+        "#e6194b", "#3cb44b", "#4363d8", "#f58231", "#911eb4", "#46f0f0", "#f032e6", "#bcf60c",
+    ];
+    let mut out = format!("digraph \"{}\" {{\n  rankdir=TB;\n  node [shape=box, style=filled];\n", g.name);
+    for n in &g.nodes {
+        let color = match partition {
+            Some(p) => PALETTE[p.get(n.id).copied().unwrap_or(0) % PALETTE.len()],
+            None => "#dddddd",
+        };
+        out.push_str(&format!(
+            "  n{} [label=\"{}\\n{} {}\", fillcolor=\"{}\"];\n",
+            n.id,
+            n.name,
+            n.kind.label(),
+            n.out_shape,
+            color
+        ));
+    }
+    for n in &g.nodes {
+        for &i in &n.inputs {
+            out.push_str(&format!("  n{} -> n{};\n", i, n.id));
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let mut b = GraphBuilder::new("d", 4);
+        let x = b.input([1, 4, 4, 3]);
+        let c = b.conv2d(x, 8, 3, 1);
+        b.relu(c);
+        let g = b.finish();
+        let dot = to_dot(&g, None);
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+        assert!(dot.contains("n1 -> n2"));
+        assert!(dot.contains("CONV_2D"));
+    }
+
+    #[test]
+    fn partition_colors_differ() {
+        let mut b = GraphBuilder::new("d", 4);
+        let x = b.input([1, 4, 4, 3]);
+        b.relu(x);
+        let g = b.finish();
+        let dot = to_dot(&g, Some(&[0, 1]));
+        assert!(dot.contains("#e6194b"));
+        assert!(dot.contains("#3cb44b"));
+    }
+}

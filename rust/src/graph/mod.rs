@@ -1,0 +1,208 @@
+//! DNN model intermediate representation.
+//!
+//! A model is a directed acyclic graph of operations (paper §2.1): each
+//! node is one op, each edge a tensor dependency. The analyzer
+//! ([`crate::analyzer`]) partitions this DAG into processor-specific
+//! subgraphs; the SoC cost model ([`crate::soc`]) prices each node from
+//! the FLOPs / byte annotations computed here.
+
+pub mod ops;
+pub mod shape;
+pub mod builder;
+pub mod dot;
+
+pub use builder::GraphBuilder;
+pub use ops::{OpCategory, OpKind};
+pub use shape::TensorShape;
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// One operation in the model DAG.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    pub name: String,
+    /// Producer nodes whose outputs this op consumes.
+    pub inputs: Vec<NodeId>,
+    /// Shape of this op's (single) output tensor.
+    pub out_shape: TensorShape,
+    /// Multiply-accumulate-style floating-point work, in FLOPs.
+    pub flops: u64,
+    /// Bytes of trained parameters attached to this op (weights, biases).
+    pub param_bytes: u64,
+}
+
+impl Node {
+    /// Bytes of the output activation tensor.
+    pub fn out_bytes(&self, dtype_bytes: u64) -> u64 {
+        self.out_shape.elements() * dtype_bytes
+    }
+}
+
+/// A DNN model as a DAG of ops, stored in a topological order (builders
+/// construct nodes producer-first; [`Graph::validate`] enforces it).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Bytes per activation element (4 for f32 models, 1 for quantized).
+    pub dtype_bytes: u64,
+}
+
+impl Graph {
+    pub fn num_ops(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Op count excluding `Input` pseudo-nodes — the convention the paper
+    /// uses when reporting model sizes (Tables 1 and 3).
+    pub fn num_real_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind != OpKind::Input).count()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.nodes.iter().map(|n| n.flops).sum()
+    }
+
+    pub fn total_param_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.param_bytes).sum()
+    }
+
+    /// Consumers adjacency: for each node, which nodes read its output.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Ops with no consumers (model outputs).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        let cons = self.consumers();
+        (0..self.nodes.len()).filter(|&i| cons[i].is_empty()).collect()
+    }
+
+    /// Census of op kinds (`Input` pseudo-ops excluded): `(kind, count)`
+    /// sorted by count descending.
+    pub fn census(&self) -> Vec<(OpKind, usize)> {
+        let mut counts: std::collections::BTreeMap<OpKind, usize> = Default::default();
+        for n in self.nodes.iter().filter(|n| n.kind != OpKind::Input) {
+            *counts.entry(n.kind).or_default() += 1;
+        }
+        let mut v: Vec<_> = counts.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Census folded into the paper's Table 1 categories, as percentages
+    /// of real (non-`Input`) ops.
+    pub fn category_percentages(&self) -> Vec<(OpCategory, f64)> {
+        let mut counts: std::collections::BTreeMap<OpCategory, usize> = Default::default();
+        for n in self.nodes.iter().filter(|n| n.kind != OpKind::Input) {
+            *counts.entry(n.kind.category()).or_default() += 1;
+        }
+        let total = self.num_real_ops().max(1) as f64;
+        counts
+            .into_iter()
+            .map(|(c, n)| (c, 100.0 * n as f64 / total))
+            .collect()
+    }
+
+    /// Structural validation: ids match positions, inputs reference earlier
+    /// nodes only (therefore the graph is acyclic and topologically sorted),
+    /// and every non-first node is reachable-connected via some input.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                anyhow::bail!("node {} has id {}", i, n.id);
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    anyhow::bail!(
+                        "node {} ('{}') depends on node {} which is not earlier in topo order",
+                        i,
+                        n.name,
+                        inp
+                    );
+                }
+            }
+            if i > 0 && n.inputs.is_empty() && n.kind != OpKind::Input {
+                anyhow::bail!("non-input node {} ('{}') has no inputs", i, n.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("tiny", 4);
+        let x = b.input([1, 8, 8, 3]);
+        let c = b.conv2d(x, 16, 3, 1);
+        let r = b.relu(c);
+        let d = b.depthwise_conv2d(r, 3, 1);
+        let s = b.add(r, d);
+        b.softmax(s);
+        b.finish()
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = tiny();
+        assert_eq!(g.num_ops(), 6);
+        g.validate().unwrap();
+        assert_eq!(g.outputs(), vec![5]);
+    }
+
+    #[test]
+    fn consumers_are_inverse_of_inputs() {
+        let g = tiny();
+        let cons = g.consumers();
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                assert!(cons[i].contains(&n.id));
+            }
+        }
+        // relu output feeds both the depthwise conv and the add.
+        assert_eq!(cons[2].len(), 2);
+    }
+
+    #[test]
+    fn census_counts_kinds() {
+        let g = tiny();
+        let census = g.census();
+        let total: usize = census.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, g.num_real_ops());
+        assert_eq!(g.num_real_ops(), g.num_ops() - 1); // one Input node
+        assert!(census.iter().any(|(k, c)| *k == OpKind::Conv2d && *c == 1));
+    }
+
+    #[test]
+    fn category_percentages_sum_to_100() {
+        let g = tiny();
+        let sum: f64 = g.category_percentages().iter().map(|(_, p)| p).sum();
+        assert!((sum - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_rejects_forward_edges() {
+        let mut g = tiny();
+        g.nodes[1].inputs = vec![3]; // points forward
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn flops_are_positive_for_compute_ops() {
+        let g = tiny();
+        assert!(g.nodes[1].flops > 0); // conv
+        assert!(g.total_flops() > 0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Operation kinds and the paper's Table 1 category folding.
+
+/// Every op type appearing in the paper's evaluation models. The set
+/// mirrors the TFLite builtin ops those models compile to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    /// Pseudo-op marking a model input tensor.
+    Input,
+    Conv2d,
+    /// Atrous / dilated convolution (DeepLabV3's ASPP). Folded into the
+    /// paper's "DLG" Table-1 column together with `Logistic`.
+    DilatedConv2d,
+    DepthwiseConv2d,
+    TransposeConv2d,
+    FullyConnected,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Relu,
+    Relu6,
+    /// Sigmoid / logistic activation (paper Table 1 "DLG" column).
+    Logistic,
+    Tanh,
+    HardSwish,
+    Softmax,
+    MaxPool2d,
+    AvgPool2d,
+    Mean,
+    Concat,
+    Reshape,
+    Squeeze,
+    Pad,
+    StridedSlice,
+    ResizeBilinear,
+    BatchNorm,
+    Quantize,
+    Dequantize,
+    Split,
+    Pack,
+}
+
+/// Paper Table 1 columns: ADD, C2D, DLG, DW, Others.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpCategory {
+    Add,
+    Conv2d,
+    /// "DLG": dilated convs and logistic-gate activations.
+    Dlg,
+    DepthwiseConv,
+    Others,
+}
+
+impl OpCategory {
+    pub fn label(self) -> &'static str {
+        match self {
+            OpCategory::Add => "ADD",
+            OpCategory::Conv2d => "C2D",
+            OpCategory::Dlg => "DLG",
+            OpCategory::DepthwiseConv => "DW",
+            OpCategory::Others => "Others",
+        }
+    }
+    pub const ALL: [OpCategory; 5] = [
+        OpCategory::Add,
+        OpCategory::Conv2d,
+        OpCategory::Dlg,
+        OpCategory::DepthwiseConv,
+        OpCategory::Others,
+    ];
+}
+
+impl OpKind {
+    pub fn category(self) -> OpCategory {
+        match self {
+            OpKind::Add => OpCategory::Add,
+            OpKind::Conv2d => OpCategory::Conv2d,
+            OpKind::DilatedConv2d | OpKind::Logistic => OpCategory::Dlg,
+            OpKind::DepthwiseConv2d => OpCategory::DepthwiseConv,
+            _ => OpCategory::Others,
+        }
+    }
+
+    /// Compute-bound ops (priced by FLOPs against a processor's peak);
+    /// everything else is memory-bound (priced by bytes moved).
+    pub fn is_compute_bound(self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d
+                | OpKind::DilatedConv2d
+                | OpKind::DepthwiseConv2d
+                | OpKind::TransposeConv2d
+                | OpKind::FullyConnected
+        )
+    }
+
+    /// Pure data-movement / metadata ops with negligible arithmetic.
+    pub fn is_layout_op(self) -> bool {
+        matches!(
+            self,
+            OpKind::Reshape
+                | OpKind::Squeeze
+                | OpKind::Pad
+                | OpKind::StridedSlice
+                | OpKind::Concat
+                | OpKind::Split
+                | OpKind::Pack
+        )
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Input => "INPUT",
+            OpKind::Conv2d => "CONV_2D",
+            OpKind::DilatedConv2d => "DILATED_CONV_2D",
+            OpKind::DepthwiseConv2d => "DEPTHWISE_CONV_2D",
+            OpKind::TransposeConv2d => "TRANSPOSE_CONV",
+            OpKind::FullyConnected => "FULLY_CONNECTED",
+            OpKind::Add => "ADD",
+            OpKind::Sub => "SUB",
+            OpKind::Mul => "MUL",
+            OpKind::Div => "DIV",
+            OpKind::Relu => "RELU",
+            OpKind::Relu6 => "RELU6",
+            OpKind::Logistic => "LOGISTIC",
+            OpKind::Tanh => "TANH",
+            OpKind::HardSwish => "HARD_SWISH",
+            OpKind::Softmax => "SOFTMAX",
+            OpKind::MaxPool2d => "MAX_POOL_2D",
+            OpKind::AvgPool2d => "AVERAGE_POOL_2D",
+            OpKind::Mean => "MEAN",
+            OpKind::Concat => "CONCATENATION",
+            OpKind::Reshape => "RESHAPE",
+            OpKind::Squeeze => "SQUEEZE",
+            OpKind::Pad => "PAD",
+            OpKind::StridedSlice => "STRIDED_SLICE",
+            OpKind::ResizeBilinear => "RESIZE_BILINEAR",
+            OpKind::BatchNorm => "BATCH_NORM",
+            OpKind::Quantize => "QUANTIZE",
+            OpKind::Dequantize => "DEQUANTIZE",
+            OpKind::Split => "SPLIT",
+            OpKind::Pack => "PACK",
+        }
+    }
+
+    /// All kinds, for support-table construction and property generators.
+    pub const ALL: [OpKind; 30] = [
+        OpKind::Input,
+        OpKind::Conv2d,
+        OpKind::DilatedConv2d,
+        OpKind::DepthwiseConv2d,
+        OpKind::TransposeConv2d,
+        OpKind::FullyConnected,
+        OpKind::Add,
+        OpKind::Sub,
+        OpKind::Mul,
+        OpKind::Div,
+        OpKind::Relu,
+        OpKind::Relu6,
+        OpKind::Logistic,
+        OpKind::Tanh,
+        OpKind::HardSwish,
+        OpKind::Softmax,
+        OpKind::MaxPool2d,
+        OpKind::AvgPool2d,
+        OpKind::Mean,
+        OpKind::Concat,
+        OpKind::Reshape,
+        OpKind::Squeeze,
+        OpKind::Pad,
+        OpKind::StridedSlice,
+        OpKind::ResizeBilinear,
+        OpKind::BatchNorm,
+        OpKind::Quantize,
+        OpKind::Dequantize,
+        OpKind::Split,
+        OpKind::Pack,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_match_paper_columns() {
+        assert_eq!(OpKind::Add.category(), OpCategory::Add);
+        assert_eq!(OpKind::Conv2d.category(), OpCategory::Conv2d);
+        assert_eq!(OpKind::DepthwiseConv2d.category(), OpCategory::DepthwiseConv);
+        assert_eq!(OpKind::Logistic.category(), OpCategory::Dlg);
+        assert_eq!(OpKind::DilatedConv2d.category(), OpCategory::Dlg);
+        assert_eq!(OpKind::Softmax.category(), OpCategory::Others);
+    }
+
+    #[test]
+    fn all_list_is_unique_and_complete_for_labels() {
+        let mut labels: Vec<&str> = OpKind::ALL.iter().map(|k| k.label()).collect();
+        let n = labels.len();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), n, "duplicate labels in OpKind::ALL");
+    }
+
+    #[test]
+    fn compute_bound_ops_are_convs_and_fc() {
+        assert!(OpKind::Conv2d.is_compute_bound());
+        assert!(OpKind::FullyConnected.is_compute_bound());
+        assert!(!OpKind::Add.is_compute_bound());
+        assert!(!OpKind::Reshape.is_compute_bound());
+    }
+}

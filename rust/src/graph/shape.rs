@@ -1,0 +1,106 @@
+//! Tensor shapes (NHWC, the TFLite convention) and arithmetic-cost helpers.
+
+/// A tensor shape of up to 4 dimensions, NHWC for feature maps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub dims: [u64; 4],
+    pub rank: usize,
+}
+
+impl TensorShape {
+    pub fn new(dims: &[u64]) -> Self {
+        assert!(!dims.is_empty() && dims.len() <= 4, "rank must be 1..=4");
+        let mut d = [1u64; 4];
+        d[..dims.len()].copy_from_slice(dims);
+        TensorShape { dims: d, rank: dims.len() }
+    }
+
+    pub fn nhwc(n: u64, h: u64, w: u64, c: u64) -> Self {
+        Self::new(&[n, h, w, c])
+    }
+
+    pub fn elements(&self) -> u64 {
+        self.dims[..self.rank].iter().product()
+    }
+
+    pub fn n(&self) -> u64 {
+        self.dims[0]
+    }
+    pub fn h(&self) -> u64 {
+        self.dims[1]
+    }
+    pub fn w(&self) -> u64 {
+        self.dims[2]
+    }
+    pub fn c(&self) -> u64 {
+        self.dims[self.rank - 1]
+    }
+
+    /// Output spatial size for a strided, SAME-padded convolution/pool.
+    pub fn conv_out(&self, stride: u64) -> (u64, u64) {
+        assert!(stride >= 1);
+        ((self.h() + stride - 1) / stride, (self.w() + stride - 1) / stride)
+    }
+}
+
+impl std::fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> =
+            self.dims[..self.rank].iter().map(|d| d.to_string()).collect();
+        write!(f, "[{}]", parts.join("x"))
+    }
+}
+
+/// FLOPs for a standard convolution (2 × MACs).
+pub fn conv2d_flops(out_h: u64, out_w: u64, c_in: u64, c_out: u64, k: u64) -> u64 {
+    2 * out_h * out_w * c_out * c_in * k * k
+}
+
+/// FLOPs for a depthwise convolution.
+pub fn depthwise_flops(out_h: u64, out_w: u64, c: u64, k: u64) -> u64 {
+    2 * out_h * out_w * c * k * k
+}
+
+/// FLOPs for a fully connected layer.
+pub fn fc_flops(c_in: u64, c_out: u64) -> u64 {
+    2 * c_in * c_out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_basics() {
+        let s = TensorShape::nhwc(1, 224, 224, 3);
+        assert_eq!(s.elements(), 224 * 224 * 3);
+        assert_eq!(s.c(), 3);
+        assert_eq!(s.to_string(), "[1x224x224x3]");
+        let v = TensorShape::new(&[1, 1000]);
+        assert_eq!(v.c(), 1000);
+        assert_eq!(v.elements(), 1000);
+    }
+
+    #[test]
+    fn same_padding_out_size() {
+        let s = TensorShape::nhwc(1, 224, 224, 3);
+        assert_eq!(s.conv_out(2), (112, 112));
+        assert_eq!(s.conv_out(1), (224, 224));
+        let odd = TensorShape::nhwc(1, 7, 7, 3);
+        assert_eq!(odd.conv_out(2), (4, 4));
+    }
+
+    #[test]
+    fn flop_formulas() {
+        // 1x1 conv on 112x112x32 -> 64 channels: 2*112*112*64*32
+        assert_eq!(conv2d_flops(112, 112, 32, 64, 1), 2 * 112 * 112 * 64 * 32);
+        assert_eq!(depthwise_flops(112, 112, 32, 3), 2 * 112 * 112 * 32 * 9);
+        assert_eq!(fc_flops(1024, 1000), 2 * 1024 * 1000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_zero_rejected() {
+        TensorShape::new(&[]);
+    }
+}

@@ -1,0 +1,50 @@
+//! # ADMS — Advanced Multi-DNN Model Scheduling
+//!
+//! A reproduction of *"Optimizing Multi-DNN Inference on Mobile Devices
+//! through Heterogeneous Processor Co-Execution"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas serving framework.
+//!
+//! The paper's contribution — window-size-bounded subgraph partitioning
+//! ([`analyzer`]), a processor-state-aware multi-factor scheduler
+//! ([`sched`]), and a real-time hardware monitor ([`monitor`]) — lives in
+//! this crate (Layer 3), together with every substrate the evaluation
+//! depends on:
+//!
+//! * [`graph`] / [`zoo`] — a DNN DAG IR and builders for the paper's 13
+//!   evaluation models (op censuses match the paper's Tables 1 and 3);
+//! * [`soc`] / [`thermal`] / [`power`] — a calibrated heterogeneous
+//!   mobile-SoC simulator (Dimensity 9000, Kirin 970, Snapdragon 835)
+//!   with DVFS ladders, lumped-RC thermal dynamics, and power accounting;
+//! * [`sim`] — a discrete-event engine that drives the schedulers against
+//!   the SoC model and records execution timelines;
+//! * [`coordinator`] / [`runtime`] — a wall-clock serving runtime that
+//!   executes AOT-compiled HLO artifacts (Layer 2 JAX models built from
+//!   Layer 1 Pallas kernels) through PJRT, with Python never on the
+//!   request path;
+//! * [`experiments`] — regenerators for every table and figure in the
+//!   paper's evaluation section.
+//!
+//! See `DESIGN.md` for the full system inventory and the hardware
+//! substitution rationale, and `EXPERIMENTS.md` for paper-vs-measured
+//! results.
+
+pub mod util;
+pub mod testing;
+pub mod graph;
+pub mod zoo;
+pub mod soc;
+pub mod thermal;
+pub mod power;
+pub mod sim;
+pub mod monitor;
+pub mod analyzer;
+pub mod sched;
+pub mod workload;
+pub mod metrics;
+pub mod coordinator;
+pub mod runtime;
+pub mod experiments;
+
+/// Simulation time in milliseconds. All latency figures in the paper are
+/// reported in ms; keeping one unit end-to-end avoids conversion bugs.
+pub type TimeMs = f64;

@@ -1,0 +1,280 @@
+//! `adms` — command-line entry point.
+//!
+//! Subcommands:
+//!   experiment <id|all>   regenerate a paper table/figure (DESIGN.md §5)
+//!   partition <model>     analyze a model's subgraph partition
+//!   tune <model>          sweep window sizes and report the optimum
+//!   simulate              run a custom workload under a scheduler
+//!   serve                 wall-clock serving of the AOT artifacts (PJRT)
+//!   models | socs         list the zoo / SoC presets
+
+use adms::analyzer;
+use adms::experiments;
+use adms::sim::{App, SimConfig};
+use adms::soc::{soc_by_name, SOC_NAMES};
+use adms::util::cli::{parse, render_help, OptSpec};
+use adms::util::table::fnum;
+use adms::zoo;
+use anyhow::{bail, Result};
+
+fn main() {
+    env_logger_lite();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_lite() {
+    // Minimal logger so `log::warn!` in the runtime is visible.
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
+}
+
+const USAGE: &str = "adms <experiment|partition|tune|simulate|serve|models|socs> [options]";
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        println!("{USAGE}");
+        println!("\nexperiments: {}", experiments::EXPERIMENTS.join(", "));
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "experiment" => cmd_experiment(rest),
+        "partition" => cmd_partition(rest),
+        "tune" => cmd_tune(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "models" => {
+            for m in zoo::MODEL_NAMES {
+                let g = zoo::by_name(m).unwrap();
+                println!(
+                    "{m:18} {:22} {:4} ops  {:8.2} GFLOPs",
+                    zoo::display_name(m),
+                    g.num_real_ops(),
+                    g.total_flops() as f64 / 1e9
+                );
+            }
+            Ok(())
+        }
+        "socs" => {
+            for s in SOC_NAMES {
+                let soc = soc_by_name(s).unwrap();
+                println!("{s:15} {} — {} processors", soc.device, soc.num_processors());
+                for p in &soc.processors {
+                    println!(
+                        "  {:4} {:22} {:7.1} GFLOPS  {:5.1} GB/s  {} DVFS states",
+                        p.kind.label(),
+                        p.name,
+                        p.peak_gflops,
+                        p.mem_bw_gbps,
+                        p.freqs_mhz.len()
+                    );
+                }
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\nusage: {USAGE}"),
+    }
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "quick", takes_value: false, help: "compressed durations (CI)", default: None },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{}", render_help("adms experiment <id|all> [--quick]", &specs));
+        println!("ids: {}", experiments::EXPERIMENTS.join(", "));
+        return Ok(());
+    }
+    let quick = args.flag("quick");
+    let id = args.positional[0].as_str();
+    if id == "all" {
+        for id in experiments::EXPERIMENTS {
+            println!("{}", experiments::run(id, quick)?);
+        }
+    } else {
+        println!("{}", experiments::run(id, quick)?);
+    }
+    Ok(())
+}
+
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "soc", takes_value: true, help: "target SoC", default: Some("dimensity9000") },
+        OptSpec { name: "ws", takes_value: true, help: "window size", default: Some("1") },
+        OptSpec { name: "dot", takes_value: false, help: "emit graphviz DOT", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    let Some(model) = args.positional.first() else {
+        bail!("usage: adms partition <model> [--soc S] [--ws N] [--dot]");
+    };
+    let g = zoo::by_name(model).ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let soc = soc_by_name(&args.get_or("soc", "dimensity9000"))
+        .ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
+    let ws = args.get_usize("ws", 1)?;
+    let p = analyzer::partition(&g, &soc, ws);
+    if args.flag("dot") {
+        let mut colors = vec![0usize; g.num_ops()];
+        for (ui, u) in p.units.iter().enumerate() {
+            for &op in &u.ops {
+                colors[op] = ui;
+            }
+        }
+        println!("{}", adms::graph::dot::to_dot(&g, Some(&colors)));
+        return Ok(());
+    }
+    println!(
+        "{model} on {} at ws={ws}: {} ops, {} units, {} merged candidates, {} total",
+        soc.device,
+        g.num_real_ops(),
+        p.units.len(),
+        p.merged_candidates,
+        p.total_subgraphs
+    );
+    for (i, u) in p.units.iter().enumerate() {
+        let procs: Vec<&str> =
+            u.support.iter().map(|&q| soc.processors[q].kind.label()).collect();
+        println!(
+            "  unit {i:3}: ops {:3}..{:3} ({:3})  [{}]",
+            u.ops.first().unwrap(),
+            u.ops.last().unwrap(),
+            u.len(),
+            procs.join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "soc", takes_value: true, help: "target SoC", default: Some("dimensity9000") },
+        OptSpec { name: "max-ws", takes_value: true, help: "max window size", default: Some("12") },
+    ];
+    let args = parse(argv, &specs)?;
+    let Some(model) = args.positional.first() else {
+        bail!("usage: adms tune <model> [--soc S] [--max-ws N]");
+    };
+    let g = zoo::by_name(model).ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let soc = soc_by_name(&args.get_or("soc", "dimensity9000"))
+        .ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
+    let (best, sweep) = analyzer::tune_window_size(&g, &soc, args.get_usize("max-ws", 12)?);
+    println!("ws  units  merged  total  est_ms");
+    for p in sweep {
+        let mark = if p.window_size == best { " <- optimal" } else { "" };
+        println!(
+            "{:2}  {:5}  {:6}  {:5}  {}{}",
+            p.window_size,
+            p.units,
+            p.merged,
+            p.total,
+            fnum(p.est_latency_ms, 2),
+            mark
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    use adms::experiments::common::{run_framework, Framework};
+    let specs = [
+        OptSpec { name: "soc", takes_value: true, help: "target SoC", default: Some("dimensity9000") },
+        OptSpec { name: "scheduler", takes_value: true, help: "tflite|band|adms", default: Some("adms") },
+        OptSpec { name: "models", takes_value: true, help: "comma-separated zoo models", default: Some("retinaface,arcface_mobile,arcface_resnet50") },
+        OptSpec { name: "duration", takes_value: true, help: "simulated ms", default: Some("10000") },
+        OptSpec { name: "seed", takes_value: true, help: "rng seed", default: Some("42") },
+    ];
+    let args = parse(argv, &specs)?;
+    let soc = soc_by_name(&args.get_or("soc", "dimensity9000"))
+        .ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
+    let fw = match args.get_or("scheduler", "adms").as_str() {
+        "tflite" => Framework::Tflite,
+        "band" => Framework::Band,
+        "adms" => Framework::Adms,
+        other => bail!("unknown scheduler '{other}'"),
+    };
+    let mut apps: Vec<App> = Vec::new();
+    for m in args.get_or("models", "").split(',').filter(|s| !s.is_empty()) {
+        if zoo::by_name(m).is_none() {
+            bail!("unknown model '{m}'");
+        }
+        apps.push(App::closed_loop(m));
+    }
+    let cfg = SimConfig {
+        duration_ms: args.get_f64("duration", 10_000.0)?,
+        seed: args.get_u64("seed", 42)?,
+        ..Default::default()
+    };
+    let report = run_framework(&soc, fw, apps, cfg);
+    let refs = [&report];
+    println!("{}", adms::metrics::fps_table("Simulation", &refs).render());
+    println!("{}", adms::metrics::comparison_table("Summary", &refs).render());
+    for p in &report.procs {
+        println!(
+            "{:22} busy {:5.1}%  dispatches {:6}  max temp {:5.1} °C  throttles {}",
+            p.name,
+            100.0 * p.busy_frac,
+            p.dispatches,
+            p.temp.max(),
+            p.throttle_events
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "workers", takes_value: true, help: "worker threads", default: Some("2") },
+        OptSpec { name: "requests", takes_value: true, help: "requests to serve", default: Some("64") },
+        OptSpec { name: "no-verify", takes_value: false, help: "skip logits verification", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    let rt = adms::runtime::Runtime::cpu()?;
+    let dir = adms::runtime::default_artifact_dir();
+    let art = rt.load_dir(&dir)?;
+    println!(
+        "loaded '{}' from {dir:?} on {} ({} stages, pipeline {:?})",
+        art.model,
+        rt.platform(),
+        art.stages.len(),
+        art.pipeline
+    );
+    let cfg = adms::coordinator::ServeConfig {
+        workers: args.get_usize("workers", 2)?,
+        requests: args.get_usize("requests", 64)?,
+        verify: !args.flag("no-verify"),
+    };
+    let r = adms::coordinator::serve_probe(&art, &cfg)?;
+    println!(
+        "served {} requests on {} workers in {} ms: p50 {} ms, p95 {} ms, {} req/s, {} errors, {} verify failures",
+        r.completed,
+        r.workers,
+        fnum(r.wall_ms, 1),
+        fnum(r.latency.p50(), 3),
+        fnum(r.latency.p95(), 3),
+        fnum(r.throughput_rps, 1),
+        r.errors,
+        r.verify_failures
+    );
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Cross-framework comparison helpers for the experiment harness.
+
+use crate::sim::SimReport;
+use crate::util::table::{fnum, Table};
+
+/// Render a framework-comparison table (one row per metric, one column
+/// per report) in the style of the paper's Tables 6/7.
+pub fn comparison_table(title: &str, reports: &[&SimReport]) -> Table {
+    let mut header = vec!["Metric"];
+    let names: Vec<String> = reports.iter().map(|r| r.scheduler.clone()).collect();
+    for n in &names {
+        header.push(n);
+    }
+    let mut t = Table::new(title, &header);
+    let row = |t: &mut Table, name: &str, vals: Vec<String>| {
+        let mut cells = vec![name.to_string()];
+        cells.extend(vals);
+        t.row(&cells);
+    };
+    row(
+        &mut t,
+        "Total FPS",
+        reports.iter().map(|r| fnum(r.total_fps(), 2)).collect(),
+    );
+    row(
+        &mut t,
+        "Pipeline FPS",
+        reports.iter().map(|r| fnum(r.pipeline_fps(), 2)).collect(),
+    );
+    row(
+        &mut t,
+        "Mean latency (ms)",
+        reports.iter().map(|r| fnum(r.mean_latency_ms(), 2)).collect(),
+    );
+    row(
+        &mut t,
+        "Avg power (W)",
+        reports.iter().map(|r| fnum(r.avg_power_w(), 2)).collect(),
+    );
+    row(
+        &mut t,
+        "Energy (J)",
+        reports.iter().map(|r| fnum(r.energy_j, 1)).collect(),
+    );
+    row(
+        &mut t,
+        "Frames/Joule (pipeline)",
+        reports.iter().map(|r| fnum(r.pipeline_frames_per_joule(), 3)).collect(),
+    );
+    row(
+        &mut t,
+        "Failure rate (%)",
+        reports.iter().map(|r| fnum(r.failure_rate() * 100.0, 2)).collect(),
+    );
+    row(
+        &mut t,
+        "Avg processor busy (%)",
+        reports.iter().map(|r| fnum(r.avg_busy_frac() * 100.0, 1)).collect(),
+    );
+    t
+}
+
+/// Per-session FPS table (Fig 8 style).
+pub fn fps_table(title: &str, reports: &[&SimReport]) -> Table {
+    let mut header = vec!["Model"];
+    let names: Vec<String> = reports.iter().map(|r| r.scheduler.clone()).collect();
+    for n in &names {
+        header.push(n);
+    }
+    let mut t = Table::new(title, &header);
+    if reports.is_empty() {
+        return t;
+    }
+    for (i, s) in reports[0].sessions.iter().enumerate() {
+        let mut cells = vec![s.model.clone()];
+        for r in reports {
+            cells.push(fnum(r.sessions.get(i).map(|x| x.fps).unwrap_or(f64::NAN), 2));
+        }
+        t.row(&cells);
+    }
+    let mut cells = vec!["TOTAL".to_string()];
+    for r in reports {
+        cells.push(fnum(r.total_fps(), 2));
+    }
+    t.row(&cells);
+    let mut cells = vec!["PIPELINE".to_string()];
+    for r in reports {
+        cells.push(fnum(r.pipeline_fps(), 2));
+    }
+    t.row(&cells);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Adms;
+    use crate::sim::{App, Engine, SimConfig};
+    use crate::soc::dimensity9000;
+
+    fn tiny_report() -> SimReport {
+        Engine::new(
+            dimensity9000(),
+            SimConfig { duration_ms: 500.0, ..Default::default() },
+            vec![App::closed_loop("mobilenet_v1")],
+            Box::new(Adms::default()),
+            &|_| 5,
+        )
+        .unwrap()
+        .run()
+    }
+
+    #[test]
+    fn tables_render_without_panic() {
+        let r = tiny_report();
+        let cmp = comparison_table("t", &[&r, &r]);
+        let s = cmp.render();
+        assert!(s.contains("Total FPS"));
+        assert!(s.contains("Frames/Joule"));
+        let fps = fps_table("f", &[&r]);
+        assert!(fps.render().contains("mobilenet_v1"));
+        assert!(fps.render().contains("TOTAL"));
+    }
+}

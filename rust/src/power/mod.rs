@@ -1,0 +1,84 @@
+//! Power and energy model (paper Table 6, Fig 11).
+//!
+//! Per-processor power is `idle + (tdp − idle) · util · (f/f_max)^2.5`
+//! (dynamic power ≈ C·f·V² with V roughly affine in f). Device power adds
+//! a board baseline (display, rails, DRAM refresh) so absolute wattage is
+//! comparable to the paper's Monsoon measurements (~7–8 W under the FRS
+//! workload).
+
+use crate::soc::ProcessorSpec;
+
+/// Board-level constant draw (display + rails) added on top of processor
+/// power, in watts. The paper's Monsoon numbers include the whole phone.
+pub const BOARD_BASELINE_W: f64 = 2.6;
+
+/// Instantaneous power of one processor given utilization in `[0, 1]` and
+/// the current frequency scale in `(0, 1]`.
+pub fn processor_power_w(spec: &ProcessorSpec, util: f64, freq_scale: f64) -> f64 {
+    debug_assert!((0.0..=1.0 + 1e-9).contains(&util));
+    spec.idle_w + (spec.tdp_w - spec.idle_w) * util.clamp(0.0, 1.0) * freq_scale.powf(2.5)
+}
+
+/// Accumulates energy over time: feed it (power, dt) segments.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    joules: f64,
+    ms: f64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn accumulate(&mut self, watts: f64, dt_ms: f64) {
+        self.joules += watts * dt_ms / 1e3;
+        self.ms += dt_ms;
+    }
+    pub fn joules(&self) -> f64 {
+        self.joules
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.ms
+    }
+    pub fn avg_watts(&self) -> f64 {
+        if self.ms == 0.0 {
+            0.0
+        } else {
+            self.joules / (self.ms / 1e3)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::dimensity9000;
+
+    #[test]
+    fn idle_and_peak_bounds() {
+        let spec = &dimensity9000().processors[0];
+        assert_eq!(processor_power_w(spec, 0.0, 1.0), spec.idle_w);
+        assert!((processor_power_w(spec, 1.0, 1.0) - spec.tdp_w).abs() < 1e-9);
+        let half_freq = processor_power_w(spec, 1.0, 0.5);
+        assert!(half_freq < spec.tdp_w * 0.4, "DVFS should cut power superlinearly");
+        assert!(half_freq > spec.idle_w);
+    }
+
+    #[test]
+    fn energy_meter_integrates() {
+        let mut m = EnergyMeter::new();
+        m.accumulate(2.0, 500.0); // 2 W for 0.5 s = 1 J
+        m.accumulate(4.0, 250.0); // 4 W for 0.25 s = 1 J
+        assert!((m.joules() - 2.0).abs() < 1e-12);
+        assert!((m.avg_watts() - 2.0 / 0.75).abs() < 1e-12);
+        assert_eq!(m.elapsed_ms(), 750.0);
+    }
+
+    #[test]
+    fn throttled_processor_draws_less() {
+        let spec = &dimensity9000().processors[0];
+        let hot = processor_power_w(spec, 0.9, 1.0);
+        let throttled = processor_power_w(spec, 0.9, 1000.0 / 3050.0);
+        assert!(throttled < hot * 0.3);
+    }
+}

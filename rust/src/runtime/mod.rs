@@ -1,0 +1,209 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust request path (Python is never invoked at serving time).
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits 64-bit instruction ids in
+//! serialized HloModuleProto which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Each stage of
+//! the Layer-2 model compiles to one `PjRtLoadedExecutable`, cached here.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One compiled model stage.
+pub struct Stage {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Stage {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Execute on a flat f32 buffer (row-major, the stage's input shape).
+    pub fn execute_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.input_len(),
+            "stage '{}' expects {} elements, got {}",
+            self.name,
+            self.input_len(),
+            input.len()
+        );
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute({}): {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // Stages are lowered with return_tuple=True → 1-tuples.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+// SAFETY: the PJRT C API guarantees thread-safe `Execute` on loaded
+// executables and clients (PJRT_Client / PJRT_LoadedExecutable are
+// documented as thread-safe); the `xla` crate simply doesn't declare it.
+// Stages are only shared immutably after construction.
+unsafe impl Send for Stage {}
+unsafe impl Sync for Stage {}
+
+/// The numerics probe exported by `aot.py`: a fixed input and the fused
+/// model's logits, used as the end-to-end correctness check.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub input: Vec<f32>,
+    pub expected_logits: Vec<f32>,
+}
+
+/// A loaded artifact directory: compiled stages + pipeline order.
+pub struct ArtifactSet {
+    pub model: String,
+    pub stages: BTreeMap<String, Arc<Stage>>,
+    /// Stage names in serving order (e.g. stem → body → head).
+    pub pipeline: Vec<String>,
+    pub probe: Option<Probe>,
+}
+
+impl ArtifactSet {
+    pub fn stage(&self, name: &str) -> Result<Arc<Stage>> {
+        self.stages
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no stage '{name}'"))
+    }
+
+    /// The pipeline stages in execution order.
+    pub fn pipeline_stages(&self) -> Result<Vec<Arc<Stage>>> {
+        self.pipeline.iter().map(|n| self.stage(n)).collect()
+    }
+}
+
+/// PJRT client wrapper + artifact loader.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: see `Stage` — PJRT clients are thread-safe per the C API spec.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file.
+    pub fn compile_hlo_text(
+        &self,
+        path: &Path,
+        name: &str,
+        input_shape: Vec<usize>,
+        output_shape: Vec<usize>,
+    ) -> Result<Stage> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        Ok(Stage { name: name.to_string(), input_shape, output_shape, exe })
+    }
+
+    /// Load a full artifact directory produced by `make artifacts`.
+    pub fn load_dir(&self, dir: &Path) -> Result<ArtifactSet> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let j = json::parse(&text).context("parsing manifest.json")?;
+        let model = j.get("model").as_str().unwrap_or("?").to_string();
+        let mut stages = BTreeMap::new();
+        let stage_obj = j
+            .get("stages")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: missing 'stages'"))?;
+        for (name, info) in stage_obj {
+            let file = info
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("stage {name}: missing file"))?;
+            let shape = |key: &str| -> Result<Vec<usize>> {
+                info.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("stage {name}: missing {key}"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_u64()
+                            .map(|u| u as usize)
+                            .ok_or_else(|| anyhow!("bad dim"))
+                    })
+                    .collect()
+            };
+            let stage = self.compile_hlo_text(
+                &dir.join(file),
+                name,
+                shape("input_shape")?,
+                shape("output_shape")?,
+            )?;
+            stages.insert(name.clone(), Arc::new(stage));
+        }
+        let pipeline: Vec<String> = j
+            .get("pipeline")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let probe = match (
+            j.get("probe").get("input").as_arr(),
+            j.get("probe").get("expected_logits").as_arr(),
+        ) {
+            (Some(inp), Some(exp)) => Some(Probe {
+                input: inp.iter().filter_map(Json::as_f64).map(|v| v as f32).collect(),
+                expected_logits: exp
+                    .iter()
+                    .filter_map(Json::as_f64)
+                    .map(|v| v as f32)
+                    .collect(),
+            }),
+            _ => None,
+        };
+        Ok(ArtifactSet { model, stages, pipeline, probe })
+    }
+}
+
+/// Default artifact directory: `$ADMS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("ADMS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True when artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,356 @@
+//! The ADMS scheduler (paper §3.4): processor-state-aware, multi-factor
+//! priority scheduling.
+//!
+//! Two separable decisions per dispatch round, over the first
+//! `loop_call_size` tasks at the ready-queue head:
+//!
+//! **Task ordering** uses the paper's priority model (Eqs 1–4), lowest
+//! score first:
+//! * `S_deadline = γ·(T_SLO − T_latency)` — small slack ⇒ small score ⇒
+//!   scheduled sooner (Eq 1);
+//! * `S_wait = −α·(T_current − T_enqueue)/T_avg` — long normalized waits
+//!   push the score down, preventing starvation of complex tasks (Eq 2);
+//! * `S_resource = δ·((2·B_current − B_max)/B_max)·C_remaining` — positive
+//!   (deprioritizing) when the task's candidate processor is more than
+//!   half loaded, negative when lightly loaded (Eq 3);
+//! * `S_priority = S_deadline + S_wait + S_resource` (Eq 4).
+//!
+//! **Placement** maps the selected task to the processor minimizing its
+//! state-aware expected completion: monitored-frequency execution estimate
+//! (a throttled GPU is priced at its throttled speed) + backlog + tensor
+//! transfers + a thermal-headroom penalty proportional to the task's cost
+//! (§3.4: hot processors receive less computationally intensive tasks).
+
+use super::{free_slot_census, Assignment, PendingTask, SchedCtx, Scheduler};
+use crate::soc::cost;
+use crate::TimeMs;
+
+/// Tunable weights (γ, α, δ) and the decision-window size.
+#[derive(Debug, Clone)]
+pub struct AdmsConfig {
+    pub gamma: f64,
+    pub alpha: f64,
+    pub delta: f64,
+    /// How many queue-head tasks each decision round considers (§3.4).
+    pub loop_call_size: usize,
+    /// Backlog level treated as "full" for Eq 3's `B_max`, in ms.
+    pub b_max_ms: f64,
+    /// Thermal penalty per °C beyond (throttle − margin), per ms of task.
+    pub thermal_penalty: f64,
+    /// Headroom margin in °C at which the penalty starts.
+    pub thermal_margin_c: f64,
+}
+
+impl Default for AdmsConfig {
+    fn default() -> Self {
+        AdmsConfig {
+            gamma: 1.0,
+            alpha: 1.0,
+            delta: 1.0,
+            loop_call_size: 5,
+            b_max_ms: 50.0,
+            thermal_penalty: 1.0,
+            thermal_margin_c: 12.0,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Adms {
+    pub cfg: AdmsConfig,
+}
+
+impl Adms {
+    pub fn new(cfg: AdmsConfig) -> Self {
+        Adms { cfg }
+    }
+
+    /// State-aware expected-completion cost of running `t` on `proc`
+    /// (`extra_backlog` accounts for same-round commitments). `None` if
+    /// the processor is offline or does not support the unit.
+    pub fn placement_cost(
+        &self,
+        ctx: &SchedCtx,
+        t: &PendingTask,
+        proc: usize,
+        extra_backlog: TimeMs,
+    ) -> Option<f64> {
+        let plan = &ctx.plans[t.session];
+        let view = &ctx.procs[proc];
+        if view.offline {
+            return None;
+        }
+        // Price at the *monitored* frequency, not nameplate.
+        let exec = plan.exec_estimate(t.unit, proc, view.freq_scale.max(0.05))?;
+        let xfer: f64 = t
+            .dep_procs
+            .iter()
+            .map(|&(dep_unit, dep_proc)| {
+                let bytes = plan.xfer_bytes[t.unit]
+                    .iter()
+                    .find(|(d, _)| *d == dep_unit)
+                    .map(|(_, b)| *b)
+                    .unwrap_or(0);
+                cost::transfer_ms(ctx.soc, dep_proc, proc, bytes)
+            })
+            .sum();
+        // Thermal-headroom penalty: steer heavy work off hot processors.
+        let over = (self.cfg.thermal_margin_c - view.headroom_c).max(0.0);
+        let s_thermal = self.cfg.thermal_penalty * over * exec;
+        Some(view.backlog_ms + extra_backlog + exec + xfer + s_thermal)
+    }
+
+    /// Eq 4 priority for task `t` given its candidate completion estimate
+    /// on processor `proc`. Lower = dispatched earlier.
+    pub fn priority(
+        &self,
+        ctx: &SchedCtx,
+        t: &PendingTask,
+        proc: usize,
+        t_latency: TimeMs,
+    ) -> f64 {
+        let plan = &ctx.plans[t.session];
+        let view = &ctx.procs[proc];
+
+        // Eq 1: deadline slack. Without an SLO, fall back to 1.5× the
+        // plan's end-to-end estimate as the expected response time.
+        let t_slo = t.slo_ms.unwrap_or(plan.est_total_ms * 1.5);
+        let elapsed = ctx.now - t.req_arrival;
+        let s_deadline =
+            self.cfg.gamma * ((t_slo - elapsed) - (t_latency + t.remaining_ms));
+
+        // Eq 2: waiting fairness, normalized by average unit time.
+        let wait = (ctx.now - t.ready_at).max(0.0);
+        let s_wait = -self.cfg.alpha * wait / plan.avg_unit_ms;
+
+        // Eq 3: resource efficiency at the candidate processor.
+        let s_resource = self.cfg.delta
+            * ((2.0 * view.backlog_ms - self.cfg.b_max_ms) / self.cfg.b_max_ms)
+            * t.remaining_ms;
+
+        s_deadline + s_wait + s_resource
+    }
+}
+
+impl Scheduler for Adms {
+    fn name(&self) -> &'static str {
+        "adms"
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
+        let mut free = free_slot_census(ctx);
+        let mut backlog_bump: Vec<TimeMs> = vec![0.0; ctx.soc.num_processors()];
+        let mut out: Vec<Assignment> = Vec::new();
+        let window = self.cfg.loop_call_size.max(1);
+        let mut taken = vec![false; ready.len()];
+
+        // Each round: within the decision window, find each task's best
+        // placement, rank tasks by Eq 4, commit the lowest; repeat until
+        // no capacity or no candidates remain.
+        loop {
+            let mut best: Option<(usize, usize, f64)> = None; // (idx, proc, priority)
+            let mut considered = 0;
+            for (idx, t) in ready.iter().enumerate() {
+                if taken[idx] {
+                    continue;
+                }
+                considered += 1;
+                if considered > window {
+                    break;
+                }
+                // Best placement for this task.
+                let mut placed: Option<(usize, f64)> = None;
+                for p in 0..ctx.soc.num_processors() {
+                    if free[p] == 0 {
+                        continue;
+                    }
+                    if let Some(c) = self.placement_cost(ctx, t, p, backlog_bump[p]) {
+                        if placed.map(|(_, pc)| c < pc).unwrap_or(true) {
+                            placed = Some((p, c));
+                        }
+                    }
+                }
+                let Some((p, completion)) = placed else { continue };
+                let prio = self.priority(ctx, t, p, completion);
+                if best.map(|(_, _, b)| prio < b).unwrap_or(true) {
+                    best = Some((idx, p, prio));
+                }
+            }
+            match best {
+                Some((idx, p, _)) => {
+                    taken[idx] = true;
+                    free[p] -= 1;
+                    let t = &ready[idx];
+                    let exec = ctx.plans[t.session]
+                        .exec_estimate(t.unit, p, ctx.procs[p].freq_scale.max(0.05))
+                        .unwrap_or(0.0);
+                    backlog_bump[p] += exec;
+                    out.push(Assignment { ready_idx: idx, proc: p });
+                }
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::ProcView;
+    use crate::sched::ModelPlan;
+    use crate::soc::dimensity9000;
+    use crate::zoo;
+    use std::sync::Arc;
+
+    fn views(soc: &crate::soc::SocSpec) -> Vec<ProcView> {
+        soc.processors
+            .iter()
+            .enumerate()
+            .map(|(id, p)| ProcView {
+                id,
+                kind: p.kind,
+                temp_c: 30.0,
+                freq_mhz: p.max_freq(),
+                freq_scale: 1.0,
+                offline: false,
+                load: 0.0,
+                backlog_ms: 0.0,
+                active_sessions: 0,
+                util: 0.0,
+                headroom_c: p.throttle_temp_c - 30.0,
+            })
+            .collect()
+    }
+
+    fn pending(unit: usize, now: f64) -> PendingTask {
+        PendingTask {
+            req: 0,
+            session: 0,
+            unit,
+            ready_at: now,
+            req_arrival: now,
+            slo_ms: Some(50.0),
+            remaining_ms: 5.0,
+            dep_procs: vec![],
+        }
+    }
+
+    #[test]
+    fn assigns_ready_tasks_to_supported_procs() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let v = views(&soc);
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let mut s = Adms::default();
+        let ready = vec![pending(0, 0.0)];
+        let a = s.schedule(&ctx, &ready);
+        assert_eq!(a.len(), 1);
+        let proc = a[0].proc;
+        assert!(plans[0].partition.units[0].supports(proc));
+    }
+
+    #[test]
+    fn hot_processor_is_avoided_when_alternative_exists() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let mut v = views(&soc);
+        // Find the proc ADMS picks when everything is cool…
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let mut s = Adms::default();
+        let ready = vec![pending(0, 0.0)];
+        let cool_choice = s.schedule(&ctx, &ready)[0].proc;
+        // …then overheat it and expect a different choice.
+        v[cool_choice].temp_c = 67.5;
+        v[cool_choice].headroom_c = 0.5;
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let hot_choice = s.schedule(&ctx, &ready)[0].proc;
+        assert_ne!(hot_choice, cool_choice, "scheduler ignored thermal state");
+    }
+
+    #[test]
+    fn loaded_processor_is_deprioritized() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let mut v = views(&soc);
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let mut s = Adms::default();
+        let ready = vec![pending(0, 0.0)];
+        let first = s.schedule(&ctx, &ready)[0].proc;
+        v[first].backlog_ms = 500.0; // far beyond B_max
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let second = s.schedule(&ctx, &ready)[0].proc;
+        assert_ne!(second, first, "scheduler ignored backlog");
+    }
+
+    #[test]
+    fn throttled_frequency_raises_estimates() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let v = views(&soc);
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let s = Adms::default();
+        let t = pending(0, 0.0);
+        let base = s.placement_cost(&ctx, &t, 0, 0.0).unwrap();
+        let mut v2 = views(&soc);
+        v2[0].freq_scale = 0.33;
+        let ctx2 = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v2 };
+        let slow = s.placement_cost(&ctx2, &t, 0, 0.0).unwrap();
+        assert!(slow > base, "throttled estimate not reflected: {slow} vs {base}");
+    }
+
+    #[test]
+    fn waiting_lowers_priority_score() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let v = views(&soc);
+        let s = Adms::default();
+        let mut t = pending(0, 0.0);
+        let ctx = SchedCtx { now: 100.0, soc: &soc, plans: &plans, procs: &v };
+        t.ready_at = 99.0;
+        let fresh = s.priority(&ctx, &t, 0, 5.0);
+        t.ready_at = 0.0; // has waited 100 ms
+        let waited = s.priority(&ctx, &t, 0, 5.0);
+        assert!(waited < fresh, "long wait should lower (prioritize) the score");
+    }
+
+    #[test]
+    fn tighter_deadline_lowers_priority_score() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let v = views(&soc);
+        let s = Adms::default();
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let mut tight = pending(0, 0.0);
+        tight.slo_ms = Some(10.0);
+        let mut loose = pending(0, 0.0);
+        loose.slo_ms = Some(500.0);
+        assert!(
+            s.priority(&ctx, &tight, 0, 5.0) < s.priority(&ctx, &loose, 0, 5.0),
+            "tight deadline must rank first"
+        );
+    }
+
+    #[test]
+    fn offline_processor_never_selected() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let mut v = views(&soc);
+        for view in v.iter_mut().skip(1) {
+            view.offline = true;
+        }
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let mut s = Adms::default();
+        let ready = vec![pending(0, 0.0)];
+        let a = s.schedule(&ctx, &ready);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].proc, 0, "only the CPU is online");
+    }
+}

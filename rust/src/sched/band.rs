@@ -1,0 +1,76 @@
+//! Band baseline (Jeong et al., MobiSys '22; paper §4.2).
+//!
+//! Band decomposes models into unit subgraphs (no window-size filtering —
+//! its candidate explosion is the paper's Table 3) and greedily maps each
+//! ready subgraph to the processor with the shortest expected completion
+//! time. It tracks its own dispatched backlog but is *state-blind*: the
+//! expected-latency table assumes maximum frequency and ignores
+//! temperature, so under throttling its estimates drift and it keeps
+//! piling work onto hot processors.
+
+use super::{free_slot_census, Assignment, PendingTask, SchedCtx, Scheduler};
+use crate::soc::cost;
+
+#[derive(Debug, Default)]
+pub struct Band;
+
+impl Band {
+    pub fn new() -> Self {
+        Band
+    }
+}
+
+impl Scheduler for Band {
+    fn name(&self) -> &'static str {
+        "band"
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
+        let mut free = free_slot_census(ctx);
+        // Band's own bookkeeping of backlog it has dispatched: approximate
+        // with the monitor's backlog figure (its queues are its own, so
+        // this much it does know).
+        let mut backlog: Vec<f64> = ctx.procs.iter().map(|p| p.backlog_ms).collect();
+        let mut out = Vec::new();
+        // Greedy shortest-expected-latency, first-come-first-considered.
+        for (idx, t) in ready.iter().enumerate() {
+            let plan = &ctx.plans[t.session];
+            let mut best: Option<(usize, f64)> = None;
+            for p in 0..ctx.soc.num_processors() {
+                if free[p] == 0 {
+                    continue;
+                }
+                // State-blind: assumes full frequency (scale = 1.0), no
+                // thermal awareness.
+                let exec = match plan.exec_estimate(t.unit, p, 1.0) {
+                    Some(e) => e,
+                    None => continue,
+                };
+                // Transfer costs for dependencies produced elsewhere.
+                let xfer: f64 = t
+                    .dep_procs
+                    .iter()
+                    .map(|&(dep_unit, dep_proc)| {
+                        let bytes = plan
+                            .xfer_bytes[t.unit]
+                            .iter()
+                            .find(|(d, _)| *d == dep_unit)
+                            .map(|(_, b)| *b)
+                            .unwrap_or(0);
+                        cost::transfer_ms(ctx.soc, dep_proc, p, bytes)
+                    })
+                    .sum();
+                let expected = backlog[p] + exec + xfer;
+                if best.map(|(_, b)| expected < b).unwrap_or(true) {
+                    best = Some((p, expected));
+                }
+            }
+            if let Some((p, exp)) = best {
+                free[p] -= 1;
+                backlog[p] += exp;
+                out.push(Assignment { ready_idx: idx, proc: p });
+            }
+        }
+        out
+    }
+}

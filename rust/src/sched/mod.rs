@@ -1,0 +1,179 @@
+//! Schedulers (paper §3.4) and the execution-plan / task model they share.
+//!
+//! Three policies, matching the paper's evaluation arms:
+//!
+//! * [`vanilla::VanillaTflite`] — TFLite's behaviour: each model is pinned
+//!   to one delegate (the "best" accelerator); unsupported ops fall back
+//!   to the CPU; execution is model-level (one subgraph chain at a time).
+//! * [`band::Band`] — unit-subgraph scheduling with a shortest-expected-
+//!   latency greedy over its (ws = 1) candidate explosion; state-blind:
+//!   it tracks its own queue backlog but ignores temperature/frequency.
+//! * [`adms::Adms`] — the paper's contribution: window-size-filtered
+//!   partitions plus the multi-factor priority model of Eqs 1–4
+//!   (deadline, fairness, resource) with processor-state awareness from
+//!   the [`HardwareMonitor`](crate::monitor::HardwareMonitor).
+
+pub mod plan;
+pub mod vanilla;
+pub mod band;
+pub mod adms;
+pub mod pinned;
+
+pub use adms::Adms;
+pub use band::Band;
+pub use pinned::Pinned;
+pub use plan::ModelPlan;
+pub use vanilla::VanillaTflite;
+
+use crate::monitor::ProcView;
+use crate::soc::{ProcId, SocSpec};
+use crate::TimeMs;
+
+/// Request identifier (unique across a simulation run).
+pub type ReqId = u64;
+/// Session = one concurrently-running application/model instance.
+pub type SessId = usize;
+
+/// A schedulable unit-subgraph instance awaiting dispatch.
+#[derive(Debug, Clone)]
+pub struct PendingTask {
+    pub req: ReqId,
+    pub session: SessId,
+    /// Unit index within the session's [`ModelPlan`].
+    pub unit: usize,
+    /// When the task became ready (deps satisfied).
+    pub ready_at: TimeMs,
+    /// When the request arrived (for deadline slack).
+    pub req_arrival: TimeMs,
+    /// Request SLO, if any.
+    pub slo_ms: Option<f64>,
+    /// Estimated remaining work for the whole request after this task, ms
+    /// (the `C_remaining` of Eq 3).
+    pub remaining_ms: f64,
+    /// Processor each completed dependency ran on (for transfer pricing).
+    pub dep_procs: Vec<(usize, ProcId)>,
+}
+
+/// What the scheduler sees when asked for a decision.
+pub struct SchedCtx<'a> {
+    pub now: TimeMs,
+    pub soc: &'a SocSpec,
+    /// One plan per session (index = session id).
+    pub plans: &'a [ModelPlan],
+    /// Monitor snapshot — possibly stale, per the monitor cache interval.
+    pub procs: &'a [ProcView],
+}
+
+impl<'a> SchedCtx<'a> {
+    /// Processors currently able to accept a task (online, free slot).
+    pub fn available_procs(&self) -> Vec<ProcId> {
+        self.procs
+            .iter()
+            .filter(|p| !p.offline && p.load < 1.0)
+            .map(|p| p.id)
+            .collect()
+    }
+}
+
+/// Free execution slots per processor, derived from the monitor view
+/// (schedulers use this to avoid double-booking within one decision).
+pub fn free_slot_census(ctx: &SchedCtx) -> Vec<usize> {
+    ctx.procs
+        .iter()
+        .map(|v| {
+            if v.offline {
+                0
+            } else {
+                let total = ctx.soc.processors[v.id].parallel_slots as f64;
+                ((1.0 - v.load) * total).round().max(0.0) as usize
+            }
+        })
+        .collect()
+}
+
+/// An assignment decision: ready-queue index → processor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub ready_idx: usize,
+    pub proc: ProcId,
+}
+
+/// Scheduling policy interface. The engine calls [`Scheduler::schedule`]
+/// whenever new tasks become ready or a processor frees a slot; the
+/// scheduler returns any number of assignments (the engine validates
+/// support/capacity and ignores invalid ones defensively).
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment>;
+
+    /// Per-dispatch scheduling/management overhead in ms, given the
+    /// session's plan (candidate-set size drives it — see
+    /// [`crate::analyzer::tuner::management_overhead_ms`]).
+    fn decision_overhead_ms(&self, plan: &ModelPlan) -> TimeMs {
+        crate::analyzer::tuner::management_overhead_ms(plan.partition.total_subgraphs)
+    }
+
+    /// True if this policy executes each session's tasks strictly in
+    /// order, one at a time (TFLite's model-level execution). The engine
+    /// then exposes only each session's earliest ready task.
+    fn serializes_sessions(&self) -> bool {
+        false
+    }
+
+    /// Cost of moving a tensor between processors under this runtime.
+    /// Band and ADMS implement shared zero-copy buffers (DMA over the
+    /// memory bus); TFLite's NNAPI path pays a driver round-trip per
+    /// partition handoff — override accordingly.
+    fn transfer_cost_ms(
+        &self,
+        soc: &SocSpec,
+        from: ProcId,
+        to: ProcId,
+        bytes: u64,
+    ) -> TimeMs {
+        crate::soc::cost::transfer_ms(soc, from, to, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::ProcView;
+    use crate::soc::{dimensity9000, ProcKind};
+
+    pub(crate) fn mk_views(soc: &SocSpec) -> Vec<ProcView> {
+        soc.processors
+            .iter()
+            .enumerate()
+            .map(|(id, p)| ProcView {
+                id,
+                kind: p.kind,
+                temp_c: 30.0,
+                freq_mhz: p.max_freq(),
+                freq_scale: 1.0,
+                offline: false,
+                load: 0.0,
+                backlog_ms: 0.0,
+                active_sessions: 0,
+                util: 0.0,
+                headroom_c: p.throttle_temp_c - 30.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn available_procs_excludes_offline_and_full() {
+        let soc = dimensity9000();
+        let mut views = mk_views(&soc);
+        views[1].offline = true;
+        views[2].load = 1.0;
+        let plans: Vec<ModelPlan> = vec![];
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &views };
+        let avail = ctx.available_procs();
+        assert!(!avail.contains(&1));
+        assert!(!avail.contains(&2));
+        assert!(avail.contains(&0));
+        assert_eq!(soc.processors[0].kind, ProcKind::Cpu);
+    }
+}

@@ -1,0 +1,52 @@
+//! Pinned scheduler: every task of every session goes to one processor
+//! (CPU fallback for unsupported units). Used by the Table 2 concurrency
+//! experiment ("average latency for MobileNetV1 on various processors")
+//! and the Fig 3 single-processor measurements.
+
+use super::{free_slot_census, Assignment, PendingTask, SchedCtx, Scheduler};
+use crate::soc::ProcId;
+
+#[derive(Debug)]
+pub struct Pinned {
+    target: ProcId,
+    cpu: ProcId,
+}
+
+impl Pinned {
+    pub fn new(target: ProcId, cpu: ProcId) -> Self {
+        Pinned { target, cpu }
+    }
+}
+
+impl Scheduler for Pinned {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+
+    fn serializes_sessions(&self) -> bool {
+        true
+    }
+
+    fn decision_overhead_ms(&self, _plan: &super::ModelPlan) -> crate::TimeMs {
+        0.02 // fixed-placement interpreter, same as vanilla TFLite
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
+        let mut free = free_slot_census(ctx);
+        let mut out = Vec::new();
+        for (idx, t) in ready.iter().enumerate() {
+            let plan = &ctx.plans[t.session];
+            let target = if plan.partition.units[t.unit].supports(self.target) {
+                self.target
+            } else {
+                self.cpu
+            };
+            if ctx.procs[target].offline || free[target] == 0 {
+                continue;
+            }
+            free[target] -= 1;
+            out.push(Assignment { ready_idx: idx, proc: target });
+        }
+        out
+    }
+}

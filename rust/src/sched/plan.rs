@@ -1,0 +1,166 @@
+//! Execution plans: a model's partition priced for one SoC.
+//!
+//! Built once per (model, SoC, window-size) — the paper stores these in a
+//! configuration file after first analysis (§3.4: "the generated
+//! subgraphs are stored in a configuration file for future use").
+
+use crate::analyzer::{self, Partition};
+use crate::graph::Graph;
+use crate::soc::{cost, ProcId, SocSpec};
+use crate::TimeMs;
+use std::sync::Arc;
+
+/// A partitioned, cost-annotated model ready for scheduling.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub graph: Arc<Graph>,
+    pub partition: Partition,
+    /// `deps[u]` = units that must finish before unit `u`.
+    pub deps: Vec<Vec<usize>>,
+    /// `consumers[u]` = units waiting on `u`.
+    pub consumers: Vec<Vec<usize>>,
+    /// `exec_ms[u][p]` = unit latency on processor `p` at max frequency
+    /// (`None` = unsupported there).
+    pub exec_ms: Vec<Vec<Option<TimeMs>>>,
+    /// `xfer_bytes[u]` = (dep unit, boundary bytes) pairs.
+    pub xfer_bytes: Vec<Vec<(usize, u64)>>,
+    /// Best-case single-model latency estimate (placement DP).
+    pub est_total_ms: TimeMs,
+    /// Mean unit execution time on the fastest processor (the `T_avg`
+    /// normalizer of Eq 2).
+    pub avg_unit_ms: TimeMs,
+}
+
+impl ModelPlan {
+    pub fn build(graph: Arc<Graph>, soc: &SocSpec, window_size: usize) -> Self {
+        let partition = analyzer::partition(&graph, soc, window_size);
+        let units = &partition.units;
+        let deps = analyzer::unit_deps(&graph, units);
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); units.len()];
+        for (u, ds) in deps.iter().enumerate() {
+            for &d in ds {
+                consumers[d].push(u);
+            }
+        }
+        let np = soc.num_processors();
+        let exec_ms: Vec<Vec<Option<TimeMs>>> = units
+            .iter()
+            .map(|u| {
+                (0..np)
+                    .map(|p| {
+                        if u.supports(p) {
+                            cost::subgraph_latency_ms(&graph, &u.ops, &soc.processors[p], 1.0)
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let xfer_bytes: Vec<Vec<(usize, u64)>> = (0..units.len())
+            .map(|u| {
+                deps[u]
+                    .iter()
+                    .map(|&d| (d, analyzer::inter_unit_bytes(&graph, units, d, u)))
+                    .collect()
+            })
+            .collect();
+        let est_total_ms = analyzer::estimate_chain_latency_ms(&graph, soc, &partition);
+        let best_units: f64 = exec_ms
+            .iter()
+            .map(|per_proc| {
+                per_proc
+                    .iter()
+                    .flatten()
+                    .copied()
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum();
+        let avg_unit_ms = (best_units / units.len().max(1) as f64).max(1e-3);
+        ModelPlan {
+            graph,
+            partition,
+            deps,
+            consumers,
+            exec_ms,
+            xfer_bytes,
+            est_total_ms,
+            avg_unit_ms,
+        }
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.partition.units.len()
+    }
+
+    /// Execution estimate for a unit on a processor at a frequency scale.
+    pub fn exec_estimate(&self, unit: usize, proc: ProcId, freq_scale: f64) -> Option<TimeMs> {
+        self.exec_ms[unit][proc].map(|t| t / freq_scale.max(1e-3))
+    }
+
+    /// Remaining-work estimate: sum of best-case unit costs for the given
+    /// set of unfinished units.
+    pub fn remaining_ms(&self, unfinished: impl Iterator<Item = usize>) -> TimeMs {
+        unfinished
+            .map(|u| {
+                self.exec_ms[u]
+                    .iter()
+                    .flatten()
+                    .copied()
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .filter(|t| t.is_finite())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::dimensity9000;
+    use crate::zoo;
+
+    #[test]
+    fn plan_invariants_hold_for_all_models() {
+        let soc = dimensity9000();
+        for g in zoo::all_models() {
+            let plan = ModelPlan::build(Arc::new(g), &soc, 5);
+            assert!(plan.num_units() >= 1);
+            assert!(plan.est_total_ms > 0.0);
+            assert!(plan.avg_unit_ms > 0.0);
+            for (u, per_proc) in plan.exec_ms.iter().enumerate() {
+                // Every unit must be runnable somewhere (CPU at minimum).
+                assert!(
+                    per_proc.iter().any(|e| e.is_some()),
+                    "{} unit {u} unrunnable",
+                    plan.graph.name
+                );
+            }
+            // consumers is the inverse of deps.
+            for (u, ds) in plan.deps.iter().enumerate() {
+                for &d in ds {
+                    assert!(plan.consumers[d].contains(&u));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exec_estimate_scales_with_frequency() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let full = plan.exec_estimate(0, 0, 1.0).unwrap();
+        let half = plan.exec_estimate(0, 0, 0.5).unwrap();
+        assert!((half - full * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remaining_ms_decreases_as_units_finish() {
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::deeplab_v3()), &soc, 5);
+        let all = plan.remaining_ms(0..plan.num_units());
+        let tail = plan.remaining_ms(1..plan.num_units());
+        assert!(all > tail);
+        assert_eq!(plan.remaining_ms(std::iter::empty()), 0.0);
+    }
+}

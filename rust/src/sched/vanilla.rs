@@ -1,0 +1,115 @@
+//! Vanilla TFLite baseline (paper §4.2 "Vanilla").
+//!
+//! TFLite executes one model per interpreter: ops supported by the chosen
+//! delegate run there, everything else falls back to the CPU, and the
+//! whole model executes as a serial chain (model-level scheduling). The
+//! delegate is fixed per session at creation time — by default the SoC's
+//! highest-peak accelerator, matching TFLite's delegate priority.
+
+use super::{Assignment, PendingTask, SchedCtx, Scheduler};
+use crate::soc::ProcId;
+
+/// NNAPI driver round-trip per delegate↔CPU partition handoff, ms.
+pub const NNAPI_SYNC_MS: f64 = 1.2;
+
+/// The TFLite-like policy. `delegates[s]` pins session `s`'s accelerator.
+#[derive(Debug)]
+pub struct VanillaTflite {
+    delegates: Vec<ProcId>,
+    cpu: ProcId,
+}
+
+impl VanillaTflite {
+    /// `delegates` must provide one entry per session.
+    pub fn new(delegates: Vec<ProcId>, cpu: ProcId) -> Self {
+        VanillaTflite { delegates, cpu }
+    }
+
+    /// Vanilla TFLite 2.16 (the paper's baseline version): the NNAPI
+    /// delegate is deprecated and no delegate is enabled by default, so
+    /// every model runs on the XNNPACK CPU path. This matches both the
+    /// paper's magnitudes (FRS collapses to ~11 FPS — CPU speed for
+    /// ArcFace-ResNet50) and its §1 observation that "the majority of DL
+    /// inference tasks are performed on CPUs".
+    pub fn default_for(soc: &crate::soc::SocSpec, sessions: usize) -> Self {
+        VanillaTflite { delegates: vec![soc.cpu_id(); sessions], cpu: soc.cpu_id() }
+    }
+
+    /// TFLite with an explicitly enabled NNAPI/accelerator delegate
+    /// (NPU > DSP > GPU preference) — the configuration of the paper's
+    /// §2.2 measurement study (Fig 3's "multi-processor" arm).
+    pub fn best_accelerator(soc: &crate::soc::SocSpec, sessions: usize) -> Self {
+        use crate::soc::ProcKind;
+        let acc = soc
+            .proc_by_kind(ProcKind::Npu)
+            .or_else(|| soc.proc_by_kind(ProcKind::Dsp))
+            .or_else(|| soc.proc_by_kind(ProcKind::Gpu))
+            .unwrap_or_else(|| soc.cpu_id());
+        VanillaTflite { delegates: vec![acc; sessions], cpu: soc.cpu_id() }
+    }
+
+    /// Round-robin sessions over the given delegate list (used by the
+    /// Fig 10 model-level experiment: model 1 on the GPU, model 2 on the
+    /// DSP, etc.).
+    pub fn round_robin(procs: &[ProcId], sessions: usize, cpu: ProcId) -> Self {
+        let delegates = (0..sessions).map(|s| procs[s % procs.len()]).collect();
+        VanillaTflite { delegates, cpu }
+    }
+}
+
+impl Scheduler for VanillaTflite {
+    fn name(&self) -> &'static str {
+        "tflite"
+    }
+
+    fn serializes_sessions(&self) -> bool {
+        true // model-level execution: one subgraph of a model at a time
+    }
+
+    fn decision_overhead_ms(&self, _plan: &super::ModelPlan) -> crate::TimeMs {
+        // TFLite does no dynamic candidate management: the interpreter
+        // walks a fixed delegate plan. Only the interpreter-invoke cost.
+        0.02
+    }
+
+    fn transfer_cost_ms(
+        &self,
+        soc: &crate::soc::SocSpec,
+        from: ProcId,
+        to: ProcId,
+        bytes: u64,
+    ) -> crate::TimeMs {
+        // NNAPI partition handoff: an ANeuralNetworksExecution round-trip
+        // through the vendor driver plus a staged (non-zero-copy) tensor
+        // copy. This is the paper's §2.2 "massive tensor transfer costs"
+        // on fallback ops; Band/ADMS avoid it with shared buffers.
+        if from == to {
+            0.0
+        } else {
+            NNAPI_SYNC_MS + crate::soc::cost::transfer_ms(soc, from, to, 2 * bytes)
+        }
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
+        let mut free = super::free_slot_census(ctx);
+        let mut out = Vec::new();
+        for (idx, t) in ready.iter().enumerate() {
+            let plan = &ctx.plans[t.session];
+            let delegate = self.delegates.get(t.session).copied().unwrap_or(self.cpu);
+            // Delegate if the unit is supported there, else CPU fallback.
+            let target = if plan.partition.units[t.unit].supports(delegate) {
+                delegate
+            } else {
+                self.cpu
+            };
+            // TFLite blocks until its processor has capacity; it never
+            // migrates work elsewhere.
+            if ctx.procs[target].offline || free[target] == 0 {
+                continue;
+            }
+            free[target] -= 1;
+            out.push(Assignment { ready_idx: idx, proc: target });
+        }
+        out
+    }
+}

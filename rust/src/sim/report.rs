@@ -1,0 +1,151 @@
+//! Simulation outputs: everything the paper's tables and figures need.
+
+use crate::util::stats::{Summary, TimeSeries};
+use crate::TimeMs;
+
+/// One executed task interval (Fig 10's Gantt rows).
+#[derive(Debug, Clone)]
+pub struct TimelineEvent {
+    pub proc: usize,
+    pub session: usize,
+    pub req: u64,
+    pub unit: usize,
+    pub start: TimeMs,
+    pub end: TimeMs,
+}
+
+/// Per-session (application) results.
+#[derive(Debug, Clone)]
+pub struct SessionStats {
+    pub model: String,
+    pub completed: u64,
+    pub failed: u64,
+    pub latency: Summary,
+    /// Completed requests per second of simulated time.
+    pub fps: f64,
+    /// Fraction of requests finishing within their SLO (failures count
+    /// as misses). `None` when the session has no SLO.
+    pub slo_satisfaction: Option<f64>,
+}
+
+/// Per-processor results.
+#[derive(Debug, Clone)]
+pub struct ProcStats {
+    pub name: String,
+    /// Fraction of wall time with ≥ 1 resident task.
+    pub busy_frac: f64,
+    /// Time-averaged occupied slots / total slots.
+    pub avg_load: f64,
+    pub temp: TimeSeries,
+    pub freq: TimeSeries,
+    pub throttle_events: u64,
+    pub first_throttle_ms: Option<TimeMs>,
+    pub dispatches: u64,
+}
+
+/// Full simulation report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub scheduler: String,
+    pub duration_ms: TimeMs,
+    pub sessions: Vec<SessionStats>,
+    pub procs: Vec<ProcStats>,
+    /// Total device power over time (W), sampled on the governor tick.
+    pub power: TimeSeries,
+    pub energy_j: f64,
+    pub timeline: Vec<TimelineEvent>,
+    pub monitor_refreshes: u64,
+}
+
+impl SimReport {
+    /// Aggregate frames per second across all sessions (the paper's
+    /// Fig 8 headline metric).
+    pub fn total_fps(&self) -> f64 {
+        self.sessions.iter().map(|s| s.fps).sum()
+    }
+
+    /// System frame rate for cascade workloads (FRS/ROS): a video frame
+    /// is complete only when *every* model in the scenario has processed
+    /// it, so under stage pipelining the sustained frame rate is the
+    /// minimum per-session throughput. This is the quantity the paper's
+    /// Fig 8 / Table 6 report.
+    pub fn pipeline_fps(&self) -> f64 {
+        self.sessions
+            .iter()
+            .map(|s| s.fps)
+            .fold(f64::INFINITY, f64::min)
+            .min(self.total_fps()) // empty-session guard
+    }
+
+    /// Cascade frames per joule (Table 6's metric over pipeline frames).
+    pub fn pipeline_frames_per_joule(&self) -> f64 {
+        if self.energy_j == 0.0 {
+            0.0
+        } else {
+            self.pipeline_fps() * (self.duration_ms / 1e3) / self.energy_j
+        }
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.sessions.iter().map(|s| s.completed).sum()
+    }
+
+    pub fn total_failed(&self) -> u64 {
+        self.sessions.iter().map(|s| s.failed).sum()
+    }
+
+    /// Failure rate over all issued requests (Table 7).
+    pub fn failure_rate(&self) -> f64 {
+        let total = self.total_completed() + self.total_failed();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_failed() as f64 / total as f64
+        }
+    }
+
+    pub fn avg_power_w(&self) -> f64 {
+        self.power.mean()
+    }
+
+    /// Frames per joule (Table 6's energy-efficiency metric).
+    pub fn frames_per_joule(&self) -> f64 {
+        if self.energy_j == 0.0 {
+            0.0
+        } else {
+            self.total_completed() as f64 / self.energy_j
+        }
+    }
+
+    /// Mean request latency across sessions, weighted by request count.
+    pub fn mean_latency_ms(&self) -> f64 {
+        let n: u64 = self.sessions.iter().map(|s| s.latency.count()).sum();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sessions
+            .iter()
+            .map(|s| s.latency.mean() * s.latency.count() as f64)
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Overall hardware utilization: busy-fraction averaged over
+    /// processors (the paper's Fig 10 discussion: TFLite ~50 % vs ADMS
+    /// ~95 % on the active processors).
+    pub fn avg_busy_frac(&self) -> f64 {
+        if self.procs.is_empty() {
+            return 0.0;
+        }
+        self.procs.iter().map(|p| p.busy_frac).sum::<f64>() / self.procs.len() as f64
+    }
+
+    /// Earliest throttle onset across processors (Table 7's "time to
+    /// thermal throttling").
+    pub fn first_throttle_ms(&self) -> Option<TimeMs> {
+        self.procs
+            .iter()
+            .filter_map(|p| p.first_throttle_ms)
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
+    }
+}

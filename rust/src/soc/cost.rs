@@ -1,0 +1,133 @@
+//! Roofline-style latency cost model.
+//!
+//! Each op is priced as `max(compute time, memory time) + per-op
+//! overhead`; a subgraph adds one dispatch (launch) overhead. This is the
+//! standard analytical model for fixed-function accelerators and is the
+//! level of fidelity the paper's scheduling decisions depend on: relative
+//! processor speeds per op type, fallback transfer costs, and contention.
+
+use super::{ProcessorSpec, SocSpec};
+use crate::graph::{Graph, Node};
+use crate::TimeMs;
+
+/// Latency of one op on one processor at a DVFS scale factor in `(0, 1]`.
+/// `None` if the processor does not support the op (fallback required).
+pub fn op_latency_ms(g: &Graph, node: &Node, spec: &ProcessorSpec, freq_scale: f64) -> Option<TimeMs> {
+    let eff = spec.support.efficiency_for(node.kind, g.dtype_bytes)?;
+    if node.kind == crate::graph::OpKind::Input {
+        return Some(0.0);
+    }
+    let compute_ms =
+        node.flops as f64 / (spec.peak_gflops * 1e9 * eff * freq_scale) * 1e3;
+    let in_bytes: u64 = node
+        .inputs
+        .iter()
+        .map(|&i| g.nodes[i].out_bytes(g.dtype_bytes))
+        .sum();
+    let bytes = in_bytes + node.out_bytes(g.dtype_bytes) + node.param_bytes;
+    // Memory bandwidth is largely frequency-independent (DRAM-bound), but
+    // very low DVFS states do limit issue rate; model a soft floor.
+    let bw_scale = freq_scale.max(0.6);
+    let mem_ms = bytes as f64 / (spec.mem_bw_gbps * 1e9 * bw_scale) * 1e3;
+    Some(compute_ms.max(mem_ms) + spec.op_overhead_ms)
+}
+
+/// Latency of a set of ops executed as one subgraph on one processor:
+/// per-op costs plus a single dispatch overhead. Returns `None` if any op
+/// is unsupported.
+pub fn subgraph_latency_ms(
+    g: &Graph,
+    op_ids: &[usize],
+    spec: &ProcessorSpec,
+    freq_scale: f64,
+) -> Option<TimeMs> {
+    let mut total = spec.launch_overhead_ms;
+    for &id in op_ids {
+        total += op_latency_ms(g, &g.nodes[id], spec, freq_scale)?;
+    }
+    Some(total)
+}
+
+/// Cost of moving `bytes` between two processors (via shared DRAM). Zero
+/// when source and destination are the same processor.
+pub fn transfer_ms(soc: &SocSpec, from: usize, to: usize, bytes: u64) -> TimeMs {
+    if from == to {
+        return 0.0;
+    }
+    soc.transfer.base_ms + bytes as f64 / (soc.transfer.dram_gbps * 1e9) * 1e3
+}
+
+/// Boundary bytes crossing into a subgraph: outputs of ops outside the
+/// set consumed by ops inside it (the tensors that must be transferred
+/// when the producer ran on a different processor).
+pub fn boundary_in_bytes(g: &Graph, op_ids: &[usize]) -> u64 {
+    let inside: std::collections::HashSet<usize> = op_ids.iter().copied().collect();
+    let mut seen = std::collections::HashSet::new();
+    let mut bytes = 0;
+    for &id in op_ids {
+        for &inp in &g.nodes[id].inputs {
+            if !inside.contains(&inp) && seen.insert(inp) {
+                bytes += g.nodes[inp].out_bytes(g.dtype_bytes);
+            }
+        }
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::soc::presets::dimensity9000;
+
+    fn toy() -> Graph {
+        let mut b = GraphBuilder::new("toy", 4);
+        let x = b.input([1, 56, 56, 64]);
+        let c = b.conv2d(x, 64, 3, 1);
+        let q = b.quantize(c);
+        b.relu(q);
+        b.finish()
+    }
+
+    #[test]
+    fn unsupported_op_returns_none() {
+        let g = toy();
+        let soc = dimensity9000();
+        let npu = &soc.processors[soc.proc_by_kind(crate::soc::ProcKind::Npu).unwrap()];
+        // Quantize is not in the NPU support set.
+        assert!(op_latency_ms(&g, &g.nodes[2], npu, 1.0).is_none());
+        assert!(op_latency_ms(&g, &g.nodes[1], npu, 1.0).is_some());
+        assert!(subgraph_latency_ms(&g, &[1, 2, 3], npu, 1.0).is_none());
+        assert!(subgraph_latency_ms(&g, &[1, 3], npu, 1.0).is_some());
+    }
+
+    #[test]
+    fn lower_frequency_is_slower() {
+        let g = toy();
+        let soc = dimensity9000();
+        let cpu = &soc.processors[soc.cpu_id()];
+        let fast = subgraph_latency_ms(&g, &[1, 2, 3], cpu, 1.0).unwrap();
+        let slow = subgraph_latency_ms(&g, &[1, 2, 3], cpu, 0.33).unwrap();
+        assert!(slow > fast * 1.5, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn transfer_scales_with_bytes_and_is_zero_on_same_proc() {
+        let soc = dimensity9000();
+        assert_eq!(transfer_ms(&soc, 1, 1, 1 << 20), 0.0);
+        let small = transfer_ms(&soc, 0, 1, 1 << 10);
+        let large = transfer_ms(&soc, 0, 1, 64 << 20);
+        assert!(large > small);
+        assert!(small >= soc.transfer.base_ms);
+    }
+
+    #[test]
+    fn boundary_bytes_counts_external_inputs_once() {
+        let g = toy();
+        // Subgraph {quantize, relu}: boundary input is the conv output.
+        let b = boundary_in_bytes(&g, &[2, 3]);
+        assert_eq!(b, g.nodes[1].out_bytes(4));
+        // Whole graph: boundary is empty (input op produces internally).
+        assert_eq!(boundary_in_bytes(&g, &[0, 1, 2, 3]), 0);
+    }
+}

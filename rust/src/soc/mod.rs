@@ -1,0 +1,224 @@
+//! Heterogeneous mobile SoC model.
+//!
+//! The paper's testbed is three Android phones; this module is the
+//! calibrated analytical substitute (DESIGN.md §1). Each SoC exposes a
+//! set of [`ProcessorSpec`]s — CPU cluster, GPU, DSP, NPU — with:
+//!
+//! * a per-[`OpKind`](crate::graph::OpKind) support/efficiency table
+//!   (paper Fig 2: op support varies sharply across accelerators);
+//! * a roofline-style latency cost model ([`cost`]), calibrated so
+//!   MobileNetV1 single-model latencies reproduce Table 2's first column;
+//! * a concurrency-contention curve calibrated to Table 2's 2- and
+//!   4-model columns (the Hexagon DSP's 13× collapse vs the MediaTek
+//!   NPU's 1.27×);
+//! * DVFS ladders and lumped-RC thermal parameters driving the
+//!   throttling dynamics of Fig 12 (68 °C throttle threshold);
+//! * a power model (idle + dynamic) for the Table 6 / Fig 11 energy
+//!   reproductions.
+
+pub mod support;
+pub mod cost;
+pub mod presets;
+
+pub use cost::{op_latency_ms, subgraph_latency_ms, transfer_ms};
+pub use presets::{dimensity9000, kirin970, snapdragon835, soc_by_name, SOC_NAMES};
+pub use support::SupportTable;
+
+/// Processor class. One SoC may carry several processors of different
+/// kinds; scheduling treats each as an independent execution resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProcKind {
+    Cpu,
+    Gpu,
+    Dsp,
+    Npu,
+}
+
+impl ProcKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            ProcKind::Cpu => "CPU",
+            ProcKind::Gpu => "GPU",
+            ProcKind::Dsp => "DSP",
+            ProcKind::Npu => "NPU",
+        }
+    }
+    pub const ALL: [ProcKind; 4] = [ProcKind::Cpu, ProcKind::Gpu, ProcKind::Dsp, ProcKind::Npu];
+}
+
+/// Index of a processor within its [`SocSpec`].
+pub type ProcId = usize;
+
+/// Static description of one processor.
+#[derive(Debug, Clone)]
+pub struct ProcessorSpec {
+    pub name: String,
+    pub kind: ProcKind,
+    /// Peak compute at the highest DVFS state, in GFLOPS (fp32-equivalent;
+    /// quantized throughput is folded into per-op efficiency).
+    pub peak_gflops: f64,
+    /// Sustained memory bandwidth available to this processor, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Fixed cost to dispatch one subgraph (driver/delegate invoke).
+    pub launch_overhead_ms: f64,
+    /// Per-op scheduling overhead inside a subgraph, in ms.
+    pub op_overhead_ms: f64,
+    /// DVFS frequency ladder in MHz, descending (index 0 = fastest).
+    pub freqs_mhz: Vec<f64>,
+    /// Concurrent execution contexts. Mobile accelerators timeslice or
+    /// truly parallelize several resident models (paper Table 2: the
+    /// MediaTek NPU runs 4 concurrent MobileNets with only 27 % latency
+    /// inflation — impossible under serial queueing).
+    pub parallel_slots: usize,
+    /// Which ops run here and at what fraction of peak.
+    pub support: SupportTable,
+    /// Concurrency contention: executing while `n` sessions share this
+    /// processor multiplies service time by `1 + c·(n−1)^p`
+    /// (calibrated per processor from Table 2).
+    pub contention_c: f64,
+    pub contention_p: f64,
+    /// Lumped thermal resistance junction→ambient, K/W.
+    pub thermal_r: f64,
+    /// Lumped thermal capacitance, J/K.
+    pub thermal_c: f64,
+    /// Power draw at full utilization and max frequency, W.
+    pub tdp_w: f64,
+    /// Idle power, W.
+    pub idle_w: f64,
+    /// Governor begins stepping frequency down above this temperature.
+    pub throttle_temp_c: f64,
+    /// Hard cutoff: the processor is taken offline above this (GPUs on the
+    /// paper's testbed shut down entirely — Fig 12).
+    pub critical_temp_c: f64,
+}
+
+impl ProcessorSpec {
+    pub fn max_freq(&self) -> f64 {
+        self.freqs_mhz[0]
+    }
+    pub fn min_freq(&self) -> f64 {
+        *self.freqs_mhz.last().unwrap()
+    }
+    /// Frequency scale factor for a DVFS level.
+    pub fn freq_scale(&self, level: usize) -> f64 {
+        self.freqs_mhz[level.min(self.freqs_mhz.len() - 1)] / self.max_freq()
+    }
+    /// Contention multiplier for `n` concurrently-resident sessions.
+    pub fn contention_mult(&self, n_sessions: usize) -> f64 {
+        if n_sessions <= 1 {
+            1.0
+        } else {
+            1.0 + self.contention_c * ((n_sessions - 1) as f64).powf(self.contention_p)
+        }
+    }
+}
+
+/// Inter-processor tensor transfer model: all processors share DRAM; a
+/// handoff costs a fixed driver round-trip plus bytes over the memory bus.
+#[derive(Debug, Clone)]
+pub struct TransferModel {
+    pub base_ms: f64,
+    pub dram_gbps: f64,
+}
+
+/// One system-on-chip: a named set of processors plus shared-memory
+/// transfer characteristics and an ambient operating temperature.
+#[derive(Debug, Clone)]
+pub struct SocSpec {
+    pub name: String,
+    pub device: String,
+    pub processors: Vec<ProcessorSpec>,
+    pub transfer: TransferModel,
+    pub ambient_c: f64,
+}
+
+impl SocSpec {
+    pub fn num_processors(&self) -> usize {
+        self.processors.len()
+    }
+
+    pub fn proc_by_kind(&self, kind: ProcKind) -> Option<ProcId> {
+        self.processors.iter().position(|p| p.kind == kind)
+    }
+
+    pub fn cpu_id(&self) -> ProcId {
+        self.proc_by_kind(ProcKind::Cpu)
+            .expect("every SoC has a CPU")
+    }
+
+    /// The accelerator a vanilla TFLite delegate would pick: the non-CPU
+    /// processor with the highest peak compute.
+    pub fn best_accelerator(&self) -> Option<ProcId> {
+        self.processors
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind != ProcKind::Cpu)
+            .max_by(|a, b| a.1.peak_gflops.partial_cmp(&b.1.peak_gflops).unwrap())
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_cpu_and_accelerators() {
+        for name in SOC_NAMES {
+            let soc = soc_by_name(name).unwrap();
+            assert!(soc.num_processors() >= 3, "{name}");
+            let cpu = &soc.processors[soc.cpu_id()];
+            assert_eq!(cpu.kind, ProcKind::Cpu);
+            assert!(soc.best_accelerator().is_some());
+            for p in &soc.processors {
+                assert!(p.peak_gflops > 0.0);
+                assert!(!p.freqs_mhz.is_empty());
+                assert!(p.tdp_w > p.idle_w);
+                assert!(p.critical_temp_c > p.throttle_temp_c);
+                // Ladder must be descending.
+                for w in p.freqs_mhz.windows(2) {
+                    assert!(w[0] > w[1], "{}: ladder not descending", p.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contention_mult_matches_table2_calibration() {
+        // Hexagon 682 DSP: 46.77 → 277.14 (×5.93) → 609.44 (×13.03).
+        let soc = snapdragon835();
+        let dsp = &soc.processors[soc.proc_by_kind(ProcKind::Dsp).unwrap()];
+        assert!((dsp.contention_mult(2) - 5.93).abs() < 0.4);
+        assert!((dsp.contention_mult(4) - 13.0).abs() < 1.0);
+        // MediaTek NPU: 1.88 → 2.13 (×1.13) → 2.39 (×1.27).
+        let soc = dimensity9000();
+        let npu = &soc.processors[soc.proc_by_kind(ProcKind::Npu).unwrap()];
+        assert!((npu.contention_mult(2) - 1.13).abs() < 0.06);
+        assert!((npu.contention_mult(4) - 1.27).abs() < 0.08);
+    }
+
+    #[test]
+    fn freq_scale_is_monotone() {
+        let soc = dimensity9000();
+        let cpu = &soc.processors[soc.cpu_id()];
+        assert_eq!(cpu.freq_scale(0), 1.0);
+        let mut last = 1.0;
+        for l in 1..cpu.freqs_mhz.len() {
+            let s = cpu.freq_scale(l);
+            assert!(s < last);
+            last = s;
+        }
+        // Out-of-range levels clamp to the slowest state.
+        assert_eq!(cpu.freq_scale(99), cpu.min_freq() / cpu.max_freq());
+    }
+
+    #[test]
+    fn contention_is_identity_for_single_session() {
+        for name in SOC_NAMES {
+            for p in &soc_by_name(name).unwrap().processors {
+                assert_eq!(p.contention_mult(1), 1.0);
+                assert!(p.contention_mult(2) >= 1.0);
+            }
+        }
+    }
+}

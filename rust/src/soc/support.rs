@@ -1,0 +1,236 @@
+//! Per-processor op support and efficiency tables (paper Fig 2).
+//!
+//! Accelerator cores are fixed-function designs optimized for a limited
+//! op set (paper §2.1: Edge TPU systolic arrays, Da Vinci 3D cubes);
+//! unsupported ops must fall back to the CPU. Each entry here is either
+//! unsupported or an efficiency in `(0, 1]` — the fraction of the
+//! processor's peak achieved on that op type.
+
+use crate::graph::OpKind;
+use std::collections::BTreeMap;
+
+/// Op → efficiency map for one processor. Missing = unsupported.
+#[derive(Debug, Clone)]
+pub struct SupportTable {
+    eff: BTreeMap<OpKind, f64>,
+    /// Efficiency multiplier for float32 graphs. Fixed-function NPUs and
+    /// integer DSPs hit their quoted throughput only on quantized models;
+    /// NNAPI runs fp32 graphs through a relaxed-fp16 path at a fraction
+    /// of it. 1.0 for CPU/GPU (fp32-native).
+    pub fp32_factor: f64,
+}
+
+impl Default for SupportTable {
+    fn default() -> Self {
+        SupportTable { eff: BTreeMap::new(), fp32_factor: 1.0 }
+    }
+}
+
+impl SupportTable {
+    pub fn new(entries: &[(OpKind, f64)]) -> Self {
+        let mut eff = BTreeMap::new();
+        for &(k, e) in entries {
+            assert!(e > 0.0 && e <= 1.0, "{:?}: efficiency {} out of (0,1]", k, e);
+            eff.insert(k, e);
+        }
+        // Input pseudo-ops are free everywhere.
+        eff.insert(OpKind::Input, 1.0);
+        SupportTable { eff, fp32_factor: 1.0 }
+    }
+
+    /// Builder: set the fp32 down-rating (see `fp32_factor`).
+    pub fn with_fp32_factor(mut self, f: f64) -> Self {
+        assert!(f > 0.0 && f <= 1.0);
+        self.fp32_factor = f;
+        self
+    }
+
+    /// Efficiency for an op in a graph of the given activation width
+    /// (1 = int8-quantized, 4 = float32).
+    pub fn efficiency_for(&self, kind: OpKind, dtype_bytes: u64) -> Option<f64> {
+        let base = self.eff.get(&kind).copied()?;
+        Some(if dtype_bytes > 1 { base * self.fp32_factor } else { base })
+    }
+
+    pub fn supports(&self, kind: OpKind) -> bool {
+        self.eff.contains_key(&kind)
+    }
+
+    pub fn efficiency(&self, kind: OpKind) -> Option<f64> {
+        self.eff.get(&kind).copied()
+    }
+
+    /// Number of supported op kinds (for the Fig 2 support census).
+    pub fn num_supported(&self) -> usize {
+        self.eff.len() - 1 // exclude the Input pseudo-op
+    }
+
+    /// Remove support for the listed kinds (builder-style restriction).
+    pub fn without(mut self, kinds: &[OpKind]) -> Self {
+        for k in kinds {
+            self.eff.remove(k);
+        }
+        self
+    }
+
+    /// Override an efficiency (builder-style).
+    pub fn with(mut self, kind: OpKind, e: f64) -> Self {
+        assert!(e > 0.0 && e <= 1.0);
+        self.eff.insert(kind, e);
+        self
+    }
+}
+
+/// CPU: supports every op. `conv_eff` is low because TFLite's CPU kernels
+/// reach a small fraction of NEON peak on convolutions; memory-bound ops
+/// run at higher relative efficiency.
+pub fn cpu_support(conv_eff: f64) -> SupportTable {
+    let mut entries: Vec<(OpKind, f64)> = Vec::new();
+    for k in OpKind::ALL {
+        let e = match k {
+            OpKind::Input => continue,
+            OpKind::Conv2d | OpKind::FullyConnected => conv_eff,
+            OpKind::DilatedConv2d | OpKind::TransposeConv2d => conv_eff * 0.8,
+            OpKind::DepthwiseConv2d => conv_eff * 0.45,
+            _ => 0.5,
+        };
+        entries.push((k, e));
+    }
+    SupportTable::new(&entries)
+}
+
+/// GPU: float-friendly op set. Modern delegates (Mali-G710, Adreno) cover
+/// most ops; `modern = false` models older delegates (Mali-G72) that lack
+/// dilated/transposed convolutions and bilinear resize — the fallback ops
+/// the paper observed dominating Kirin 970 runs.
+pub fn gpu_support(conv_eff: f64, modern: bool) -> SupportTable {
+    let mut t = SupportTable::new(&[
+        (OpKind::Conv2d, conv_eff),
+        (OpKind::DepthwiseConv2d, conv_eff * 0.25),
+        (OpKind::FullyConnected, conv_eff * 0.7),
+        (OpKind::Add, 0.6),
+        (OpKind::Sub, 0.6),
+        (OpKind::Mul, 0.6),
+        (OpKind::Div, 0.5),
+        (OpKind::Relu, 0.7),
+        (OpKind::Relu6, 0.7),
+        (OpKind::Logistic, 0.5),
+        (OpKind::Tanh, 0.5),
+        (OpKind::HardSwish, 0.5),
+        (OpKind::Softmax, 0.4),
+        (OpKind::MaxPool2d, 0.6),
+        (OpKind::AvgPool2d, 0.6),
+        // No Mean: GPU delegates handle reductions poorly and reject the
+        // axis combinations the zoo models use (global spatial mean).
+        (OpKind::Concat, 0.5),
+        (OpKind::Reshape, 0.5),
+        (OpKind::Squeeze, 0.5),
+        (OpKind::Pad, 0.5),
+        (OpKind::BatchNorm, 0.5),
+    ]);
+    if modern {
+        t = t
+            .with(OpKind::DilatedConv2d, conv_eff * 0.7)
+            .with(OpKind::TransposeConv2d, conv_eff * 0.6)
+            .with(OpKind::ResizeBilinear, 0.5)
+            .with(OpKind::StridedSlice, 0.4)
+            .with(OpKind::Split, 0.4);
+    }
+    t
+}
+
+/// DSP (Hexagon / MediaTek APU): integer-oriented vector engine. Strong on
+/// quantized conv/elementwise, no support for the geometry/float-special
+/// ops (resize, softmax over large axes, dilated convs...).
+pub fn dsp_support(conv_eff: f64) -> SupportTable {
+    SupportTable::new(&[
+        (OpKind::Conv2d, conv_eff),
+        (OpKind::DepthwiseConv2d, conv_eff * 0.6),
+        (OpKind::FullyConnected, conv_eff * 0.8),
+        (OpKind::Add, 0.7),
+        (OpKind::Mul, 0.7),
+        (OpKind::Relu, 0.8),
+        (OpKind::Relu6, 0.8),
+        (OpKind::Logistic, 0.4),
+        (OpKind::MaxPool2d, 0.7),
+        (OpKind::AvgPool2d, 0.7),
+        (OpKind::Concat, 0.5),
+        (OpKind::Reshape, 0.5),
+        (OpKind::BatchNorm, 0.5), // per-channel scale+shift vectorizes well
+        (OpKind::Quantize, 0.8),
+        (OpKind::Dequantize, 0.8),
+    ])
+    .with_fp32_factor(0.55)
+}
+
+/// NPU: fixed-function tensor cores. Excellent on convolution-shaped work,
+/// nothing else. `mature = false` models first-generation NPUs (Kirin 970)
+/// with an even narrower op set (no concat / mean / pooling fusion).
+pub fn npu_support(conv_eff: f64, mature: bool) -> SupportTable {
+    let mut t = SupportTable::new(&[
+        (OpKind::Conv2d, conv_eff),
+        (OpKind::DepthwiseConv2d, conv_eff * 0.5),
+        (OpKind::FullyConnected, conv_eff * 0.9),
+        (OpKind::Add, 0.8),
+        (OpKind::Relu, 0.9),
+        (OpKind::Relu6, 0.9),
+        (OpKind::MaxPool2d, 0.7),
+        (OpKind::AvgPool2d, 0.7),
+    ]);
+    if mature {
+        t = t
+            .with(OpKind::Mul, 0.7)
+            .with(OpKind::Logistic, 0.5)
+            .with(OpKind::Mean, 0.6)
+            .with(OpKind::Concat, 0.6)
+            .with(OpKind::Reshape, 0.5)
+            .with(OpKind::BatchNorm, 0.6);
+    }
+    // NPUs are int8-first: fp32 graphs run via the relaxed-fp16 path.
+    t.with_fp32_factor(0.30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_supports_everything() {
+        let t = cpu_support(0.3);
+        for k in OpKind::ALL {
+            assert!(t.supports(k), "{k:?} unsupported on CPU");
+        }
+        assert_eq!(t.num_supported(), OpKind::ALL.len() - 1);
+    }
+
+    #[test]
+    fn npu_narrower_than_dsp_narrower_than_gpu() {
+        let gpu = gpu_support(0.3, true);
+        let dsp = dsp_support(0.4);
+        let npu = npu_support(0.5, false);
+        assert!(gpu.num_supported() > dsp.num_supported());
+        assert!(dsp.num_supported() > npu.num_supported());
+    }
+
+    #[test]
+    fn old_gpu_lacks_dilated_and_resize() {
+        let old = gpu_support(0.3, false);
+        assert!(!old.supports(OpKind::DilatedConv2d));
+        assert!(!old.supports(OpKind::ResizeBilinear));
+        let new = gpu_support(0.3, true);
+        assert!(new.supports(OpKind::DilatedConv2d));
+        assert!(new.supports(OpKind::ResizeBilinear));
+    }
+
+    #[test]
+    fn without_removes_support() {
+        let t = cpu_support(0.3).without(&[OpKind::Softmax]);
+        assert!(!t.supports(OpKind::Softmax));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_efficiency_rejected() {
+        SupportTable::new(&[(OpKind::Add, 0.0)]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```no_run
+//! use adms::testing::bench::Bench;
+//! let mut b = Bench::new("analyzer");
+//! b.bench("partition/mobilenet_v1", || {
+//!     /* work under measurement */
+//! });
+//! b.finish();
+//! ```
+//!
+//! Reports min / median / mean / p95 over timed iterations after a
+//! warm-up phase, criterion-style, and records results for the
+//! EXPERIMENTS.md §Perf log.
+
+use std::time::Instant;
+
+pub struct Bench {
+    group: String,
+    /// Target per-measurement time budget.
+    budget_ms: f64,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Honor a time budget override for CI smoke runs.
+        let budget_ms = std::env::var("ADMS_BENCH_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(300.0);
+        println!("\n== bench group: {group} ==");
+        Bench { group: group.to_string(), budget_ms, results: Vec::new() }
+    }
+
+    /// Time a closure: warm up, then measure batches until the budget is
+    /// spent (at least 10 samples).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Stats {
+        // Warm-up and batch sizing: aim for ≥ 100 µs per sample.
+        let t0 = Instant::now();
+        f();
+        let single = t0.elapsed().as_secs_f64() * 1e9;
+        let batch = (1e5 / single.max(1.0)).ceil().max(1.0) as u64;
+        let mut samples: Vec<f64> = Vec::new();
+        let deadline = Instant::now();
+        let mut iters = 0u64;
+        while (deadline.elapsed().as_secs_f64() * 1e3) < self.budget_ms || samples.len() < 10 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+            iters += batch;
+            if samples.len() >= 2_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let stats = Stats {
+            iters,
+            min_ns: samples[0],
+            median_ns: samples[n / 2],
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p95_ns: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        };
+        println!(
+            "{:<44} {:>12} median  {:>12} mean  {:>12} p95  ({} iters)",
+            format!("{}/{}", self.group, name),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    pub fn finish(self) {
+        println!("== {} done ({} benches) ==", self.group, self.results.len());
+    }
+}
+

@@ -1,0 +1,8 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline). Provides seedable generators and a check-runner with bounded
+//! shrinking for the coordinator / analyzer / scheduler invariant tests.
+
+pub mod prop;
+pub mod bench;
+
+pub use prop::{check, Gen};

@@ -1,0 +1,197 @@
+//! Lumped-RC thermal model with a throttling governor (paper Fig 12,
+//! Table 7).
+//!
+//! Each processor is a single thermal node: `C·dT/dt = P − (T − T_amb)/R`.
+//! A governor ticks periodically: above the throttle threshold it steps
+//! the DVFS ladder down; with hysteresis headroom it steps back up; above
+//! the critical temperature the processor is taken offline until it cools
+//! (the paper observed the Redmi GPU "completely shutting down at several
+//! points" under TFLite).
+
+use crate::soc::ProcessorSpec;
+use crate::TimeMs;
+
+/// Dynamic thermal/DVFS state for one processor.
+#[derive(Debug, Clone)]
+pub struct ThermalState {
+    /// Junction temperature, °C.
+    pub temp_c: f64,
+    /// Current DVFS ladder index (0 = fastest).
+    pub level: usize,
+    /// Offline due to critical temperature (cooling down).
+    pub offline: bool,
+    /// Count of governor-initiated frequency reductions (Table 7 metric).
+    pub throttle_events: u64,
+    /// Sim time when throttling first began, if ever.
+    pub first_throttle_ms: Option<TimeMs>,
+}
+
+impl ThermalState {
+    pub fn new(ambient_c: f64) -> Self {
+        ThermalState {
+            temp_c: ambient_c,
+            level: 0,
+            offline: false,
+            throttle_events: 0,
+            first_throttle_ms: None,
+        }
+    }
+
+    /// Integrate the RC node over `dt_ms` given average power `p_watts`.
+    pub fn integrate(&mut self, spec: &ProcessorSpec, ambient_c: f64, p_watts: f64, dt_ms: f64) {
+        let dt_s = dt_ms / 1e3;
+        // Exact solution of the linear ODE over the step (unconditionally
+        // stable for any dt): T → T_ss + (T − T_ss)·exp(−dt/RC).
+        let t_ss = ambient_c + p_watts * spec.thermal_r;
+        let tau = spec.thermal_r * spec.thermal_c;
+        self.temp_c = t_ss + (self.temp_c - t_ss) * (-dt_s / tau).exp();
+    }
+
+    /// Governor step with 5 °C hysteresis. Returns true if the DVFS level
+    /// or the online state changed.
+    pub fn govern(&mut self, spec: &ProcessorSpec, now_ms: TimeMs) -> bool {
+        let mut changed = false;
+        if self.offline {
+            // Come back online once well below throttle temperature.
+            if self.temp_c < spec.throttle_temp_c - 8.0 {
+                self.offline = false;
+                self.level = spec.freqs_mhz.len() - 1;
+                changed = true;
+            }
+            return changed;
+        }
+        if self.temp_c >= spec.critical_temp_c {
+            self.offline = true;
+            self.throttle_events += 1;
+            self.first_throttle_ms.get_or_insert(now_ms);
+            return true;
+        }
+        if self.temp_c >= spec.throttle_temp_c {
+            if self.level + 1 < spec.freqs_mhz.len() {
+                self.level += 1;
+                changed = true;
+            }
+            self.throttle_events += 1;
+            self.first_throttle_ms.get_or_insert(now_ms);
+        } else if self.temp_c < spec.throttle_temp_c - 5.0 && self.level > 0 {
+            self.level -= 1;
+            changed = true;
+        }
+        changed
+    }
+
+    /// Current frequency in MHz.
+    pub fn freq_mhz(&self, spec: &ProcessorSpec) -> f64 {
+        if self.offline {
+            0.0
+        } else {
+            spec.freqs_mhz[self.level.min(spec.freqs_mhz.len() - 1)]
+        }
+    }
+
+    /// Frequency scale factor in `(0, 1]` for the cost model.
+    pub fn freq_scale(&self, spec: &ProcessorSpec) -> f64 {
+        spec.freq_scale(self.level)
+    }
+
+    /// Thermal headroom before throttling, °C (used by the ADMS scheduler
+    /// to steer work away from hot processors).
+    pub fn headroom_c(&self, spec: &ProcessorSpec) -> f64 {
+        spec.throttle_temp_c - self.temp_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::dimensity9000;
+
+    fn cpu_spec() -> ProcessorSpec {
+        dimensity9000().processors[0].clone()
+    }
+
+    #[test]
+    fn heats_toward_steady_state() {
+        let spec = cpu_spec();
+        let mut st = ThermalState::new(25.0);
+        // Full power for a long time → T_ss = 25 + 4·15 = 85 °C.
+        for _ in 0..10_000 {
+            st.integrate(&spec, 25.0, spec.tdp_w, 100.0);
+        }
+        assert!((st.temp_c - 85.0).abs() < 0.5, "T={}", st.temp_c);
+    }
+
+    #[test]
+    fn cools_back_to_ambient() {
+        let spec = cpu_spec();
+        let mut st = ThermalState::new(25.0);
+        st.temp_c = 80.0;
+        for _ in 0..10_000 {
+            st.integrate(&spec, 25.0, spec.idle_w, 100.0);
+        }
+        assert!(st.temp_c < 35.0, "T={}", st.temp_c);
+    }
+
+    #[test]
+    fn integration_is_stable_for_large_steps() {
+        let spec = cpu_spec();
+        let mut st = ThermalState::new(25.0);
+        st.integrate(&spec, 25.0, spec.tdp_w, 3_600_000.0); // one hour step
+        assert!((st.temp_c - 85.0).abs() < 1e-6);
+        assert!(st.temp_c.is_finite());
+    }
+
+    #[test]
+    fn governor_throttles_and_recovers() {
+        let spec = cpu_spec();
+        let mut st = ThermalState::new(25.0);
+        st.temp_c = 70.0;
+        assert!(st.govern(&spec, 1000.0));
+        assert_eq!(st.level, 1);
+        assert_eq!(st.first_throttle_ms, Some(1000.0));
+        st.temp_c = 71.0;
+        st.govern(&spec, 2000.0);
+        assert_eq!(st.level, 2);
+        assert_eq!(st.throttle_events, 2);
+        // Cooling below hysteresis band steps back up.
+        st.temp_c = 60.0;
+        assert!(st.govern(&spec, 3000.0));
+        assert_eq!(st.level, 1);
+        assert_eq!(st.first_throttle_ms, Some(1000.0)); // sticky
+    }
+
+    #[test]
+    fn critical_temp_takes_processor_offline() {
+        let spec = cpu_spec();
+        let mut st = ThermalState::new(25.0);
+        st.temp_c = spec.critical_temp_c + 1.0;
+        assert!(st.govern(&spec, 0.0));
+        assert!(st.offline);
+        assert_eq!(st.freq_mhz(&spec), 0.0);
+        // Recovers only after cooling well below the throttle threshold.
+        st.temp_c = spec.throttle_temp_c - 2.0;
+        assert!(!st.govern(&spec, 0.0));
+        assert!(st.offline);
+        st.temp_c = spec.throttle_temp_c - 10.0;
+        assert!(st.govern(&spec, 0.0));
+        assert!(!st.offline);
+    }
+
+    #[test]
+    fn time_to_throttle_order_minutes_at_full_load() {
+        // Sanity check against the paper's TFLite observation: sustained
+        // full load throttles within minutes (~2.5 min on the CPU).
+        let spec = cpu_spec();
+        let mut st = ThermalState::new(25.0);
+        let mut t_ms = 0.0;
+        while st.temp_c < spec.throttle_temp_c && t_ms < 3.6e6 {
+            st.integrate(&spec, 25.0, spec.tdp_w, 1000.0);
+            t_ms += 1000.0;
+        }
+        let minutes = t_ms / 60_000.0;
+        assert!(
+            (1.0..6.0).contains(&minutes),
+            "time to throttle {minutes:.1} min"
+        );
+    }
+}

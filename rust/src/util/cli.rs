@@ -1,0 +1,172 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option description used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected a number, got '{v}'")),
+        }
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Parse `argv` (without the program name) against the given option specs.
+/// Unknown `--options` are an error; positionals are collected in order.
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> anyhow::Result<Args> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for s in specs {
+        if let Some(d) = s.default {
+            args.opts.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(rest) = a.strip_prefix("--") {
+            let (key, inline_val) = match rest.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (rest.to_string(), None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{key}"))?;
+            if spec.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} requires a value"))?
+                    }
+                };
+                args.opts.insert(key, val);
+            } else {
+                if inline_val.is_some() {
+                    anyhow::bail!("--{key} does not take a value");
+                }
+                args.flags.push(key);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(usage: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("usage: {usage}\n\noptions:\n");
+    for s in specs {
+        let val = if s.takes_value { " <value>" } else { "" };
+        let dfl = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{}\n      {}{}\n", s.name, val, s.help, dfl));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "soc", takes_value: true, help: "target SoC", default: Some("dimensity9000") },
+            OptSpec { name: "seed", takes_value: true, help: "rng seed", default: None },
+            OptSpec { name: "verbose", takes_value: false, help: "chatty", default: None },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kinds() {
+        let a = parse(&sv(&["run", "--soc=kirin970", "--seed", "42", "--verbose", "x"]), &specs()).unwrap();
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert_eq!(a.get("soc"), Some("kirin970"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("soc"), Some("dimensity9000"));
+        assert_eq!(a.get("seed"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&sv(&["--seed"]), &specs()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+        assert!(parse(&sv(&["--seed=abc"]), &specs())
+            .unwrap()
+            .get_u64("seed", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = render_help("adms test", &specs());
+        assert!(h.contains("--soc"));
+        assert!(h.contains("default: dimensity9000"));
+    }
+}

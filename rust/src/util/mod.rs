@@ -1,0 +1,49 @@
+//! Utility substrates.
+//!
+//! The build environment is fully offline and the only available crates
+//! are the `xla` dependency tree, so the conveniences a serving framework
+//! normally pulls from crates.io (serde, clap, rand, criterion, proptest)
+//! are implemented here as small, well-tested modules instead.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod cli;
+pub mod table;
+
+/// Clamp helper used throughout the thermal / power / scheduling code.
+#[inline]
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    if x < lo {
+        lo
+    } else if x > hi {
+        hi
+    } else {
+        x
+    }
+}
+
+/// Linear interpolation: `lerp(a, b, 0.0) == a`, `lerp(a, b, 1.0) == b`.
+#[inline]
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_bounds() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        assert_eq!(lerp(2.0, 4.0, 0.0), 2.0);
+        assert_eq!(lerp(2.0, 4.0, 1.0), 4.0);
+        assert_eq!(lerp(2.0, 4.0, 0.5), 3.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Streaming statistics and percentile estimation for latency / power /
+//! temperature series. Exact percentiles over stored samples (bounded by
+//! reservoir sampling above a cap) — experiment populations here are small
+//! enough that a full sketch (t-digest) is unnecessary.
+
+use crate::util::rng::Pcg32;
+
+/// Online mean/variance (Welford) plus a sample reservoir for percentiles.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+    cap: usize,
+    rng: Pcg32,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::with_capacity(65_536)
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reservoir capacity: above this many observations, percentile
+    /// estimates come from a uniform random subsample.
+    pub fn with_capacity(cap: usize) -> Self {
+        Summary {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: Vec::new(),
+            cap,
+            rng: Pcg32::seeded(0x5ca1e),
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.count) as usize;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / (self.count - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn sum(&self) -> f64 {
+        self.mean() * self.count as f64
+    }
+
+    /// Percentile in `[0, 100]` by linear interpolation over the reservoir.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Merge another summary into this one (used when aggregating per-thread
+    /// metrics in the wall-clock serving runtime).
+    pub fn merge(&mut self, other: &Summary) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for &s in &other.samples {
+            if self.samples.len() < self.cap {
+                self.samples.push(s);
+            }
+        }
+    }
+}
+
+/// A fixed-interval time series used for power / temperature traces
+/// (paper Figs 11 and 12).
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub times: Vec<f64>,
+    pub values: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.times.push(t);
+        self.values.push(v);
+    }
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+    /// Sample standard deviation — used to compare power-stability between
+    /// frameworks (paper: ADMS's power profile has the fewest fluctuations).
+    pub fn std(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m).powi(2)).sum::<f64>()
+            / (self.values.len() - 1) as f64)
+            .sqrt()
+    }
+    /// Downsample to at most `n` evenly spaced points (for compact ASCII
+    /// figure rendering).
+    pub fn downsample(&self, n: usize) -> TimeSeries {
+        if self.len() <= n || n == 0 {
+            return self.clone();
+        }
+        let mut out = TimeSeries::default();
+        for i in 0..n {
+            let idx = i * (self.len() - 1) / (n - 1);
+            out.push(self.times[idx], self.values[idx]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles_exact_when_small() {
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.add(x as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut all = Summary::new();
+        for i in 0..50 {
+            let x = (i as f64).sin() * 10.0;
+            a.add(x);
+            all.add(x);
+        }
+        for i in 50..120 {
+            let x = (i as f64).sin() * 10.0;
+            b.add(x);
+            all.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.var() - all.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_caps_memory() {
+        let mut s = Summary::with_capacity(128);
+        for i in 0..10_000 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        // Median of 0..10000 should still be near 5000 via the reservoir.
+        assert!((s.p50() - 5000.0).abs() < 1500.0);
+    }
+
+    #[test]
+    fn timeseries_stats() {
+        let mut ts = TimeSeries::default();
+        for i in 0..10 {
+            ts.push(i as f64, (i % 2) as f64);
+        }
+        assert_eq!(ts.len(), 10);
+        assert!((ts.mean() - 0.5).abs() < 1e-12);
+        assert_eq!(ts.min(), 0.0);
+        assert_eq!(ts.max(), 1.0);
+        let d = ts.downsample(5);
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.times[0], 0.0);
+        assert_eq!(*d.times.last().unwrap(), 9.0);
+    }
+}

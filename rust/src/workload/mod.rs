@@ -1,0 +1,96 @@
+//! Workload definitions from the paper's evaluation (§4.4, §4.8).
+
+use crate::sim::{App, ArrivalMode};
+
+/// Facial Recognition System (paper §4.4): RetinaFace detection plus two
+/// ArcFace identification models working on a continuous video stream.
+pub fn frs() -> Vec<App> {
+    vec![
+        App::closed_loop("retinaface"),
+        App::closed_loop("arcface_mobile"),
+        App::closed_loop("arcface_resnet50"),
+    ]
+}
+
+/// Real-time Object Recognition System (paper §4.4): MobileNetV2 +
+/// EfficientNet + InceptionV4 classifying a video stream.
+pub fn ros() -> Vec<App> {
+    vec![
+        App::closed_loop("mobilenet_v2"),
+        App::closed_loop("efficientnet4"),
+        App::closed_loop("inception_v4"),
+    ]
+}
+
+/// The SLO-analysis model set (paper §4.5 / Fig 9).
+pub const SLO_MODELS: [&str; 4] =
+    ["mobilenet_v1", "efficientnet4", "inception_v4", "arcface_resnet50"];
+
+/// SLO workload: the four Fig 9 models with SLOs set to
+/// `multiplier × baseline latency` (the paper uses the max single-model
+/// latency as the baseline).
+pub fn slo_workload(baselines_ms: &[f64; 4], multiplier: f64) -> Vec<App> {
+    SLO_MODELS
+        .iter()
+        .zip(baselines_ms)
+        .map(|(m, &b)| App::with_slo(m, b * multiplier))
+        .collect()
+}
+
+/// `n` concurrent copies of one model (paper Table 2's concurrency sweep
+/// and the §4.8 high-concurrency stress test).
+pub fn concurrent_copies(model: &str, n: usize) -> Vec<App> {
+    vec![App::closed_loop(model); n]
+}
+
+/// Mixed stress workload for the §4.8 robustness tests: `n` models of
+/// escalating complexity drawn from the zoo.
+pub fn stress_mix(n: usize) -> Vec<App> {
+    const POOL: [&str; 10] = [
+        "mobilenet_v1",
+        "mobilenet_v2",
+        "east",
+        "arcface_mobile",
+        "retinaface",
+        "handlmk",
+        "efficientnet4",
+        "icn_quant",
+        "deeplab_v3",
+        "inception_v4",
+    ];
+    (0..n).map(|i| App::closed_loop(POOL[i % POOL.len()])).collect()
+}
+
+/// Periodic camera-frame workload (30 fps source) for open-loop tests.
+pub fn camera_feed(model: &str, fps: f64, slo_ms: Option<f64>) -> App {
+    App { model: model.into(), slo_ms, mode: ArrivalMode::Periodic(1000.0 / fps) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn workload_models_exist_in_zoo() {
+        for app in frs().iter().chain(ros().iter()).chain(stress_mix(10).iter()) {
+            assert!(zoo::by_name(&app.model).is_some(), "{} missing", app.model);
+        }
+        for m in SLO_MODELS {
+            assert!(zoo::by_name(m).is_some());
+        }
+    }
+
+    #[test]
+    fn slo_workload_scales_multiplier() {
+        let apps = slo_workload(&[10.0, 20.0, 30.0, 40.0], 0.5);
+        assert_eq!(apps[0].slo_ms, Some(5.0));
+        assert_eq!(apps[3].slo_ms, Some(20.0));
+    }
+
+    #[test]
+    fn stress_mix_has_requested_size() {
+        assert_eq!(stress_mix(7).len(), 7);
+        assert_eq!(concurrent_copies("mobilenet_v1", 4).len(), 4);
+    }
+}

@@ -1,0 +1,102 @@
+//! EAST scene-text detector (paper Table 3: 108 ops).
+//!
+//! ResNet-style feature extractor with explicit post-add ReLUs (the TF1
+//! slim export the paper profiles keeps them unfused), a U-shaped feature
+//! merging branch, and sigmoid-gated score / geometry outputs.
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+/// ResNet bottleneck: 1×1 reduce, 3×3, 1×1 expand, shortcut add, ReLU.
+/// The first block of a stage also has a 1×1 projection on the shortcut.
+fn res_block(b: &mut GraphBuilder, x: NodeId, c: u64, stride: u64, project: bool) -> NodeId {
+    let r = b.conv2d(x, c / 4, 1, stride);
+    let m = b.conv2d(r, c / 4, 3, 1);
+    let e = b.conv2d(m, c, 1, 1);
+    let short = if project { b.conv2d(x, c, 1, stride) } else { x };
+    let a = b.add(short, e);
+    b.relu(a)
+}
+
+/// One feature-merge step: upsample, concat with the skip feature, then
+/// 1×1 + 3×3 convolutions (4 ops + the two convs' fused activations).
+fn merge(b: &mut GraphBuilder, up: NodeId, skip: NodeId, c: u64, hw: u64) -> NodeId {
+    let u = b.resize_bilinear(up, hw, hw);
+    let cat = b.concat(&[u, skip]);
+    let c1 = b.conv2d(cat, c, 1, 1);
+    b.conv2d(c1, c, 3, 1)
+}
+
+/// EAST-ResNet50-ish, 512×512 input. Op census (108):
+/// stem: pad + conv + relu + pool (4);
+/// stages [3,4,6,3]: 4 first-of-stage blocks × 6 ops (with projection
+/// conv) + 12 plain blocks × 5 ops = 84;
+/// merge: 3 × 4 (12); final 3×3 conv (1);
+/// outputs: 3 × (conv + sigmoid) (6) + geometry concat (1).
+/// 4 + 84 + 12 + 1 + 6 + 1 = 108.
+pub fn east() -> Graph {
+    let mut b = GraphBuilder::new("east", 4);
+    let x = b.input([1, 512, 512, 3]);
+    let p = b.pad(x, 3);
+    let c = b.conv2d(p, 64, 7, 2);
+    let c = b.relu(c); // stem activation stays unfused in the TF1 export
+    let mut t = b.max_pool2d(c, 3, 2);
+
+    let stages: [(u64, usize, u64); 4] =
+        [(256, 3, 1), (512, 4, 2), (1024, 6, 2), (2048, 3, 2)];
+    let mut skips: Vec<NodeId> = Vec::new();
+    for (c_out, n, s) in stages {
+        for i in 0..n {
+            let (stride, project) = if i == 0 { (s, true) } else { (1, false) };
+            t = res_block(&mut b, t, c_out, stride, project);
+        }
+        skips.push(t);
+    }
+
+    // Feature merging branch (f4 -> f1), spatial sizes 32, 64, 128.
+    let mut f = *skips.last().unwrap();
+    let hw = [32u64, 64, 128];
+    for (i, &skip) in skips.iter().rev().skip(1).enumerate() {
+        f = merge(&mut b, f, skip, 128 >> i.min(1), hw[i]);
+    }
+    let f = b.conv2d(f, 32, 3, 1);
+
+    // Output heads.
+    let score = b.conv2d(f, 1, 1, 1);
+    b.logistic(score);
+    let geo = b.conv2d(f, 4, 1, 1);
+    let geo = b.logistic(geo);
+    let angle = b.conv2d(f, 1, 1, 1);
+    let angle = b.logistic(angle);
+    b.concat(&[geo, angle]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpCategory, OpKind};
+
+    #[test]
+    fn op_count_matches_table3() {
+        let g = east();
+        assert_eq!(g.num_real_ops(), 108);
+    }
+
+    #[test]
+    fn census_matches_table1_shape() {
+        // Paper Table 1 (East): C2D 55.75 %, ADD 14.16 %, no DW.
+        let g = east();
+        let pct = g.category_percentages();
+        let get = |c: OpCategory| pct.iter().find(|(k, _)| *k == c).map(|(_, p)| *p).unwrap_or(0.0);
+        assert!((get(OpCategory::Conv2d) - 55.75).abs() < 6.0, "C2D={}", get(OpCategory::Conv2d));
+        assert!((get(OpCategory::Add) - 14.16).abs() < 3.0);
+        assert_eq!(get(OpCategory::DepthwiseConv), 0.0);
+    }
+
+    #[test]
+    fn has_three_sigmoid_outputs() {
+        let g = east();
+        let sig = g.nodes.iter().filter(|n| n.kind == OpKind::Logistic).count();
+        assert_eq!(sig, 3);
+    }
+}

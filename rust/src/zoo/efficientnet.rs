@@ -1,0 +1,162 @@
+//! EfficientNet-B4 and EfficientDet (paper Table 1 / Figs 3 and 8).
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+/// MBConv block: expand 1×1, depthwise, project 1×1, residual add when
+/// the shape is preserved. Activations are fused (TFLite).
+fn mbconv(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    c_in: u64,
+    c_out: u64,
+    k: u64,
+    stride: u64,
+) -> NodeId {
+    let e = b.conv2d(x, c_in * 6, 1, 1);
+    let d = b.depthwise_conv2d(e, k, stride);
+    let p = b.conv2d(d, c_out, 1, 1);
+    if stride == 1 && c_in == c_out {
+        b.add(x, p)
+    } else {
+        p
+    }
+}
+
+/// EfficientNet-B4, 380×380, ~120 ops. Paper Table 1 mix: ADD 18.85 %,
+/// C2D 50.0 %, DW 24.59 %, DLG 1.64 % (two sigmoid gates), Others 1.64 %.
+pub fn efficientnet4() -> Graph {
+    let mut b = GraphBuilder::new("efficientnet4", 4);
+    let x = b.input([1, 380, 380, 3]);
+    let mut t = b.conv2d(x, 48, 3, 2);
+    // Swish on the stem stays unfused in the converted graph.
+    t = b.logistic(t);
+    // (c_out, repeats, kernel, first_stride) — B4-ish widths/depths.
+    let groups: [(u64, usize, u64, u64); 7] = [
+        (24, 2, 3, 1),
+        (32, 4, 3, 2),
+        (56, 4, 5, 2),
+        (112, 6, 3, 2),
+        (160, 6, 5, 1),
+        (272, 6, 5, 2),
+        (448, 2, 3, 1),
+    ];
+    let mut c_in = 48;
+    for (c_out, n, k, s) in groups {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = mbconv(&mut b, t, c_in, c_out, k, stride);
+            c_in = c_out;
+        }
+    }
+    t = b.conv2d(t, 1792, 1, 1);
+    t = b.logistic(t);
+    let m = b.mean(t);
+    let f = b.fully_connected(m, 1000);
+    b.softmax(f);
+    b.finish()
+}
+
+/// EfficientDet-D0-ish: EfficientNet-lite backbone + 3 BiFPN layers +
+/// shared class/box heads. Used in the Fig 3 single/multi-processor
+/// latency measurements (the paper's "complex op structure" example).
+pub fn efficientdet() -> Graph {
+    let mut b = GraphBuilder::new("efficientdet", 4);
+    let x = b.input([1, 512, 512, 3]);
+    let mut t = b.conv2d(x, 32, 3, 2);
+    let groups: [(u64, usize, u64, u64); 7] = [
+        (16, 1, 3, 1),
+        (24, 2, 3, 2),
+        (40, 2, 5, 2),
+        (80, 3, 3, 2),
+        (112, 3, 5, 1),
+        (192, 4, 5, 2),
+        (320, 1, 3, 1),
+    ];
+    let mut c_in = 32;
+    let mut feats: Vec<NodeId> = Vec::new();
+    for (c_out, n, k, s) in groups {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = mbconv(&mut b, t, c_in, c_out, k, stride);
+            c_in = c_out;
+        }
+        if matches!(c_out, 40 | 112 | 320) {
+            feats.push(t);
+        }
+    }
+    // Project the three backbone levels to the BiFPN width (64) and derive
+    // two extra pyramid levels.
+    let mut p: Vec<NodeId> = feats.iter().map(|&f| b.conv2d(f, 64, 1, 1)).collect();
+    let p6 = b.max_pool2d(p[2], 3, 2);
+    let p7 = b.max_pool2d(p6, 3, 2);
+    p.push(p6);
+    p.push(p7);
+
+    // BiFPN layers: top-down then bottom-up fusion; each fusion node is
+    // resize + add + depthwise + pointwise.
+    for _ in 0..3 {
+        // Top-down.
+        for i in (0..4).rev() {
+            let hw = b.peek_shape(p[i]).h();
+            let up = b.resize_bilinear(p[i + 1], hw, hw);
+            let s = b.add(p[i], up);
+            let d = b.depthwise_conv2d(s, 3, 1);
+            p[i] = b.conv2d(d, 64, 1, 1);
+        }
+        // Bottom-up.
+        for i in 1..5 {
+            let hw = b.peek_shape(p[i]).h();
+            let down = b.resize_bilinear(p[i - 1], hw, hw);
+            let s = b.add(p[i], down);
+            let d = b.depthwise_conv2d(s, 3, 1);
+            p[i] = b.conv2d(d, 64, 1, 1);
+        }
+    }
+
+    // Shared heads over the 5 levels: 2 depthwise-separable convs + output.
+    let mut outs = Vec::new();
+    for &f in &p {
+        let d1 = b.depthwise_conv2d(f, 3, 1);
+        let c1 = b.conv2d(d1, 64, 1, 1);
+        let cls = b.conv2d(c1, 810, 1, 1); // 9 anchors × 90 classes
+        let boxq = b.conv2d(c1, 36, 1, 1); // 9 anchors × 4
+        let s = b.peek_shape(cls);
+        let ncls = b.reshape(cls, &[1, s.elements(), 1, 1]);
+        let sb = b.peek_shape(boxq);
+        let nbox = b.reshape(boxq, &[1, sb.elements(), 1, 1]);
+        outs.push(ncls);
+        outs.push(nbox);
+    }
+    let cls_all = b.concat(&[outs[0], outs[2], outs[4], outs[6], outs[8]]);
+    b.logistic(cls_all);
+    b.concat(&[outs[1], outs[3], outs[5], outs[7], outs[9]]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpCategory, OpKind};
+
+    #[test]
+    fn b4_census_matches_table1_shape() {
+        let g = efficientnet4();
+        let pct = g.category_percentages();
+        let get = |c: OpCategory| pct.iter().find(|(k, _)| *k == c).map(|(_, p)| *p).unwrap_or(0.0);
+        // Paper Table 1: ADD 18.85, C2D 50.0, DW 24.59, DLG 1.64.
+        assert!((get(OpCategory::Conv2d) - 50.0).abs() < 6.0, "C2D={}", get(OpCategory::Conv2d));
+        assert!((get(OpCategory::DepthwiseConv) - 24.59).abs() < 4.0);
+        assert!((get(OpCategory::Add) - 18.85).abs() < 4.0);
+        assert!(get(OpCategory::Dlg) > 0.0 && get(OpCategory::Dlg) < 4.0);
+    }
+
+    #[test]
+    fn efficientdet_has_multiscale_structure() {
+        let g = efficientdet();
+        assert!(g.num_real_ops() > 120);
+        let resizes = g.nodes.iter().filter(|n| n.kind == OpKind::ResizeBilinear).count();
+        assert!(resizes >= 20, "resizes={resizes}"); // 8 per BiFPN layer × 3
+        let adds = g.nodes.iter().filter(|n| n.kind == OpKind::Add).count();
+        assert!(adds >= 24);
+    }
+}

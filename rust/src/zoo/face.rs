@@ -1,0 +1,212 @@
+//! Face-pipeline models for the FRS workload (paper §4.4): RetinaFace
+//! detection + ArcFace (MobileFaceNet and ResNet50) identification, plus
+//! the HandLmk landmark model from Table 1.
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+/// MobileFaceNet bottleneck (ArcFace-Mobile): expand, depthwise, project,
+/// residual add when shape-preserving.
+fn mfn_block(b: &mut GraphBuilder, x: NodeId, c_in: u64, c_out: u64, stride: u64, t: u64) -> NodeId {
+    let e = b.conv2d(x, c_in * t, 1, 1);
+    let d = b.depthwise_conv2d(e, 3, stride);
+    let p = b.conv2d(d, c_out, 1, 1);
+    if stride == 1 && c_in == c_out {
+        b.add(x, p)
+    } else {
+        p
+    }
+}
+
+/// ArcFace-MobileFaceNet, 112×112 → 128-d embedding (~72 ops; paper
+/// Table 1 "Arcface": ADD 15.28 %, C2D 48.61 %, DW 23.61 %, DLG 1.39 %).
+pub fn arcface_mobile() -> Graph {
+    let mut b = GraphBuilder::new("arcface_mobile", 4);
+    let x = b.input([1, 112, 112, 3]);
+    let mut t = b.conv2d(x, 64, 3, 2);
+    t = b.depthwise_conv2d(t, 3, 1);
+    // (c_out, repeats, first_stride, expansion)
+    let groups: [(u64, usize, u64, u64); 5] =
+        [(64, 5, 2, 2), (128, 1, 2, 4), (128, 6, 1, 2), (128, 1, 2, 4), (128, 2, 1, 2)];
+    let mut c_in = 64;
+    for (c_out, n, s, e) in groups {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = mfn_block(&mut b, t, c_in, c_out, stride, e);
+            c_in = c_out;
+        }
+    }
+    // Global depthwise conv (7×7), linear 1×1, embedding head.
+    t = b.conv2d(t, 512, 1, 1);
+    t = b.logistic(t); // PReLU stand-in, kept unfused (the Table 1 DLG op)
+    t = b.depthwise_conv2d(t, 7, 7);
+    t = b.conv2d(t, 128, 1, 1);
+    let r = b.reshape(t, &[1, 128]);
+    // L2 normalization: x * (1 / sqrt(sum x²)) — mul + div pair.
+    let sq = b.mul(r, r);
+    b.div(r, sq);
+    b.finish()
+}
+
+/// ResNet50 bottleneck: 1×1 reduce, 3×3, 1×1 expand, shortcut, add.
+fn res50_block(b: &mut GraphBuilder, x: NodeId, c: u64, stride: u64, project: bool) -> NodeId {
+    let r = b.conv2d(x, c / 4, 1, stride);
+    let m = b.conv2d(r, c / 4, 3, 1);
+    let e = b.conv2d(m, c, 1, 1);
+    let short = if project { b.conv2d(x, c, 1, stride) } else { x };
+    b.add(short, e)
+}
+
+/// ArcFace-ResNet50, 112×112 → 512-d embedding (~77 ops). The heavyweight
+/// identification model in the FRS workload and Figs 9/10.
+pub fn arcface_resnet50() -> Graph {
+    let mut b = GraphBuilder::new("arcface_resnet50", 4);
+    let x = b.input([1, 112, 112, 3]);
+    let c = b.conv2d(x, 64, 7, 2);
+    let mut t = b.max_pool2d(c, 3, 2);
+    let stages: [(u64, usize, u64); 4] =
+        [(256, 3, 1), (512, 4, 2), (1024, 6, 2), (2048, 3, 2)];
+    for (c_out, n, s) in stages {
+        for i in 0..n {
+            let (stride, project) = if i == 0 { (s, true) } else { (1, false) };
+            t = res50_block(&mut b, t, c_out, stride, project);
+        }
+    }
+    let m = b.mean(t);
+    let f = b.fully_connected(m, 512);
+    // L2 normalization.
+    let sq = b.mul(f, f);
+    b.div(f, sq);
+    b.finish()
+}
+
+/// RetinaFace-MobileNet0.25, 320×320: backbone + 3-level FPN + SSH context
+/// modules + class/box/landmark heads (~96 ops).
+pub fn retinaface() -> Graph {
+    let mut b = GraphBuilder::new("retinaface", 4);
+    let x = b.input([1, 320, 320, 3]);
+    let mut t = b.conv2d(x, 8, 3, 2);
+    let cfg: [(u64, u64); 13] = [
+        (1, 16),
+        (2, 32),
+        (1, 32),
+        (2, 64),
+        (1, 64),
+        (2, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (2, 256),
+        (1, 256),
+    ];
+    let mut feats = Vec::new();
+    for (i, (stride, c_out)) in cfg.iter().enumerate() {
+        t = b.depthwise_conv2d(t, 3, *stride);
+        t = b.conv2d(t, *c_out, 1, 1);
+        if matches!(i, 5 | 10 | 12) {
+            feats.push(t);
+        }
+    }
+    // FPN: lateral 1×1 convs, top-down resize+add, smooth convs.
+    let mut lat: Vec<NodeId> = feats.iter().map(|&f| b.conv2d(f, 64, 1, 1)).collect();
+    for i in (0..2).rev() {
+        let hw = b.peek_shape(lat[i]).h();
+        let up = b.resize_bilinear(lat[i + 1], hw, hw);
+        let s = b.add(lat[i], up);
+        lat[i] = b.conv2d(s, 64, 3, 1);
+    }
+    // SSH context module per level: 3×3, 5×5 (two 3×3), 7×7 (three 3×3)
+    // branches + concat, then the three heads.
+    for &f in &lat {
+        let c1 = b.conv2d(f, 32, 3, 1);
+        let c2a = b.conv2d(f, 16, 3, 1);
+        let c2 = b.conv2d(c2a, 16, 3, 1);
+        let c3a = b.conv2d(c2a, 16, 3, 1);
+        let c3 = b.conv2d(c3a, 16, 3, 1);
+        let ctx = b.concat(&[c1, c2, c3]);
+        let cls = b.conv2d(ctx, 4, 1, 1); // 2 anchors × 2
+        b.softmax(cls);
+        b.conv2d(ctx, 8, 1, 1); // 2 anchors × 4 box
+        b.conv2d(ctx, 20, 1, 1); // 2 anchors × 10 landmarks
+    }
+    b.finish()
+}
+
+/// MediaPipe-style hand-landmark model, 224×224 (~59 ops; paper Table 1
+/// "HandLmk": ADD 23.75 %, C2D 48.28 %, DW 23.75 %, Others 3.45 %).
+pub fn handlmk() -> Graph {
+    let mut b = GraphBuilder::new("handlmk", 4);
+    let x = b.input([1, 224, 224, 3]);
+    let mut t = b.conv2d(x, 24, 3, 2);
+    // Depthwise-separable residual blocks: dw + pw + add.
+    let groups: [(u64, usize, u64); 5] =
+        [(24, 3, 2), (48, 3, 2), (96, 3, 2), (192, 3, 2), (288, 2, 2)];
+    let mut c_in = 24;
+    for (c_out, n, s) in groups {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let d = b.depthwise_conv2d(t, 3, stride);
+            let p1 = b.conv2d(d, c_out, 1, 1);
+            let p = b.conv2d(p1, c_out, 1, 1);
+            t = if stride == 1 && c_in == c_out { b.add(t, p) } else { p };
+            c_in = c_out;
+        }
+    }
+    let m = b.mean(t);
+    let f = b.fully_connected(m, 63); // 21 landmarks × 3
+    b.reshape(f, &[1, 21, 3, 1]);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpCategory, OpKind};
+
+    fn pct(g: &Graph, c: OpCategory) -> f64 {
+        g.category_percentages()
+            .iter()
+            .find(|(k, _)| *k == c)
+            .map(|(_, p)| *p)
+            .unwrap_or(0.0)
+    }
+
+    #[test]
+    fn arcface_mobile_census() {
+        let g = arcface_mobile();
+        assert!((g.num_real_ops() as i64 - 72).abs() <= 8, "ops={}", g.num_real_ops());
+        // Paper Table 1: ADD 15.28, C2D 48.61, DW 23.61.
+        assert!((pct(&g, OpCategory::Conv2d) - 48.61).abs() < 8.0);
+        assert!((pct(&g, OpCategory::DepthwiseConv) - 23.61).abs() < 6.0);
+        assert!((pct(&g, OpCategory::Add) - 15.28).abs() < 5.0);
+    }
+
+    #[test]
+    fn arcface_resnet50_structure() {
+        let g = arcface_resnet50();
+        let adds = g.nodes.iter().filter(|n| n.kind == OpKind::Add).count();
+        assert_eq!(adds, 16);
+        let convs = g.nodes.iter().filter(|n| n.kind == OpKind::Conv2d).count();
+        assert_eq!(convs, 53); // stem + 16×3 + 4 projections
+        assert!(g.total_flops() as f64 / 1e9 > 2.0); // heavyweight model
+    }
+
+    #[test]
+    fn retinaface_has_three_head_levels() {
+        let g = retinaface();
+        let softmax = g.nodes.iter().filter(|n| n.kind == OpKind::Softmax).count();
+        assert_eq!(softmax, 3);
+        let dw = g.nodes.iter().filter(|n| n.kind == OpKind::DepthwiseConv2d).count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn handlmk_census() {
+        let g = handlmk();
+        assert!((pct(&g, OpCategory::DepthwiseConv) - 23.75).abs() < 6.0);
+        assert!((pct(&g, OpCategory::Conv2d) - 48.28).abs() < 10.0);
+        let out = &g.nodes[*g.outputs().first().unwrap()];
+        assert_eq!(out.out_shape.dims[1], 21);
+    }
+}

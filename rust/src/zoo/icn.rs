@@ -1,0 +1,98 @@
+//! ICNet (image cascade network), int8-quantized (paper Table 3: 77 ops,
+//! "ICN_quant"). Three resolution branches with cascade feature fusion;
+//! quantize/dequantize ops bracket the graph.
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+/// Plain residual block: two 3×3 convs + add (3 ops).
+fn res_block(b: &mut GraphBuilder, x: NodeId, c: u64) -> NodeId {
+    let a = b.conv2d(x, c, 3, 1);
+    let c2 = b.conv2d(a, c, 3, 1);
+    b.add(x, c2)
+}
+
+/// Cascade feature fusion: upsample the coarse branch, dilated conv on it,
+/// 1×1-project the fine branch, add (4 ops).
+fn cff(b: &mut GraphBuilder, coarse: NodeId, fine: NodeId, c: u64, hw: u64) -> NodeId {
+    let up = b.resize_bilinear(coarse, hw, hw);
+    let d = b.dilated_conv2d(up, c, 3, 2);
+    let p = b.conv2d(fine, c, 1, 1);
+    b.add(d, p)
+}
+
+/// ICNet-quant, 512×512. Op census (77):
+/// quantize (1) + 2 branch-input resizes (2);
+/// branch-1 (full res): conv, dw, conv, dw, conv (5);
+/// branch-2 (1/2 res): stem conv + 5 res blocks (16);
+/// branch-3 (1/4 res): stem conv + pool + 13 res blocks (41);
+/// CFF ×2 (8); head conv + resize + softmax + dequantize (4).
+/// 1 + 2 + 5 + 16 + 41 + 8 + 4 = 77.
+pub fn icn_quant() -> Graph {
+    let mut b = GraphBuilder::new("icn_quant", 1);
+    let x = b.input([1, 512, 512, 3]);
+    let q = b.quantize(x);
+    let half = b.resize_bilinear(q, 256, 256);
+    let quarter = b.resize_bilinear(q, 128, 128);
+
+    // Branch 1: cheap full-resolution path with depthwise convs.
+    let mut b1 = b.conv2d(q, 32, 3, 2);
+    b1 = b.depthwise_conv2d(b1, 3, 2);
+    b1 = b.conv2d(b1, 64, 1, 1);
+    b1 = b.depthwise_conv2d(b1, 3, 1);
+    b1 = b.conv2d(b1, 128, 1, 1);
+
+    // Branch 2: medium path.
+    let mut b2 = b.conv2d(half, 64, 3, 2);
+    for _ in 0..5 {
+        b2 = res_block(&mut b, b2, 64);
+    }
+
+    // Branch 3: deep low-resolution path.
+    let mut b3 = b.conv2d(quarter, 128, 3, 2);
+    b3 = b.max_pool2d(b3, 3, 2);
+    for _ in 0..13 {
+        b3 = res_block(&mut b, b3, 128);
+    }
+
+    // Cascade fusion: b3 -> b2 (at 1/8 = 64), then -> b1 (at 1/4 = 128).
+    let f2 = cff(&mut b, b3, b2, 64, 128);
+    let f1 = cff(&mut b, f2, b1, 128, 128);
+
+    let head = b.conv2d(f1, 19, 1, 1);
+    let up = b.resize_bilinear(head, 512, 512);
+    let sm = b.softmax(up);
+    b.dequantize(sm);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn op_count_matches_table3() {
+        let g = icn_quant();
+        assert_eq!(g.num_real_ops(), 77);
+    }
+
+    #[test]
+    fn quantized_model_markers() {
+        let g = icn_quant();
+        assert_eq!(g.dtype_bytes, 1);
+        assert!(g.nodes.iter().any(|n| n.kind == OpKind::Quantize));
+        assert!(g.nodes.iter().any(|n| n.kind == OpKind::Dequantize));
+    }
+
+    #[test]
+    fn census_close_to_table1() {
+        // Paper Table 1 (ICN): ADD 26.83 %, C2D 57.32 %, DW 2.44 %.
+        let g = icn_quant();
+        let adds = g.nodes.iter().filter(|n| n.kind == OpKind::Add).count();
+        let convs = g.nodes.iter().filter(|n| n.kind == OpKind::Conv2d).count();
+        let dws = g.nodes.iter().filter(|n| n.kind == OpKind::DepthwiseConv2d).count();
+        assert_eq!(dws, 2);
+        assert!(adds >= 18, "adds={adds}");
+        assert!(convs >= 40, "convs={convs}");
+    }
+}

@@ -1,0 +1,135 @@
+//! InceptionV4 (paper Table 1: 69.3 % C2D, 9.3 % DLG, 20.47 % Others,
+//! no ADD / DW). Used in the ROS parallel-inference workload and the SLO
+//! analysis (Figs 8 and 9).
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+/// Inception-A: four branches (1×1 / 3×3 / double-3×3 / pool-proj).
+fn block_a(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    let b0 = b.conv2d(x, 96, 1, 1);
+    let b1a = b.conv2d(x, 64, 1, 1);
+    let b1 = b.conv2d(b1a, 96, 3, 1);
+    let b2a = b.conv2d(x, 64, 1, 1);
+    let b2b = b.conv2d(b2a, 96, 3, 1);
+    let b2 = b.conv2d(b2b, 96, 3, 1);
+    let p = b.avg_pool2d(x, 3, 1);
+    let b3 = b.conv2d(p, 96, 1, 1);
+    b.concat(&[b0, b1, b2, b3])
+}
+
+/// Inception-B: factorized 7×7 branches (modeled as 7-wide convs) with a
+/// sigmoid gate on the pooled branch (the converted graph the paper
+/// profiles carries these as LOGISTIC ops — the Table 1 "DLG" column).
+fn block_b(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    let b0 = b.conv2d(x, 384, 1, 1);
+    let b1a = b.conv2d(x, 192, 1, 1);
+    let b1b = b.conv2d(b1a, 224, 7, 1);
+    let b1 = b.conv2d(b1b, 256, 7, 1);
+    let b2a = b.conv2d(x, 192, 1, 1);
+    let b2b = b.conv2d(b2a, 192, 7, 1);
+    let b2c = b.conv2d(b2b, 224, 7, 1);
+    let b2 = b.conv2d(b2c, 224, 7, 1);
+    let p = b.avg_pool2d(x, 3, 1);
+    let b3a = b.conv2d(p, 128, 1, 1);
+    let b3 = b.logistic(b3a);
+    b.concat(&[b0, b1, b2, b3])
+}
+
+/// Inception-C: split 3×3 branches, sigmoid-gated pool projection.
+fn block_c(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    let b0 = b.conv2d(x, 256, 1, 1);
+    let b1a = b.conv2d(x, 384, 1, 1);
+    let b1l = b.conv2d(b1a, 256, 3, 1);
+    let b1r = b.conv2d(b1a, 256, 3, 1);
+    let b2a = b.conv2d(x, 384, 1, 1);
+    let b2b = b.conv2d(b2a, 448, 3, 1);
+    let b2c = b.conv2d(b2b, 512, 3, 1);
+    let b2l = b.conv2d(b2c, 256, 3, 1);
+    let b2r = b.conv2d(b2c, 256, 3, 1);
+    let p = b.avg_pool2d(x, 3, 1);
+    let b3a = b.conv2d(p, 256, 1, 1);
+    let b3 = b.logistic(b3a);
+    b.concat(&[b0, b1l, b1r, b2l, b2r, b3])
+}
+
+/// InceptionV4, 299×299. ~190 ops: stem (16) + 4×A (36) + reduction-A (6)
+/// + 7×B (91) + reduction-B (9) + 3×C (39) + head (4).
+pub fn inception_v4() -> Graph {
+    let mut b = GraphBuilder::new("inception_v4", 4);
+    let x = b.input([1, 299, 299, 3]);
+    // Stem.
+    let c1 = b.conv2d(x, 32, 3, 2);
+    let c2 = b.conv2d(c1, 32, 3, 1);
+    let c3 = b.conv2d(c2, 64, 3, 1);
+    let p1 = b.max_pool2d(c3, 3, 2);
+    let c4 = b.conv2d(c3, 96, 3, 2);
+    let s1 = b.concat(&[p1, c4]);
+    let l1 = b.conv2d(s1, 64, 1, 1);
+    let l2 = b.conv2d(l1, 96, 3, 1);
+    let r1 = b.conv2d(s1, 64, 1, 1);
+    let r2 = b.conv2d(r1, 64, 7, 1);
+    let r3 = b.conv2d(r2, 64, 7, 1);
+    let r4 = b.conv2d(r3, 96, 3, 1);
+    let s2 = b.concat(&[l2, r4]);
+    let p2 = b.max_pool2d(s2, 3, 2);
+    let c5 = b.conv2d(s2, 192, 3, 2);
+    let mut t = b.concat(&[p2, c5]);
+
+    for _ in 0..4 {
+        t = block_a(&mut b, t);
+    }
+    // Reduction-A.
+    let ra0 = b.conv2d(t, 384, 3, 2);
+    let ra1a = b.conv2d(t, 192, 1, 1);
+    let ra1b = b.conv2d(ra1a, 224, 3, 1);
+    let ra1 = b.conv2d(ra1b, 256, 3, 2);
+    let rap = b.max_pool2d(t, 3, 2);
+    t = b.concat(&[ra0, ra1, rap]);
+
+    for _ in 0..7 {
+        t = block_b(&mut b, t);
+    }
+    // Reduction-B.
+    let rb0a = b.conv2d(t, 192, 1, 1);
+    let rb0 = b.conv2d(rb0a, 192, 3, 2);
+    let rb1a = b.conv2d(t, 256, 1, 1);
+    let rb1b = b.conv2d(rb1a, 256, 7, 1);
+    let rb1c = b.conv2d(rb1b, 320, 7, 1);
+    let rb1 = b.conv2d(rb1c, 320, 3, 2);
+    let rbp = b.max_pool2d(t, 3, 2);
+    t = b.concat(&[rb0, rb1, rbp]);
+
+    for _ in 0..3 {
+        t = block_c(&mut b, t);
+    }
+
+    let m = b.mean(t);
+    let f = b.fully_connected(m, 1001);
+    b.softmax(f);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpCategory, OpKind};
+
+    #[test]
+    fn census_matches_table1_shape() {
+        let g = inception_v4();
+        let pct = g.category_percentages();
+        let get = |c: OpCategory| pct.iter().find(|(k, _)| *k == c).map(|(_, p)| *p).unwrap_or(0.0);
+        // Paper Table 1: C2D 69.3 %, no ADD, no DW.
+        assert!((get(OpCategory::Conv2d) - 69.3).abs() < 8.0, "C2D={}", get(OpCategory::Conv2d));
+        assert_eq!(get(OpCategory::Add), 0.0);
+        assert_eq!(get(OpCategory::DepthwiseConv), 0.0);
+        assert!(get(OpCategory::Dlg) > 2.0);
+    }
+
+    #[test]
+    fn is_a_large_model() {
+        let g = inception_v4();
+        assert!(g.num_real_ops() > 150, "ops={}", g.num_real_ops());
+        assert!(g.nodes.iter().filter(|n| n.kind == OpKind::Concat).count() >= 15);
+    }
+}

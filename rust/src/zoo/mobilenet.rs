@@ -1,0 +1,148 @@
+//! MobileNetV1 / MobileNetV2 (paper Table 3: 31 / 66 ops).
+//!
+//! Activations (ReLU6) are fused into the convolutions, matching the
+//! TFLite graphs the paper profiles.
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+/// MobileNetV1-1.0-224. Op census (31):
+/// conv stem (1) + 13 × (depthwise + pointwise) (26) + avgpool (1)
+/// + 1×1 conv head (1) + reshape (1) + softmax (1).
+pub fn mobilenet_v1() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v1", 4);
+    let x = b.input([1, 224, 224, 3]);
+    let mut t = b.conv2d(x, 32, 3, 2);
+    // (stride, c_out) per depthwise-separable pair.
+    let cfg: [(u64, u64); 13] = [
+        (1, 64),
+        (2, 128),
+        (1, 128),
+        (2, 256),
+        (1, 256),
+        (2, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (1, 512),
+        (2, 1024),
+        (1, 1024),
+    ];
+    for (stride, c_out) in cfg {
+        t = b.depthwise_conv2d(t, 3, stride);
+        t = b.conv2d(t, c_out, 1, 1);
+    }
+    let p = b.avg_pool2d(t, 7, 7);
+    let h = b.conv2d(p, 1001, 1, 1);
+    let r = b.reshape(h, &[1, 1001]);
+    b.softmax(r);
+    b.finish()
+}
+
+/// Int8-quantized MobileNetV1 — the standard NNAPI benchmark variant.
+/// The paper's Table 2 / Fig 3 MobileNet measurements (1.88 ms on the
+/// MediaTek NPU) are only reachable through the accelerators' integer
+/// paths, so the calibration experiments use this variant.
+pub fn mobilenet_v1_quant() -> Graph {
+    let mut g = mobilenet_v1();
+    g.name = "mobilenet_v1_quant".into();
+    g.dtype_bytes = 1;
+    for n in &mut g.nodes {
+        n.param_bytes /= 4; // int8 weights
+    }
+    g
+}
+
+/// One MobileNetV2 inverted-residual bottleneck. Returns the block output;
+/// emits 3 ops (expand 1×1, depthwise, project 1×1) plus a residual Add
+/// when `stride == 1` and channel counts allow it.
+fn inverted_residual(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    c_in: u64,
+    c_out: u64,
+    stride: u64,
+    expand: u64,
+) -> NodeId {
+    let e = b.conv2d(x, c_in * expand, 1, 1);
+    let d = b.depthwise_conv2d(e, 3, stride);
+    let p = b.conv2d(d, c_out, 1, 1);
+    if stride == 1 && c_in == c_out {
+        b.add(x, p)
+    } else {
+        p
+    }
+}
+
+/// MobileNetV2-1.0-224. Op census (66):
+/// conv stem (1) + first bottleneck without expansion (2) +
+/// 16 expanded bottlenecks (48) + 10 residual adds + 1×1 conv 1280 (1)
+/// + avgpool (1) + 1×1 conv head (1) + reshape (1) + softmax (1).
+pub fn mobilenet_v2() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v2", 4);
+    let x = b.input([1, 224, 224, 3]);
+    let mut t = b.conv2d(x, 32, 3, 2);
+    // First bottleneck: expansion factor 1 → no expand conv.
+    let d = b.depthwise_conv2d(t, 3, 1);
+    t = b.conv2d(d, 16, 1, 1);
+    // (c_out, repeats, first_stride) groups; expansion 6.
+    let groups: [(u64, usize, u64); 6] =
+        [(24, 2, 2), (32, 3, 2), (64, 4, 2), (96, 3, 1), (160, 3, 2), (320, 1, 1)];
+    let mut c_in = 16;
+    for (c_out, n, s) in groups {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            t = inverted_residual(&mut b, t, c_in, c_out, stride, 6);
+            c_in = c_out;
+        }
+    }
+    t = b.conv2d(t, 1280, 1, 1);
+    let p = b.avg_pool2d(t, 7, 7);
+    let h = b.conv2d(p, 1001, 1, 1);
+    let r = b.reshape(h, &[1, 1001]);
+    b.softmax(r);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpCategory, OpKind};
+
+    #[test]
+    fn v1_census() {
+        let g = mobilenet_v1();
+        assert_eq!(g.num_real_ops(), 31);
+        let dw = g.nodes.iter().filter(|n| n.kind == OpKind::DepthwiseConv2d).count();
+        assert_eq!(dw, 13);
+        let conv = g.nodes.iter().filter(|n| n.kind == OpKind::Conv2d).count();
+        assert_eq!(conv, 15); // stem + 13 pointwise + head
+    }
+
+    #[test]
+    fn v1_total_flops_close_to_published() {
+        // MobileNetV1 is ~569 MFLOPs (1.14 GFLOPs counting mul+add as 2).
+        let g = mobilenet_v1();
+        let gflops = g.total_flops() as f64 / 1e9;
+        assert!((0.9..1.4).contains(&gflops), "gflops={gflops}");
+    }
+
+    #[test]
+    fn v2_census_matches_table1_mix() {
+        let g = mobilenet_v2();
+        assert_eq!(g.num_real_ops(), 66);
+        let pct = g.category_percentages();
+        let get = |c: OpCategory| pct.iter().find(|(k, _)| *k == c).map(|(_, p)| *p).unwrap_or(0.0);
+        // Paper Table 1 (MobileNetV2): ADD 14.71, C2D 52.94, DW 25.0.
+        assert!((get(OpCategory::Add) - 15.15).abs() < 3.0);
+        assert!((get(OpCategory::Conv2d) - 54.5).abs() < 4.0);
+        assert!((get(OpCategory::DepthwiseConv) - 25.75).abs() < 3.0);
+    }
+
+    #[test]
+    fn v2_has_10_residual_adds() {
+        let g = mobilenet_v2();
+        let adds = g.nodes.iter().filter(|n| n.kind == OpKind::Add).count();
+        assert_eq!(adds, 10);
+    }
+}

@@ -1,0 +1,138 @@
+//! YOLOv3 on Darknet-53 (paper Table 3: 232 ops).
+//!
+//! Darknet's leaky-ReLU activations do not fuse into TFLite convolutions,
+//! so they appear as separate ops (modeled as `Relu`); strided convs are
+//! explicitly padded; the second conv of each residual block keeps its
+//! batch-norm unfused; and each detection scale carries the usual box
+//! decode chain (reshape / slices / sigmoids / grid arithmetic).
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+
+fn conv_act(b: &mut GraphBuilder, x: NodeId, c: u64, k: u64, s: u64) -> NodeId {
+    let c = b.conv2d(x, c, k, s);
+    b.relu(c)
+}
+
+/// One Darknet residual block: 1×1 squeeze, 3×3 expand (+BN), add.
+/// Emits 6 ops.
+fn dark_block(b: &mut GraphBuilder, x: NodeId, c: u64) -> NodeId {
+    let s = conv_act(b, x, c / 2, 1, 1);
+    let e = b.conv2d(s, c, 3, 1);
+    let e = b.batch_norm(e);
+    let e = b.relu(e);
+    b.add(x, e)
+}
+
+/// YOLO detection head: five conv+act pairs, then the output conv pair.
+/// Returns (branch feature for the upsample path, raw prediction).
+fn head(b: &mut GraphBuilder, x: NodeId, c: u64, out_c: u64) -> (NodeId, NodeId) {
+    let mut t = x;
+    for i in 0..5 {
+        let (cc, k) = if i % 2 == 0 { (c / 2, 1) } else { (c, 3) };
+        t = conv_act(b, t, cc, k, 1);
+    }
+    let p = conv_act(b, t, c, 3, 1);
+    let raw = b.conv2d(p, out_c, 1, 1); // linear output conv
+    (t, raw)
+}
+
+/// Box decode for one scale (10 ops): reshape, three strided-slices
+/// (xy / wh / conf+cls), sigmoid(xy), sigmoid(conf), anchor-scale mul,
+/// grid-offset add, stride mul, concat.
+fn decode(b: &mut GraphBuilder, raw: NodeId) -> NodeId {
+    let s = b.peek_shape(raw);
+    let n = s.elements() / 255;
+    let r = b.reshape(raw, &[1, n * 3, 85, 1]);
+    let xy = b.strided_slice(r, 1);
+    let wh = b.strided_slice(r, 1);
+    let cf = b.strided_slice(r, 1);
+    let xy = b.logistic(xy);
+    let cf = b.logistic(cf);
+    let wh = b.mul(wh, wh); // anchor scaling (same-shape elementwise)
+    let xy = b.add(xy, xy); // grid offset
+    let xy = b.mul(xy, xy); // stride scaling
+    b.concat(&[xy, wh, cf])
+}
+
+/// YOLOv3-416. Op census (232):
+/// backbone: stem conv+act (2) + 5 × (strided conv + BN + act) (15)
+/// + 23 residual blocks × 6 (138, incl. unfused BN) = 155;
+/// heads: 3 × 13 (39) + 2 upsample paths × (conv+act+resize+concat) (8);
+/// decode: 3 × 10 (30).  155 + 47 + 30 = 232.
+pub fn yolo_v3() -> Graph {
+    let mut b = GraphBuilder::new("yolo_v3", 4);
+    let x = b.input([1, 416, 416, 3]);
+    let mut t = conv_act(&mut b, x, 32, 3, 1);
+    let stages: [(u64, usize); 5] = [(64, 1), (128, 2), (256, 8), (512, 8), (1024, 4)];
+    let mut route_36 = None; // end of the 256-channel stage
+    let mut route_61 = None; // end of the 512-channel stage
+    for (c, n_blocks) in stages {
+        // Strided downsample conv with unfused BN (padding is folded into
+        // the conv, as TFLite's SAME attribute does).
+        t = b.conv2d(t, c, 3, 2);
+        t = b.batch_norm(t);
+        t = b.relu(t);
+        for _ in 0..n_blocks {
+            t = dark_block(&mut b, t, c);
+        }
+        if c == 256 {
+            route_36 = Some(t);
+        }
+        if c == 512 {
+            route_61 = Some(t);
+        }
+    }
+
+    // Scale 1 (13×13).
+    let (branch1, raw1) = head(&mut b, t, 1024, 255);
+    // Upsample path to scale 2.
+    let u = conv_act(&mut b, branch1, 256, 1, 1);
+    let u = b.resize_bilinear(u, 26, 26);
+    let cat2 = b.concat(&[u, route_61.unwrap()]);
+    let (branch2, raw2) = head(&mut b, cat2, 512, 255);
+    // Upsample path to scale 3.
+    let u = conv_act(&mut b, branch2, 128, 1, 1);
+    let u = b.resize_bilinear(u, 52, 52);
+    let cat3 = b.concat(&[u, route_36.unwrap()]);
+    let (_, raw3) = head(&mut b, cat3, 256, 255);
+
+    decode(&mut b, raw1);
+    decode(&mut b, raw2);
+    decode(&mut b, raw3);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn op_count_matches_table3() {
+        let g = yolo_v3();
+        assert_eq!(g.num_real_ops(), 232);
+    }
+
+    #[test]
+    fn darknet53_conv_count() {
+        let g = yolo_v3();
+        let convs = g.nodes.iter().filter(|n| n.kind == OpKind::Conv2d).count();
+        // 52 backbone convs + 23 head/upsample convs.
+        assert_eq!(convs, 75);
+    }
+
+    #[test]
+    fn three_detection_scales() {
+        let g = yolo_v3();
+        let sig = g.nodes.iter().filter(|n| n.kind == OpKind::Logistic).count();
+        assert_eq!(sig, 6); // 2 per decode × 3 scales
+        let resize = g.nodes.iter().filter(|n| n.kind == OpKind::ResizeBilinear).count();
+        assert_eq!(resize, 2);
+    }
+
+    #[test]
+    fn yolo_is_the_largest_table3_model_by_flops() {
+        let g = yolo_v3();
+        assert!(g.total_flops() as f64 / 1e9 > 10.0); // ~65 GFLOPs at 416²
+    }
+}

@@ -1,0 +1,77 @@
+//! Integration: AOT HLO artifacts → PJRT → staged serving, verified
+//! against the Python-side numerics probe.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! note) when artifacts are absent so `cargo test` stays usable on a
+//! fresh checkout.
+
+use adms::coordinator::{serve_probe, ServeConfig};
+use adms::runtime::{artifacts_available, default_artifact_dir, Runtime};
+
+fn load() -> Option<(Runtime, adms::runtime::ArtifactSet)> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let art = rt.load_dir(&default_artifact_dir()).expect("load artifacts");
+    Some((rt, art))
+}
+
+#[test]
+fn fused_stage_matches_probe_logits() {
+    let Some((_rt, art)) = load() else { return };
+    let probe = art.probe.as_ref().expect("probe in manifest");
+    let full = art.stage("full").expect("full stage");
+    let got = full.execute_f32(&probe.input).expect("execute");
+    assert_eq!(got.len(), probe.expected_logits.len());
+    for (i, (g, e)) in got.iter().zip(&probe.expected_logits).enumerate() {
+        assert!(
+            (g - e).abs() <= 1e-4 + 1e-4 * e.abs(),
+            "logit {i}: rust PJRT {g} vs jax {e}"
+        );
+    }
+}
+
+#[test]
+fn staged_pipeline_matches_fused() {
+    let Some((_rt, art)) = load() else { return };
+    let probe = art.probe.as_ref().unwrap();
+    let stages = art.pipeline_stages().expect("pipeline");
+    assert_eq!(stages.len(), 3, "stem, body, head");
+    let mut buf = probe.input.clone();
+    for s in &stages {
+        buf = s.execute_f32(&buf).expect("stage execute");
+    }
+    for (g, e) in buf.iter().zip(&probe.expected_logits) {
+        assert!((g - e).abs() <= 1e-4 + 1e-4 * e.abs(), "{g} vs {e}");
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some((_rt, art)) = load() else { return };
+    let full = art.stage("full").unwrap();
+    let bad = vec![0.0f32; 7];
+    assert!(full.execute_f32(&bad).is_err());
+}
+
+#[test]
+fn multithreaded_serving_verifies_all_responses() {
+    let Some((_rt, art)) = load() else { return };
+    let cfg = ServeConfig { workers: 4, requests: 32, verify: true };
+    let report = serve_probe(&art, &cfg).expect("serve");
+    assert_eq!(report.completed, 32, "errors={} verify_failures={}", report.errors, report.verify_failures);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.verify_failures, 0);
+    assert!(report.latency.mean() > 0.0);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn single_worker_serving_works() {
+    let Some((_rt, art)) = load() else { return };
+    let cfg = ServeConfig { workers: 1, requests: 8, verify: true };
+    let report = serve_probe(&art, &cfg).expect("serve");
+    assert_eq!(report.completed, 8);
+}

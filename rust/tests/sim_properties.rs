@@ -1,0 +1,213 @@
+//! Property-based integration tests: invariants of the analyzer, the
+//! schedulers, and the simulation engine under randomized workloads and
+//! SoC conditions (the offline stand-in for proptest — see
+//! `adms::testing::prop`).
+
+use adms::analyzer;
+use adms::sched::{Adms, Band, ModelPlan, Pinned, Scheduler, VanillaTflite};
+use adms::sim::{App, ArrivalMode, Engine, SimConfig};
+use adms::soc::{soc_by_name, SOC_NAMES};
+use adms::testing::prop::check;
+use adms::zoo;
+use std::sync::Arc;
+
+const MODELS: [&str; 6] =
+    ["mobilenet_v1", "mobilenet_v2", "east", "arcface_mobile", "handlmk", "icn_quant"];
+
+#[test]
+fn prop_partition_is_exhaustive_and_ordered() {
+    check("partition covers ops in order", 60, |g| {
+        let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
+        let model = zoo::by_name(*g.pick(&MODELS)).unwrap();
+        let ws = g.usize(1..15);
+        let units = analyzer::get_unit_subgraphs(&model, &soc, ws);
+        // Exhaustive cover, each op once, in ascending id order.
+        let mut prev: i64 = -1;
+        let mut count = 0;
+        for u in &units {
+            assert!(!u.support.is_empty());
+            for &op in &u.ops {
+                assert!(op as i64 > prev, "ops out of order");
+                prev = op as i64;
+                count += 1;
+            }
+        }
+        assert_eq!(count, model.num_real_ops());
+        // Adjacent units must differ in support (maximality).
+        for w in units.windows(2) {
+            let contiguous = *w[1].ops.first().unwrap() == *w[0].ops.last().unwrap() + 1;
+            if contiguous {
+                assert_ne!(w[0].support, w[1].support, "non-maximal unit split");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merged_counts_shrink_with_window_size() {
+    check("ws filtering never increases candidates", 40, |g| {
+        let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
+        let model = zoo::by_name(*g.pick(&MODELS)).unwrap();
+        let ws = g.usize(2..12);
+        let p1 = analyzer::partition(&model, &soc, 1);
+        let pw = analyzer::partition(&model, &soc, ws);
+        assert!(
+            pw.total_subgraphs <= p1.total_subgraphs,
+            "ws={ws}: {} > {}",
+            pw.total_subgraphs,
+            p1.total_subgraphs
+        );
+    });
+}
+
+#[test]
+fn prop_schedulers_only_assign_supported_online_procs() {
+    check("assignments are valid", 30, |g| {
+        let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
+        let model = zoo::by_name(*g.pick(&MODELS)).unwrap();
+        let plan = ModelPlan::build(Arc::new(model), &soc, g.usize(1..8));
+        let plans = vec![plan];
+        // Random monitor views.
+        let views: Vec<adms::monitor::ProcView> = soc
+            .processors
+            .iter()
+            .enumerate()
+            .map(|(id, p)| adms::monitor::ProcView {
+                id,
+                kind: p.kind,
+                temp_c: g.f64(25.0, 80.0),
+                freq_mhz: p.max_freq(),
+                freq_scale: g.f64(0.3, 1.0),
+                offline: g.chance(0.2),
+                load: g.f64(0.0, 1.0),
+                backlog_ms: g.f64(0.0, 80.0),
+                active_sessions: g.usize(0..4),
+                util: g.f64(0.0, 1.0),
+                headroom_c: g.f64(-5.0, 40.0),
+            })
+            .collect();
+        let n_ready = g.usize(1..6).min(plans[0].num_units());
+        let ready: Vec<adms::sched::PendingTask> = (0..n_ready)
+            .map(|u| adms::sched::PendingTask {
+                req: u as u64,
+                session: 0,
+                unit: u,
+                ready_at: 0.0,
+                req_arrival: 0.0,
+                slo_ms: if g.bool() { Some(g.f64(5.0, 200.0)) } else { None },
+                remaining_ms: g.f64(0.0, 50.0),
+                dep_procs: vec![],
+            })
+            .collect();
+        let ctx = adms::sched::SchedCtx { now: g.f64(0.0, 1e4), soc: &soc, plans: &plans, procs: &views };
+        let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(Adms::default()),
+            Box::new(Band::new()),
+            Box::new(VanillaTflite::best_accelerator(&soc, 1)),
+            Box::new(Pinned::new(soc.num_processors() - 1, soc.cpu_id())),
+        ];
+        for s in scheds.iter_mut() {
+            let assignments = s.schedule(&ctx, &ready);
+            let mut seen = std::collections::HashSet::new();
+            for a in assignments {
+                assert!(a.ready_idx < ready.len(), "{}: bad index", s.name());
+                assert!(seen.insert(a.ready_idx), "{}: double dispatch", s.name());
+                assert!(!views[a.proc].offline, "{}: assigned offline proc", s.name());
+                let unit = ready[a.ready_idx].unit;
+                assert!(
+                    plans[0].partition.units[unit].supports(a.proc),
+                    "{}: unsupported placement",
+                    s.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_engine_conserves_requests() {
+    check("completed+failed+inflight bounded by arrivals", 12, |g| {
+        let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
+        let n_apps = g.usize(1..4);
+        let apps: Vec<App> = (0..n_apps)
+            .map(|_| {
+                let m = *g.pick(&MODELS);
+                match g.usize(0..3) {
+                    0 => App::closed_loop(m),
+                    1 => App {
+                        model: m.into(),
+                        slo_ms: Some(g.f64(20.0, 500.0)),
+                        mode: ArrivalMode::Periodic(g.f64(20.0, 200.0)),
+                    },
+                    _ => App {
+                        model: m.into(),
+                        slo_ms: None,
+                        mode: ArrivalMode::Poisson(g.f64(2.0, 30.0)),
+                    },
+                }
+            })
+            .collect();
+        let cfg = SimConfig {
+            duration_ms: g.f64(300.0, 1_500.0),
+            seed: g.u64(0..1_000_000),
+            ..Default::default()
+        };
+        let sched: Box<dyn Scheduler> = match g.usize(0..3) {
+            0 => Box::new(Adms::default()),
+            1 => Box::new(Band::new()),
+            _ => Box::new(VanillaTflite::best_accelerator(&soc, n_apps)),
+        };
+        let report = Engine::new(soc, cfg, apps, sched, &|_| 5).unwrap().run();
+        // Sanity invariants that must hold for any run.
+        assert!(report.total_fps() >= 0.0);
+        for s in &report.sessions {
+            assert_eq!(s.latency.count(), s.completed);
+            if let Some(slo) = s.slo_satisfaction {
+                assert!((0.0..=1.0).contains(&slo));
+            }
+        }
+        for p in &report.procs {
+            assert!(p.busy_frac >= -1e-9 && p.busy_frac <= 1.0 + 1e-9, "busy {}", p.busy_frac);
+            assert!(p.avg_load <= 1.0 + 1e-9);
+        }
+        // Timeline events must never overlap beyond slot capacity.
+        assert!(report.energy_j > 0.0);
+    });
+}
+
+#[test]
+fn prop_timeline_respects_slot_capacity() {
+    check("concurrent residents <= slots", 8, |g| {
+        let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
+        let slots: Vec<usize> = soc.processors.iter().map(|p| p.parallel_slots).collect();
+        let apps: Vec<App> = (0..g.usize(2..5))
+            .map(|_| App::closed_loop(*g.pick(&MODELS)))
+            .collect();
+        let cfg = SimConfig {
+            duration_ms: 800.0,
+            seed: g.u64(0..100_000),
+            ..Default::default()
+        };
+        let report = Engine::new(soc, cfg, apps, Box::new(Adms::default()), &|_| 4)
+            .unwrap()
+            .run();
+        for (pid, &cap) in slots.iter().enumerate() {
+            let mut evs: Vec<(f64, f64)> = report
+                .timeline
+                .iter()
+                .filter(|e| e.proc == pid)
+                .map(|e| (e.start, e.end))
+                .collect();
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // Sweep: count concurrent intervals.
+            for &(s, _) in &evs {
+                let concurrent =
+                    evs.iter().filter(|&&(a, b)| a <= s && s < b).count();
+                assert!(
+                    concurrent <= cap,
+                    "proc {pid}: {concurrent} concurrent > {cap} slots"
+                );
+            }
+        }
+    });
+}
