@@ -5,7 +5,8 @@
 //! all three layers (Pallas kernels → JAX model → Rust runtime) compose
 //! with Python off the request path.
 //!
-//!     make artifacts && cargo run --release --example frs_serving
+//!     make artifacts && cargo run --release --features pjrt --example frs_serving
+#![allow(deprecated)] // serve_probe: kept as the AOT numerics check
 
 use adms::coordinator::{serve_probe, ServeConfig};
 use adms::runtime::{default_artifact_dir, Runtime};

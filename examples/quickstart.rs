@@ -1,13 +1,15 @@
-//! Quickstart: partition a model, inspect the window-size sweep, and run
-//! a 10-second multi-DNN simulation under all three schedulers.
+//! Quickstart: partition a model, inspect the window-size sweep, then
+//! serve a multi-DNN workload through the unified `exec::Server` API —
+//! first evaluated on the calibrated SoC simulator under all three
+//! schedulers, then wall-clock on the thread-pool backend.
 //!
 //!     cargo run --release --example quickstart
 
 use adms::analyzer;
-use adms::experiments::common::{run_framework, Framework};
+use adms::exec::{ArrivalMode, Server};
 use adms::metrics::{comparison_table, fps_table};
-use adms::sim::{App, SimConfig};
 use adms::soc::dimensity9000;
+use adms::util::table::fnum;
 use adms::zoo;
 
 fn main() -> anyhow::Result<()> {
@@ -28,20 +30,43 @@ fn main() -> anyhow::Result<()> {
     let (best, _) = analyzer::tune_window_size(&model, &soc, 12);
     println!("  tuned window size: {best}");
 
-    // 2. Serve three concurrent models for 10 simulated seconds.
-    let apps = vec![
-        App::closed_loop("mobilenet_v2"),
-        App::closed_loop("east"),
-        App::with_slo("arcface_mobile", 30.0),
-    ];
-    let cfg = SimConfig { duration_ms: 10_000.0, ..Default::default() };
+    // 2. Evaluate three concurrent models for 10 simulated seconds under
+    //    each scheduler. One Server builder per arm; the window size
+    //    defaults to the paper's per-arm granularity (tuned for ADMS,
+    //    ws = 1 for the baselines).
+    let workload = |server: Server| {
+        server
+            .session("mobilenet_v2", ArrivalMode::ClosedLoop, None)
+            .session("east", ArrivalMode::ClosedLoop, None)
+            .session("arcface_mobile", ArrivalMode::ClosedLoop, Some(30.0))
+            .duration_ms(10_000.0)
+    };
     println!("\n== 10 s simulation: MobileNetV2 + East + ArcFace ==");
-    let reports: Vec<_> = Framework::ALL
+    let reports: Vec<_> = ["vanilla", "band", "adms"]
         .iter()
-        .map(|&fw| run_framework(&soc, fw, apps.clone(), cfg.clone()))
-        .collect();
+        .map(|name| workload(Server::new(soc.clone()).scheduler_name(name)).run_sim())
+        .collect::<Result<_, _>>()?;
     let refs: Vec<&_> = reports.iter().collect();
     println!("{}", fps_table("Per-model FPS", &refs).render());
     println!("{}", comparison_table("Summary", &refs).render());
+
+    // 3. The same workload, same scheduler, served wall-clock: 16
+    //    requests per session on the worker-pool backend (synthetic
+    //    payloads paced by the cost model; real PJRT stages when
+    //    artifacts are attached).
+    println!("== wall-clock serving (thread pool, ADMS) ==");
+    let r = workload(Server::new(soc.clone()).scheduler_name("adms"))
+        .requests(16)
+        .pace(0.25)
+        .run_threadpool()?;
+    for s in &r.sessions {
+        println!(
+            "  {:16} {:3} completed  p50 {:>8} ms  p95 {:>8} ms",
+            s.model,
+            s.completed,
+            fnum(s.latency.p50(), 2),
+            fnum(s.latency.p95(), 2)
+        );
+    }
     Ok(())
 }

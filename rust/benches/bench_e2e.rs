@@ -1,5 +1,6 @@
 //! End-to-end wall-clock serving throughput through the coordinator +
 //! PJRT (the `frs_serving` example's hot path), across worker counts.
+#![allow(deprecated)] // serve_probe: kept as the PJRT numerics benchmark
 
 use adms::coordinator::{serve_probe, ServeConfig};
 use adms::runtime::{artifacts_available, default_artifact_dir, Runtime};

@@ -1,16 +1,17 @@
-//! Wall-clock serving coordinator: the Layer-3 request path.
+//! Wall-clock serving coordinator: the legacy Layer-3 request path.
 //!
-//! Where [`crate::sim`] reproduces the paper's *evaluation* against the
-//! calibrated SoC model, this module is the real serving runtime: it
-//! loads the AOT-compiled HLO stages ([`crate::runtime`]), fans requests
-//! out to a pool of worker threads (the "processors"), executes each
-//! request's stage pipeline through PJRT, and reports latency and
-//! throughput. Python never runs here.
+//! This module predates the unified execution core: it fans a fixed batch
+//! of requests over a round-robin worker pool with no scheduler, no
+//! [`ModelPlan`](crate::sched::ModelPlan)s, and no SLOs. The
+//! scheduler-driven replacement is [`crate::exec::Server`] with the
+//! thread-pool backend (`adms serve`); what remains here is the numerics
+//! probe path — replaying the AOT manifest probe through the staged
+//! pipeline and verifying every response against the fused-model logits —
+//! plus the generic pipeline executor it is built on.
 
-use crate::runtime::{ArtifactSet, Stage};
+use crate::runtime::{ArtifactSet, StageExec};
 use crate::util::stats::Summary;
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -32,18 +33,29 @@ impl Default for ServeConfig {
     }
 }
 
-/// Serving results.
+/// Serving results. Every request lands in exactly one of `completed`,
+/// `errors`, or `verify_failures` — [`ServeReport::accounting_consistent`]
+/// checks the invariant.
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Requests submitted.
+    pub requests: u64,
     pub completed: u64,
     pub errors: u64,
     pub verify_failures: u64,
-    /// End-to-end request latency (ms).
+    /// End-to-end request latency (ms), completed requests only.
     pub latency: Summary,
     /// Requests per second over the serving window.
     pub throughput_rps: f64,
     pub wall_ms: f64,
     pub workers: usize,
+}
+
+impl ServeReport {
+    /// Per-request accounting must partition the request set.
+    pub fn accounting_consistent(&self) -> bool {
+        self.completed + self.errors + self.verify_failures == self.requests
+    }
 }
 
 /// One in-flight request: an input tensor and its (optional) expected
@@ -55,10 +67,49 @@ pub struct Request {
     pub expected: Option<Vec<f32>>,
 }
 
+/// How one request ended. Exactly one outcome per request, regardless of
+/// how many stages it traversed before failing.
+enum Outcome {
+    Completed { latency_ms: f64 },
+    StageError,
+    VerifyMismatch,
+}
+
+/// Execute one request through the stage pipeline and classify it.
+fn process_request<S: StageExec + ?Sized>(stages: &[Arc<S>], req: &Request) -> Outcome {
+    let start = Instant::now();
+    let mut buf = req.input.clone();
+    for stage in stages {
+        match stage.execute_f32(&buf) {
+            Ok(out) => buf = out,
+            Err(e) => {
+                log::warn!("request {} stage '{}': {e:#}", req.id, stage.stage_name());
+                return Outcome::StageError;
+            }
+        }
+    }
+    if let Some(exp) = &req.expected {
+        let close = exp.len() == buf.len()
+            && exp
+                .iter()
+                .zip(&buf)
+                .all(|(a, b)| (a - b).abs() <= 1e-4 + 1e-4 * a.abs().max(b.abs()));
+        if !close {
+            return Outcome::VerifyMismatch;
+        }
+    }
+    Outcome::Completed { latency_ms: start.elapsed().as_secs_f64() * 1e3 }
+}
+
 /// Serve `cfg.requests` copies of the manifest probe input through the
 /// staged pipeline (stem → body → head) on a pool of worker threads.
 /// Every response is checked against the fused-model logits exported at
 /// AOT time, proving the three layers compose with real numerics.
+#[deprecated(
+    since = "0.2.0",
+    note = "use exec::Server with run_threadpool() for scheduler-driven serving; \
+            serve_probe remains only as the AOT numerics probe (see CHANGES.md)"
+)]
 pub fn serve_probe(artifacts: &ArtifactSet, cfg: &ServeConfig) -> Result<ServeReport> {
     let probe = artifacts
         .probe
@@ -77,17 +128,20 @@ pub fn serve_probe(artifacts: &ArtifactSet, cfg: &ServeConfig) -> Result<ServeRe
 }
 
 /// Generic pipeline serving: execute each request through `stages` in
-/// order, spread across `workers` threads.
-pub fn serve(stages: &[Arc<Stage>], requests: Vec<Request>, workers: usize) -> Result<ServeReport> {
+/// order, spread across `workers` threads. Accounting is per-request:
+/// a request that fails mid-pipeline counts exactly one error, and
+/// `completed + errors + verify_failures == requests` always holds.
+pub fn serve<S: StageExec + ?Sized>(
+    stages: &[Arc<S>],
+    requests: Vec<Request>,
+    workers: usize,
+) -> Result<ServeReport> {
     let workers = workers.max(1);
     let (tx, rx) = mpsc::channel::<Request>();
     let rx = Arc::new(Mutex::new(rx));
-    let completed = Arc::new(AtomicU64::new(0));
-    let errors = Arc::new(AtomicU64::new(0));
-    let verify_failures = Arc::new(AtomicU64::new(0));
-    let latencies = Arc::new(Mutex::new(Summary::new()));
+    let tally = Arc::new(Mutex::new((0u64, 0u64, 0u64, Summary::new())));
 
-    let n = requests.len();
+    let n = requests.len() as u64;
     for r in requests {
         tx.send(r).expect("queue send");
     }
@@ -97,10 +151,7 @@ pub fn serve(stages: &[Arc<Stage>], requests: Vec<Request>, workers: usize) -> R
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let rx = Arc::clone(&rx);
-            let completed = Arc::clone(&completed);
-            let errors = Arc::clone(&errors);
-            let verify_failures = Arc::clone(&verify_failures);
-            let latencies = Arc::clone(&latencies);
+            let tally = Arc::clone(&tally);
             let stages = stages.to_vec();
             scope.spawn(move || loop {
                 let req = {
@@ -108,51 +159,103 @@ pub fn serve(stages: &[Arc<Stage>], requests: Vec<Request>, workers: usize) -> R
                     guard.recv()
                 };
                 let Ok(req) = req else { break };
-                let start = Instant::now();
-                let mut buf = req.input;
-                let mut ok = true;
-                for stage in &stages {
-                    match stage.execute_f32(&buf) {
-                        Ok(out) => buf = out,
-                        Err(e) => {
-                            log::warn!("request {}: {e}", req.id);
-                            errors.fetch_add(1, Ordering::Relaxed);
-                            ok = false;
-                            break;
-                        }
+                let outcome = process_request(&stages, &req);
+                let mut t = tally.lock().unwrap();
+                match outcome {
+                    Outcome::Completed { latency_ms } => {
+                        t.0 += 1;
+                        t.3.add(latency_ms);
                     }
+                    Outcome::StageError => t.1 += 1,
+                    Outcome::VerifyMismatch => t.2 += 1,
                 }
-                if !ok {
-                    continue;
-                }
-                if let Some(exp) = &req.expected {
-                    let close = exp.len() == buf.len()
-                        && exp
-                            .iter()
-                            .zip(&buf)
-                            .all(|(a, b)| (a - b).abs() <= 1e-4 + 1e-4 * a.abs().max(b.abs()));
-                    if !close {
-                        verify_failures.fetch_add(1, Ordering::Relaxed);
-                        continue;
-                    }
-                }
-                let ms = start.elapsed().as_secs_f64() * 1e3;
-                latencies.lock().unwrap().add(ms);
-                completed.fetch_add(1, Ordering::Relaxed);
             });
         }
     });
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-    Ok(ServeReport {
-        completed: completed.load(Ordering::Relaxed),
-        errors: errors.load(Ordering::Relaxed),
-        verify_failures: verify_failures.load(Ordering::Relaxed),
-        latency: Arc::try_unwrap(latencies)
-            .map(|m| m.into_inner().unwrap())
-            .unwrap_or_else(|arc| arc.lock().unwrap().clone()),
+    let (completed, errors, verify_failures, latency) = {
+        let t = tally.lock().unwrap();
+        (t.0, t.1, t.2, t.3.clone())
+    };
+    let report = ServeReport {
+        requests: n,
+        completed,
+        errors,
+        verify_failures,
+        latency,
         throughput_rps: n as f64 / (wall_ms / 1e3),
         wall_ms,
         workers,
-    })
+    };
+    debug_assert!(report.accounting_consistent());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock stage: doubles the input, errors when `input[0] < 0`.
+    struct MockStage {
+        name: String,
+    }
+    impl StageExec for MockStage {
+        fn stage_name(&self) -> &str {
+            &self.name
+        }
+        fn execute_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+            anyhow::ensure!(
+                input.first().copied().unwrap_or(0.0) >= 0.0,
+                "poisoned input"
+            );
+            Ok(input.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    fn mock_pipeline(n: usize) -> Vec<Arc<dyn StageExec>> {
+        (0..n)
+            .map(|i| {
+                Arc::new(MockStage { name: format!("stage{i}") }) as Arc<dyn StageExec>
+            })
+            .collect()
+    }
+
+    /// A request failing mid-pipeline counts exactly one error (not one
+    /// per traversed stage), verify mismatches count once, and the three
+    /// buckets partition the request set.
+    #[test]
+    fn per_request_accounting_partitions_requests() {
+        let stages = mock_pipeline(3); // 3 stages → ×8
+        let mut requests = Vec::new();
+        for id in 0..12u64 {
+            let (input, expected) = match id % 3 {
+                0 => (vec![1.0f32], Some(vec![8.0f32])), // completes
+                1 => (vec![-1.0f32], Some(vec![8.0f32])), // stage error
+                _ => (vec![1.0f32], Some(vec![999.0f32])), // verify mismatch
+            };
+            requests.push(Request { id, input, expected });
+        }
+        let report = serve(&stages, requests, 4).unwrap();
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.completed, 4);
+        assert_eq!(report.errors, 4, "one error per failing request, not per stage");
+        assert_eq!(report.verify_failures, 4);
+        assert!(report.accounting_consistent());
+        // Latency recorded only for completed requests.
+        assert_eq!(report.latency.count(), report.completed);
+    }
+
+    #[test]
+    fn unverified_requests_complete() {
+        let stages = mock_pipeline(2);
+        let requests: Vec<Request> = (0..5)
+            .map(|id| Request { id, input: vec![2.0], expected: None })
+            .collect();
+        let report = serve(&stages, requests, 2).unwrap();
+        assert_eq!(report.completed, 5);
+        assert_eq!(report.errors + report.verify_failures, 0);
+        assert!(report.accounting_consistent());
+        assert!(report.throughput_rps > 0.0);
+    }
 }

@@ -1,0 +1,479 @@
+//! The shared scheduling loop: request lifecycle + scheduler invocation,
+//! independent of the execution substrate.
+//!
+//! This is the dispatch loop that used to live inside the discrete-event
+//! engine, now driving any [`ExecutionBackend`]: arrivals become per-unit
+//! tasks, ready tasks are exposed to the [`Scheduler`] (respecting
+//! session serialization), assignments are validated and priced, and
+//! completions unlock dependent units until a request retires into the
+//! latency/SLO statistics.
+
+use super::{
+    App, ArrivalMode, AssignRecord, DispatchCmd, ExecEvent, ExecutionBackend, RunToken,
+    SimConfig,
+};
+use crate::monitor::{HardwareMonitor, ProcView};
+use crate::sched::{ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
+use crate::sim::report::{SessionStats, SimReport};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Summary;
+use crate::TimeMs;
+use std::collections::HashMap;
+
+/// Per-request bookkeeping.
+#[derive(Debug)]
+struct ReqState {
+    session: SessId,
+    arrival: TimeMs,
+    slo_ms: Option<f64>,
+    deps_remaining: Vec<usize>,
+    unit_proc: Vec<Option<usize>>,
+    units_left: usize,
+    failed: bool,
+}
+
+/// A dispatched unit the driver is waiting on.
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    req: ReqId,
+    session: SessId,
+    unit: usize,
+    proc: usize,
+}
+
+/// Scheduler-driven execution of a multi-session workload on one backend.
+pub struct Driver {
+    cfg: SimConfig,
+    apps: Vec<App>,
+    plans: Vec<ModelPlan>,
+    scheduler: Box<dyn Scheduler>,
+    backend: Box<dyn ExecutionBackend>,
+}
+
+impl Driver {
+    pub fn new(
+        cfg: SimConfig,
+        apps: Vec<App>,
+        plans: Vec<ModelPlan>,
+        scheduler: Box<dyn Scheduler>,
+        backend: Box<dyn ExecutionBackend>,
+    ) -> Self {
+        assert_eq!(apps.len(), plans.len(), "one plan per session");
+        Driver { cfg, apps, plans, scheduler, backend }
+    }
+
+    pub fn run(mut self) -> SimReport {
+        let napps = self.apps.len();
+        let mut rng = Pcg32::seeded(self.cfg.seed);
+        let mut monitor = HardwareMonitor::new(self.cfg.monitor_cache_ms);
+        let soc = self.backend.soc().clone();
+
+        // Session stats.
+        let mut completed = vec![0u64; napps];
+        let mut failed = vec![0u64; napps];
+        let mut lat: Vec<Summary> = (0..napps).map(|_| Summary::new()).collect();
+        let mut slo_ok = vec![0u64; napps];
+        let mut slo_n = vec![0u64; napps];
+        let mut issued = vec![0u64; napps];
+
+        // Request state.
+        let mut reqs: HashMap<ReqId, ReqState> = Default::default();
+        let mut next_req: ReqId = 0;
+        let mut ready: Vec<PendingTask> = Vec::new();
+        let mut run_seq: RunToken = 0;
+        let mut inflight: HashMap<RunToken, Inflight> = Default::default();
+        let mut assignments_trace: Vec<AssignRecord> = Vec::new();
+
+        let quota = self.cfg.max_requests.unwrap_or(u64::MAX);
+
+        // Prime arrivals (the backend arms its own housekeeping tick).
+        for s in 0..napps {
+            self.backend.arm_timer(0.0, s as u64);
+        }
+
+        let debug = std::env::var_os("ADMS_SIM_DEBUG").is_some();
+        let mut n_events: u64 = 0;
+        let mut last_now: TimeMs = 0.0;
+        loop {
+            let ev = self.backend.next_event();
+            let now = ev.at();
+            if now > self.cfg.duration_ms {
+                break;
+            }
+            last_now = now;
+            n_events += 1;
+            if debug && n_events % 2_000 == 0 {
+                eprintln!(
+                    "t={now:.0} events={n_events} ready={} reqs={} inflight={}",
+                    ready.len(),
+                    reqs.len(),
+                    inflight.len()
+                );
+            }
+            // Whether to give the scheduler a chance after this event.
+            let mut dispatch_after = true;
+            match ev {
+                ExecEvent::Drained { .. } => break,
+                ExecEvent::Timer { key, .. } => {
+                    let s = key as usize;
+                    if issued[s] >= quota {
+                        dispatch_after = false;
+                    } else {
+                        issued[s] += 1;
+                        let id = next_req;
+                        next_req += 1;
+                        let plan = &self.plans[s];
+                        let nu = plan.num_units();
+                        let st = ReqState {
+                            session: s,
+                            arrival: now,
+                            slo_ms: self.apps[s].slo_ms,
+                            deps_remaining: plan.deps.iter().map(|d| d.len()).collect(),
+                            unit_proc: vec![None; nu],
+                            units_left: nu,
+                            failed: false,
+                        };
+                        // Enqueue units with no dependencies.
+                        for u in 0..nu {
+                            if st.deps_remaining[u] == 0 {
+                                ready.push(PendingTask {
+                                    req: id,
+                                    session: s,
+                                    unit: u,
+                                    ready_at: now,
+                                    req_arrival: now,
+                                    slo_ms: st.slo_ms,
+                                    remaining_ms: plan
+                                        .remaining_ms((0..nu).filter(|&x| x != u)),
+                                    dep_procs: vec![],
+                                });
+                            }
+                        }
+                        reqs.insert(id, st);
+                        // Open-loop arrivals re-arm immediately.
+                        if issued[s] < quota {
+                            match self.apps[s].mode {
+                                ArrivalMode::Periodic(p) => {
+                                    self.backend.arm_timer(now + p, key)
+                                }
+                                ArrivalMode::Poisson(rate) => {
+                                    let gap = rng.exp(rate / 1e3);
+                                    self.backend.arm_timer(now + gap, key);
+                                }
+                                ArrivalMode::ClosedLoop => {}
+                            }
+                        }
+                    }
+                }
+                ExecEvent::Completed { token, error, .. } => {
+                    let Some(done) = inflight.remove(&token) else {
+                        // Stale completion (should not happen: tokens are
+                        // unique) — nothing to schedule against.
+                        continue;
+                    };
+                    if error {
+                        // Payload execution failed: abort the request
+                        // (mirroring the failure sweep) so it is reported
+                        // as failed, never as completed-within-SLO.
+                        if let Some(st) = reqs.get_mut(&done.req) {
+                            if !st.failed {
+                                st.failed = true;
+                                failed[st.session] += 1;
+                                if st.slo_ms.is_some() {
+                                    slo_n[st.session] += 1;
+                                }
+                                ready.retain(|t| t.req != done.req);
+                                // Not-yet-dispatched units will never run;
+                                // only units still resident on processors
+                                // (plus this one, decremented below) keep
+                                // the request alive.
+                                let running = self.backend.running_units(done.req);
+                                st.units_left = st.units_left.min(running + 1);
+                                if matches!(
+                                    self.apps[st.session].mode,
+                                    ArrivalMode::ClosedLoop
+                                ) && issued[st.session] < quota
+                                {
+                                    let key = st.session as u64;
+                                    self.backend.arm_timer(now, key);
+                                }
+                            }
+                        }
+                    }
+                    let finished = {
+                        let Some(st) = reqs.get_mut(&done.req) else { continue };
+                        if st.failed {
+                            // Aborted while running; drop silently.
+                            st.units_left -= 1;
+                            st.units_left == 0
+                        } else {
+                            st.unit_proc[done.unit] = Some(done.proc);
+                            st.units_left -= 1;
+                            let plan = &self.plans[done.session];
+                            // Unlock consumers.
+                            for &c in &plan.consumers[done.unit] {
+                                st.deps_remaining[c] -= 1;
+                                if st.deps_remaining[c] == 0 {
+                                    let unfinished: Vec<usize> = (0..plan.num_units())
+                                        .filter(|&u| u != c && st.unit_proc[u].is_none())
+                                        .collect();
+                                    ready.push(PendingTask {
+                                        req: done.req,
+                                        session: done.session,
+                                        unit: c,
+                                        ready_at: now,
+                                        req_arrival: st.arrival,
+                                        slo_ms: st.slo_ms,
+                                        remaining_ms: plan
+                                            .remaining_ms(unfinished.into_iter()),
+                                        dep_procs: plan.deps[c]
+                                            .iter()
+                                            .map(|&d| {
+                                                (d, st.unit_proc[d].unwrap_or(done.proc))
+                                            })
+                                            .collect(),
+                                    });
+                                }
+                            }
+                            st.units_left == 0
+                        }
+                    };
+                    if finished {
+                        let st = reqs.remove(&done.req).unwrap();
+                        let s = st.session;
+                        if !st.failed {
+                            let latency = now - st.arrival;
+                            completed[s] += 1;
+                            lat[s].add(latency);
+                            if let Some(slo) = st.slo_ms {
+                                slo_n[s] += 1;
+                                if latency <= slo {
+                                    slo_ok[s] += 1;
+                                }
+                            }
+                            // Failed requests already re-armed their
+                            // session at abort time — re-arming here too
+                            // would double the closed loop and snowball
+                            // under sustained overload.
+                            if matches!(self.apps[s].mode, ArrivalMode::ClosedLoop)
+                                && issued[s] < quota
+                            {
+                                self.backend.arm_timer(now, s as u64);
+                            }
+                        }
+                    }
+                }
+                ExecEvent::Tick { .. } => {
+                    // Failure sweep: abort requests far past their budget.
+                    let mut aborted: Vec<ReqId> = Vec::new();
+                    for (&id, st) in reqs.iter_mut() {
+                        if st.failed {
+                            continue;
+                        }
+                        let budget = st
+                            .slo_ms
+                            .unwrap_or(self.plans[st.session].est_total_ms * 3.0)
+                            * self.cfg.fail_mult;
+                        if now - st.arrival > budget {
+                            st.failed = true;
+                            failed[st.session] += 1;
+                            if st.slo_ms.is_some() {
+                                slo_n[st.session] += 1;
+                            }
+                            aborted.push(id);
+                        }
+                    }
+                    if !aborted.is_empty() {
+                        // HashMap iteration order is not deterministic;
+                        // sort so re-arm order (and thus the event
+                        // sequence) is reproducible under a fixed seed.
+                        aborted.sort_unstable();
+                        ready.retain(|t| !aborted.contains(&t.req));
+                        // Closed-loop sessions re-arm after an abort.
+                        for id in aborted {
+                            let st = &reqs[&id];
+                            let s = st.session;
+                            let running = self.backend.running_units(id);
+                            let pending_units = st.units_left > running;
+                            if matches!(self.apps[s].mode, ArrivalMode::ClosedLoop)
+                                && issued[s] < quota
+                            {
+                                self.backend.arm_timer(now, s as u64);
+                            }
+                            if pending_units {
+                                // Unscheduled units will never run; account
+                                // them as done so the request can retire.
+                                if let Some(stm) = reqs.get_mut(&id) {
+                                    stm.units_left = running;
+                                    if stm.units_left == 0 {
+                                        reqs.remove(&id);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Dispatch loop: keep asking the scheduler while it makes
+            // progress and capacity remains.
+            loop {
+                if !dispatch_after || ready.is_empty() {
+                    break;
+                }
+                // Monitor snapshot (respecting the cache interval).
+                let views: Vec<ProcView> =
+                    monitor.sample(now, || self.backend.proc_views()).to_vec();
+                // Serialized policies see only each session's earliest
+                // ready unit; other policies see the queue directly (no
+                // copy — this loop is the hot path).
+                let exposed: Option<Vec<usize>> = if self.scheduler.serializes_sessions() {
+                    let mut first: std::collections::BTreeMap<SessId, (usize, usize)> =
+                        Default::default();
+                    for (i, t) in ready.iter().enumerate() {
+                        let e = first.entry(t.session).or_insert((i, t.unit));
+                        if t.unit < e.1 {
+                            *e = (i, t.unit);
+                        }
+                    }
+                    Some(first.values().map(|&(i, _)| i).collect())
+                } else {
+                    None
+                };
+                let ctx = SchedCtx { now, soc: &soc, plans: &self.plans, procs: &views };
+                let assignments = match &exposed {
+                    Some(idx) => {
+                        let exposed_tasks: Vec<PendingTask> =
+                            idx.iter().map(|&i| ready[i].clone()).collect();
+                        self.scheduler.schedule(&ctx, &exposed_tasks)
+                    }
+                    None => self.scheduler.schedule(&ctx, &ready),
+                };
+                if assignments.is_empty() {
+                    break;
+                }
+                // Apply (validate defensively), collecting indices to drop.
+                let mut dispatched: Vec<usize> = Vec::new();
+                for a in assignments {
+                    let ridx = match &exposed {
+                        Some(idx) => match idx.get(a.ready_idx) {
+                            Some(&r) => r,
+                            None => continue,
+                        },
+                        None => {
+                            if a.ready_idx >= ready.len() {
+                                continue;
+                            }
+                            a.ready_idx
+                        }
+                    };
+                    if dispatched.contains(&ridx) {
+                        continue;
+                    }
+                    let t = &ready[ridx];
+                    let plan = &self.plans[t.session];
+                    if !plan.partition.units[t.unit].supports(a.proc) {
+                        continue;
+                    }
+                    let Some(exec_full) = plan.exec_ms[t.unit][a.proc] else {
+                        continue;
+                    };
+                    let xfer: f64 = t
+                        .dep_procs
+                        .iter()
+                        .map(|&(du, dp)| {
+                            let bytes = plan.xfer_bytes[t.unit]
+                                .iter()
+                                .find(|(d, _)| *d == du)
+                                .map(|(_, b)| *b)
+                                .unwrap_or(0);
+                            self.scheduler.transfer_cost_ms(&soc, dp, a.proc, bytes)
+                        })
+                        .sum();
+                    let mgmt = self.scheduler.decision_overhead_ms(plan);
+                    let token = run_seq + 1;
+                    let accepted = self.backend.try_dispatch(DispatchCmd {
+                        token,
+                        req: t.req,
+                        session: t.session,
+                        unit: t.unit,
+                        proc: a.proc,
+                        exec_full_ms: exec_full,
+                        xfer_ms: xfer,
+                        mgmt_ms: mgmt,
+                    });
+                    if !accepted {
+                        continue;
+                    }
+                    run_seq = token;
+                    inflight.insert(
+                        token,
+                        Inflight { req: t.req, session: t.session, unit: t.unit, proc: a.proc },
+                    );
+                    assignments_trace.push(AssignRecord {
+                        req: t.req,
+                        session: t.session,
+                        unit: t.unit,
+                        proc: a.proc,
+                    });
+                    dispatched.push(ridx);
+                }
+                if dispatched.is_empty() {
+                    break;
+                }
+                dispatched.sort_unstable_by(|a, b| b.cmp(a));
+                for i in dispatched {
+                    ready.swap_remove(i);
+                }
+            }
+
+            // Finite workloads end once every session's quota has retired.
+            if self.cfg.max_requests.is_some()
+                && reqs.is_empty()
+                && ready.is_empty()
+                && issued.iter().all(|&n| n >= quota)
+            {
+                break;
+            }
+        }
+
+        // Assemble the report. Quota-bounded runs usually end well before
+        // the nominal horizon: normalizing throughput/utilization by the
+        // unused horizon would deflate every rate metric, so use the
+        // actual elapsed time instead. Unbounded runs keep the horizon
+        // (the historical simulator semantics).
+        let duration = if self.cfg.max_requests.is_some() {
+            last_now.min(self.cfg.duration_ms).max(1e-9)
+        } else {
+            self.cfg.duration_ms
+        };
+        let sessions: Vec<SessionStats> = (0..napps)
+            .map(|s| SessionStats {
+                model: self.apps[s].model.clone(),
+                completed: completed[s],
+                failed: failed[s],
+                latency: lat[s].clone(),
+                fps: completed[s] as f64 / (duration / 1e3),
+                slo_satisfaction: if slo_n[s] > 0 {
+                    Some(slo_ok[s] as f64 / slo_n[s] as f64)
+                } else {
+                    None
+                },
+            })
+            .collect();
+        let be = self.backend.finish(duration);
+        SimReport {
+            scheduler: self.scheduler.name().to_string(),
+            backend: be.backend.to_string(),
+            duration_ms: duration,
+            sessions,
+            procs: be.procs,
+            power: be.power,
+            energy_j: be.energy_j,
+            timeline: be.timeline,
+            monitor_refreshes: monitor.refresh_count(),
+            exec_errors: be.exec_errors,
+            assignments: assignments_trace,
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Backend-agnostic execution core.
+//!
+//! The paper's contribution is a *scheduling* loop — processor-state-aware
+//! placement of unit subgraphs from concurrent DNN sessions — and that loop
+//! must not care whether "execution" means advancing a calibrated
+//! discrete-event SoC model or running real stage payloads on a wall-clock
+//! worker pool. This module factors the loop out of the simulator so both
+//! substrates share it:
+//!
+//! * [`ExecutionBackend`] — the substrate contract: a clock, per-processor
+//!   views for the [`HardwareMonitor`](crate::monitor::HardwareMonitor),
+//!   task dispatch, and completion/timer/tick event delivery;
+//! * [`Driver`](driver::Driver) — the shared request lifecycle: arrivals,
+//!   dependency tracking, ready-queue exposure, scheduler invocation,
+//!   SLO/latency accounting, failure sweeps;
+//! * [`SimBackend`](sim_backend::SimBackend) — the calibrated SoC model
+//!   (DVFS, thermal RC dynamics, contention, power) on a virtual clock;
+//! * [`ThreadPoolBackend`](threadpool::ThreadPoolBackend) — wall-clock
+//!   serving on a worker pool standing in for the heterogeneous
+//!   processors, executing PJRT stage payloads where available and
+//!   cost-model-paced synthetic payloads otherwise;
+//! * [`Server`](server::Server) — the builder API over all of it.
+//!
+//! Every scheduler ([`VanillaTflite`](crate::sched::VanillaTflite),
+//! [`Band`](crate::sched::Band), [`Adms`](crate::sched::Adms), …) runs
+//! unmodified on either backend; a scheduling improvement lands in the
+//! evaluation harness and the serving path at once.
+
+pub mod driver;
+pub mod server;
+pub mod sim_backend;
+pub mod threadpool;
+
+pub use driver::Driver;
+pub use server::{scheduler_by_name, Server, SCHEDULER_NAMES};
+pub use sim_backend::SimBackend;
+pub use threadpool::ThreadPoolBackend;
+
+use crate::monitor::ProcView;
+use crate::sched::{ReqId, SessId};
+use crate::sim::report::{ProcStats, TimelineEvent};
+use crate::soc::{ProcId, ProcessorSpec, SocSpec};
+use crate::util::stats::TimeSeries;
+use crate::TimeMs;
+
+/// Execution slots of a processor (helper shared by schedulers and
+/// backends).
+pub fn proc_slots(spec: &ProcessorSpec) -> usize {
+    spec.parallel_slots.max(1)
+}
+
+/// How a session issues requests.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalMode {
+    /// Re-request as soon as the previous inference finishes (continuous
+    /// video processing — the paper's FPS workloads).
+    ClosedLoop,
+    /// Fixed inter-arrival period, ms.
+    Periodic(f64),
+    /// Poisson arrivals with the given rate (requests/second).
+    Poisson(f64),
+}
+
+/// One concurrently-running application.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub model: String,
+    pub slo_ms: Option<f64>,
+    pub mode: ArrivalMode,
+}
+
+impl App {
+    pub fn closed_loop(model: &str) -> Self {
+        App { model: model.into(), slo_ms: None, mode: ArrivalMode::ClosedLoop }
+    }
+    pub fn with_slo(model: &str, slo_ms: f64) -> Self {
+        App { model: model.into(), slo_ms: Some(slo_ms), mode: ArrivalMode::ClosedLoop }
+    }
+}
+
+/// Execution configuration, shared by both backends. (Historically the
+/// simulator's config; the thread pool interprets `duration_ms` and
+/// `tick_ms` as wall-clock milliseconds.)
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub duration_ms: TimeMs,
+    /// Governor/thermal/power tick, ms (also the failure-sweep cadence).
+    pub tick_ms: f64,
+    /// Monitor cache interval (staleness bound of the scheduler's view).
+    pub monitor_cache_ms: f64,
+    pub seed: u64,
+    /// A request fails (is aborted) once its age exceeds
+    /// `fail_mult × SLO` (or `fail_mult × 3 × est` without an SLO).
+    pub fail_mult: f64,
+    /// Ambient temperature override (35 °C for the thermal stress test).
+    pub ambient_c: Option<f64>,
+    /// Cap on recorded timeline events (Gantt data for Fig 10).
+    pub timeline_cap: usize,
+    /// Per-session request quota: each session issues at most this many
+    /// requests and the run ends once all of them retire (`None` =
+    /// unbounded, run to `duration_ms`). This is how finite serving
+    /// workloads ("serve 64 requests") are expressed.
+    pub max_requests: Option<u64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            duration_ms: 60_000.0,
+            tick_ms: 100.0,
+            monitor_cache_ms: 50.0,
+            seed: 42,
+            fail_mult: 10.0,
+            ambient_c: None,
+            timeline_cap: 20_000,
+            max_requests: None,
+        }
+    }
+}
+
+/// Totally-ordered f64 for event queues (NaN times are a bug).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct OrdF64(pub f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN event time")
+    }
+}
+
+/// Opaque identifier for one dispatched task instance, allocated by the
+/// driver and echoed back in the backend's completion event.
+pub type RunToken = u64;
+
+/// Everything a backend needs to execute one scheduled task. The driver
+/// pre-prices the policy-dependent costs (transfer, management) so the
+/// backend never sees plans or schedulers.
+#[derive(Debug, Clone)]
+pub struct DispatchCmd {
+    pub token: RunToken,
+    pub req: ReqId,
+    pub session: SessId,
+    pub unit: usize,
+    pub proc: ProcId,
+    /// Unit latency on `proc` at max frequency from the cost model. The
+    /// sim scales it by DVFS state and contention; the thread pool paces
+    /// synthetic payloads with it.
+    pub exec_full_ms: TimeMs,
+    /// Inter-processor tensor transfer cost (priced by the scheduler's
+    /// runtime model — NNAPI round-trips vs zero-copy DMA).
+    pub xfer_ms: TimeMs,
+    /// Scheduler decision/management overhead per dispatch.
+    pub mgmt_ms: TimeMs,
+}
+
+/// One event delivered by [`ExecutionBackend::next_event`].
+#[derive(Debug)]
+pub enum ExecEvent {
+    /// A driver-armed timer (request arrival) is due.
+    Timer { at: TimeMs, key: u64 },
+    /// A dispatched task finished. `error` is set when the payload
+    /// execution failed (thread-pool stage error) — the driver aborts the
+    /// request rather than crediting it as completed.
+    Completed { at: TimeMs, token: RunToken, error: bool },
+    /// Housekeeping tick (thermal/governor in the sim; wall-clock cadence
+    /// in the thread pool). The driver runs its failure sweep on it.
+    Tick { at: TimeMs },
+    /// No pending events remain: the workload has drained.
+    Drained { at: TimeMs },
+}
+
+impl ExecEvent {
+    pub fn at(&self) -> TimeMs {
+        match *self {
+            ExecEvent::Timer { at, .. }
+            | ExecEvent::Completed { at, .. }
+            | ExecEvent::Tick { at }
+            | ExecEvent::Drained { at } => at,
+        }
+    }
+}
+
+/// Backend-side results folded into the final
+/// [`SimReport`](crate::sim::SimReport): processor statistics,
+/// power/energy, and the execution timeline.
+#[derive(Debug)]
+pub struct BackendReport {
+    pub backend: &'static str,
+    pub procs: Vec<ProcStats>,
+    pub power: TimeSeries,
+    pub energy_j: f64,
+    pub timeline: Vec<TimelineEvent>,
+    /// Payload execution errors (thread pool: failed stage executions).
+    pub exec_errors: u64,
+}
+
+/// One scheduling decision as applied, in dispatch order — the trace that
+/// must be identical across backends for a deterministic policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AssignRecord {
+    pub req: ReqId,
+    pub session: SessId,
+    pub unit: usize,
+    pub proc: ProcId,
+}
+
+/// An execution substrate the shared [`Driver`] can run a workload on.
+///
+/// The contract mirrors what the discrete-event engine used to do inline:
+/// the backend owns the clock, the processors, and the completion/tick
+/// event stream; the driver owns requests, the ready queue, and the
+/// scheduler. Timers let the driver schedule future arrivals on the
+/// backend's clock without knowing whether time is simulated or real.
+pub trait ExecutionBackend: Send {
+    fn name(&self) -> &'static str;
+
+    fn soc(&self) -> &SocSpec;
+
+    /// Current time on the backend clock, ms.
+    fn now(&self) -> TimeMs;
+
+    /// Arm a timer that will surface as [`ExecEvent::Timer`] at `at`.
+    fn arm_timer(&mut self, at: TimeMs, key: u64);
+
+    /// Fresh per-processor state views (the monitor layer caches these —
+    /// backends should report current truth).
+    fn proc_views(&mut self) -> Vec<ProcView>;
+
+    /// Try to place a task. Returns `false` (rejecting the assignment)
+    /// when the processor is offline or has no free slot; on success the
+    /// completion will arrive as [`ExecEvent::Completed`] with the
+    /// command's token.
+    fn try_dispatch(&mut self, cmd: DispatchCmd) -> bool;
+
+    /// Number of units of `req` currently resident on processors (used by
+    /// the failure sweep to retire aborted requests).
+    fn running_units(&self, req: ReqId) -> usize;
+
+    /// Block (wall clock) or advance (virtual clock) until the next
+    /// event.
+    fn next_event(&mut self) -> ExecEvent;
+
+    /// Tear down and report backend-side statistics over `duration_ms`.
+    fn finish(self: Box<Self>, duration_ms: TimeMs) -> BackendReport;
+}

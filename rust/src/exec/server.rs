@@ -1,0 +1,259 @@
+//! The `Server` builder: one front door for scheduler-driven execution of
+//! multi-model workloads on either backend.
+//!
+//! ```no_run
+//! use adms::exec::{ArrivalMode, Server};
+//! use adms::sched::Adms;
+//! use adms::soc::dimensity9000;
+//!
+//! let report = Server::new(dimensity9000())
+//!     .scheduler(Adms::default())
+//!     .session("retinaface", ArrivalMode::ClosedLoop, None)
+//!     .session("arcface_mobile", ArrivalMode::Periodic(33.0), Some(30.0))
+//!     .duration_ms(10_000.0)
+//!     .run_sim()
+//!     .unwrap();
+//! println!("p95 {:.2} ms", report.sessions[0].latency.p95());
+//! ```
+//!
+//! `run_sim()` evaluates the workload on the calibrated SoC model;
+//! `run_threadpool()` serves it wall-clock on a worker pool. Both return
+//! the same [`SimReport`] shape (per-session latency percentiles, SLO
+//! attainment, processor stats, assignment trace).
+
+use super::{
+    App, ArrivalMode, Driver, ExecutionBackend, SimBackend, SimConfig, ThreadPoolBackend,
+};
+use crate::analyzer::tuner;
+use crate::exec::threadpool::SessionWork;
+use crate::sched::{Adms, Band, ModelPlan, Pinned, Scheduler, VanillaTflite};
+use crate::sim::SimReport;
+use crate::soc::SocSpec;
+use crate::zoo;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Scheduler names accepted by [`scheduler_by_name`] and `--sched`.
+pub const SCHEDULER_NAMES: [&str; 4] = ["vanilla", "band", "adms", "pinned"];
+
+/// Construct a scheduler from its CLI name. `vanilla` (alias `tflite`)
+/// is the TFLite baseline, `band` the unit-subgraph greedy, `adms` the
+/// paper's processor-state-aware policy, `pinned` the best accelerator
+/// with CPU fallback.
+pub fn scheduler_by_name(
+    name: &str,
+    soc: &SocSpec,
+    sessions: usize,
+) -> Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "vanilla" | "tflite" => Box::new(VanillaTflite::default_for(soc, sessions)),
+        "band" => Box::new(Band::new()),
+        "adms" => Box::new(Adms::default()),
+        "pinned" => {
+            let target = soc.best_accelerator().unwrap_or_else(|| soc.cpu_id());
+            Box::new(Pinned::new(target, soc.cpu_id()))
+        }
+        other => bail!(
+            "unknown scheduler '{other}' (expected one of: {})",
+            SCHEDULER_NAMES.join(", ")
+        ),
+    })
+}
+
+enum SchedChoice {
+    Default,
+    Named(String),
+    Custom(Box<dyn Scheduler>),
+}
+
+/// Builder for a scheduler-driven multi-DNN server. See the module docs
+/// for an end-to-end example.
+pub struct Server {
+    soc: SocSpec,
+    sched: SchedChoice,
+    apps: Vec<App>,
+    work: Vec<Option<SessionWork>>,
+    cfg: SimConfig,
+    window_size: Option<usize>,
+    pace: f64,
+    err: Option<String>,
+}
+
+impl Server {
+    pub fn new(soc: SocSpec) -> Self {
+        Server {
+            soc,
+            sched: SchedChoice::Default,
+            apps: Vec::new(),
+            work: Vec::new(),
+            cfg: SimConfig::default(),
+            window_size: None,
+            pace: 1.0,
+            err: None,
+        }
+    }
+
+    /// Use a concrete scheduler instance (default: [`Adms`]).
+    pub fn scheduler(mut self, s: impl Scheduler + 'static) -> Self {
+        self.sched = SchedChoice::Custom(Box::new(s));
+        self
+    }
+
+    /// Select the scheduler by CLI name (`vanilla` | `band` | `adms` |
+    /// `pinned`); an unknown name surfaces as an error at run time.
+    pub fn scheduler_name(mut self, name: &str) -> Self {
+        self.sched = SchedChoice::Named(name.to_string());
+        self
+    }
+
+    /// Add one session: a zoo model with an arrival process and an
+    /// optional SLO. An unknown model surfaces as an error at run time.
+    pub fn session(mut self, model: &str, mode: ArrivalMode, slo_ms: Option<f64>) -> Self {
+        if zoo::by_name(model).is_none() && self.err.is_none() {
+            self.err = Some(format!("unknown model '{model}'"));
+        }
+        self.apps.push(App { model: model.into(), slo_ms, mode });
+        self.work.push(None);
+        self
+    }
+
+    /// Add one session with real stage payloads for the thread-pool
+    /// backend: `stages[u]` executes unit `u` on `input` (unit 0) or its
+    /// predecessor's output. Ignored by the sim backend.
+    pub fn session_with_stages(
+        mut self,
+        model: &str,
+        mode: ArrivalMode,
+        slo_ms: Option<f64>,
+        stages: Vec<Arc<dyn crate::runtime::StageExec>>,
+        input: Vec<f32>,
+    ) -> Self {
+        self = self.session(model, mode, slo_ms);
+        if let Some(last) = self.work.last_mut() {
+            *last = Some(SessionWork { stages, input });
+        }
+        self
+    }
+
+    /// Append pre-built [`App`]s (e.g. a [`crate::workload`] scenario).
+    pub fn apps(mut self, apps: Vec<App>) -> Self {
+        for a in apps {
+            if zoo::by_name(&a.model).is_none() && self.err.is_none() {
+                self.err = Some(format!("unknown model '{}'", a.model));
+            }
+            self.apps.push(a);
+            self.work.push(None);
+        }
+        self
+    }
+
+    /// Run horizon in ms (simulated or wall-clock).
+    pub fn duration_ms(mut self, ms: f64) -> Self {
+        self.cfg.duration_ms = ms;
+        self
+    }
+
+    /// Per-session request quota: serve exactly `n` requests per session
+    /// and stop once all of them retire.
+    pub fn requests(mut self, n: u64) -> Self {
+        self.cfg.max_requests = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Replace the whole execution config (advanced).
+    pub fn config(mut self, cfg: SimConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Fix the partitioning window size for every session (default:
+    /// tuned per model for ADMS, 1 for the baseline policies — matching
+    /// the paper's evaluation arms).
+    pub fn window_size(mut self, ws: usize) -> Self {
+        self.window_size = Some(ws);
+        self
+    }
+
+    /// Multiplier on synthetic payload pacing in the thread pool
+    /// (`0 < pace ≤ 1` compresses wall time; tests use small values).
+    pub fn pace(mut self, pace: f64) -> Self {
+        self.pace = pace;
+        self
+    }
+
+    fn build(self) -> Result<Built> {
+        if let Some(e) = self.err {
+            bail!("{e}");
+        }
+        if self.apps.is_empty() {
+            bail!("server has no sessions: add at least one with .session(model, mode, slo)");
+        }
+        let scheduler: Box<dyn Scheduler> = match self.sched {
+            SchedChoice::Custom(s) => s,
+            SchedChoice::Named(n) => scheduler_by_name(&n, &self.soc, self.apps.len())?,
+            SchedChoice::Default => Box::new(Adms::default()),
+        };
+        let tuned = scheduler.name() == "adms";
+        let mut plans = Vec::new();
+        for app in &self.apps {
+            let g = zoo::by_name(&app.model)
+                .ok_or_else(|| anyhow!("unknown model '{}'", app.model))?;
+            let ws = match self.window_size {
+                Some(ws) => ws,
+                None if tuned => tuner::tune_window_size(&g, &self.soc, 12).0,
+                None => 1,
+            };
+            plans.push(ModelPlan::build(Arc::new(g), &self.soc, ws));
+        }
+        Ok(Built {
+            cfg: self.cfg,
+            apps: self.apps,
+            plans,
+            scheduler,
+            soc: self.soc,
+            work: self.work,
+            pace: self.pace,
+        })
+    }
+
+    /// Evaluate the workload on the calibrated discrete-event SoC model.
+    pub fn run_sim(self) -> Result<SimReport> {
+        let b = self.build()?;
+        let backend = Box::new(SimBackend::new(b.soc, b.cfg.clone()));
+        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend).run())
+    }
+
+    /// Serve the workload wall-clock on the worker-pool backend.
+    pub fn run_threadpool(self) -> Result<SimReport> {
+        let b = self.build()?;
+        let work: Vec<SessionWork> = b
+            .work
+            .into_iter()
+            .map(|w| w.unwrap_or_else(|| SessionWork { stages: Vec::new(), input: Vec::new() }))
+            .collect();
+        let backend = Box::new(ThreadPoolBackend::new(b.soc, b.cfg.clone(), work, b.pace));
+        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend).run())
+    }
+
+    /// Run on a caller-supplied backend (extension point).
+    pub fn run_backend(self, backend: Box<dyn ExecutionBackend>) -> Result<SimReport> {
+        let b = self.build()?;
+        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend).run())
+    }
+}
+
+/// A fully-resolved server, ready to bind to a backend.
+struct Built {
+    cfg: SimConfig,
+    apps: Vec<App>,
+    plans: Vec<ModelPlan>,
+    scheduler: Box<dyn Scheduler>,
+    soc: SocSpec,
+    work: Vec<Option<SessionWork>>,
+    pace: f64,
+}

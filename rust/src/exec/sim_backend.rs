@@ -1,0 +1,370 @@
+//! The calibrated discrete-event SoC substrate, extracted from the old
+//! monolithic engine. Owns the virtual clock, the event heap, thermal/DVFS
+//! dynamics, power accounting, and the contention-aware service-time
+//! model; the request lifecycle lives in [`Driver`](super::Driver).
+
+use super::{
+    proc_slots, BackendReport, DispatchCmd, ExecEvent, ExecutionBackend, OrdF64, RunToken,
+    SimConfig,
+};
+use crate::monitor::ProcView;
+use crate::power::{processor_power_w, EnergyMeter, BOARD_BASELINE_W};
+use crate::sched::{ReqId, SessId};
+use crate::sim::report::{ProcStats, TimelineEvent};
+use crate::soc::SocSpec;
+use crate::thermal::ThermalState;
+use crate::util::stats::TimeSeries;
+use crate::TimeMs;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Sessions touching a processor within this window still count as
+/// resident for the contention model.
+const SESSION_WINDOW_MS: f64 = 100.0;
+
+#[derive(Debug)]
+enum Ev {
+    Timer(u64),
+    Complete { proc: usize, token: RunToken },
+    Tick,
+}
+
+/// Heap entry ordered by (time, sequence); the payload is not compared.
+#[derive(Debug)]
+struct QEv {
+    t: OrdF64,
+    seq: u64,
+    ev: Ev,
+}
+impl PartialEq for QEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for QEv {}
+impl PartialOrd for QEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A task currently resident on a processor slot.
+#[derive(Debug, Clone)]
+struct Running {
+    token: RunToken,
+    req: ReqId,
+    session: SessId,
+    unit: usize,
+    start: TimeMs,
+    end: TimeMs,
+}
+
+/// Dynamic per-processor state.
+struct ProcState {
+    thermal: ThermalState,
+    running: Vec<Running>,
+    /// Estimated ms of work resident (running remainder + committed).
+    backlog_ms: f64,
+    /// Sessions that recently touched this processor: (session, time).
+    recent_sessions: Vec<(SessId, TimeMs)>,
+    busy_ms: f64,      // wall time with ≥1 task, total
+    slot_ms: f64,      // Σ per-slot occupied time, total
+    tick_busy_ms: f64, // within current tick (for power/util)
+    tick_slot_ms: f64,
+    dispatches: u64,
+    temp_series: TimeSeries,
+    freq_series: TimeSeries,
+}
+
+/// Discrete-event SoC backend on a virtual clock.
+pub struct SimBackend {
+    soc: SocSpec,
+    cfg: SimConfig,
+    ambient: f64,
+    procs: Vec<ProcState>,
+    heap: BinaryHeap<Reverse<QEv>>,
+    seq: u64,
+    now: TimeMs,
+    energy: EnergyMeter,
+    power_series: TimeSeries,
+    timeline: Vec<TimelineEvent>,
+}
+
+impl SimBackend {
+    pub fn new(soc: SocSpec, cfg: SimConfig) -> Self {
+        let ambient = cfg.ambient_c.unwrap_or(soc.ambient_c);
+        let procs = (0..soc.num_processors())
+            .map(|_| ProcState {
+                thermal: ThermalState::new(ambient),
+                running: Vec::new(),
+                backlog_ms: 0.0,
+                recent_sessions: Vec::new(),
+                busy_ms: 0.0,
+                slot_ms: 0.0,
+                tick_busy_ms: 0.0,
+                tick_slot_ms: 0.0,
+                dispatches: 0,
+                temp_series: TimeSeries::default(),
+                freq_series: TimeSeries::default(),
+            })
+            .collect();
+        let mut be = SimBackend {
+            soc,
+            ambient,
+            procs,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            energy: EnergyMeter::new(),
+            power_series: TimeSeries::default(),
+            timeline: Vec::new(),
+            cfg,
+        };
+        let first_tick = be.cfg.tick_ms;
+        be.push(first_tick, Ev::Tick);
+        be
+    }
+
+    fn push(&mut self, t: TimeMs, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Reverse(QEv { t: OrdF64(t), seq: self.seq, ev }));
+    }
+
+    /// Governor tick: thermal integration, DVFS governing, power sample.
+    fn tick(&mut self, now: TimeMs) {
+        let mut total_w = BOARD_BASELINE_W;
+        for (i, p) in self.procs.iter_mut().enumerate() {
+            let spec = &self.soc.processors[i];
+            let util_power = (p.tick_busy_ms / self.cfg.tick_ms).clamp(0.0, 1.0);
+            let fs = p.thermal.freq_scale(spec);
+            let w =
+                processor_power_w(spec, util_power, if p.thermal.offline { 0.2 } else { fs });
+            p.thermal.integrate(spec, self.ambient, w, self.cfg.tick_ms);
+            p.thermal.govern(spec, now);
+            total_w += w;
+            p.temp_series.push(now, p.thermal.temp_c);
+            p.freq_series.push(now, p.thermal.freq_mhz(spec));
+            p.tick_busy_ms = 0.0;
+            p.tick_slot_ms = 0.0;
+        }
+        self.energy.accumulate(total_w, self.cfg.tick_ms);
+        self.power_series.push(now, total_w);
+        let next = now + self.cfg.tick_ms;
+        self.push(next, Ev::Tick);
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn soc(&self) -> &SocSpec {
+        &self.soc
+    }
+
+    fn now(&self) -> TimeMs {
+        self.now
+    }
+
+    fn arm_timer(&mut self, at: TimeMs, key: u64) {
+        self.push(at, Ev::Timer(key));
+    }
+
+    fn proc_views(&mut self) -> Vec<ProcView> {
+        let now = self.now;
+        let soc = &self.soc;
+        let tick = self.cfg.tick_ms;
+        self.procs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let spec = &soc.processors[i];
+                ProcView {
+                    id: i,
+                    kind: spec.kind,
+                    temp_c: p.thermal.temp_c,
+                    freq_mhz: p.thermal.freq_mhz(spec),
+                    freq_scale: p.thermal.freq_scale(spec),
+                    offline: p.thermal.offline,
+                    load: p.running.len() as f64 / proc_slots(spec) as f64,
+                    backlog_ms: p.backlog_ms,
+                    active_sessions: active_sessions(p, now),
+                    util: (p.tick_busy_ms / tick).min(1.0),
+                    headroom_c: p.thermal.headroom_c(spec),
+                }
+            })
+            .collect()
+    }
+
+    fn try_dispatch(&mut self, cmd: DispatchCmd) -> bool {
+        let now = self.now;
+        let spec = &self.soc.processors[cmd.proc];
+        let pstate = &self.procs[cmd.proc];
+        if pstate.thermal.offline || pstate.running.len() >= proc_slots(spec) {
+            return false;
+        }
+        // Service time: exec at current frequency × contention
+        // + transfers + per-dispatch management overhead.
+        let fs = pstate.thermal.freq_scale(spec).max(0.05);
+        let exec = cmd.exec_full_ms / fs;
+        // Distinct sessions resident on this processor, counting the
+        // dispatching task's session exactly once.
+        let nsess =
+            active_sessions_with(pstate, now, cmd.session).max(pstate.running.len() + 1);
+        let mult = spec.contention_mult(nsess);
+        let service = exec * mult + cmd.xfer_ms + cmd.mgmt_ms;
+        let run = Running {
+            token: cmd.token,
+            req: cmd.req,
+            session: cmd.session,
+            unit: cmd.unit,
+            start: now,
+            end: now + service,
+        };
+        let end = run.end;
+        self.push(end, Ev::Complete { proc: cmd.proc, token: cmd.token });
+        let p = &mut self.procs[cmd.proc];
+        p.backlog_ms += service;
+        p.dispatches += 1;
+        touch_session(p, cmd.session, now);
+        p.running.push(run);
+        true
+    }
+
+    fn running_units(&self, req: ReqId) -> usize {
+        self.procs
+            .iter()
+            .map(|p| p.running.iter().filter(|r| r.req == req).count())
+            .sum()
+    }
+
+    fn next_event(&mut self) -> ExecEvent {
+        loop {
+            let Some(Reverse(QEv { t: OrdF64(now), ev, .. })) = self.heap.pop() else {
+                return ExecEvent::Drained { at: self.now };
+            };
+            // Past the horizon: surface the event untouched so the driver
+            // can stop; crucially, do NOT account busy time beyond the
+            // duration (preserves the old engine's busy_frac semantics).
+            if now > self.cfg.duration_ms {
+                return match ev {
+                    Ev::Timer(key) => ExecEvent::Timer { at: now, key },
+                    Ev::Tick => ExecEvent::Tick { at: now },
+                    Ev::Complete { token, .. } => {
+                        ExecEvent::Completed { at: now, token, error: false }
+                    }
+                };
+            }
+            // Accumulate busy time since the previous event.
+            let dt = now - self.now;
+            if dt > 0.0 {
+                for p in self.procs.iter_mut() {
+                    if !p.running.is_empty() {
+                        p.busy_ms += dt;
+                        p.tick_busy_ms += dt;
+                        let n = p.running.len() as f64;
+                        p.slot_ms += dt * n;
+                        p.tick_slot_ms += dt * n;
+                    }
+                }
+            }
+            self.now = now;
+
+            match ev {
+                Ev::Timer(key) => return ExecEvent::Timer { at: now, key },
+                Ev::Tick => {
+                    self.tick(now);
+                    return ExecEvent::Tick { at: now };
+                }
+                Ev::Complete { proc, token } => {
+                    let Some(pos) =
+                        self.procs[proc].running.iter().position(|r| r.token == token)
+                    else {
+                        continue;
+                    };
+                    let done = self.procs[proc].running.remove(pos);
+                    self.procs[proc].backlog_ms =
+                        (self.procs[proc].backlog_ms - (done.end - done.start)).max(0.0);
+                    if self.timeline.len() < self.cfg.timeline_cap {
+                        self.timeline.push(TimelineEvent {
+                            proc,
+                            session: done.session,
+                            req: done.req,
+                            unit: done.unit,
+                            start: done.start,
+                            end: done.end,
+                        });
+                    }
+                    return ExecEvent::Completed { at: now, token, error: false };
+                }
+            }
+        }
+    }
+
+    fn finish(self: Box<Self>, duration_ms: TimeMs) -> BackendReport {
+        let this = *self;
+        let soc = this.soc;
+        let procs = this
+            .procs
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| ProcStats {
+                name: soc.processors[i].name.clone(),
+                busy_frac: p.busy_ms / duration_ms,
+                avg_load: p.slot_ms / (duration_ms * proc_slots(&soc.processors[i]) as f64),
+                temp: p.temp_series,
+                freq: p.freq_series,
+                throttle_events: p.thermal.throttle_events,
+                first_throttle_ms: p.thermal.first_throttle_ms,
+                dispatches: p.dispatches,
+            })
+            .collect();
+        BackendReport {
+            backend: "sim",
+            procs,
+            power: this.power_series,
+            energy_j: this.energy.joules(),
+            timeline: this.timeline,
+            exec_errors: 0,
+        }
+    }
+}
+
+fn active_sessions(p: &ProcState, now: TimeMs) -> usize {
+    let mut sessions: Vec<SessId> = p.running.iter().map(|r| r.session).collect();
+    for &(s, t) in &p.recent_sessions {
+        if now - t <= SESSION_WINDOW_MS {
+            sessions.push(s);
+        }
+    }
+    sessions.sort_unstable();
+    sessions.dedup();
+    sessions.len()
+}
+
+/// `active_sessions` with `extra` included exactly once (the session of a
+/// task being dispatched must not double-count against its own recent
+/// residency).
+fn active_sessions_with(p: &ProcState, now: TimeMs, extra: SessId) -> usize {
+    let mut sessions: Vec<SessId> = p.running.iter().map(|r| r.session).collect();
+    for &(s, t) in &p.recent_sessions {
+        if now - t <= SESSION_WINDOW_MS {
+            sessions.push(s);
+        }
+    }
+    sessions.push(extra);
+    sessions.sort_unstable();
+    sessions.dedup();
+    sessions.len()
+}
+
+fn touch_session(p: &mut ProcState, s: SessId, now: TimeMs) {
+    p.recent_sessions.retain(|&(ss, t)| ss != s && now - t <= SESSION_WINDOW_MS);
+    p.recent_sessions.push((s, now));
+}

@@ -1,0 +1,420 @@
+//! Wall-clock execution on a worker-thread pool.
+//!
+//! Each SoC processor is stood in for by a group of worker threads (one
+//! per execution slot), so the scheduler's placement decisions map onto
+//! real OS-level parallelism. A dispatched unit either executes a real
+//! PJRT stage payload ([`StageExec`]) or a synthetic payload paced by the
+//! cost model's full-frequency estimate — the same estimate the simulator
+//! scales, which keeps the two substrates comparable.
+//!
+//! The clock is `Instant`-based milliseconds since backend start, so the
+//! driver's arrival processes, SLOs, and failure budgets all read as
+//! wall-clock quantities.
+
+use super::{
+    proc_slots, BackendReport, DispatchCmd, ExecEvent, ExecutionBackend, OrdF64, RunToken,
+    SimConfig,
+};
+use crate::monitor::ProcView;
+use crate::runtime::StageExec;
+use crate::sched::{ReqId, SessId};
+use crate::sim::report::{ProcStats, TimelineEvent};
+use crate::soc::SocSpec;
+use crate::util::stats::TimeSeries;
+use crate::TimeMs;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Stage payloads for one session: `stages[u]` executes unit `u`. When a
+/// unit has no stage (or no input buffer yet), the backend falls back to
+/// synthetic pacing.
+pub struct SessionWork {
+    pub stages: Vec<Arc<dyn StageExec>>,
+    /// Input fed to unit 0 of every request (the manifest probe input).
+    pub input: Vec<f32>,
+}
+
+enum Payload {
+    /// Sleep for the cost-model estimate (scaled by `pace`).
+    Synthetic { ms: f64 },
+    /// Execute a real stage on the given input.
+    Stage { stage: Arc<dyn StageExec>, input: Vec<f32> },
+}
+
+struct Job {
+    token: RunToken,
+    payload: Payload,
+}
+
+struct WorkerMsg {
+    token: RunToken,
+    output: Option<Vec<f32>>,
+    error: Option<String>,
+}
+
+struct Inflight {
+    req: ReqId,
+    session: SessId,
+    unit: usize,
+    proc: usize,
+    start_ms: TimeMs,
+    est_ms: f64,
+}
+
+struct ProcPool {
+    tx: Sender<Job>,
+    handles: Vec<JoinHandle<()>>,
+    inflight: usize,
+    /// Σ per-slot occupied time (for avg_load).
+    slot_ms: f64,
+    /// Wall time with ≥ 1 resident task (for busy_frac — same semantics
+    /// as the sim backend).
+    busy_ms: f64,
+    /// Start of the current ≥ 1-task interval, if one is open.
+    busy_since: Option<TimeMs>,
+    dispatches: u64,
+}
+
+/// Wall-clock serving backend.
+pub struct ThreadPoolBackend {
+    soc: SocSpec,
+    cfg: SimConfig,
+    start: Instant,
+    pools: Vec<ProcPool>,
+    done_rx: Receiver<WorkerMsg>,
+    /// Timers armed by the driver: (due, seq, key).
+    timers: BinaryHeap<Reverse<(OrdF64, u64, u64)>>,
+    timer_seq: u64,
+    next_tick: TimeMs,
+    inflight: HashMap<RunToken, Inflight>,
+    /// Intermediate stage outputs, keyed by request (linear pipelines).
+    buffers: HashMap<ReqId, Vec<f32>>,
+    work: Vec<SessionWork>,
+    /// Multiplier on synthetic sleep times (< 1 compresses wall time in
+    /// tests; 1.0 = cost-model pace).
+    pace: f64,
+    timeline: Vec<TimelineEvent>,
+    exec_errors: u64,
+}
+
+impl ThreadPoolBackend {
+    /// `work` may be empty (all-synthetic) or hold one entry per session.
+    pub fn new(soc: SocSpec, cfg: SimConfig, work: Vec<SessionWork>, pace: f64) -> Self {
+        let (done_tx, done_rx) = channel::<WorkerMsg>();
+        let pools = soc
+            .processors
+            .iter()
+            .map(|spec| {
+                let (tx, rx) = channel::<Job>();
+                let rx = Arc::new(std::sync::Mutex::new(rx));
+                let handles = (0..proc_slots(spec))
+                    .map(|_| {
+                        let rx = Arc::clone(&rx);
+                        let done = done_tx.clone();
+                        std::thread::spawn(move || loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            let Ok(job) = job else { break };
+                            let msg = match job.payload {
+                                Payload::Synthetic { ms } => {
+                                    if ms > 0.0 {
+                                        std::thread::sleep(Duration::from_secs_f64(ms * 1e-3));
+                                    }
+                                    WorkerMsg { token: job.token, output: None, error: None }
+                                }
+                                Payload::Stage { stage, input } => {
+                                    match stage.execute_f32(&input) {
+                                        Ok(out) => WorkerMsg {
+                                            token: job.token,
+                                            output: Some(out),
+                                            error: None,
+                                        },
+                                        Err(e) => WorkerMsg {
+                                            token: job.token,
+                                            output: None,
+                                            error: Some(format!("{e:#}")),
+                                        },
+                                    }
+                                }
+                            };
+                            if done.send(msg).is_err() {
+                                break;
+                            }
+                        })
+                    })
+                    .collect();
+                ProcPool {
+                    tx,
+                    handles,
+                    inflight: 0,
+                    slot_ms: 0.0,
+                    busy_ms: 0.0,
+                    busy_since: None,
+                    dispatches: 0,
+                }
+            })
+            .collect();
+        ThreadPoolBackend {
+            soc,
+            cfg,
+            start: Instant::now(),
+            pools,
+            done_rx,
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            next_tick: 0.0,
+            inflight: HashMap::new(),
+            buffers: HashMap::new(),
+            work,
+            pace: if pace > 0.0 { pace } else { 1.0 },
+            timeline: Vec::new(),
+            exec_errors: 0,
+        }
+    }
+
+    fn wall_ms(&self) -> TimeMs {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Next due (time, kind): timers vs the housekeeping tick.
+    fn next_deadline(&self) -> (TimeMs, bool) {
+        let tick_at = self.next_tick + self.cfg.tick_ms;
+        match self.timers.peek() {
+            Some(Reverse((OrdF64(t), _, _))) if *t <= tick_at => (*t, false),
+            _ => (tick_at, true),
+        }
+    }
+
+    fn handle_done(&mut self, msg: WorkerMsg, at: TimeMs) -> ExecEvent {
+        let errored = msg.error.is_some();
+        if let Some(e) = msg.error {
+            self.exec_errors += 1;
+            log::warn!("stage execution failed: {e}");
+        }
+        if let Some(info) = self.inflight.remove(&msg.token) {
+            // Keep the output only when a later stage of this session will
+            // consume it — the final stage's output would otherwise leak
+            // one buffer per request.
+            let has_consumer = self
+                .work
+                .get(info.session)
+                .is_some_and(|w| info.unit + 1 < w.stages.len());
+            if has_consumer {
+                if let Some(out) = msg.output {
+                    self.buffers.insert(info.req, out);
+                }
+            } else {
+                // Final stage (or synthetic unit): drop any lingering
+                // intermediate so requests don't leak buffers.
+                self.buffers.remove(&info.req);
+            }
+            let pool = &mut self.pools[info.proc];
+            pool.inflight = pool.inflight.saturating_sub(1);
+            pool.slot_ms += at - info.start_ms;
+            if pool.inflight == 0 {
+                if let Some(t0) = pool.busy_since.take() {
+                    pool.busy_ms += at - t0;
+                }
+            }
+            if self.timeline.len() < self.cfg.timeline_cap {
+                self.timeline.push(TimelineEvent {
+                    proc: info.proc,
+                    session: info.session,
+                    req: info.req,
+                    unit: info.unit,
+                    start: info.start_ms,
+                    end: at,
+                });
+            }
+        }
+        ExecEvent::Completed { at, token: msg.token, error: errored }
+    }
+}
+
+impl ExecutionBackend for ThreadPoolBackend {
+    fn name(&self) -> &'static str {
+        "threadpool"
+    }
+
+    fn soc(&self) -> &SocSpec {
+        &self.soc
+    }
+
+    fn now(&self) -> TimeMs {
+        self.wall_ms()
+    }
+
+    fn arm_timer(&mut self, at: TimeMs, key: u64) {
+        self.timer_seq += 1;
+        self.timers.push(Reverse((OrdF64(at), self.timer_seq, key)));
+    }
+
+    fn proc_views(&mut self) -> Vec<ProcView> {
+        let ambient = self.cfg.ambient_c.unwrap_or(self.soc.ambient_c);
+        let now = self.wall_ms();
+        self.soc
+            .processors
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let pool = &self.pools[i];
+                let slots = proc_slots(spec) as f64;
+                let backlog: f64 = self
+                    .inflight
+                    .values()
+                    .filter(|f| f.proc == i)
+                    .map(|f| (f.est_ms - (now - f.start_ms)).max(0.0))
+                    .sum();
+                let mut sessions: Vec<SessId> = self
+                    .inflight
+                    .values()
+                    .filter(|f| f.proc == i)
+                    .map(|f| f.session)
+                    .collect();
+                sessions.sort_unstable();
+                sessions.dedup();
+                ProcView {
+                    id: i,
+                    kind: spec.kind,
+                    temp_c: ambient,
+                    freq_mhz: spec.max_freq(),
+                    freq_scale: 1.0,
+                    offline: false,
+                    load: pool.inflight as f64 / slots,
+                    backlog_ms: backlog,
+                    active_sessions: sessions.len(),
+                    util: (pool.inflight as f64 / slots).min(1.0),
+                    headroom_c: spec.throttle_temp_c - ambient,
+                }
+            })
+            .collect()
+    }
+
+    fn try_dispatch(&mut self, cmd: DispatchCmd) -> bool {
+        let slots = proc_slots(&self.soc.processors[cmd.proc]);
+        if self.pools[cmd.proc].inflight >= slots {
+            return false;
+        }
+        let est_ms = cmd.exec_full_ms + cmd.xfer_ms + cmd.mgmt_ms;
+        // Real stage payload when the session provides one for this unit
+        // (unit 0 eats the session input; later units the predecessor's
+        // output), synthetic cost-model pacing otherwise.
+        let payload = match self.work.get(cmd.session) {
+            Some(w) if cmd.unit < w.stages.len() => {
+                let input = if cmd.unit == 0 {
+                    Some(w.input.clone())
+                } else {
+                    self.buffers.remove(&cmd.req)
+                };
+                match input {
+                    Some(input) => {
+                        Payload::Stage { stage: Arc::clone(&w.stages[cmd.unit]), input }
+                    }
+                    None => Payload::Synthetic { ms: est_ms * self.pace },
+                }
+            }
+            _ => Payload::Synthetic { ms: est_ms * self.pace },
+        };
+        let now = self.wall_ms();
+        let pool = &mut self.pools[cmd.proc];
+        if pool.tx.send(Job { token: cmd.token, payload }).is_err() {
+            return false;
+        }
+        if pool.inflight == 0 {
+            pool.busy_since = Some(now);
+        }
+        pool.inflight += 1;
+        pool.dispatches += 1;
+        self.inflight.insert(
+            cmd.token,
+            Inflight {
+                req: cmd.req,
+                session: cmd.session,
+                unit: cmd.unit,
+                proc: cmd.proc,
+                start_ms: now,
+                est_ms,
+            },
+        );
+        true
+    }
+
+    fn running_units(&self, req: ReqId) -> usize {
+        self.inflight.values().filter(|f| f.req == req).count()
+    }
+
+    fn next_event(&mut self) -> ExecEvent {
+        loop {
+            // Completions first: they free capacity and unlock work.
+            if let Ok(msg) = self.done_rx.try_recv() {
+                let at = self.wall_ms();
+                return self.handle_done(msg, at);
+            }
+            let now = self.wall_ms();
+            let (deadline, is_tick) = self.next_deadline();
+            if deadline <= now {
+                if is_tick {
+                    self.next_tick += self.cfg.tick_ms;
+                    return ExecEvent::Tick { at: now };
+                }
+                let Reverse((OrdF64(at), _, key)) = self.timers.pop().expect("timer peeked");
+                // Report the wall time the timer actually fired at.
+                return ExecEvent::Timer { at: now.max(at), key };
+            }
+            let wait = Duration::from_secs_f64(((deadline - now) * 1e-3).max(1e-4));
+            match self.done_rx.recv_timeout(wait) {
+                Ok(msg) => {
+                    let at = self.wall_ms();
+                    return self.handle_done(msg, at);
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return ExecEvent::Drained { at: self.wall_ms() }
+                }
+            }
+        }
+    }
+
+    fn finish(mut self: Box<Self>, duration_ms: TimeMs) -> BackendReport {
+        let end = self.wall_ms();
+        // Drop the job senders so workers drain and exit, then join.
+        let pools = std::mem::take(&mut self.pools);
+        let mut procs = Vec::new();
+        for (i, pool) in pools.into_iter().enumerate() {
+            let ProcPool { tx, handles, slot_ms, mut busy_ms, busy_since, dispatches, .. } =
+                pool;
+            drop(tx);
+            for h in handles {
+                let _ = h.join();
+            }
+            if let Some(t0) = busy_since {
+                busy_ms += end - t0;
+            }
+            let spec = &self.soc.processors[i];
+            procs.push(ProcStats {
+                name: spec.name.clone(),
+                busy_frac: (busy_ms / duration_ms).min(1.0),
+                avg_load: slot_ms / (duration_ms * proc_slots(spec) as f64),
+                temp: TimeSeries::default(),
+                freq: TimeSeries::default(),
+                throttle_events: 0,
+                first_throttle_ms: None,
+                dispatches,
+            });
+        }
+        BackendReport {
+            backend: "threadpool",
+            procs,
+            power: TimeSeries::default(),
+            energy_j: 0.0,
+            timeline: self.timeline,
+            exec_errors: self.exec_errors,
+        }
+    }
+}

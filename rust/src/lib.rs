@@ -15,18 +15,22 @@
 //! * [`soc`] / [`thermal`] / [`power`] — a calibrated heterogeneous
 //!   mobile-SoC simulator (Dimensity 9000, Kirin 970, Snapdragon 835)
 //!   with DVFS ladders, lumped-RC thermal dynamics, and power accounting;
-//! * [`sim`] — a discrete-event engine that drives the schedulers against
-//!   the SoC model and records execution timelines;
-//! * [`coordinator`] / [`runtime`] — a wall-clock serving runtime that
-//!   executes AOT-compiled HLO artifacts (Layer 2 JAX models built from
-//!   Layer 1 Pallas kernels) through PJRT, with Python never on the
-//!   request path;
+//! * [`exec`] — the backend-agnostic execution core: the shared
+//!   scheduler-driven dispatch loop ([`exec::Driver`]), the
+//!   [`exec::ExecutionBackend`] contract, its two substrates
+//!   ([`exec::SimBackend`] — the calibrated discrete-event SoC model —
+//!   and [`exec::ThreadPoolBackend`] — wall-clock serving on a worker
+//!   pool), and the [`exec::Server`] builder that fronts them;
+//! * [`sim`] — the evaluation entry point over the sim backend, plus the
+//!   shared report types (timelines, per-session/processor statistics);
+//! * [`coordinator`] / [`runtime`] — the AOT-artifact path: HLO stages
+//!   compiled through PJRT (behind the `pjrt` feature) and the legacy
+//!   probe-serving coordinator, with Python never on the request path;
 //! * [`experiments`] — regenerators for every table and figure in the
 //!   paper's evaluation section.
 //!
-//! See `DESIGN.md` for the full system inventory and the hardware
-//! substitution rationale, and `EXPERIMENTS.md` for paper-vs-measured
-//! results.
+//! See `DESIGN.md` for the full system inventory, the execution-backend
+//! architecture, and the hardware substitution rationale.
 
 pub mod util;
 pub mod testing;
@@ -35,10 +39,11 @@ pub mod zoo;
 pub mod soc;
 pub mod thermal;
 pub mod power;
-pub mod sim;
 pub mod monitor;
 pub mod analyzer;
 pub mod sched;
+pub mod exec;
+pub mod sim;
 pub mod workload;
 pub mod metrics;
 pub mod coordinator;

@@ -5,7 +5,10 @@
 //!   partition <model>     analyze a model's subgraph partition
 //!   tune <model>          sweep window sizes and report the optimum
 //!   simulate              run a custom workload under a scheduler
-//!   serve                 wall-clock serving of the AOT artifacts (PJRT)
+//!   serve                 scheduler-driven serving (exec::Server): pick a
+//!                         --sched and --workload, run wall-clock on the
+//!                         thread pool or on the sim backend; --probe keeps
+//!                         the legacy AOT numerics-probe path (PJRT)
 //!   models | socs         list the zoo / SoC presets
 
 use adms::analyzer;
@@ -208,7 +211,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     let soc = soc_by_name(&args.get_or("soc", "dimensity9000"))
         .ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
     let fw = match args.get_or("scheduler", "adms").as_str() {
-        "tflite" => Framework::Tflite,
+        "tflite" | "vanilla" => Framework::Tflite,
         "band" => Framework::Band,
         "adms" => Framework::Adms,
         other => bail!("unknown scheduler '{other}'"),
@@ -243,12 +246,119 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
+    use adms::exec::Server;
     let specs = [
-        OptSpec { name: "workers", takes_value: true, help: "worker threads", default: Some("2") },
-        OptSpec { name: "requests", takes_value: true, help: "requests to serve", default: Some("64") },
-        OptSpec { name: "no-verify", takes_value: false, help: "skip logits verification", default: None },
+        OptSpec { name: "sched", takes_value: true, help: "vanilla|band|adms|pinned", default: Some("adms") },
+        OptSpec { name: "workload", takes_value: true, help: "frs|ros or comma-separated zoo models", default: Some("frs") },
+        OptSpec { name: "backend", takes_value: true, help: "threadpool (wall-clock) | sim", default: Some("threadpool") },
+        OptSpec { name: "soc", takes_value: true, help: "target SoC", default: Some("dimensity9000") },
+        OptSpec { name: "requests", takes_value: true, help: "requests per session", default: Some("64") },
+        OptSpec { name: "duration", takes_value: true, help: "horizon, ms", default: Some("60000") },
+        OptSpec { name: "slo", takes_value: true, help: "per-request SLO in ms (all sessions)", default: None },
+        OptSpec { name: "pace", takes_value: true, help: "synthetic payload pace multiplier", default: Some("1") },
+        OptSpec { name: "seed", takes_value: true, help: "rng seed", default: Some("42") },
+        OptSpec { name: "probe", takes_value: false, help: "legacy: serve the AOT numerics probe (PJRT)", default: None },
+        OptSpec { name: "workers", takes_value: true, help: "probe mode: worker threads", default: Some("2") },
+        OptSpec { name: "no-verify", takes_value: false, help: "probe mode: skip logits verification", default: None },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
     let args = parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("adms serve [options]", &specs));
+        return Ok(());
+    }
+    if args.flag("probe") {
+        return serve_probe_legacy(&args);
+    }
+
+    let soc = soc_by_name(&args.get_or("soc", "dimensity9000"))
+        .ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
+    // Scheduler-name validation happens in Server (exec::scheduler_by_name).
+    let sched = args.get_or("sched", "adms");
+    let wl = args.get_or("workload", "frs");
+    let mut apps = match adms::workload::by_name(&wl) {
+        Some(apps) => apps,
+        None => {
+            let mut apps = Vec::new();
+            for m in wl.split(',').filter(|s| !s.is_empty()) {
+                if zoo::by_name(m).is_none() {
+                    bail!(
+                        "unknown workload/model '{m}' (named scenarios: {})",
+                        adms::workload::WORKLOAD_NAMES.join(", ")
+                    );
+                }
+                apps.push(App::closed_loop(m));
+            }
+            apps
+        }
+    };
+    if let Some(slo) = args.get("slo") {
+        let slo: f64 = slo
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--slo: expected a number, got '{slo}'"))?;
+        for a in &mut apps {
+            a.slo_ms = Some(slo);
+        }
+    }
+    let server = Server::new(soc)
+        .scheduler_name(&sched)
+        .apps(apps)
+        .requests(args.get_u64("requests", 64)?)
+        .duration_ms(args.get_f64("duration", 60_000.0)?)
+        .seed(args.get_u64("seed", 42)?)
+        .pace(args.get_f64("pace", 1.0)?);
+    let backend = args.get_or("backend", "threadpool");
+    let report = match backend.as_str() {
+        "threadpool" => server.run_threadpool()?,
+        "sim" => server.run_sim()?,
+        other => bail!("unknown backend '{other}' (threadpool|sim)"),
+    };
+
+    println!(
+        "served with scheduler '{}' on backend '{}' ({} sessions)",
+        report.scheduler,
+        report.backend,
+        report.sessions.len()
+    );
+    println!(
+        "{:20} {:>9} {:>7} {:>9} {:>9} {:>9} {:>8}",
+        "session", "completed", "failed", "p50 ms", "p95 ms", "mean ms", "SLO %"
+    );
+    for s in &report.sessions {
+        println!(
+            "{:20} {:>9} {:>7} {:>9} {:>9} {:>9} {:>8}",
+            s.model,
+            s.completed,
+            s.failed,
+            fnum(s.latency.p50(), 2),
+            fnum(s.latency.p95(), 2),
+            fnum(s.latency.mean(), 2),
+            s.slo_satisfaction
+                .map(|v| fnum(v * 100.0, 1))
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    println!(
+        "total: {} completed, {} failed, {} exec errors, {} dispatches traced",
+        report.total_completed(),
+        report.total_failed(),
+        report.exec_errors,
+        report.assignments.len()
+    );
+    for p in &report.procs {
+        println!(
+            "  {:22} busy {:5.1}%  dispatches {:6}",
+            p.name,
+            100.0 * p.busy_frac,
+            p.dispatches
+        );
+    }
+    Ok(())
+}
+
+/// The pre-0.2 probe path: round-robin the AOT numerics probe over a
+/// worker pool through PJRT, verifying logits.
+fn serve_probe_legacy(args: &adms::util::cli::Args) -> Result<()> {
     let rt = adms::runtime::Runtime::cpu()?;
     let dir = adms::runtime::default_artifact_dir();
     let art = rt.load_dir(&dir)?;
@@ -264,6 +374,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         requests: args.get_usize("requests", 64)?,
         verify: !args.flag("no-verify"),
     };
+    #[allow(deprecated)]
     let r = adms::coordinator::serve_probe(&art, &cfg)?;
     println!(
         "served {} requests on {} workers in {} ms: p50 {} ms, p95 {} ms, {} req/s, {} errors, {} verify failures",

@@ -5,6 +5,13 @@
 //! serialized HloModuleProto which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md). Each stage of
 //! the Layer-2 model compiles to one `PjRtLoadedExecutable`, cached here.
+//!
+//! The PJRT path needs the `xla` crate, which is not always available
+//! (offline builds, CI). It is gated behind the `pjrt` cargo feature:
+//! without it, [`Stage::execute_f32`] and [`Runtime::cpu`] return clear
+//! errors, manifest handling still works, and everything built on the
+//! [`StageExec`] abstraction (the serving coordinator, the thread-pool
+//! backend) compiles and runs with synthetic or mock stages.
 
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
@@ -12,11 +19,20 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
+/// Anything that can execute one model stage on a flat f32 buffer. The
+/// serving coordinator and the thread-pool execution backend are written
+/// against this trait so they do not depend on PJRT being compiled in.
+pub trait StageExec: Send + Sync {
+    fn stage_name(&self) -> &str;
+    fn execute_f32(&self, input: &[f32]) -> Result<Vec<f32>>;
+}
+
 /// One compiled model stage.
 pub struct Stage {
     pub name: String,
     pub input_shape: Vec<usize>,
     pub output_shape: Vec<usize>,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -29,6 +45,7 @@ impl Stage {
     }
 
     /// Execute on a flat f32 buffer (row-major, the stage's input shape).
+    #[cfg(feature = "pjrt")]
     pub fn execute_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(
             input.len() == self.input_len(),
@@ -53,13 +70,41 @@ impl Stage {
             .map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
         out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
     }
+
+    /// Stub when built without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.input_len(),
+            "stage '{}' expects {} elements, got {}",
+            self.name,
+            self.input_len(),
+            input.len()
+        );
+        anyhow::bail!(
+            "stage '{}': built without the `pjrt` feature — rebuild with \
+             `--features pjrt` (requires the xla crate) to execute artifacts",
+            self.name
+        )
+    }
+}
+
+impl StageExec for Stage {
+    fn stage_name(&self) -> &str {
+        &self.name
+    }
+    fn execute_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        Stage::execute_f32(self, input)
+    }
 }
 
 // SAFETY: the PJRT C API guarantees thread-safe `Execute` on loaded
 // executables and clients (PJRT_Client / PJRT_LoadedExecutable are
 // documented as thread-safe); the `xla` crate simply doesn't declare it.
 // Stages are only shared immutably after construction.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Stage {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Stage {}
 
 /// The numerics probe exported by `aot.py`: a fixed input and the fused
@@ -95,24 +140,43 @@ impl ArtifactSet {
 
 /// PJRT client wrapper + artifact loader.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 // SAFETY: see `Stage` — PJRT clients are thread-safe per the C API spec.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Runtime {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
         Ok(Runtime { client })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT unavailable: this binary was built without the `pjrt` feature \
+             (enable it with `--features pjrt`; requires the xla crate)"
+        )
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
     /// Compile one HLO-text file.
+    #[cfg(feature = "pjrt")]
     pub fn compile_hlo_text(
         &self,
         path: &Path,
@@ -130,6 +194,17 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
         Ok(Stage { name: name.to_string(), input_shape, output_shape, exe })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn compile_hlo_text(
+        &self,
+        _path: &Path,
+        name: &str,
+        _input_shape: Vec<usize>,
+        _output_shape: Vec<usize>,
+    ) -> Result<Stage> {
+        anyhow::bail!("cannot compile stage '{name}': built without the `pjrt` feature")
     }
 
     /// Load a full artifact directory produced by `make artifacts`.

@@ -65,11 +65,26 @@ pub struct SchedCtx<'a> {
 }
 
 impl<'a> SchedCtx<'a> {
-    /// Processors currently able to accept a task (online, free slot).
+    /// Free execution slots on one processor view. This is the single
+    /// source of truth for capacity: [`SchedCtx::available_procs`] and
+    /// [`free_slot_census`] both derive from it, so a processor is
+    /// "available" exactly when the census says it has ≥ 1 free slot
+    /// (they used to disagree: `load < 1.0` called a 4-slot processor at
+    /// load 0.9 available while the census rounded its free slots to 0).
+    pub fn free_slots(&self, v: &ProcView) -> usize {
+        if v.offline {
+            0
+        } else {
+            let total = self.soc.processors[v.id].parallel_slots.max(1) as f64;
+            ((1.0 - v.load) * total).round().max(0.0) as usize
+        }
+    }
+
+    /// Processors currently able to accept a task (online, ≥ 1 free slot).
     pub fn available_procs(&self) -> Vec<ProcId> {
         self.procs
             .iter()
-            .filter(|p| !p.offline && p.load < 1.0)
+            .filter(|p| self.free_slots(p) > 0)
             .map(|p| p.id)
             .collect()
     }
@@ -78,17 +93,7 @@ impl<'a> SchedCtx<'a> {
 /// Free execution slots per processor, derived from the monitor view
 /// (schedulers use this to avoid double-booking within one decision).
 pub fn free_slot_census(ctx: &SchedCtx) -> Vec<usize> {
-    ctx.procs
-        .iter()
-        .map(|v| {
-            if v.offline {
-                0
-            } else {
-                let total = ctx.soc.processors[v.id].parallel_slots as f64;
-                ((1.0 - v.load) * total).round().max(0.0) as usize
-            }
-        })
-        .collect()
+    ctx.procs.iter().map(|v| ctx.free_slots(v)).collect()
 }
 
 /// An assignment decision: ready-queue index → processor.
@@ -175,5 +180,37 @@ mod tests {
         assert!(!avail.contains(&2));
         assert!(avail.contains(&0));
         assert_eq!(soc.processors[0].kind, ProcKind::Cpu);
+    }
+
+    /// Regression: `available_procs` must agree with `free_slot_census`
+    /// on multi-slot processors. A 4-slot processor at load 0.9 has
+    /// 0.4 free slots → census rounds to 0 → it must NOT be available,
+    /// even though `load < 1.0`.
+    #[test]
+    fn available_procs_agrees_with_free_slot_census() {
+        let soc = dimensity9000();
+        let mut views = mk_views(&soc);
+        assert!(
+            soc.processors[0].parallel_slots >= 2,
+            "test needs a multi-slot processor"
+        );
+        views[0].load = 0.9; // rounds to 0 free slots on a 4-slot proc
+        if views.len() > 1 {
+            views[1].load = 0.7; // ≥ 1 free slot → available
+        }
+        let plans: Vec<ModelPlan> = vec![];
+        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &views };
+        let census = free_slot_census(&ctx);
+        let avail = ctx.available_procs();
+        for (id, &free) in census.iter().enumerate() {
+            assert_eq!(
+                avail.contains(&id),
+                free > 0,
+                "proc {id}: available={} but census says {free} free slots",
+                avail.contains(&id)
+            );
+        }
+        assert!(!avail.contains(&0), "0.4 free slots must round to unavailable");
+        assert!(avail.contains(&1));
     }
 }

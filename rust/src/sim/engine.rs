@@ -1,168 +1,20 @@
-//! The discrete-event engine.
+//! The discrete-event evaluation entry point.
+//!
+//! The actual scheduling loop lives in [`crate::exec`]: [`Engine`] is the
+//! historical front door that binds the shared [`Driver`] to the
+//! calibrated [`SimBackend`] (virtual clock, thermal/DVFS dynamics,
+//! contention model). New code should prefer [`crate::exec::Server`],
+//! which exposes the same machinery behind a builder and can also run the
+//! workload wall-clock on the thread-pool backend.
 
-use crate::monitor::{HardwareMonitor, ProcView, REFRESH_CPU_MS};
-use crate::power::{processor_power_w, BOARD_BASELINE_W, EnergyMeter};
-use crate::sched::{ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
-use crate::sim::report::{ProcStats, SessionStats, SimReport, TimelineEvent};
-use crate::soc::{ProcessorSpec, SocSpec};
-use crate::thermal::ThermalState;
-use crate::util::rng::Pcg32;
-use crate::util::stats::{Summary, TimeSeries};
-use crate::TimeMs;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use crate::exec::{Driver, SimBackend};
+use crate::sched::{ModelPlan, Scheduler};
+use crate::sim::report::SimReport;
+use crate::soc::SocSpec;
 use std::sync::Arc;
 
-/// Execution slots of a processor (re-exported helper for schedulers).
-pub fn proc_slots(spec: &ProcessorSpec) -> usize {
-    spec.parallel_slots.max(1)
-}
-
-/// How a session issues requests.
-#[derive(Debug, Clone, Copy)]
-pub enum ArrivalMode {
-    /// Re-request as soon as the previous inference finishes (continuous
-    /// video processing — the paper's FPS workloads).
-    ClosedLoop,
-    /// Fixed inter-arrival period, ms.
-    Periodic(f64),
-    /// Poisson arrivals with the given rate (requests/second).
-    Poisson(f64),
-}
-
-/// One concurrently-running application.
-#[derive(Debug, Clone)]
-pub struct App {
-    pub model: String,
-    pub slo_ms: Option<f64>,
-    pub mode: ArrivalMode,
-}
-
-impl App {
-    pub fn closed_loop(model: &str) -> Self {
-        App { model: model.into(), slo_ms: None, mode: ArrivalMode::ClosedLoop }
-    }
-    pub fn with_slo(model: &str, slo_ms: f64) -> Self {
-        App { model: model.into(), slo_ms: Some(slo_ms), mode: ArrivalMode::ClosedLoop }
-    }
-}
-
-/// Engine configuration.
-#[derive(Debug, Clone)]
-pub struct SimConfig {
-    pub duration_ms: TimeMs,
-    /// Governor/thermal/power tick, ms.
-    pub tick_ms: f64,
-    /// Monitor cache interval (staleness bound of the scheduler's view).
-    pub monitor_cache_ms: f64,
-    pub seed: u64,
-    /// A request fails (is aborted) once its age exceeds
-    /// `fail_mult × SLO` (or `fail_mult × 3 × est` without an SLO).
-    pub fail_mult: f64,
-    /// Ambient temperature override (35 °C for the thermal stress test).
-    pub ambient_c: Option<f64>,
-    /// Cap on recorded timeline events (Gantt data for Fig 10).
-    pub timeline_cap: usize,
-}
-
-impl Default for SimConfig {
-    fn default() -> Self {
-        SimConfig {
-            duration_ms: 60_000.0,
-            tick_ms: 100.0,
-            monitor_cache_ms: 50.0,
-            seed: 42,
-            fail_mult: 10.0,
-            ambient_c: None,
-            timeline_cap: 20_000,
-        }
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct OrdF64(f64);
-impl Eq for OrdF64 {}
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("NaN event time")
-    }
-}
-
-#[derive(Debug)]
-enum Ev {
-    Arrival(SessId),
-    Complete { proc: usize, run_id: u64 },
-    Tick,
-}
-
-/// Heap entry ordered by (time, sequence); the payload is not compared.
-#[derive(Debug)]
-struct QEv {
-    t: OrdF64,
-    seq: u64,
-    ev: Ev,
-}
-impl PartialEq for QEv {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for QEv {}
-impl PartialOrd for QEv {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for QEv {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.cmp(&other.t).then(self.seq.cmp(&other.seq))
-    }
-}
-
-/// A task currently resident on a processor slot.
-#[derive(Debug, Clone)]
-struct Running {
-    run_id: u64,
-    req: ReqId,
-    session: SessId,
-    unit: usize,
-    start: TimeMs,
-    end: TimeMs,
-}
-
-/// Per-request bookkeeping.
-#[derive(Debug)]
-struct ReqState {
-    session: SessId,
-    arrival: TimeMs,
-    slo_ms: Option<f64>,
-    deps_remaining: Vec<usize>,
-    unit_proc: Vec<Option<usize>>,
-    units_left: usize,
-    failed: bool,
-}
-
-/// Dynamic per-processor state.
-struct ProcState {
-    thermal: ThermalState,
-    running: Vec<Running>,
-    /// Estimated ms of work resident (running remainder + committed).
-    backlog_ms: f64,
-    /// Sessions that recently touched this processor: (session, time).
-    recent_sessions: Vec<(SessId, TimeMs)>,
-    busy_ms: f64,       // wall time with ≥1 task, total
-    slot_ms: f64,       // Σ per-slot occupied time, total
-    tick_busy_ms: f64,  // within current tick (for power/util)
-    tick_slot_ms: f64,
-    dispatches: u64,
-    temp_series: TimeSeries,
-    freq_series: TimeSeries,
-}
+// Historical homes of these types; they now live in the shared core.
+pub use crate::exec::{proc_slots, App, ArrivalMode, SimConfig};
 
 /// The simulation engine. Construct, then [`Engine::run`].
 pub struct Engine {
@@ -172,8 +24,6 @@ pub struct Engine {
     plans: Vec<ModelPlan>,
     scheduler: Box<dyn Scheduler>,
 }
-
-const SESSION_WINDOW_MS: f64 = 100.0;
 
 impl Engine {
     /// `window_size` selects the partitioning granularity used to build
@@ -195,514 +45,16 @@ impl Engine {
         Ok(Engine { soc, cfg, apps, plans, scheduler })
     }
 
-    pub fn run(mut self) -> SimReport {
-        let ambient = self.cfg.ambient_c.unwrap_or(self.soc.ambient_c);
-        let np = self.soc.num_processors();
-        let mut procs: Vec<ProcState> = (0..np)
-            .map(|_| ProcState {
-                thermal: ThermalState::new(ambient),
-                running: Vec::new(),
-                backlog_ms: 0.0,
-                recent_sessions: Vec::new(),
-                busy_ms: 0.0,
-                slot_ms: 0.0,
-                tick_busy_ms: 0.0,
-                tick_slot_ms: 0.0,
-                dispatches: 0,
-                temp_series: TimeSeries::default(),
-                freq_series: TimeSeries::default(),
-            })
-            .collect();
-        let mut rng = Pcg32::seeded(self.cfg.seed);
-        let mut monitor = HardwareMonitor::new(self.cfg.monitor_cache_ms);
-        let mut heap: BinaryHeap<Reverse<QEv>> = BinaryHeap::new();
-        let mut seq: u64 = 0;
-        let push = |heap: &mut BinaryHeap<Reverse<QEv>>, seq: &mut u64, t: f64, ev: Ev| {
-            *seq += 1;
-            heap.push(Reverse(QEv { t: OrdF64(t), seq: *seq, ev }));
-        };
-
-        // Session stats.
-        let mut completed = vec![0u64; self.apps.len()];
-        let mut failed = vec![0u64; self.apps.len()];
-        let mut lat: Vec<Summary> = (0..self.apps.len()).map(|_| Summary::new()).collect();
-        let mut slo_ok = vec![0u64; self.apps.len()];
-        let mut slo_n = vec![0u64; self.apps.len()];
-
-        // Request state.
-        let mut reqs: std::collections::HashMap<ReqId, ReqState> = Default::default();
-        let mut next_req: ReqId = 0;
-        let mut ready: Vec<PendingTask> = Vec::new();
-        let mut run_seq: u64 = 0;
-
-        let mut energy = EnergyMeter::new();
-        let mut power_series = TimeSeries::default();
-        let mut timeline: Vec<TimelineEvent> = Vec::new();
-        let mut last_event_t: TimeMs = 0.0;
-        let mut monitor_cpu_ms = 0.0;
-
-        // Prime arrivals and the governor tick.
-        for s in 0..self.apps.len() {
-            push(&mut heap, &mut seq, 0.0, Ev::Arrival(s));
-        }
-        push(&mut heap, &mut seq, self.cfg.tick_ms, Ev::Tick);
-
-        let debug = std::env::var_os("ADMS_SIM_DEBUG").is_some();
-        let mut n_events: u64 = 0;
-        let mut n_dispatch_rounds: u64 = 0;
-        while let Some(Reverse(QEv { t: OrdF64(now), ev, .. })) = heap.pop() {
-            if now > self.cfg.duration_ms {
-                break;
-            }
-            n_events += 1;
-            if debug && n_events % 2_000 == 0 {
-                eprintln!(
-                    "t={now:.0} events={n_events} rounds={n_dispatch_rounds} heap={} ready={} reqs={}",
-                    heap.len(), ready.len(), reqs.len()
-                );
-            }
-            // Accumulate busy time since the previous event.
-            let dt = now - last_event_t;
-            if dt > 0.0 {
-                for p in procs.iter_mut() {
-                    if !p.running.is_empty() {
-                        p.busy_ms += dt;
-                        p.tick_busy_ms += dt;
-                        let n = p.running.len() as f64;
-                        p.slot_ms += dt * n;
-                        p.tick_slot_ms += dt * n;
-                    }
-                }
-            }
-            last_event_t = now;
-
-            match ev {
-                Ev::Arrival(s) => {
-                    let id = next_req;
-                    next_req += 1;
-                    let plan = &self.plans[s];
-                    let nu = plan.num_units();
-                    let st = ReqState {
-                        session: s,
-                        arrival: now,
-                        slo_ms: self.apps[s].slo_ms,
-                        deps_remaining: plan.deps.iter().map(|d| d.len()).collect(),
-                        unit_proc: vec![None; nu],
-                        units_left: nu,
-                        failed: false,
-                    };
-                    // Enqueue units with no dependencies.
-                    for u in 0..nu {
-                        if st.deps_remaining[u] == 0 {
-                            ready.push(PendingTask {
-                                req: id,
-                                session: s,
-                                unit: u,
-                                ready_at: now,
-                                req_arrival: now,
-                                slo_ms: st.slo_ms,
-                                remaining_ms: plan.remaining_ms((0..nu).filter(|&x| x != u)),
-                                dep_procs: vec![],
-                            });
-                        }
-                    }
-                    reqs.insert(id, st);
-                    // Open-loop arrivals re-arm immediately.
-                    match self.apps[s].mode {
-                        ArrivalMode::Periodic(p) => push(&mut heap, &mut seq, now + p, Ev::Arrival(s)),
-                        ArrivalMode::Poisson(rate) => {
-                            let gap = rng.exp(rate / 1e3);
-                            push(&mut heap, &mut seq, now + gap, Ev::Arrival(s));
-                        }
-                        ArrivalMode::ClosedLoop => {}
-                    }
-                }
-                Ev::Complete { proc, run_id } => {
-                    let Some(pos) = procs[proc].running.iter().position(|r| r.run_id == run_id)
-                    else {
-                        continue;
-                    };
-                    let done = procs[proc].running.remove(pos);
-                    procs[proc].backlog_ms =
-                        (procs[proc].backlog_ms - (done.end - done.start)).max(0.0);
-                    if timeline.len() < self.cfg.timeline_cap {
-                        timeline.push(TimelineEvent {
-                            proc,
-                            session: done.session,
-                            req: done.req,
-                            unit: done.unit,
-                            start: done.start,
-                            end: done.end,
-                        });
-                    }
-                    let finished = {
-                        let Some(st) = reqs.get_mut(&done.req) else { continue };
-                        if st.failed {
-                            // Aborted while running; drop silently.
-                            st.units_left -= 1;
-                            st.units_left == 0
-                        } else {
-                            st.unit_proc[done.unit] = Some(proc);
-                            st.units_left -= 1;
-                            let plan = &self.plans[done.session];
-                            // Unlock consumers.
-                            for &c in &plan.consumers[done.unit] {
-                                st.deps_remaining[c] -= 1;
-                                if st.deps_remaining[c] == 0 {
-                                    let unfinished: Vec<usize> = (0..plan.num_units())
-                                        .filter(|&u| {
-                                            u != c && st.unit_proc[u].is_none()
-                                        })
-                                        .collect();
-                                    ready.push(PendingTask {
-                                        req: done.req,
-                                        session: done.session,
-                                        unit: c,
-                                        ready_at: now,
-                                        req_arrival: st.arrival,
-                                        slo_ms: st.slo_ms,
-                                        remaining_ms: plan
-                                            .remaining_ms(unfinished.into_iter()),
-                                        dep_procs: plan.deps[c]
-                                            .iter()
-                                            .map(|&d| (d, st.unit_proc[d].unwrap_or(proc)))
-                                            .collect(),
-                                    });
-                                }
-                            }
-                            st.units_left == 0
-                        }
-                    };
-                    if finished {
-                        let st = reqs.remove(&done.req).unwrap();
-                        let s = st.session;
-                        if !st.failed {
-                            let latency = now - st.arrival;
-                            completed[s] += 1;
-                            lat[s].add(latency);
-                            if let Some(slo) = st.slo_ms {
-                                slo_n[s] += 1;
-                                if latency <= slo {
-                                    slo_ok[s] += 1;
-                                }
-                            }
-                            // Failed requests already re-armed their
-                            // session at abort time — re-arming here too
-                            // would double the closed loop and snowball
-                            // under sustained overload.
-                            if matches!(self.apps[s].mode, ArrivalMode::ClosedLoop) {
-                                push(&mut heap, &mut seq, now, Ev::Arrival(s));
-                            }
-                        }
-                    }
-                }
-                Ev::Tick => {
-                    // Thermal integration + governor + power sample.
-                    let mut total_w = BOARD_BASELINE_W;
-                    for (i, p) in procs.iter_mut().enumerate() {
-                        let spec = &self.soc.processors[i];
-                        let util_power = (p.tick_busy_ms / self.cfg.tick_ms).clamp(0.0, 1.0);
-                        let fs = p.thermal.freq_scale(spec);
-                        let w = processor_power_w(spec, util_power, if p.thermal.offline { 0.2 } else { fs });
-                        p.thermal.integrate(spec, ambient, w, self.cfg.tick_ms);
-                        p.thermal.govern(spec, now);
-                        total_w += w;
-                        p.temp_series.push(now, p.thermal.temp_c);
-                        p.freq_series.push(now, p.thermal.freq_mhz(spec));
-                        p.tick_busy_ms = 0.0;
-                        p.tick_slot_ms = 0.0;
-                    }
-                    energy.accumulate(total_w, self.cfg.tick_ms);
-                    power_series.push(now, total_w);
-
-                    // Failure sweep: abort requests far past their budget.
-                    let mut aborted: Vec<ReqId> = Vec::new();
-                    for (&id, st) in reqs.iter_mut() {
-                        if st.failed {
-                            continue;
-                        }
-                        let budget = st
-                            .slo_ms
-                            .unwrap_or(self.plans[st.session].est_total_ms * 3.0)
-                            * self.cfg.fail_mult;
-                        if now - st.arrival > budget {
-                            st.failed = true;
-                            failed[st.session] += 1;
-                            if st.slo_ms.is_some() {
-                                slo_n[st.session] += 1;
-                            }
-                            aborted.push(id);
-                        }
-                    }
-                    if !aborted.is_empty() {
-                        ready.retain(|t| !aborted.contains(&t.req));
-                        // Closed-loop sessions re-arm after an abort.
-                        for id in aborted {
-                            let st = &reqs[&id];
-                            let s = st.session;
-                            let pending_units =
-                                st.units_left > self.running_units(&procs, id);
-                            if matches!(self.apps[s].mode, ArrivalMode::ClosedLoop) {
-                                push(&mut heap, &mut seq, now, Ev::Arrival(s));
-                            }
-                            if pending_units {
-                                // Unscheduled units will never run; account
-                                // them as done so the request can retire.
-                                let left = self.running_units(&procs, id);
-                                if let Some(stm) = reqs.get_mut(&id) {
-                                    stm.units_left = left.max(0) as usize;
-                                    if stm.units_left == 0 {
-                                        reqs.remove(&id);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                    push(&mut heap, &mut seq, now + self.cfg.tick_ms, Ev::Tick);
-                }
-            }
-
-            // Dispatch loop: keep asking the scheduler while it makes
-            // progress and capacity remains.
-            loop {
-                n_dispatch_rounds += 1;
-                if ready.is_empty() {
-                    break;
-                }
-                // Build monitor views (respecting the cache interval).
-                let views_needed = monitor.staleness(now) >= self.cfg.monitor_cache_ms;
-                if views_needed {
-                    monitor_cpu_ms += REFRESH_CPU_MS;
-                }
-                let views: Vec<ProcView> = {
-                    let soc = &self.soc;
-                    let cfg_tick = self.cfg.tick_ms;
-                    monitor
-                        .sample(now, || {
-                            procs
-                                .iter()
-                                .enumerate()
-                                .map(|(i, p)| {
-                                    let spec = &soc.processors[i];
-                                    ProcView {
-                                        id: i,
-                                        kind: spec.kind,
-                                        temp_c: p.thermal.temp_c,
-                                        freq_mhz: p.thermal.freq_mhz(spec),
-                                        freq_scale: p.thermal.freq_scale(spec),
-                                        offline: p.thermal.offline,
-                                        load: p.running.len() as f64
-                                            / proc_slots(spec) as f64,
-                                        backlog_ms: p.backlog_ms,
-                                        active_sessions: active_sessions(p, now),
-                                        util: (p.tick_busy_ms / cfg_tick).min(1.0),
-                                        headroom_c: p.thermal.headroom_c(spec),
-                                    }
-                                })
-                                .collect()
-                        })
-                        .to_vec()
-                };
-                // Expose ready tasks (serialized policies see only each
-                // session's earliest ready unit).
-                // Serialized policies see only each session's earliest ready
-                // unit; other policies see the queue directly (no copy —
-                // this loop is the simulation's hot path).
-                let exposed: Option<Vec<usize>> = if self.scheduler.serializes_sessions() {
-                    let mut first: std::collections::BTreeMap<SessId, (usize, usize)> =
-                        Default::default();
-                    for (i, t) in ready.iter().enumerate() {
-                        let e = first.entry(t.session).or_insert((i, t.unit));
-                        if t.unit < e.1 {
-                            *e = (i, t.unit);
-                        }
-                    }
-                    Some(first.values().map(|&(i, _)| i).collect())
-                } else {
-                    None
-                };
-                let ctx = SchedCtx { now, soc: &self.soc, plans: &self.plans, procs: &views };
-                let assignments = match &exposed {
-                    Some(idx) => {
-                        let exposed_tasks: Vec<PendingTask> =
-                            idx.iter().map(|&i| ready[i].clone()).collect();
-                        self.scheduler.schedule(&ctx, &exposed_tasks)
-                    }
-                    None => self.scheduler.schedule(&ctx, &ready),
-                };
-                if assignments.is_empty() {
-                    break;
-                }
-                // Apply (validate defensively), collecting indices to drop.
-                let mut dispatched: Vec<usize> = Vec::new();
-                for a in assignments {
-                    let ridx = match &exposed {
-                        Some(idx) => match idx.get(a.ready_idx) {
-                            Some(&r) => r,
-                            None => continue,
-                        },
-                        None => {
-                            if a.ready_idx >= ready.len() {
-                                continue;
-                            }
-                            a.ready_idx
-                        }
-                    };
-                    if dispatched.contains(&ridx) {
-                        continue;
-                    }
-                    let t = &ready[ridx];
-                    let plan = &self.plans[t.session];
-                    let spec = &self.soc.processors[a.proc];
-                    let pstate = &procs[a.proc];
-                    if pstate.thermal.offline
-                        || pstate.running.len() >= proc_slots(spec)
-                        || !plan.partition.units[t.unit].supports(a.proc)
-                    {
-                        continue;
-                    }
-                    // Service time: exec at current frequency × contention
-                    // + transfers + per-dispatch management overhead.
-                    let fs = pstate.thermal.freq_scale(spec).max(0.05);
-                    let exec = match plan.exec_estimate(t.unit, a.proc, fs) {
-                        Some(e) => e,
-                        None => continue,
-                    };
-                    // Distinct sessions resident on this processor,
-                    // counting the dispatching task's session exactly once.
-                    let nsess = active_sessions_with(pstate, now, t.session)
-                        .max(pstate.running.len() + 1);
-                    let mult = spec.contention_mult(nsess);
-                    let xfer: f64 = t
-                        .dep_procs
-                        .iter()
-                        .map(|&(du, dp)| {
-                            let bytes = plan.xfer_bytes[t.unit]
-                                .iter()
-                                .find(|(d, _)| *d == du)
-                                .map(|(_, b)| *b)
-                                .unwrap_or(0);
-                            self.scheduler.transfer_cost_ms(&self.soc, dp, a.proc, bytes)
-                        })
-                        .sum();
-                    let mgmt = self.scheduler.decision_overhead_ms(plan);
-                    let service = exec * mult + xfer + mgmt;
-                    run_seq += 1;
-                    let run = Running {
-                        run_id: run_seq,
-                        req: t.req,
-                        session: t.session,
-                        unit: t.unit,
-                        start: now,
-                        end: now + service,
-                    };
-                    push(&mut heap, &mut seq, run.end, Ev::Complete { proc: a.proc, run_id: run_seq });
-                    let p = &mut procs[a.proc];
-                    p.backlog_ms += service;
-                    p.dispatches += 1;
-                    touch_session(p, t.session, now);
-                    p.running.push(run);
-                    dispatched.push(ridx);
-                }
-                if dispatched.is_empty() {
-                    break;
-                }
-                dispatched.sort_unstable_by(|a, b| b.cmp(a));
-                for i in dispatched {
-                    ready.swap_remove(i);
-                }
-            }
-        }
-
-        // Assemble the report.
-        let duration = self.cfg.duration_ms;
-        let sessions: Vec<SessionStats> = (0..self.apps.len())
-            .map(|s| SessionStats {
-                model: self.apps[s].model.clone(),
-                completed: completed[s],
-                failed: failed[s],
-                latency: lat[s].clone(),
-                fps: completed[s] as f64 / (duration / 1e3),
-                slo_satisfaction: if slo_n[s] > 0 {
-                    Some(slo_ok[s] as f64 / slo_n[s] as f64)
-                } else {
-                    None
-                },
-            })
-            .collect();
-        let procs_stats: Vec<ProcStats> = procs
-            .into_iter()
-            .enumerate()
-            .map(|(i, p)| ProcStats {
-                name: self.soc.processors[i].name.clone(),
-                busy_frac: p.busy_ms / duration,
-                avg_load: p.slot_ms / (duration * proc_slots(&self.soc.processors[i]) as f64),
-                temp: p.temp_series,
-                freq: p.freq_series,
-                throttle_events: p.thermal.throttle_events,
-                first_throttle_ms: p.thermal.first_throttle_ms,
-                dispatches: p.dispatches,
-            })
-            .collect();
-        let _ = monitor_cpu_ms; // charged implicitly via monitor refresh count
-        SimReport {
-            scheduler: self.scheduler.name().to_string(),
-            duration_ms: duration,
-            sessions,
-            procs: procs_stats,
-            power: power_series,
-            energy_j: energy.joules(),
-            timeline,
-            monitor_refreshes: monitor.refresh_count(),
-        }
+    pub fn run(self) -> SimReport {
+        let backend = Box::new(SimBackend::new(self.soc, self.cfg.clone()));
+        Driver::new(self.cfg, self.apps, self.plans, self.scheduler, backend).run()
     }
-
-    fn running_units(&self, procs: &[ProcState], req: ReqId) -> usize {
-        procs
-            .iter()
-            .map(|p| p.running.iter().filter(|r| r.req == req).count())
-            .sum()
-    }
-}
-
-fn active_sessions(p: &ProcState, now: TimeMs) -> usize {
-    let mut sessions: Vec<SessId> =
-        p.running.iter().map(|r| r.session).collect();
-    for &(s, t) in &p.recent_sessions {
-        if now - t <= SESSION_WINDOW_MS {
-            sessions.push(s);
-        }
-    }
-    sessions.sort_unstable();
-    sessions.dedup();
-    sessions.len()
-}
-
-/// `active_sessions` with `extra` included exactly once (the session of a
-/// task being dispatched must not double-count against its own recent
-/// residency).
-fn active_sessions_with(p: &ProcState, now: TimeMs, extra: SessId) -> usize {
-    let mut sessions: Vec<SessId> =
-        p.running.iter().map(|r| r.session).collect();
-    for &(s, t) in &p.recent_sessions {
-        if now - t <= SESSION_WINDOW_MS {
-            sessions.push(s);
-        }
-    }
-    sessions.push(extra);
-    sessions.sort_unstable();
-    sessions.dedup();
-    sessions.len()
-}
-
-fn touch_session(p: &mut ProcState, s: SessId, now: TimeMs) {
-    p.recent_sessions.retain(|&(ss, t)| ss != s && now - t <= SESSION_WINDOW_MS);
-    p.recent_sessions.push((s, now));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::power::BOARD_BASELINE_W;
     use crate::sched::{Adms, Band, Pinned, VanillaTflite};
     use crate::soc::{dimensity9000, ProcKind};
 
@@ -727,6 +79,9 @@ mod tests {
         assert!(r.sessions[0].latency.mean() > 0.0);
         assert!(r.energy_j > 0.0);
         assert!(!r.timeline.is_empty());
+        // The refactored engine reports its substrate and decision trace.
+        assert_eq!(r.backend, "sim");
+        assert!(!r.assignments.is_empty());
     }
 
     #[test]
@@ -748,6 +103,7 @@ mod tests {
         assert_eq!(a.total_completed(), b.total_completed());
         assert_eq!(a.sessions[0].fps, b.sessions[0].fps);
         assert!((a.energy_j - b.energy_j).abs() < 1e-9);
+        assert_eq!(a.assignments, b.assignments);
     }
 
     #[test]

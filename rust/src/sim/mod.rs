@@ -1,13 +1,16 @@
 //! Discrete-event simulation of multi-DNN serving on a mobile SoC.
 //!
-//! The engine drives a [`Scheduler`](crate::sched::Scheduler) against the
-//! calibrated SoC model: request arrivals become per-unit tasks, the
-//! scheduler places ready tasks on processors, service times come from
-//! the roofline cost model adjusted for DVFS state and session contention,
-//! and a periodic governor tick integrates the thermal model, applies
-//! throttling, and samples power — producing every signal the paper's
-//! evaluation reports (latency, FPS, SLO satisfaction, power traces,
-//! temperature/frequency dynamics, failure counts).
+//! The shared [`Driver`](crate::exec::Driver) drives a
+//! [`Scheduler`](crate::sched::Scheduler) against the calibrated SoC
+//! model ([`crate::exec::SimBackend`]): request arrivals become per-unit
+//! tasks, the scheduler places ready tasks on processors, service times
+//! come from the roofline cost model adjusted for DVFS state and session
+//! contention, and a periodic governor tick integrates the thermal model,
+//! applies throttling, and samples power — producing every signal the
+//! paper's evaluation reports (latency, FPS, SLO satisfaction, power
+//! traces, temperature/frequency dynamics, failure counts). [`Engine`] is
+//! the evaluation front door; the same loop serves wall-clock through
+//! [`crate::exec::Server`].
 
 pub mod engine;
 pub mod report;

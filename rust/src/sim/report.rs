@@ -43,10 +43,15 @@ pub struct ProcStats {
     pub dispatches: u64,
 }
 
-/// Full simulation report.
+/// Full execution report — produced identically by the discrete-event
+/// simulator and the wall-clock thread-pool backend (where thermal/power
+/// signals are zero: real hardware counters are a future backend concern).
 #[derive(Debug, Clone)]
 pub struct SimReport {
     pub scheduler: String,
+    /// Which [`ExecutionBackend`](crate::exec::ExecutionBackend) produced
+    /// this report (`"sim"` or `"threadpool"`).
+    pub backend: String,
     pub duration_ms: TimeMs,
     pub sessions: Vec<SessionStats>,
     pub procs: Vec<ProcStats>,
@@ -55,6 +60,11 @@ pub struct SimReport {
     pub energy_j: f64,
     pub timeline: Vec<TimelineEvent>,
     pub monitor_refreshes: u64,
+    /// Payload execution errors (thread-pool backend).
+    pub exec_errors: u64,
+    /// Scheduling decisions in dispatch order — the cross-backend
+    /// determinism witness.
+    pub assignments: Vec<crate::exec::AssignRecord>,
 }
 
 impl SimReport {

@@ -2,6 +2,18 @@
 
 use crate::sim::{App, ArrivalMode};
 
+/// Named workload scenarios accepted by `--workload`.
+pub const WORKLOAD_NAMES: [&str; 2] = ["frs", "ros"];
+
+/// Look up a named scenario (`frs` | `ros`).
+pub fn by_name(name: &str) -> Option<Vec<App>> {
+    match name {
+        "frs" => Some(frs()),
+        "ros" => Some(ros()),
+        _ => None,
+    }
+}
+
 /// Facial Recognition System (paper §4.4): RetinaFace detection plus two
 /// ArcFace identification models working on a continuous video stream.
 pub fn frs() -> Vec<App> {
@@ -70,6 +82,14 @@ pub fn camera_feed(model: &str, fps: f64, slo_ms: Option<f64>) -> App {
 mod tests {
     use super::*;
     use crate::zoo;
+
+    #[test]
+    fn by_name_resolves_named_scenarios() {
+        for n in WORKLOAD_NAMES {
+            assert!(by_name(n).is_some(), "{n} missing");
+        }
+        assert!(by_name("nope").is_none());
+    }
 
     #[test]
     fn workload_models_exist_in_zoo() {

@@ -1,0 +1,134 @@
+//! Integration tests for the unified execution API: the same scheduler
+//! drives the discrete-event SoC model and the wall-clock thread pool
+//! through one `Server`, and deterministic policies produce identical
+//! dispatch traces on both.
+
+use adms::exec::{ArrivalMode, Server, SimConfig};
+use adms::sched::Pinned;
+use adms::soc::dimensity9000;
+
+/// One chain-structured session (MobileNetV1 is a linear op chain, so
+/// its units form a dependency chain), a `Pinned` scheduler, and a fixed
+/// request quota: the dispatch sequence is fully determined by the
+/// dependency order, so the assignment trace must be byte-identical
+/// across backends regardless of wall-clock jitter.
+#[test]
+fn pinned_dispatch_trace_identical_on_both_backends() {
+    let soc = dimensity9000();
+    let cpu = soc.cpu_id();
+    let build = || {
+        Server::new(soc.clone())
+            .scheduler(Pinned::new(cpu, cpu))
+            .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+            .window_size(6)
+            .requests(3)
+            .duration_ms(60_000.0)
+            .pace(0.02) // compress synthetic wall time in the pool
+    };
+    let sim = build().run_sim().unwrap();
+    let pool = build().run_threadpool().unwrap();
+    assert_eq!(sim.backend, "sim");
+    assert_eq!(pool.backend, "threadpool");
+    assert_eq!(sim.total_completed(), 3);
+    assert_eq!(pool.total_completed(), 3);
+    assert!(!sim.assignments.is_empty());
+    assert_eq!(
+        sim.assignments, pool.assignments,
+        "dispatch trace diverged between backends"
+    );
+    // Every dispatch went to the pinned processor.
+    assert!(sim.assignments.iter().all(|a| a.proc == cpu));
+}
+
+/// Acceptance criterion: `vanilla`, `band`, and `adms` each run
+/// unmodified on both backends through the `Server` API.
+#[test]
+fn all_three_schedulers_run_on_both_backends() {
+    let soc = dimensity9000();
+    for name in ["vanilla", "band", "adms"] {
+        let sim = Server::new(soc.clone())
+            .scheduler_name(name)
+            .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+            .session("east", ArrivalMode::ClosedLoop, None)
+            .duration_ms(600.0)
+            .run_sim()
+            .unwrap_or_else(|e| panic!("{name} on sim: {e}"));
+        assert!(sim.total_completed() > 0, "{name} on sim completed nothing");
+
+        let pool = Server::new(soc.clone())
+            .scheduler_name(name)
+            .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+            .session("east", ArrivalMode::ClosedLoop, None)
+            .requests(2)
+            .duration_ms(60_000.0)
+            .pace(0.02)
+            .run_threadpool()
+            .unwrap_or_else(|e| panic!("{name} on threadpool: {e}"));
+        assert_eq!(
+            pool.total_completed(),
+            4,
+            "{name} on threadpool: expected 2 requests × 2 sessions"
+        );
+        assert_eq!(pool.exec_errors, 0);
+    }
+}
+
+#[test]
+fn server_without_sessions_is_an_error() {
+    let err = Server::new(dimensity9000()).run_sim().unwrap_err();
+    assert!(err.to_string().contains("no sessions"), "got: {err}");
+}
+
+#[test]
+fn server_with_unknown_scheduler_is_an_error() {
+    let err = Server::new(dimensity9000())
+        .scheduler_name("definitely-not-a-scheduler")
+        .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+        .run_sim()
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown scheduler"), "got: {err}");
+}
+
+#[test]
+fn server_with_unknown_model_is_an_error() {
+    let err = Server::new(dimensity9000())
+        .session("not-a-model", ArrivalMode::ClosedLoop, None)
+        .run_sim()
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "got: {err}");
+}
+
+/// The thread-pool backend reports the same per-session metric shape the
+/// simulator does: latency percentiles and SLO attainment.
+#[test]
+fn threadpool_reports_latency_and_slo_metrics() {
+    let soc = dimensity9000();
+    let report = Server::new(soc)
+        .scheduler_name("adms")
+        .session("mobilenet_v1", ArrivalMode::ClosedLoop, Some(10_000.0))
+        .requests(4)
+        .duration_ms(60_000.0)
+        .pace(0.05)
+        .run_threadpool()
+        .unwrap();
+    let s = &report.sessions[0];
+    assert_eq!(s.completed, 4);
+    assert!(s.latency.p50() > 0.0);
+    assert!(s.latency.p95() >= s.latency.p50());
+    // A 10 s SLO on a few-ms model must be met.
+    assert_eq!(s.slo_satisfaction, Some(1.0));
+    assert!(report.procs.iter().any(|p| p.dispatches > 0));
+}
+
+/// `SimConfig::max_requests` bounds the simulated run too (finite
+/// workloads are a core-level concept, not a thread-pool special case).
+#[test]
+fn request_quota_bounds_sim_runs() {
+    let report = Server::new(dimensity9000())
+        .scheduler_name("band")
+        .session("mobilenet_v2", ArrivalMode::ClosedLoop, None)
+        .config(SimConfig { max_requests: Some(5), ..SimConfig::default() })
+        .run_sim()
+        .unwrap();
+    assert_eq!(report.total_completed() + report.total_failed(), 5);
+}

@@ -3,7 +3,9 @@
 //!
 //! These tests require `make artifacts` to have run; they skip (with a
 //! note) when artifacts are absent so `cargo test` stays usable on a
-//! fresh checkout.
+//! fresh checkout. `serve_probe` is deprecated in favour of
+//! `exec::Server`, but stays exercised here as the numerics check.
+#![allow(deprecated)]
 
 use adms::coordinator::{serve_probe, ServeConfig};
 use adms::runtime::{artifacts_available, default_artifact_dir, Runtime};
