@@ -7,10 +7,18 @@
 //! session serialization), assignments are validated and priced, and
 //! completions unlock dependent units until a request retires into the
 //! latency/SLO statistics.
+//!
+//! Since the scenario engine the workload is an *open system*: sessions
+//! may be admitted and retired mid-run and may switch arrival processes
+//! ([`SessionEvent`]s riding the backend clock as timers). Every arrival
+//! timer carries the session's *epoch* — bumped on stop/rate-change — so
+//! stale timers from a replaced arrival process are ignored rather than
+//! double-driving the session. Conservation holds per session on every
+//! run: `issued == completed + failed + cancelled`.
 
 use super::{
-    App, ArrivalMode, AssignRecord, DispatchCmd, ExecEvent, ExecutionBackend, RunToken,
-    SimConfig,
+    App, ArrivalMode, ArrivalRecord, AssignRecord, DispatchCmd, EventKind, ExecEvent,
+    ExecutionBackend, RunToken, SessionEvent, SimConfig,
 };
 use crate::monitor::{HardwareMonitor, ProcView};
 use crate::sched::{ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
@@ -19,6 +27,19 @@ use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
 use crate::TimeMs;
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Timer-key namespace: the top bit marks scenario-event timers, the low
+/// 32 bits of arrival keys carry the session id and bits 32..63 its epoch.
+const EVENT_KEY: u64 = 1 << 63;
+
+fn arrival_key(session: SessId, epoch: u32) -> u64 {
+    ((epoch as u64) << 32) | session as u64
+}
+
+fn decode_arrival(key: u64) -> (SessId, u32) {
+    ((key & 0xFFFF_FFFF) as usize, (key >> 32) as u32)
+}
 
 /// Per-request bookkeeping.
 #[derive(Debug)]
@@ -26,10 +47,15 @@ struct ReqState {
     session: SessId,
     arrival: TimeMs,
     slo_ms: Option<f64>,
+    /// Arrival epoch the request was issued under (closed-loop re-arms
+    /// only while its epoch is still the session's current one).
+    epoch: u32,
     deps_remaining: Vec<usize>,
     unit_proc: Vec<Option<usize>>,
     units_left: usize,
-    failed: bool,
+    /// Aborted — failed (budget/exec error) or cancelled (session stop /
+    /// run end). Units still resident on processors drain silently.
+    dead: bool,
 }
 
 /// A dispatched unit the driver is waiting on.
@@ -41,6 +67,160 @@ struct Inflight {
     proc: usize,
 }
 
+/// Live per-session state (stats + arrival process).
+struct Sess {
+    app: App,
+    started: bool,
+    stopped: bool,
+    start_ms: TimeMs,
+    stop_ms: Option<TimeMs>,
+    epoch: u32,
+    issued: u64,
+    completed: u64,
+    failed: u64,
+    cancelled: u64,
+    lat: Summary,
+    slo_ok: u64,
+    slo_n: u64,
+    /// Cursor into a `Replay` schedule.
+    replay_pos: usize,
+}
+
+impl Sess {
+    fn new(app: App) -> Self {
+        Sess {
+            app,
+            started: false,
+            stopped: false,
+            start_ms: 0.0,
+            stop_ms: None,
+            epoch: 0,
+            issued: 0,
+            completed: 0,
+            failed: 0,
+            cancelled: 0,
+            lat: Summary::new(),
+            slo_ok: 0,
+            slo_n: 0,
+            replay_pos: 0,
+        }
+    }
+
+    fn closed_loop(&self) -> bool {
+        matches!(self.app.mode, ArrivalMode::ClosedLoop)
+    }
+}
+
+/// Next inter-arrival gap of the square-wave bursty process: thinning of
+/// a Poisson stream at the burst-phase rate, so the gap depends only on
+/// the RNG stream and the current clock — deterministic under a fixed
+/// seed on the sim backend.
+fn bursty_gap(
+    rate_rps: f64,
+    burst_factor: f64,
+    period_ms: f64,
+    now: TimeMs,
+    rng: &mut Pcg32,
+) -> f64 {
+    let hi = (rate_rps.max(1e-9) * burst_factor.max(1.0)) / 1e3; // per ms
+    let lo = rate_rps.max(1e-9) / 1e3;
+    let half = (period_ms / 2.0).max(1e-9);
+    let mut t = now;
+    for _ in 0..100_000 {
+        t += rng.exp(hi);
+        let in_burst = ((t / half).floor() as i64).rem_euclid(2) == 0;
+        let cur = if in_burst { hi } else { lo };
+        if rng.next_f64() < cur / hi {
+            break;
+        }
+    }
+    t - now
+}
+
+/// Arm a session's next arrival timer at `now`. `restart = false` means
+/// an arrival was just issued (closed loop re-arms on completion instead;
+/// replay advances its cursor); `restart = true` means the process was
+/// just (re)started by a rate change (closed loop seeds exactly one fresh
+/// loop — requests of the old epoch no longer re-arm — and replay rescans
+/// for the next scheduled time).
+fn arm_arrival_timer(
+    backend: &mut dyn ExecutionBackend,
+    rng: &mut Pcg32,
+    s: SessId,
+    sess: &mut Sess,
+    now: TimeMs,
+    restart: bool,
+) {
+    let key = arrival_key(s, sess.epoch);
+    match &sess.app.mode {
+        ArrivalMode::ClosedLoop => {
+            if restart {
+                backend.arm_timer(now, key);
+            }
+        }
+        ArrivalMode::Periodic(p) => backend.arm_timer(now + p, key),
+        ArrivalMode::Poisson(rate) => {
+            let gap = rng.exp(rate.max(1e-9) / 1e3);
+            backend.arm_timer(now + gap, key);
+        }
+        ArrivalMode::Bursty { rate_rps, burst_factor, period_ms } => {
+            let gap = bursty_gap(*rate_rps, *burst_factor, *period_ms, now, rng);
+            backend.arm_timer(now + gap, key);
+        }
+        ArrivalMode::Replay(times) => {
+            let times = Arc::clone(times);
+            let pos = if restart {
+                times.iter().position(|&t| t >= now).unwrap_or(times.len())
+            } else {
+                sess.replay_pos + 1
+            };
+            sess.replay_pos = pos;
+            if let Some(&t) = times.get(pos) {
+                backend.arm_timer(t.max(now), key);
+            }
+        }
+    }
+}
+
+/// A dead (failed/cancelled) request stays alive only while units are
+/// still resident on processors: clamp its remaining-unit count to
+/// `floor` and retire it once nothing is left. `floor` is the backend's
+/// `running_units` — plus one in the exec-error path, whose triggering
+/// completion is decremented later in the same handler. All three
+/// abort sites (session stop, exec error, failure sweep) share this so
+/// the conservation invariant has one implementation.
+fn clamp_dead_request(reqs: &mut HashMap<ReqId, ReqState>, id: ReqId, floor: usize) {
+    if let Some(st) = reqs.get_mut(&id) {
+        st.units_left = st.units_left.min(floor);
+        if st.units_left == 0 {
+            reqs.remove(&id);
+        }
+    }
+}
+
+/// Re-seed a closed-loop session's arrival at `now` after one of its
+/// requests retires or aborts. Fires only when the request belonged to
+/// the session's *current* arrival epoch (a rate change must not
+/// resurrect the replaced loop), the session is still live, and quota
+/// remains — the single predicate all three retirement paths
+/// (completion, exec error, failure sweep) share.
+fn rearm_closed_loop(
+    backend: &mut dyn ExecutionBackend,
+    sess: &Sess,
+    s: SessId,
+    req_epoch: u32,
+    quota: u64,
+    now: TimeMs,
+) {
+    if req_epoch == sess.epoch
+        && !sess.stopped
+        && sess.closed_loop()
+        && sess.issued < quota
+    {
+        backend.arm_timer(now, arrival_key(s, sess.epoch));
+    }
+}
+
 /// Scheduler-driven execution of a multi-session workload on one backend.
 pub struct Driver {
     cfg: SimConfig,
@@ -48,6 +228,7 @@ pub struct Driver {
     plans: Vec<ModelPlan>,
     scheduler: Box<dyn Scheduler>,
     backend: Box<dyn ExecutionBackend>,
+    events: Vec<SessionEvent>,
 }
 
 impl Driver {
@@ -59,7 +240,15 @@ impl Driver {
         backend: Box<dyn ExecutionBackend>,
     ) -> Self {
         assert_eq!(apps.len(), plans.len(), "one plan per session");
-        Driver { cfg, apps, plans, scheduler, backend }
+        Driver { cfg, apps, plans, scheduler, backend, events: Vec::new() }
+    }
+
+    /// Attach session-lifecycle events (a compiled scenario). Sessions
+    /// referenced by a `Start` event are admitted when it fires; all
+    /// other sessions are active from t = 0.
+    pub fn events(mut self, events: Vec<SessionEvent>) -> Self {
+        self.events = events;
+        self
     }
 
     pub fn run(mut self) -> SimReport {
@@ -68,13 +257,7 @@ impl Driver {
         let mut monitor = HardwareMonitor::new(self.cfg.monitor_cache_ms);
         let soc = self.backend.soc().clone();
 
-        // Session stats.
-        let mut completed = vec![0u64; napps];
-        let mut failed = vec![0u64; napps];
-        let mut lat: Vec<Summary> = (0..napps).map(|_| Summary::new()).collect();
-        let mut slo_ok = vec![0u64; napps];
-        let mut slo_n = vec![0u64; napps];
-        let mut issued = vec![0u64; napps];
+        let mut sess: Vec<Sess> = self.apps.iter().cloned().map(Sess::new).collect();
 
         // Request state.
         let mut reqs: HashMap<ReqId, ReqState> = Default::default();
@@ -83,12 +266,33 @@ impl Driver {
         let mut run_seq: RunToken = 0;
         let mut inflight: HashMap<RunToken, Inflight> = Default::default();
         let mut assignments_trace: Vec<AssignRecord> = Vec::new();
+        let mut arrivals_trace: Vec<ArrivalRecord> = Vec::new();
 
         let quota = self.cfg.max_requests.unwrap_or(u64::MAX);
 
-        // Prime arrivals (the backend arms its own housekeeping tick).
+        // Scenario events ride the backend clock as timers. Only pending
+        // `Start` events can create new work, so only they keep a
+        // quota-bounded run alive.
+        let mut pending_starts = 0usize;
+        let mut late_start = vec![false; napps];
+        for (i, ev) in self.events.iter().enumerate() {
+            if let EventKind::Start { session } = ev.kind {
+                if session < napps {
+                    late_start[session] = true;
+                }
+                pending_starts += 1;
+            }
+            self.backend.arm_timer(ev.at_ms, EVENT_KEY | i as u64);
+        }
+        // Prime arrivals of the statically-admitted sessions (the backend
+        // arms its own housekeeping tick).
         for s in 0..napps {
-            self.backend.arm_timer(0.0, s as u64);
+            if !late_start[s] {
+                sess[s].started = true;
+                if let Some(t0) = sess[s].app.mode.first_arrival(0.0) {
+                    self.backend.arm_timer(t0, arrival_key(s, 0));
+                }
+            }
         }
 
         let debug = std::env::var_os("ADMS_SIM_DEBUG").is_some();
@@ -114,12 +318,77 @@ impl Driver {
             let mut dispatch_after = true;
             match ev {
                 ExecEvent::Drained { .. } => break,
+                ExecEvent::Timer { key, .. } if key & EVENT_KEY != 0 => {
+                    let idx = (key & !EVENT_KEY) as usize;
+                    let Some(tev) = self.events.get(idx).cloned() else {
+                        continue;
+                    };
+                    match tev.kind {
+                        EventKind::Start { session: s } => {
+                            pending_starts = pending_starts.saturating_sub(1);
+                            if s < napps && !sess[s].started && !sess[s].stopped {
+                                sess[s].started = true;
+                                sess[s].start_ms = now;
+                                if let Some(t0) = sess[s].app.mode.first_arrival(now) {
+                                    let key = arrival_key(s, sess[s].epoch);
+                                    self.backend.arm_timer(t0, key);
+                                }
+                            }
+                        }
+                        EventKind::Stop { session: s } => {
+                            if s < napps && sess[s].started && !sess[s].stopped {
+                                sess[s].stopped = true;
+                                sess[s].stop_ms = Some(now);
+                                sess[s].epoch += 1;
+                                // Cancel pending work deterministically:
+                                // drop ready entries, abort open requests
+                                // in id order; inflight units drain.
+                                ready.retain(|t| t.session != s);
+                                let mut open: Vec<ReqId> = reqs
+                                    .iter()
+                                    .filter(|(_, st)| st.session == s && !st.dead)
+                                    .map(|(&id, _)| id)
+                                    .collect();
+                                open.sort_unstable();
+                                for id in open {
+                                    sess[s].cancelled += 1;
+                                    let running = self.backend.running_units(id);
+                                    reqs.get_mut(&id).unwrap().dead = true;
+                                    clamp_dead_request(&mut reqs, id, running);
+                                }
+                            }
+                        }
+                        EventKind::Rate { session: s, mode } => {
+                            if s < napps && !sess[s].stopped {
+                                sess[s].epoch += 1;
+                                sess[s].app.mode = mode;
+                                if sess[s].started {
+                                    arm_arrival_timer(
+                                        self.backend.as_mut(),
+                                        &mut rng,
+                                        s,
+                                        &mut sess[s],
+                                        now,
+                                        true,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
                 ExecEvent::Timer { key, .. } => {
-                    let s = key as usize;
-                    if issued[s] >= quota {
+                    let (s, epoch) = decode_arrival(key);
+                    let live = s < napps
+                        && sess[s].started
+                        && !sess[s].stopped
+                        && epoch == sess[s].epoch;
+                    if !live || sess[s].issued >= quota {
+                        // Stale timer from a replaced arrival process (or
+                        // quota already met): ignore.
                         dispatch_after = false;
                     } else {
-                        issued[s] += 1;
+                        sess[s].issued += 1;
+                        arrivals_trace.push(ArrivalRecord { session: s, at: now });
                         let id = next_req;
                         next_req += 1;
                         let plan = &self.plans[s];
@@ -127,11 +396,12 @@ impl Driver {
                         let st = ReqState {
                             session: s,
                             arrival: now,
-                            slo_ms: self.apps[s].slo_ms,
+                            slo_ms: sess[s].app.slo_ms,
+                            epoch,
                             deps_remaining: plan.deps.iter().map(|d| d.len()).collect(),
                             unit_proc: vec![None; nu],
                             units_left: nu,
-                            failed: false,
+                            dead: false,
                         };
                         // Enqueue units with no dependencies.
                         for u in 0..nu {
@@ -151,17 +421,15 @@ impl Driver {
                         }
                         reqs.insert(id, st);
                         // Open-loop arrivals re-arm immediately.
-                        if issued[s] < quota {
-                            match self.apps[s].mode {
-                                ArrivalMode::Periodic(p) => {
-                                    self.backend.arm_timer(now + p, key)
-                                }
-                                ArrivalMode::Poisson(rate) => {
-                                    let gap = rng.exp(rate / 1e3);
-                                    self.backend.arm_timer(now + gap, key);
-                                }
-                                ArrivalMode::ClosedLoop => {}
-                            }
+                        if sess[s].issued < quota {
+                            arm_arrival_timer(
+                                self.backend.as_mut(),
+                                &mut rng,
+                                s,
+                                &mut sess[s],
+                                now,
+                                false,
+                            );
                         }
                     }
                 }
@@ -175,34 +443,41 @@ impl Driver {
                         // Payload execution failed: abort the request
                         // (mirroring the failure sweep) so it is reported
                         // as failed, never as completed-within-SLO.
-                        if let Some(st) = reqs.get_mut(&done.req) {
-                            if !st.failed {
-                                st.failed = true;
-                                failed[st.session] += 1;
-                                if st.slo_ms.is_some() {
-                                    slo_n[st.session] += 1;
-                                }
-                                ready.retain(|t| t.req != done.req);
-                                // Not-yet-dispatched units will never run;
-                                // only units still resident on processors
-                                // (plus this one, decremented below) keep
-                                // the request alive.
-                                let running = self.backend.running_units(done.req);
-                                st.units_left = st.units_left.min(running + 1);
-                                if matches!(
-                                    self.apps[st.session].mode,
-                                    ArrivalMode::ClosedLoop
-                                ) && issued[st.session] < quota
-                                {
-                                    let key = st.session as u64;
-                                    self.backend.arm_timer(now, key);
-                                }
+                        let newly_dead = match reqs.get_mut(&done.req) {
+                            Some(st) if !st.dead => {
+                                st.dead = true;
+                                Some((st.session, st.slo_ms.is_some(), st.epoch))
                             }
+                            _ => None,
+                        };
+                        if let Some((s, has_slo, epoch)) = newly_dead {
+                            sess[s].failed += 1;
+                            if has_slo {
+                                sess[s].slo_n += 1;
+                            }
+                            ready.retain(|t| t.req != done.req);
+                            // Not-yet-dispatched units will never run;
+                            // only units still resident on processors
+                            // (plus this one, decremented below) keep
+                            // the request alive.
+                            let running = self.backend.running_units(done.req);
+                            // +1: this event's own completion is
+                            // decremented just below, in the shared
+                            // retirement block.
+                            clamp_dead_request(&mut reqs, done.req, running + 1);
+                            rearm_closed_loop(
+                                self.backend.as_mut(),
+                                &sess[s],
+                                s,
+                                epoch,
+                                quota,
+                                now,
+                            );
                         }
                     }
                     let finished = {
                         let Some(st) = reqs.get_mut(&done.req) else { continue };
-                        if st.failed {
+                        if st.dead {
                             // Aborted while running; drop silently.
                             st.units_left -= 1;
                             st.units_left == 0
@@ -241,25 +516,28 @@ impl Driver {
                     if finished {
                         let st = reqs.remove(&done.req).unwrap();
                         let s = st.session;
-                        if !st.failed {
+                        if !st.dead {
                             let latency = now - st.arrival;
-                            completed[s] += 1;
-                            lat[s].add(latency);
+                            sess[s].completed += 1;
+                            sess[s].lat.add(latency);
                             if let Some(slo) = st.slo_ms {
-                                slo_n[s] += 1;
+                                sess[s].slo_n += 1;
                                 if latency <= slo {
-                                    slo_ok[s] += 1;
+                                    sess[s].slo_ok += 1;
                                 }
                             }
                             // Failed requests already re-armed their
                             // session at abort time — re-arming here too
                             // would double the closed loop and snowball
                             // under sustained overload.
-                            if matches!(self.apps[s].mode, ArrivalMode::ClosedLoop)
-                                && issued[s] < quota
-                            {
-                                self.backend.arm_timer(now, s as u64);
-                            }
+                            rearm_closed_loop(
+                                self.backend.as_mut(),
+                                &sess[s],
+                                s,
+                                st.epoch,
+                                quota,
+                                now,
+                            );
                         }
                     }
                 }
@@ -267,7 +545,7 @@ impl Driver {
                     // Failure sweep: abort requests far past their budget.
                     let mut aborted: Vec<ReqId> = Vec::new();
                     for (&id, st) in reqs.iter_mut() {
-                        if st.failed {
+                        if st.dead {
                             continue;
                         }
                         let budget = st
@@ -275,10 +553,10 @@ impl Driver {
                             .unwrap_or(self.plans[st.session].est_total_ms * 3.0)
                             * self.cfg.fail_mult;
                         if now - st.arrival > budget {
-                            st.failed = true;
-                            failed[st.session] += 1;
+                            st.dead = true;
+                            sess[st.session].failed += 1;
                             if st.slo_ms.is_some() {
-                                slo_n[st.session] += 1;
+                                sess[st.session].slo_n += 1;
                             }
                             aborted.push(id);
                         }
@@ -291,25 +569,22 @@ impl Driver {
                         ready.retain(|t| !aborted.contains(&t.req));
                         // Closed-loop sessions re-arm after an abort.
                         for id in aborted {
-                            let st = &reqs[&id];
-                            let s = st.session;
+                            let (s, epoch) = {
+                                let st = &reqs[&id];
+                                (st.session, st.epoch)
+                            };
                             let running = self.backend.running_units(id);
-                            let pending_units = st.units_left > running;
-                            if matches!(self.apps[s].mode, ArrivalMode::ClosedLoop)
-                                && issued[s] < quota
-                            {
-                                self.backend.arm_timer(now, s as u64);
-                            }
-                            if pending_units {
-                                // Unscheduled units will never run; account
-                                // them as done so the request can retire.
-                                if let Some(stm) = reqs.get_mut(&id) {
-                                    stm.units_left = running;
-                                    if stm.units_left == 0 {
-                                        reqs.remove(&id);
-                                    }
-                                }
-                            }
+                            rearm_closed_loop(
+                                self.backend.as_mut(),
+                                &sess[s],
+                                s,
+                                epoch,
+                                quota,
+                                now,
+                            );
+                            // Unscheduled units will never run; account
+                            // them as done so the request can retire.
+                            clamp_dead_request(&mut reqs, id, running);
                         }
                     }
                 }
@@ -427,11 +702,14 @@ impl Driver {
                 }
             }
 
-            // Finite workloads end once every session's quota has retired.
+            // Finite workloads end once every session's quota has retired
+            // (stopped sessions are done regardless of quota progress) and
+            // no pending admission can create new work.
             if self.cfg.max_requests.is_some()
+                && pending_starts == 0
                 && reqs.is_empty()
                 && ready.is_empty()
-                && issued.iter().all(|&n| n >= quota)
+                && sess.iter().all(|se| se.stopped || se.issued >= quota)
             {
                 break;
             }
@@ -447,18 +725,41 @@ impl Driver {
         } else {
             self.cfg.duration_ms
         };
-        let sessions: Vec<SessionStats> = (0..napps)
-            .map(|s| SessionStats {
-                model: self.apps[s].model.clone(),
-                completed: completed[s],
-                failed: failed[s],
-                latency: lat[s].clone(),
-                fps: completed[s] as f64 / (duration / 1e3),
-                slo_satisfaction: if slo_n[s] > 0 {
-                    Some(slo_ok[s] as f64 / slo_n[s] as f64)
-                } else {
-                    None
-                },
+        // Requests still open when the run ended count as cancelled, so
+        // conservation (issued == completed + failed + cancelled) holds
+        // exactly, per session, on every run.
+        for st in reqs.into_values() {
+            if !st.dead {
+                sess[st.session].cancelled += 1;
+            }
+        }
+        let sessions: Vec<SessionStats> = sess
+            .iter()
+            .map(|se| {
+                let start = se.start_ms.min(duration);
+                let end = se.stop_ms.unwrap_or(duration).min(duration);
+                let active_ms = if se.started { (end - start).max(0.0) } else { 0.0 };
+                SessionStats {
+                    model: se.app.model.clone(),
+                    issued: se.issued,
+                    completed: se.completed,
+                    failed: se.failed,
+                    cancelled: se.cancelled,
+                    latency: se.lat.clone(),
+                    fps: if active_ms > 0.0 {
+                        se.completed as f64 / (active_ms / 1e3)
+                    } else {
+                        0.0
+                    },
+                    slo_satisfaction: if se.slo_n > 0 {
+                        Some(se.slo_ok as f64 / se.slo_n as f64)
+                    } else {
+                        None
+                    },
+                    start_ms: se.start_ms,
+                    stop_ms: se.stop_ms,
+                    active_ms,
+                }
             })
             .collect();
         let be = self.backend.finish(duration);
@@ -474,6 +775,7 @@ impl Driver {
             monitor_refreshes: monitor.refresh_count(),
             exec_errors: be.exec_errors,
             assignments: assignments_trace,
+            arrivals: arrivals_trace,
         }
     }
 }

@@ -22,7 +22,8 @@
 //! attainment, processor stats, assignment trace).
 
 use super::{
-    App, ArrivalMode, Driver, ExecutionBackend, SimBackend, SimConfig, ThreadPoolBackend,
+    App, ArrivalMode, Driver, EventKind, ExecutionBackend, SessionEvent, SimBackend,
+    SimConfig, ThreadPoolBackend,
 };
 use crate::analyzer::tuner;
 use crate::exec::threadpool::SessionWork;
@@ -73,6 +74,7 @@ pub struct Server {
     sched: SchedChoice,
     apps: Vec<App>,
     work: Vec<Option<SessionWork>>,
+    events: Vec<SessionEvent>,
     cfg: SimConfig,
     window_size: Option<usize>,
     pace: f64,
@@ -86,6 +88,7 @@ impl Server {
             sched: SchedChoice::Default,
             apps: Vec::new(),
             work: Vec::new(),
+            events: Vec::new(),
             cfg: SimConfig::default(),
             window_size: None,
             pace: 1.0,
@@ -147,6 +150,34 @@ impl Server {
         self
     }
 
+    /// Attach session-lifecycle events (mid-run admission/retirement and
+    /// rate changes). Session ids refer to the sessions added so far plus
+    /// any added later; `build()` rejects events referencing a session
+    /// that was never declared.
+    pub fn events(mut self, events: Vec<SessionEvent>) -> Self {
+        self.events.extend(events);
+        self
+    }
+
+    /// Load a dynamic [`Scenario`](crate::scenario::Scenario): its
+    /// sessions and lifecycle events replace nothing — they are appended,
+    /// so a scenario can run on top of statically-declared sessions.
+    pub fn scenario(mut self, sc: &crate::scenario::Scenario) -> Self {
+        let base = self.apps.len();
+        match sc.compile_with_base(base) {
+            Ok((apps, events)) => {
+                self = self.apps(apps);
+                self.events.extend(events);
+            }
+            Err(e) => {
+                if self.err.is_none() {
+                    self.err = Some(format!("scenario '{}': {e}", sc.name));
+                }
+            }
+        }
+        self
+    }
+
     /// Run horizon in ms (simulated or wall-clock).
     pub fn duration_ms(mut self, ms: f64) -> Self {
         self.cfg.duration_ms = ms;
@@ -193,6 +224,21 @@ impl Server {
         if self.apps.is_empty() {
             bail!("server has no sessions: add at least one with .session(model, mode, slo)");
         }
+        for ev in &self.events {
+            let s = match ev.kind {
+                EventKind::Start { session }
+                | EventKind::Stop { session }
+                | EventKind::Rate { session, .. } => session,
+            };
+            if s >= self.apps.len() {
+                bail!(
+                    "lifecycle event at {} ms references unknown session {s} \
+                     ({} sessions declared)",
+                    ev.at_ms,
+                    self.apps.len()
+                );
+            }
+        }
         let scheduler: Box<dyn Scheduler> = match self.sched {
             SchedChoice::Custom(s) => s,
             SchedChoice::Named(n) => scheduler_by_name(&n, &self.soc, self.apps.len())?,
@@ -217,6 +263,7 @@ impl Server {
             scheduler,
             soc: self.soc,
             work: self.work,
+            events: self.events,
             pace: self.pace,
         })
     }
@@ -225,7 +272,9 @@ impl Server {
     pub fn run_sim(self) -> Result<SimReport> {
         let b = self.build()?;
         let backend = Box::new(SimBackend::new(b.soc, b.cfg.clone()));
-        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend).run())
+        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend)
+            .events(b.events)
+            .run())
     }
 
     /// Serve the workload wall-clock on the worker-pool backend.
@@ -237,13 +286,17 @@ impl Server {
             .map(|w| w.unwrap_or_else(|| SessionWork { stages: Vec::new(), input: Vec::new() }))
             .collect();
         let backend = Box::new(ThreadPoolBackend::new(b.soc, b.cfg.clone(), work, b.pace));
-        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend).run())
+        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend)
+            .events(b.events)
+            .run())
     }
 
     /// Run on a caller-supplied backend (extension point).
     pub fn run_backend(self, backend: Box<dyn ExecutionBackend>) -> Result<SimReport> {
         let b = self.build()?;
-        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend).run())
+        Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend)
+            .events(b.events)
+            .run())
     }
 }
 
@@ -255,5 +308,6 @@ struct Built {
     scheduler: Box<dyn Scheduler>,
     soc: SocSpec,
     work: Vec<Option<SessionWork>>,
+    events: Vec<SessionEvent>,
     pace: f64,
 }

@@ -29,12 +29,28 @@ enum Ev {
     Tick,
 }
 
-/// Heap entry ordered by (time, sequence); the payload is not compared.
+/// Heap entry ordered by (time, class, sequence). Timers sort *after*
+/// completions and ticks at the same instant: a driver-armed timer always
+/// observes the state changes of same-time events, exactly as when a
+/// closed loop arms it while handling the triggering completion. This is
+/// what makes a recorded run and its replay (which arms the same timers
+/// much earlier, from the replay schedule) process equal-time events in
+/// the same order — the foundation of trace record/replay
+/// (`scenario::trace`).
 #[derive(Debug)]
 struct QEv {
     t: OrdF64,
     seq: u64,
     ev: Ev,
+}
+impl QEv {
+    /// Same-instant ordering class: non-timers first.
+    fn class(&self) -> u8 {
+        match self.ev {
+            Ev::Timer(_) => 1,
+            _ => 0,
+        }
+    }
 }
 impl PartialEq for QEv {
     fn eq(&self, other: &Self) -> bool {
@@ -49,7 +65,10 @@ impl PartialOrd for QEv {
 }
 impl Ord for QEv {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.cmp(&other.t).then(self.seq.cmp(&other.seq))
+        self.t
+            .cmp(&other.t)
+            .then(self.class().cmp(&other.class()))
+            .then(self.seq.cmp(&other.seq))
     }
 }
 

@@ -23,6 +23,9 @@
 //!   pool), and the [`exec::Server`] builder that fronts them;
 //! * [`sim`] — the evaluation entry point over the sim backend, plus the
 //!   shared report types (timelines, per-session/processor statistics);
+//! * [`scenario`] — the open-system workload layer: timed session
+//!   churn/burst/phase scenarios (JSON-serializable, seed-generatable)
+//!   and run-trace record/replay;
 //! * [`coordinator`] / [`runtime`] — the AOT-artifact path: HLO stages
 //!   compiled through PJRT (behind the `pjrt` feature) and the legacy
 //!   probe-serving coordinator, with Python never on the request path;
@@ -44,6 +47,7 @@ pub mod analyzer;
 pub mod sched;
 pub mod exec;
 pub mod sim;
+pub mod scenario;
 pub mod workload;
 pub mod metrics;
 pub mod coordinator;

@@ -6,9 +6,12 @@
 //!   tune <model>          sweep window sizes and report the optimum
 //!   simulate              run a custom workload under a scheduler
 //!   serve                 scheduler-driven serving (exec::Server): pick a
-//!                         --sched and --workload, run wall-clock on the
-//!                         thread pool or on the sim backend; --probe keeps
-//!                         the legacy AOT numerics-probe path (PJRT)
+//!                         --sched and --workload or a dynamic --scenario,
+//!                         run wall-clock on the thread pool or on the sim
+//!                         backend; --record/--replay capture and re-run
+//!                         traces; --probe keeps the legacy AOT
+//!                         numerics-probe path (PJRT)
+//!   scenario              list/show/generate dynamic scenarios
 //!   models | socs         list the zoo / SoC presets
 
 use adms::analyzer;
@@ -47,7 +50,8 @@ fn env_logger_lite() {
     let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(log::LevelFilter::Info));
 }
 
-const USAGE: &str = "adms <experiment|partition|tune|simulate|serve|models|socs> [options]";
+const USAGE: &str =
+    "adms <experiment|partition|tune|simulate|serve|scenario|models|socs> [options]";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first().map(String::as_str) else {
@@ -62,6 +66,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "tune" => cmd_tune(rest),
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
+        "scenario" => cmd_scenario(rest),
         "models" => {
             for m in zoo::MODEL_NAMES {
                 let g = zoo::by_name(m).unwrap();
@@ -247,12 +252,16 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     use adms::exec::Server;
+    use adms::scenario::RunTrace;
     let specs = [
         OptSpec { name: "sched", takes_value: true, help: "vanilla|band|adms|pinned", default: Some("adms") },
-        OptSpec { name: "workload", takes_value: true, help: "frs|ros or comma-separated zoo models", default: Some("frs") },
+        OptSpec { name: "workload", takes_value: true, help: "frs|ros|stress[:n]|copies:<model>[:n]|slo[:mult] or comma-separated zoo models", default: Some("frs") },
+        OptSpec { name: "scenario", takes_value: true, help: "dynamic scenario: a name (adms scenario list) or a JSON file; overrides --workload/--slo", default: None },
+        OptSpec { name: "record", takes_value: true, help: "write the run trace (arrivals + dispatches) to this JSON file", default: None },
+        OptSpec { name: "replay", takes_value: true, help: "re-run a recorded trace file (uses the trace's scheduler, seed, backend, horizon)", default: None },
         OptSpec { name: "backend", takes_value: true, help: "threadpool (wall-clock) | sim", default: Some("threadpool") },
         OptSpec { name: "soc", takes_value: true, help: "target SoC", default: Some("dimensity9000") },
-        OptSpec { name: "requests", takes_value: true, help: "requests per session", default: Some("64") },
+        OptSpec { name: "requests", takes_value: true, help: "requests per session; 0 = unbounded (default 64 for --workload, unbounded for --scenario so churn plays out to --duration)", default: None },
         OptSpec { name: "duration", takes_value: true, help: "horizon, ms", default: Some("60000") },
         OptSpec { name: "slo", takes_value: true, help: "per-request SLO in ms (all sessions)", default: None },
         OptSpec { name: "pace", takes_value: true, help: "synthetic payload pace multiplier", default: Some("1") },
@@ -265,55 +274,129 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = parse(argv, &specs)?;
     if args.flag("help") {
         println!("{}", render_help("adms serve [options]", &specs));
+        println!("named scenarios: {}", adms::scenario::SCENARIO_NAMES.join(", "));
         return Ok(());
     }
     if args.flag("probe") {
         return serve_probe_legacy(&args);
     }
 
-    let soc = soc_by_name(&args.get_or("soc", "dimensity9000"))
-        .ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
+    let soc_name = args.get_or("soc", "dimensity9000");
+    let soc = soc_by_name(&soc_name).ok_or_else(|| anyhow::anyhow!("unknown soc"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let pace = args.get_f64("pace", 1.0)?;
+
+    // Replay path: the trace dictates workload, scheduler, seed, SoC,
+    // and backend.
+    if let Some(path) = args.get("replay") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--replay '{path}': {e}"))?;
+        let trace = RunTrace::from_json_str(&text)?;
+        let soc = soc_by_name(&trace.soc)
+            .ok_or_else(|| anyhow::anyhow!("trace references unknown soc '{}'", trace.soc))?;
+        let sc = trace.to_replay_scenario();
+        let (apps, events) = sc.compile()?;
+        let server = Server::new(soc)
+            .scheduler_name(&trace.scheduler)
+            .apps(apps.clone())
+            .events(events.clone())
+            .duration_ms(trace.duration_ms)
+            .seed(trace.seed)
+            .pace(pace);
+        let report = match trace.backend.as_str() {
+            "sim" => server.run_sim()?,
+            "threadpool" => server.run_threadpool()?,
+            other => bail!("trace records unknown backend '{other}' (sim|threadpool)"),
+        };
+        print_serve_report(&report);
+        let verdict = if report.assignments == trace.assignments {
+            "IDENTICAL to the recording"
+        } else {
+            "DIVERGED from the recording"
+        };
+        println!(
+            "replayed {} arrivals, {} dispatches — assignment trace {verdict}",
+            report.arrivals.len(),
+            report.assignments.len()
+        );
+        maybe_record(&args, &trace.soc, &apps, &events, &report, trace.seed)?;
+        return Ok(());
+    }
+
     // Scheduler-name validation happens in Server (exec::scheduler_by_name).
     let sched = args.get_or("sched", "adms");
-    let wl = args.get_or("workload", "frs");
-    let mut apps = match adms::workload::by_name(&wl) {
-        Some(apps) => apps,
-        None => {
-            let mut apps = Vec::new();
-            for m in wl.split(',').filter(|s| !s.is_empty()) {
-                if zoo::by_name(m).is_none() {
-                    bail!(
-                        "unknown workload/model '{m}' (named scenarios: {})",
-                        adms::workload::WORKLOAD_NAMES.join(", ")
-                    );
-                }
-                apps.push(App::closed_loop(m));
+    let mut events = Vec::new();
+    let apps = if let Some(scn) = args.get("scenario") {
+        let sc = match adms::scenario::by_name(scn) {
+            Some(sc) => sc,
+            None => {
+                let text = std::fs::read_to_string(scn).map_err(|e| {
+                    anyhow::anyhow!(
+                        "--scenario '{scn}': not a named scenario ({}) and not a readable \
+                         file: {e}",
+                        adms::scenario::SCENARIO_NAMES.join(", ")
+                    )
+                })?;
+                adms::scenario::Scenario::from_json_str(&text)?
             }
-            apps
+        };
+        let (apps, ev) = sc.compile()?;
+        events = ev;
+        apps
+    } else {
+        let wl = args.get_or("workload", "frs");
+        let mut apps = match adms::workload::by_name(&wl, &soc) {
+            Some(apps) => apps,
+            None => {
+                let mut apps = Vec::new();
+                for m in wl.split(',').filter(|s| !s.is_empty()) {
+                    if zoo::by_name(m).is_none() {
+                        bail!(
+                            "unknown workload/model '{m}' (named workloads: {})",
+                            adms::workload::WORKLOAD_NAMES.join(", ")
+                        );
+                    }
+                    apps.push(App::closed_loop(m));
+                }
+                apps
+            }
+        };
+        if let Some(slo) = args.get("slo") {
+            let slo: f64 = slo
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--slo: expected a number, got '{slo}'"))?;
+            for a in &mut apps {
+                a.slo_ms = Some(slo);
+            }
         }
+        apps
     };
-    if let Some(slo) = args.get("slo") {
-        let slo: f64 = slo
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--slo: expected a number, got '{slo}'"))?;
-        for a in &mut apps {
-            a.slo_ms = Some(slo);
-        }
-    }
-    let server = Server::new(soc)
+    let mut server = Server::new(soc)
         .scheduler_name(&sched)
-        .apps(apps)
-        .requests(args.get_u64("requests", 64)?)
+        .apps(apps.clone())
+        .events(events.clone())
         .duration_ms(args.get_f64("duration", 60_000.0)?)
-        .seed(args.get_u64("seed", 42)?)
-        .pace(args.get_f64("pace", 1.0)?);
+        .seed(seed)
+        .pace(pace);
+    // Scenarios control their own lifecycle: an implicit quota would end
+    // the run before the declared churn plays out, so only an explicit
+    // --requests bounds them. Plain workloads keep the finite default.
+    let requests = args.get_u64("requests", if args.get("scenario").is_some() { 0 } else { 64 })?;
+    if requests > 0 {
+        server = server.requests(requests);
+    }
     let backend = args.get_or("backend", "threadpool");
     let report = match backend.as_str() {
         "threadpool" => server.run_threadpool()?,
         "sim" => server.run_sim()?,
         other => bail!("unknown backend '{other}' (threadpool|sim)"),
     };
+    print_serve_report(&report);
+    maybe_record(&args, &soc_name, &apps, &events, &report, seed)?;
+    Ok(())
+}
 
+fn print_serve_report(report: &adms::sim::SimReport) {
     println!(
         "served with scheduler '{}' on backend '{}' ({} sessions)",
         report.scheduler,
@@ -321,15 +404,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         report.sessions.len()
     );
     println!(
-        "{:20} {:>9} {:>7} {:>9} {:>9} {:>9} {:>8}",
-        "session", "completed", "failed", "p50 ms", "p95 ms", "mean ms", "SLO %"
+        "{:20} {:>7} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9} {:>8}",
+        "session", "issued", "completed", "failed", "cancel", "p50 ms", "p95 ms", "mean ms",
+        "SLO %"
     );
     for s in &report.sessions {
         println!(
-            "{:20} {:>9} {:>7} {:>9} {:>9} {:>9} {:>8}",
+            "{:20} {:>7} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9} {:>8}",
             s.model,
+            s.issued,
             s.completed,
             s.failed,
+            s.cancelled,
             fnum(s.latency.p50(), 2),
             fnum(s.latency.p95(), 2),
             fnum(s.latency.mean(), 2),
@@ -339,9 +425,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         );
     }
     println!(
-        "total: {} completed, {} failed, {} exec errors, {} dispatches traced",
+        "total: {} issued, {} completed, {} failed, {} cancelled, {} exec errors, \
+         {} dispatches traced",
+        report.total_issued(),
         report.total_completed(),
         report.total_failed(),
+        report.total_cancelled(),
         report.exec_errors,
         report.assignments.len()
     );
@@ -353,7 +442,99 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             p.dispatches
         );
     }
+}
+
+/// Honor `--record <file>`: persist the run trace for later `--replay`.
+fn maybe_record(
+    args: &adms::util::cli::Args,
+    soc_name: &str,
+    apps: &[App],
+    events: &[adms::exec::SessionEvent],
+    report: &adms::sim::SimReport,
+    seed: u64,
+) -> Result<()> {
+    if let Some(path) = args.get("record") {
+        let trace = adms::scenario::RunTrace::record(soc_name, apps, events, report, seed);
+        std::fs::write(path, trace.to_json_string())
+            .map_err(|e| anyhow::anyhow!("--record '{path}': {e}"))?;
+        println!(
+            "recorded {} arrivals + {} dispatches to {path} (re-run: adms serve --replay {path})",
+            trace.arrivals.len(),
+            trace.assignments.len()
+        );
+    }
     Ok(())
+}
+
+fn cmd_scenario(argv: &[String]) -> Result<()> {
+    use adms::scenario::{by_name, describe, generate, GenConfig, Scenario, SCENARIO_NAMES};
+    let specs = [
+        OptSpec { name: "seed", takes_value: true, help: "gen: rng seed", default: Some("42") },
+        OptSpec { name: "sessions", takes_value: true, help: "gen: number of sessions", default: Some("4") },
+        OptSpec { name: "duration", takes_value: true, help: "gen: event horizon, ms", default: Some("20000") },
+        OptSpec { name: "churn", takes_value: true, help: "gen: per-session stop probability", default: Some("0.5") },
+        OptSpec { name: "rate-change", takes_value: true, help: "gen: per-session rate-change probability", default: Some("0.5") },
+        OptSpec { name: "out", takes_value: true, help: "write JSON here instead of stdout", default: None },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    let usage = "adms scenario <list|show <name|file>|gen> [options]";
+    if args.flag("help") {
+        println!("{}", render_help(usage, &specs));
+        return Ok(());
+    }
+    let emit = |sc: &Scenario| -> Result<()> {
+        let json = sc.to_json_string();
+        match args.get("out") {
+            Some(path) => {
+                std::fs::write(path, &json)
+                    .map_err(|e| anyhow::anyhow!("--out '{path}': {e}"))?;
+                println!(
+                    "wrote scenario '{}' ({} sessions, {} events) to {path}",
+                    sc.name,
+                    sc.num_sessions(),
+                    sc.events.len()
+                );
+            }
+            None => println!("{json}"),
+        }
+        Ok(())
+    };
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => {
+            for n in SCENARIO_NAMES {
+                println!("{n:12} {}", describe(n));
+            }
+            println!("\nrun one:  adms serve --scenario <name> --backend sim");
+            Ok(())
+        }
+        Some("show") => {
+            let Some(name) = args.positional.get(1) else {
+                bail!("usage: adms scenario show <name|file>");
+            };
+            let sc = match by_name(name) {
+                Some(sc) => sc,
+                None => {
+                    let text = std::fs::read_to_string(name)
+                        .map_err(|e| anyhow::anyhow!("'{name}': not a named scenario and not a readable file: {e}"))?;
+                    Scenario::from_json_str(&text)?
+                }
+            };
+            emit(&sc)
+        }
+        Some("gen") => {
+            let cfg = GenConfig {
+                sessions: args.get_usize("sessions", 4)?,
+                duration_ms: args.get_f64("duration", 20_000.0)?,
+                churn: args.get_f64("churn", 0.5)?,
+                rate_change: args.get_f64("rate-change", 0.5)?,
+            };
+            let sc = generate(args.get_u64("seed", 42)?, &cfg);
+            sc.compile()?; // validate before emitting
+            emit(&sc)
+        }
+        Some(other) => bail!("unknown scenario command '{other}'\nusage: {usage}"),
+    }
 }
 
 /// The pre-0.2 probe path: round-robin the AOT numerics probe over a

@@ -144,4 +144,57 @@ mod tests {
         assert_eq!(s[0].temp_c, 2.0);
         assert_eq!(m.refresh_count(), 2);
     }
+
+    /// Staleness contract under arbitrary sampling patterns: after every
+    /// `sample(now, ..)` the returned snapshot lags the true state by
+    /// *less than* `cache_interval_ms` (a lag of exactly the interval
+    /// triggers a refresh), and `refresh_count` equals the number of
+    /// cache misses. The refresh closure encodes its capture time in
+    /// `temp_c`, so the snapshot's age is directly observable.
+    #[test]
+    fn prop_staleness_bounded_and_refreshes_counted() {
+        use crate::testing::prop::{check, iters};
+        check("monitor staleness < cache interval", iters(200), |g| {
+            let interval = g.f64(0.5, 120.0);
+            let mut m = HardwareMonitor::new(interval);
+            let mut now = 0.0f64;
+            let mut expected_refreshes = 0u64;
+            let mut last_refresh = f64::NEG_INFINITY;
+            let steps = g.usize(1..40);
+            for _ in 0..steps {
+                // Gaps straddle the interval so both hit and miss paths
+                // are exercised, including zero-gap resampling.
+                now += if g.chance(0.2) { 0.0 } else { g.f64(0.0, interval * 1.5) };
+                // Model of the cache-miss rule (same expression the
+                // monitor evaluates, so float ties agree).
+                let miss = now - last_refresh >= interval || expected_refreshes == 0;
+                if miss {
+                    expected_refreshes += 1;
+                    last_refresh = now;
+                }
+                let t = now;
+                // Copy the capture time out so the borrow of `m` ends
+                // before `staleness()` is queried.
+                let captured_at = m.sample(now, move || view(t))[0].temp_c;
+                assert!(
+                    now - captured_at < interval || captured_at == now,
+                    "snapshot lags by {} ≥ interval {interval}",
+                    now - captured_at
+                );
+                assert_eq!(
+                    m.staleness(now),
+                    now - captured_at,
+                    "staleness() disagrees with the snapshot's age"
+                );
+                if miss {
+                    assert_eq!(captured_at, now, "cache miss must resample now");
+                }
+            }
+            assert_eq!(
+                m.refresh_count(),
+                expected_refreshes,
+                "refresh_count != number of cache misses"
+            );
+        });
+    }
 }

@@ -1,0 +1,222 @@
+//! JSON (de)serialization of scenarios, apps, and arrival modes via
+//! [`crate::util::json`], so dynamic workloads are shareable regression
+//! artifacts (`adms serve --scenario file.json`).
+//!
+//! Format:
+//!
+//! ```json
+//! {
+//!   "name": "churn_mix",
+//!   "events": [
+//!     {"at_ms": 0, "type": "session_start",
+//!      "app": {"model": "mobilenet_v1", "slo_ms": null,
+//!              "arrival": {"mode": "closed_loop"}}},
+//!     {"at_ms": 4000, "type": "rate_change", "session": 0,
+//!      "arrival": {"mode": "bursty", "rate_rps": 20,
+//!                  "burst_factor": 4, "period_ms": 1000}},
+//!     {"at_ms": 9000, "type": "session_stop", "session": 0}
+//!   ]
+//! }
+//! ```
+
+use super::{Scenario, ScenarioEvent, TimedEvent};
+use crate::exec::{App, ArrivalMode};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+pub fn mode_to_json(mode: &ArrivalMode) -> Json {
+    match mode {
+        ArrivalMode::ClosedLoop => Json::obj(vec![("mode", Json::Str("closed_loop".into()))]),
+        ArrivalMode::Periodic(p) => Json::obj(vec![
+            ("mode", Json::Str("periodic".into())),
+            ("period_ms", Json::Num(*p)),
+        ]),
+        ArrivalMode::Poisson(r) => Json::obj(vec![
+            ("mode", Json::Str("poisson".into())),
+            ("rate_rps", Json::Num(*r)),
+        ]),
+        ArrivalMode::Bursty { rate_rps, burst_factor, period_ms } => Json::obj(vec![
+            ("mode", Json::Str("bursty".into())),
+            ("rate_rps", Json::Num(*rate_rps)),
+            ("burst_factor", Json::Num(*burst_factor)),
+            ("period_ms", Json::Num(*period_ms)),
+        ]),
+        ArrivalMode::Replay(times) => Json::obj(vec![
+            ("mode", Json::Str("replay".into())),
+            ("times_ms", Json::Arr(times.iter().map(|&t| Json::Num(t)).collect())),
+        ]),
+    }
+}
+
+pub fn mode_from_json(v: &Json) -> Result<ArrivalMode> {
+    let num = |key: &str| {
+        v.get(key)
+            .as_f64()
+            .ok_or_else(|| anyhow!("arrival: missing numeric '{key}'"))
+    };
+    match v
+        .get("mode")
+        .as_str()
+        .ok_or_else(|| anyhow!("arrival: missing 'mode'"))?
+    {
+        "closed_loop" => Ok(ArrivalMode::ClosedLoop),
+        "periodic" => Ok(ArrivalMode::Periodic(num("period_ms")?)),
+        "poisson" => Ok(ArrivalMode::Poisson(num("rate_rps")?)),
+        "bursty" => Ok(ArrivalMode::Bursty {
+            rate_rps: num("rate_rps")?,
+            burst_factor: num("burst_factor")?,
+            period_ms: num("period_ms")?,
+        }),
+        "replay" => {
+            let times = v
+                .get("times_ms")
+                .as_arr()
+                .ok_or_else(|| anyhow!("replay arrival: missing 'times_ms' array"))?
+                .iter()
+                .map(|t| t.as_f64().ok_or_else(|| anyhow!("replay arrival: non-numeric time")))
+                .collect::<Result<Vec<f64>>>()?;
+            Ok(ArrivalMode::Replay(Arc::new(times)))
+        }
+        other => bail!("unknown arrival mode '{other}'"),
+    }
+}
+
+pub fn app_to_json(app: &App) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(app.model.clone())),
+        ("slo_ms", app.slo_ms.map(Json::Num).unwrap_or(Json::Null)),
+        ("arrival", mode_to_json(&app.mode)),
+    ])
+}
+
+pub fn app_from_json(v: &Json) -> Result<App> {
+    Ok(App {
+        model: v
+            .get("model")
+            .as_str()
+            .ok_or_else(|| anyhow!("app: missing 'model'"))?
+            .to_string(),
+        slo_ms: v.get("slo_ms").as_f64(),
+        mode: mode_from_json(v.get("arrival"))?,
+    })
+}
+
+pub fn scenario_to_json(sc: &Scenario) -> Json {
+    let events: Vec<Json> = sc
+        .events
+        .iter()
+        .map(|te| match &te.event {
+            ScenarioEvent::SessionStart { app } => Json::obj(vec![
+                ("at_ms", Json::Num(te.at_ms)),
+                ("type", Json::Str("session_start".into())),
+                ("app", app_to_json(app)),
+            ]),
+            ScenarioEvent::SessionStop { session } => Json::obj(vec![
+                ("at_ms", Json::Num(te.at_ms)),
+                ("type", Json::Str("session_stop".into())),
+                ("session", Json::Num(*session as f64)),
+            ]),
+            ScenarioEvent::RateChange { session, mode } => Json::obj(vec![
+                ("at_ms", Json::Num(te.at_ms)),
+                ("type", Json::Str("rate_change".into())),
+                ("session", Json::Num(*session as f64)),
+                ("arrival", mode_to_json(mode)),
+            ]),
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::Str(sc.name.clone())),
+        ("events", Json::Arr(events)),
+    ])
+}
+
+pub fn scenario_from_json(v: &Json) -> Result<Scenario> {
+    let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
+    let evs = v
+        .get("events")
+        .as_arr()
+        .ok_or_else(|| anyhow!("scenario: missing 'events' array"))?;
+    let mut events = Vec::new();
+    for (i, e) in evs.iter().enumerate() {
+        let at_ms = e
+            .get("at_ms")
+            .as_f64()
+            .ok_or_else(|| anyhow!("event {i}: missing numeric 'at_ms'"))?;
+        let session = || {
+            e.get("session")
+                .as_u64()
+                .map(|s| s as usize)
+                .ok_or_else(|| anyhow!("event {i}: missing integer 'session'"))
+        };
+        let event = match e
+            .get("type")
+            .as_str()
+            .ok_or_else(|| anyhow!("event {i}: missing 'type'"))?
+        {
+            "session_start" => ScenarioEvent::SessionStart { app: app_from_json(e.get("app"))? },
+            "session_stop" => ScenarioEvent::SessionStop { session: session()? },
+            "rate_change" => ScenarioEvent::RateChange {
+                session: session()?,
+                mode: mode_from_json(e.get("arrival"))?,
+            },
+            other => bail!("event {i}: unknown type '{other}'"),
+        };
+        events.push(TimedEvent { at_ms, event });
+    }
+    Ok(Scenario { name, events })
+}
+
+impl Scenario {
+    /// Serialize as pretty-printed JSON.
+    pub fn to_json_string(&self) -> String {
+        scenario_to_json(self).to_pretty()
+    }
+
+    /// Parse from a JSON document.
+    pub fn from_json_str(s: &str) -> Result<Scenario> {
+        scenario_from_json(&parse(s).map_err(|e| anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::{by_name, SCENARIO_NAMES};
+
+    #[test]
+    fn named_scenarios_roundtrip_through_json() {
+        for n in SCENARIO_NAMES {
+            let sc = by_name(n).unwrap();
+            let s = sc.to_json_string();
+            let back = Scenario::from_json_str(&s).unwrap_or_else(|e| panic!("{n}: {e}"));
+            assert_eq!(back.name, sc.name);
+            assert_eq!(back.events.len(), sc.events.len());
+            // Second serialization is byte-identical (BTreeMap ordering).
+            assert_eq!(back.to_json_string(), s, "{n}: unstable serialization");
+        }
+    }
+
+    #[test]
+    fn modes_roundtrip_exactly() {
+        let modes = [
+            ArrivalMode::ClosedLoop,
+            ArrivalMode::Periodic(33.25),
+            ArrivalMode::Poisson(12.5),
+            ArrivalMode::Bursty { rate_rps: 20.0, burst_factor: 4.0, period_ms: 1000.0 },
+            ArrivalMode::Replay(Arc::new(vec![0.0, 1.5, 3.141592653589793, 1e6 + 0.125])),
+        ];
+        for m in &modes {
+            let j = mode_to_json(m);
+            let back = mode_from_json(&parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(&back, m, "mode did not roundtrip: {m:?}");
+        }
+    }
+
+    #[test]
+    fn bad_documents_are_rejected() {
+        assert!(Scenario::from_json_str("not json").is_err());
+        assert!(Scenario::from_json_str("{}").is_err());
+        assert!(Scenario::from_json_str(r#"{"events":[{"at_ms":0,"type":"wat"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! Scenario engine: open-system workload descriptions.
+//!
+//! A [`Scenario`] is a timed event list — sessions joining
+//! ([`ScenarioEvent::SessionStart`]), leaving
+//! ([`ScenarioEvent::SessionStop`]), and switching arrival processes
+//! ([`ScenarioEvent::RateChange`], including the phased
+//! [`ArrivalMode::Bursty`] process) — the dynamic multi-DNN mixes the
+//! paper's evaluation (§4.4–§4.8) and the Puzzle/AdaOper baselines serve,
+//! as opposed to a fixed set of closed-loop sessions declared at t = 0.
+//!
+//! Scenarios compile to the [`crate::exec::SessionEvent`] form the shared
+//! [`Driver`](crate::exec::Driver) consumes, run on **both** execution
+//! backends, (de)serialize as JSON ([`json`]), can be generated from a
+//! seed for randomized mixes ([`gen`]), and every run can be recorded and
+//! replayed bit-for-bit on the sim backend ([`trace`]).
+
+pub mod gen;
+pub mod json;
+pub mod trace;
+
+pub use gen::{generate, GenConfig};
+pub use trace::RunTrace;
+
+use crate::exec::{App, ArrivalMode, EventKind, SessionEvent};
+use anyhow::{bail, Result};
+
+/// One scenario event. Session ids are allocated by `SessionStart`
+/// declaration order; `SessionStop`/`RateChange` must reference an
+/// already-declared session.
+#[derive(Debug, Clone)]
+pub enum ScenarioEvent {
+    /// Admit a new session at the event time.
+    SessionStart { app: App },
+    /// Retire session `session`: pending work cancels, stats close.
+    SessionStop { session: usize },
+    /// Switch session `session` to a new arrival process.
+    RateChange { session: usize, mode: ArrivalMode },
+}
+
+/// A [`ScenarioEvent`] with its firing time.
+#[derive(Debug, Clone)]
+pub struct TimedEvent {
+    pub at_ms: f64,
+    pub event: ScenarioEvent,
+}
+
+/// A dynamic workload: what joins, leaves, and changes, and when.
+#[derive(Debug, Clone, Default)]
+pub struct Scenario {
+    pub name: String,
+    pub events: Vec<TimedEvent>,
+}
+
+impl Scenario {
+    pub fn new(name: &str) -> Self {
+        Scenario { name: name.into(), events: Vec::new() }
+    }
+
+    /// Admit `app` at `at_ms`. The new session's id is the number of
+    /// `start` calls before this one.
+    pub fn start(mut self, at_ms: f64, app: App) -> Self {
+        self.events.push(TimedEvent { at_ms, event: ScenarioEvent::SessionStart { app } });
+        self
+    }
+
+    /// Retire session `session` at `at_ms`.
+    pub fn stop(mut self, at_ms: f64, session: usize) -> Self {
+        self.events
+            .push(TimedEvent { at_ms, event: ScenarioEvent::SessionStop { session } });
+        self
+    }
+
+    /// Switch session `session` to `mode` at `at_ms`.
+    pub fn rate(mut self, at_ms: f64, session: usize, mode: ArrivalMode) -> Self {
+        self.events
+            .push(TimedEvent { at_ms, event: ScenarioEvent::RateChange { session, mode } });
+        self
+    }
+
+    /// Number of sessions the scenario declares.
+    pub fn num_sessions(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.event, ScenarioEvent::SessionStart { .. }))
+            .count()
+    }
+
+    /// Compile to the driver's form: the full session list plus lifecycle
+    /// events. Validates session references and event times.
+    pub fn compile(&self) -> Result<(Vec<App>, Vec<SessionEvent>)> {
+        self.compile_with_base(0)
+    }
+
+    /// [`Scenario::compile`] with session ids offset by `base` (used when
+    /// appending a scenario after statically-declared sessions).
+    pub fn compile_with_base(&self, base: usize) -> Result<(Vec<App>, Vec<SessionEvent>)> {
+        let mut apps: Vec<App> = Vec::new();
+        let mut start_at: Vec<f64> = Vec::new();
+        let mut events: Vec<SessionEvent> = Vec::new();
+        for te in &self.events {
+            if !te.at_ms.is_finite() || te.at_ms < 0.0 {
+                bail!("event time {} must be a finite non-negative ms value", te.at_ms);
+            }
+            match &te.event {
+                ScenarioEvent::SessionStart { app } => {
+                    validate_mode(&app.mode)?;
+                    let session = base + apps.len();
+                    apps.push(app.clone());
+                    start_at.push(te.at_ms);
+                    events.push(SessionEvent {
+                        at_ms: te.at_ms,
+                        kind: EventKind::Start { session },
+                    });
+                }
+                ScenarioEvent::SessionStop { session } => {
+                    let Some(&s0) = start_at.get(*session) else {
+                        bail!("stop references undeclared session {session}");
+                    };
+                    if te.at_ms < s0 {
+                        bail!(
+                            "session {session} stops at {} before it starts at {s0}",
+                            te.at_ms
+                        );
+                    }
+                    events.push(SessionEvent {
+                        at_ms: te.at_ms,
+                        kind: EventKind::Stop { session: base + session },
+                    });
+                }
+                ScenarioEvent::RateChange { session, mode } => {
+                    if start_at.get(*session).is_none() {
+                        bail!("rate change references undeclared session {session}");
+                    }
+                    validate_mode(mode)?;
+                    events.push(SessionEvent {
+                        at_ms: te.at_ms,
+                        kind: EventKind::Rate { session: base + session, mode: mode.clone() },
+                    });
+                }
+            }
+        }
+        if apps.is_empty() {
+            bail!("scenario '{}' declares no sessions", self.name);
+        }
+        Ok((apps, events))
+    }
+}
+
+/// Reject arrival-mode parameters that would wedge the driver: a
+/// non-positive period or rate never advances the clock (the run loop
+/// would spin at one instant forever), and a replay schedule must be
+/// finite, non-negative, and sorted.
+fn validate_mode(mode: &ArrivalMode) -> Result<()> {
+    let pos = |v: f64, what: &str| -> Result<()> {
+        if !v.is_finite() || v <= 0.0 {
+            bail!("arrival {what} must be finite and > 0, got {v}");
+        }
+        Ok(())
+    };
+    match mode {
+        ArrivalMode::ClosedLoop => Ok(()),
+        ArrivalMode::Periodic(p) => pos(*p, "period_ms"),
+        ArrivalMode::Poisson(r) => pos(*r, "rate_rps"),
+        ArrivalMode::Bursty { rate_rps, burst_factor, period_ms } => {
+            pos(*rate_rps, "rate_rps")?;
+            pos(*burst_factor, "burst_factor")?;
+            pos(*period_ms, "period_ms")
+        }
+        ArrivalMode::Replay(times) => {
+            for &t in times.iter() {
+                if !t.is_finite() || t < 0.0 {
+                    bail!("replay times must be finite and non-negative, got {t}");
+                }
+            }
+            for w in times.windows(2) {
+                if w[1] < w[0] {
+                    bail!("replay schedule must be sorted ({} after {})", w[1], w[0]);
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Named dynamic scenarios accepted by `adms serve --scenario`.
+pub const SCENARIO_NAMES: [&str; 3] = ["frs_burst", "churn_mix", "phase_shift"];
+
+/// Look up a named scenario.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    match name {
+        "frs_burst" => Some(frs_burst()),
+        "churn_mix" => Some(churn_mix()),
+        "phase_shift" => Some(phase_shift()),
+        _ => None,
+    }
+}
+
+/// One-line description for `adms scenario list`.
+pub fn describe(name: &str) -> &'static str {
+    match name {
+        "frs_burst" => "FRS with bursty identification load and a heavy model joining mid-run",
+        "churn_mix" => "sessions of escalating complexity join every few seconds, earlier ones retire",
+        "phase_shift" => "camera pipeline shifting 30 fps -> burst -> 10 fps under a closed-loop classifier",
+        _ => "",
+    }
+}
+
+/// FRS (paper §4.4) made dynamic: RetinaFace detection runs continuously;
+/// mobile identification alternates burst/calm phases; the heavy
+/// identification model joins at 5 s, slows the mobile one to a periodic
+/// camera cadence at 10 s, and leaves at 15 s.
+pub fn frs_burst() -> Scenario {
+    Scenario::new("frs_burst")
+        .start(0.0, App::closed_loop("retinaface"))
+        .start(
+            0.0,
+            App {
+                model: "arcface_mobile".into(),
+                slo_ms: Some(50.0),
+                mode: ArrivalMode::Bursty {
+                    rate_rps: 15.0,
+                    burst_factor: 4.0,
+                    period_ms: 2_000.0,
+                },
+            },
+        )
+        .start(
+            5_000.0,
+            App {
+                model: "arcface_resnet50".into(),
+                slo_ms: None,
+                mode: ArrivalMode::Poisson(5.0),
+            },
+        )
+        .rate(10_000.0, 1, ArrivalMode::Periodic(33.0))
+        .stop(15_000.0, 2)
+}
+
+/// Open-system churn: apps of escalating complexity join every ~2 s while
+/// earlier ones retire — the dynamic multi-DNN mix Puzzle and AdaOper
+/// evaluate on.
+pub fn churn_mix() -> Scenario {
+    Scenario::new("churn_mix")
+        .start(0.0, App::closed_loop("mobilenet_v1"))
+        .start(
+            2_000.0,
+            App {
+                model: "east".into(),
+                slo_ms: Some(120.0),
+                mode: ArrivalMode::Periodic(60.0),
+            },
+        )
+        .start(
+            4_000.0,
+            App { model: "efficientnet4".into(), slo_ms: None, mode: ArrivalMode::Poisson(8.0) },
+        )
+        .stop(6_000.0, 0)
+        .start(6_000.0, App::closed_loop("arcface_mobile"))
+        .stop(9_000.0, 1)
+        .stop(12_000.0, 3)
+}
+
+/// Phase shifts on one camera feed: 30 fps steady, then a bursty phase,
+/// then a low-power 10 fps phase — against a closed-loop classifier that
+/// soaks up whatever capacity is left.
+pub fn phase_shift() -> Scenario {
+    Scenario::new("phase_shift")
+        .start(
+            0.0,
+            App {
+                model: "mobilenet_v2".into(),
+                slo_ms: Some(80.0),
+                mode: ArrivalMode::Periodic(1000.0 / 30.0),
+            },
+        )
+        .start(0.0, App::closed_loop("inception_v4"))
+        .rate(
+            4_000.0,
+            0,
+            ArrivalMode::Bursty { rate_rps: 30.0, burst_factor: 3.0, period_ms: 1_000.0 },
+        )
+        .rate(8_000.0, 0, ArrivalMode::Periodic(100.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn named_scenarios_resolve_and_compile() {
+        for n in SCENARIO_NAMES {
+            let sc = by_name(n).unwrap_or_else(|| panic!("{n} missing"));
+            let (apps, events) = sc.compile().unwrap_or_else(|e| panic!("{n}: {e}"));
+            assert!(!apps.is_empty());
+            assert!(!events.is_empty());
+            for a in &apps {
+                assert!(zoo::by_name(&a.model).is_some(), "{n}: unknown model {}", a.model);
+            }
+            assert!(!describe(n).is_empty());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn compile_rejects_bad_references() {
+        let sc = Scenario::new("bad").stop(100.0, 0);
+        assert!(sc.compile().is_err(), "stop of undeclared session must fail");
+        let sc = Scenario::new("bad2")
+            .start(1_000.0, App::closed_loop("mobilenet_v1"))
+            .stop(500.0, 0);
+        assert!(sc.compile().is_err(), "stop before start must fail");
+        let sc = Scenario::new("empty");
+        assert!(sc.compile().is_err(), "no sessions must fail");
+    }
+
+    #[test]
+    fn compile_rejects_degenerate_arrival_parameters() {
+        use crate::exec::ArrivalMode;
+        // A zero period would pin the clock at one instant forever.
+        let app = |mode| App { model: "mobilenet_v1".into(), slo_ms: None, mode };
+        for bad in [
+            ArrivalMode::Periodic(0.0),
+            ArrivalMode::Periodic(-5.0),
+            ArrivalMode::Periodic(f64::NAN),
+            ArrivalMode::Poisson(0.0),
+            ArrivalMode::Bursty { rate_rps: 10.0, burst_factor: 4.0, period_ms: 0.0 },
+            ArrivalMode::Replay(std::sync::Arc::new(vec![5.0, 1.0])),
+        ] {
+            let sc = Scenario::new("bad").start(0.0, app(bad.clone()));
+            assert!(sc.compile().is_err(), "start with {bad:?} must be rejected");
+            let sc = Scenario::new("bad")
+                .start(0.0, App::closed_loop("mobilenet_v1"))
+                .rate(10.0, 0, bad.clone());
+            assert!(sc.compile().is_err(), "rate change to {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn compile_with_base_offsets_ids() {
+        let sc = Scenario::new("s")
+            .start(0.0, App::closed_loop("mobilenet_v1"))
+            .stop(10.0, 0);
+        let (_, events) = sc.compile_with_base(3).unwrap();
+        assert!(matches!(events[0].kind, crate::exec::EventKind::Start { session: 3 }));
+        assert!(matches!(events[1].kind, crate::exec::EventKind::Stop { session: 3 }));
+    }
+}

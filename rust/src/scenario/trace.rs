@@ -1,0 +1,354 @@
+//! Run-trace record/replay: any run becomes a reproducible regression
+//! artifact.
+//!
+//! A [`RunTrace`] captures a run's workload-side history — per-session
+//! model/SLO/lifecycle, every request **arrival**, and every **dispatch**
+//! ([`AssignRecord`]) — exactly the inputs and decisions of the
+//! scheduling loop. [`RunTrace::to_replay_scenario`] turns it back into a
+//! [`Scenario`] whose sessions use [`ArrivalMode::Replay`]: re-running it
+//! on the sim backend with the same scheduler and seed reproduces the
+//! original assignment trace and per-session latency/SLO metrics
+//! bit-for-bit (the sim backend orders same-instant timers after
+//! completions/ticks precisely so a replayed arrival lands where the
+//! closed-loop arrival it reproduces did).
+//!
+//! Caveat: same-instant events of *different* sessions replay in session
+//! order; scenarios whose distinct-session start/stop events share an
+//! identical f64 timestamp may reorder (measure-zero for generated
+//! scenarios).
+
+use super::Scenario;
+use crate::exec::{App, ArrivalMode, ArrivalRecord, AssignRecord, EventKind, SessionEvent};
+use crate::sim::SimReport;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// One session as recorded: identity plus lifecycle window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSession {
+    pub model: String,
+    pub slo_ms: Option<f64>,
+    pub start_ms: f64,
+    pub stop_ms: Option<f64>,
+}
+
+/// A recorded run: everything needed to replay it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunTrace {
+    pub scheduler: String,
+    pub backend: String,
+    /// SoC preset name (`soc_by_name`) the run executed on — the cost
+    /// model and processor set are run-defining inputs, so a replay must
+    /// use the same one.
+    pub soc: String,
+    pub seed: u64,
+    pub duration_ms: f64,
+    pub sessions: Vec<TraceSession>,
+    /// Rate-change event times from the recorded scenario, `(session,
+    /// at_ms)`. Replays re-fire them (re-arming the replay schedule) so
+    /// the replay sees the exact same event → dispatch-round structure —
+    /// a missing round would leave queued tasks waiting where the
+    /// original dispatched them.
+    pub rate_events: Vec<(usize, f64)>,
+    pub arrivals: Vec<ArrivalRecord>,
+    pub assignments: Vec<AssignRecord>,
+}
+
+impl RunTrace {
+    /// Record a finished run. `soc` is the preset name the run executed
+    /// on; `apps` must be the session list the run was built from (it
+    /// carries the SLOs, which the report does not) and `events` the
+    /// lifecycle events it ran under (empty for static workloads).
+    pub fn record(
+        soc: &str,
+        apps: &[App],
+        events: &[SessionEvent],
+        report: &SimReport,
+        seed: u64,
+    ) -> RunTrace {
+        let sessions = report
+            .sessions
+            .iter()
+            .enumerate()
+            .map(|(i, s)| TraceSession {
+                model: s.model.clone(),
+                slo_ms: apps.get(i).and_then(|a| a.slo_ms),
+                start_ms: s.start_ms,
+                stop_ms: s.stop_ms,
+            })
+            .collect();
+        // Only rate changes that actually fired matter (starts/stops are
+        // reconstructed from the per-session lifecycle windows above).
+        let rate_events = events
+            .iter()
+            .filter(|e| e.at_ms <= report.duration_ms)
+            .filter_map(|e| match e.kind {
+                EventKind::Rate { session, .. } => Some((session, e.at_ms)),
+                _ => None,
+            })
+            .collect();
+        RunTrace {
+            scheduler: report.scheduler.clone(),
+            backend: report.backend.clone(),
+            soc: soc.to_string(),
+            seed,
+            duration_ms: report.duration_ms,
+            sessions,
+            rate_events,
+            arrivals: report.arrivals.clone(),
+            assignments: report.assignments.clone(),
+        }
+    }
+
+    /// Rebuild the run as a scenario of [`ArrivalMode::Replay`] sessions:
+    /// every recorded arrival fires at its recorded time, session
+    /// admission/retirement happens at the recorded times, and recorded
+    /// rate changes re-fire as `Rate` events that re-arm the same replay
+    /// schedule (preserving the dispatch-round structure).
+    pub fn to_replay_scenario(&self) -> Scenario {
+        let mut times: Vec<Vec<f64>> = vec![Vec::new(); self.sessions.len()];
+        for a in &self.arrivals {
+            if a.session < times.len() {
+                times[a.session].push(a.at);
+            }
+        }
+        let schedules: Vec<Arc<Vec<f64>>> =
+            times.into_iter().map(Arc::new).collect();
+        let mut sc = Scenario::new("replay");
+        for (s, ts) in self.sessions.iter().enumerate() {
+            let app = App {
+                model: ts.model.clone(),
+                slo_ms: ts.slo_ms,
+                mode: ArrivalMode::Replay(Arc::clone(&schedules[s])),
+            };
+            sc = sc.start(ts.start_ms, app);
+            if let Some(stop) = ts.stop_ms {
+                sc = sc.stop(stop, s);
+            }
+        }
+        for &(s, at) in &self.rate_events {
+            if s < schedules.len() {
+                sc = sc.rate(at, s, ArrivalMode::Replay(Arc::clone(&schedules[s])));
+            }
+        }
+        sc
+    }
+
+    /// Serialize as pretty-printed JSON (arrivals/assignments as compact
+    /// tuples to keep long traces small).
+    pub fn to_json_string(&self) -> String {
+        let sessions: Vec<Json> = self
+            .sessions
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("model", Json::Str(s.model.clone())),
+                    ("slo_ms", s.slo_ms.map(Json::Num).unwrap_or(Json::Null)),
+                    ("start_ms", Json::Num(s.start_ms)),
+                    ("stop_ms", s.stop_ms.map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let arrivals: Vec<Json> = self
+            .arrivals
+            .iter()
+            .map(|a| Json::Arr(vec![Json::Num(a.session as f64), Json::Num(a.at)]))
+            .collect();
+        let assignments: Vec<Json> = self
+            .assignments
+            .iter()
+            .map(|a| {
+                Json::Arr(vec![
+                    Json::Num(a.req as f64),
+                    Json::Num(a.session as f64),
+                    Json::Num(a.unit as f64),
+                    Json::Num(a.proc as f64),
+                ])
+            })
+            .collect();
+        let rate_events: Vec<Json> = self
+            .rate_events
+            .iter()
+            .map(|&(s, at)| Json::Arr(vec![Json::Num(s as f64), Json::Num(at)]))
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("soc", Json::Str(self.soc.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("duration_ms", Json::Num(self.duration_ms)),
+            ("sessions", Json::Arr(sessions)),
+            ("rate_events", Json::Arr(rate_events)),
+            ("arrivals", Json::Arr(arrivals)),
+            ("assignments", Json::Arr(assignments)),
+        ])
+        .to_pretty()
+    }
+
+    pub fn from_json_str(s: &str) -> Result<RunTrace> {
+        let v = parse(s).map_err(|e| anyhow!("{e}"))?;
+        let sessions = v
+            .get("sessions")
+            .as_arr()
+            .ok_or_else(|| anyhow!("trace: missing 'sessions'"))?
+            .iter()
+            .map(|s| {
+                Ok(TraceSession {
+                    model: s
+                        .get("model")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("trace session: missing 'model'"))?
+                        .to_string(),
+                    slo_ms: s.get("slo_ms").as_f64(),
+                    start_ms: s.get("start_ms").as_f64().unwrap_or(0.0),
+                    stop_ms: s.get("stop_ms").as_f64(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tuple = |j: &Json, n: usize, what: &str| -> Result<Vec<f64>> {
+            let arr = j
+                .as_arr()
+                .ok_or_else(|| anyhow!("trace: malformed {what} entry"))?;
+            if arr.len() != n {
+                bail!("trace: {what} entry has {} fields, expected {n}", arr.len());
+            }
+            arr.iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow!("trace: non-numeric {what} field")))
+                .collect()
+        };
+        let rate_events = v
+            .get("rate_events")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|a| {
+                let t = tuple(a, 2, "rate_event")?;
+                Ok((t[0] as usize, t[1]))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let arrivals = v
+            .get("arrivals")
+            .as_arr()
+            .ok_or_else(|| anyhow!("trace: missing 'arrivals'"))?
+            .iter()
+            .map(|a| {
+                let t = tuple(a, 2, "arrival")?;
+                Ok(ArrivalRecord { session: t[0] as usize, at: t[1] })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let assignments = v
+            .get("assignments")
+            .as_arr()
+            .ok_or_else(|| anyhow!("trace: missing 'assignments'"))?
+            .iter()
+            .map(|a| {
+                let t = tuple(a, 4, "assignment")?;
+                Ok(AssignRecord {
+                    req: t[0] as u64,
+                    session: t[1] as usize,
+                    unit: t[2] as usize,
+                    proc: t[3] as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunTrace {
+            scheduler: v
+                .get("scheduler")
+                .as_str()
+                .ok_or_else(|| anyhow!("trace: missing 'scheduler'"))?
+                .to_string(),
+            backend: v
+                .get("backend")
+                .as_str()
+                .ok_or_else(|| anyhow!("trace: missing 'backend'"))?
+                .to_string(),
+            soc: v
+                .get("soc")
+                .as_str()
+                .ok_or_else(|| anyhow!("trace: missing 'soc'"))?
+                .to_string(),
+            seed: v
+                .get("seed")
+                .as_u64()
+                .ok_or_else(|| anyhow!("trace: missing integer 'seed'"))?,
+            duration_ms: v
+                .get("duration_ms")
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace: missing 'duration_ms'"))?,
+            sessions,
+            rate_events,
+            arrivals,
+            assignments,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> RunTrace {
+        RunTrace {
+            scheduler: "adms".into(),
+            backend: "sim".into(),
+            soc: "kirin970".into(),
+            seed: 7,
+            duration_ms: 1234.5,
+            sessions: vec![
+                TraceSession {
+                    model: "mobilenet_v1".into(),
+                    slo_ms: Some(40.0),
+                    start_ms: 0.0,
+                    stop_ms: Some(900.25),
+                },
+                TraceSession {
+                    model: "east".into(),
+                    slo_ms: None,
+                    start_ms: 100.125,
+                    stop_ms: None,
+                },
+            ],
+            rate_events: vec![(0, 500.5)],
+            arrivals: vec![
+                ArrivalRecord { session: 0, at: 0.0 },
+                ArrivalRecord { session: 1, at: 100.125 },
+                ArrivalRecord { session: 0, at: 33.375 },
+            ],
+            assignments: vec![AssignRecord { req: 0, session: 0, unit: 0, proc: 3 }],
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_through_json() {
+        let t = tiny_trace();
+        let s = t.to_json_string();
+        let back = RunTrace::from_json_str(&s).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn replay_scenario_carries_schedules_and_stops() {
+        let t = tiny_trace();
+        let sc = t.to_replay_scenario();
+        let (apps, events) = sc.compile().unwrap();
+        assert_eq!(apps.len(), 2);
+        match &apps[0].mode {
+            ArrivalMode::Replay(times) => assert_eq!(**times, vec![0.0, 33.375]),
+            other => panic!("expected replay mode, got {other:?}"),
+        }
+        assert_eq!(apps[0].slo_ms, Some(40.0));
+        // 2 starts + 1 stop + 1 rate re-fire.
+        assert_eq!(events.len(), 4);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::Rate { session: 0, .. }) && e.at_ms == 500.5));
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        assert!(RunTrace::from_json_str("[]").is_err());
+        assert!(RunTrace::from_json_str(r#"{"sessions":[]}"#).is_err());
+    }
+}

@@ -18,14 +18,29 @@ pub struct TimelineEvent {
 #[derive(Debug, Clone)]
 pub struct SessionStats {
     pub model: String,
+    /// Requests issued by the arrival process (conservation:
+    /// `issued == completed + failed + cancelled`, always).
+    pub issued: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Requests cancelled by the workload itself — a `SessionStop` event
+    /// retiring the session, or the run ending with the request open.
+    /// Unlike `failed`, these are not the system's fault and do not count
+    /// against SLO satisfaction.
+    pub cancelled: u64,
     pub latency: Summary,
-    /// Completed requests per second of simulated time.
+    /// Completed requests per second of the session's *active* window
+    /// (admission to retirement; the full run for static sessions).
     pub fps: f64,
     /// Fraction of requests finishing within their SLO (failures count
     /// as misses). `None` when the session has no SLO.
     pub slo_satisfaction: Option<f64>,
+    /// When the session was admitted (0 for static workloads).
+    pub start_ms: TimeMs,
+    /// When a `SessionStop` event retired it (`None` = ran to the end).
+    pub stop_ms: Option<TimeMs>,
+    /// Active window the rate metrics are normalized by.
+    pub active_ms: TimeMs,
 }
 
 /// Per-processor results.
@@ -65,6 +80,9 @@ pub struct SimReport {
     /// Scheduling decisions in dispatch order — the cross-backend
     /// determinism witness.
     pub assignments: Vec<crate::exec::AssignRecord>,
+    /// Request arrivals in arrival order; with `assignments` this makes
+    /// the run replayable (`scenario::trace::RunTrace`).
+    pub arrivals: Vec<crate::exec::ArrivalRecord>,
 }
 
 impl SimReport {
@@ -104,7 +122,19 @@ impl SimReport {
         self.sessions.iter().map(|s| s.failed).sum()
     }
 
-    /// Failure rate over all issued requests (Table 7).
+    pub fn total_issued(&self) -> u64 {
+        self.sessions.iter().map(|s| s.issued).sum()
+    }
+
+    pub fn total_cancelled(&self) -> u64 {
+        self.sessions.iter().map(|s| s.cancelled).sum()
+    }
+
+    /// Failure rate over all *retired* requests — completed + failed
+    /// (Table 7). Cancellations are workload-initiated (session stop /
+    /// run end), not the system's fault, so they sit in neither the
+    /// numerator nor the denominator; use `total_issued()` for the full
+    /// open-system denominator.
     pub fn failure_rate(&self) -> f64 {
         let total = self.total_completed() + self.total_failed();
         if total == 0 {

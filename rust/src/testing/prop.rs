@@ -80,6 +80,17 @@ impl Gen {
     }
 }
 
+/// Iteration count for a property suite: the `PROP_ITERS` environment
+/// variable when set (CI's nightly fuzz job raises it far beyond the
+/// in-PR default), else `default`.
+pub fn iters(default: u64) -> u64 {
+    std::env::var("PROP_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 /// Run `prop` against `cases` generated inputs. Panics (failing the test)
 /// on the first violated property with a replayable seed.
 pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
@@ -152,6 +163,13 @@ mod tests {
         });
         let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
         assert!(msg.contains("ADMS_PROP_SEED="), "message: {msg}");
+    }
+
+    #[test]
+    fn iters_is_positive_with_or_without_env() {
+        // Cannot assert the exact value: the nightly fuzz job sets
+        // PROP_ITERS for the whole test process.
+        assert!(iters(7) >= 1);
     }
 
     #[test]

@@ -1,17 +1,70 @@
 //! Workload definitions from the paper's evaluation (§4.4, §4.8).
 
+use crate::sched::ModelPlan;
 use crate::sim::{App, ArrivalMode};
+use crate::soc::SocSpec;
+use std::sync::Arc;
 
-/// Named workload scenarios accepted by `--workload`.
-pub const WORKLOAD_NAMES: [&str; 2] = ["frs", "ros"];
+/// Base names of the workloads accepted by `--workload`. `stress`,
+/// `copies`, and `slo` are parameterized: `stress[:<n>]` (default 8),
+/// `copies:<model>[:<n>]` (default 4), `slo[:<multiplier>]` (default 1.0,
+/// SLO = multiplier × the Fig 9 baseline estimated on the target SoC).
+pub const WORKLOAD_NAMES: [&str; 5] = ["frs", "ros", "stress", "copies", "slo"];
 
-/// Look up a named scenario (`frs` | `ros`).
-pub fn by_name(name: &str) -> Option<Vec<App>> {
+/// Look up a named workload; `soc` prices the `slo` baselines. Returns
+/// `None` for unknown names and malformed parameters (`copies` without a
+/// model, non-numeric counts, unknown copy models).
+pub fn by_name(name: &str, soc: &SocSpec) -> Option<Vec<App>> {
     match name {
-        "frs" => Some(frs()),
-        "ros" => Some(ros()),
-        _ => None,
+        "frs" => return Some(frs()),
+        "ros" => return Some(ros()),
+        _ => {}
     }
+    let mut parts = name.split(':');
+    let base = parts.next()?;
+    let apps = match base {
+        "stress" => {
+            let n = match parts.next() {
+                None => 8,
+                Some(s) => s.parse::<usize>().ok()?.max(1),
+            };
+            stress_mix(n)
+        }
+        "copies" => {
+            let model = parts.next()?;
+            crate::zoo::by_name(model)?;
+            let n = match parts.next() {
+                None => 4,
+                Some(s) => s.parse::<usize>().ok()?.max(1),
+            };
+            concurrent_copies(model, n)
+        }
+        "slo" => {
+            let mult = match parts.next() {
+                None => 1.0,
+                Some(s) => s.parse::<f64>().ok().filter(|m| *m > 0.0)?,
+            };
+            slo_workload(&slo_baselines_ms(soc), mult)
+        }
+        _ => return None,
+    };
+    if parts.next().is_some() {
+        return None; // trailing junk, e.g. "stress:8:9"
+    }
+    Some(apps)
+}
+
+/// Fig 9 SLO baselines on `soc`: the cost model's end-to-end estimate at
+/// window size 1, scaled by the same max/mean factor the Fig 9 experiment
+/// applies (2.5 — real-device single-inference max vs our noise-free
+/// mean).
+pub fn slo_baselines_ms(soc: &SocSpec) -> [f64; 4] {
+    let mut out = [0.0f64; 4];
+    for (i, m) in SLO_MODELS.iter().enumerate() {
+        let g = crate::zoo::by_name(m).expect("SLO model missing from zoo");
+        out[i] = ModelPlan::build(Arc::new(g), soc, 1).est_total_ms * 2.5;
+    }
+    out
 }
 
 /// Facial Recognition System (paper §4.4): RetinaFace detection plus two
@@ -55,22 +108,27 @@ pub fn concurrent_copies(model: &str, n: usize) -> Vec<App> {
     vec![App::closed_loop(model); n]
 }
 
+/// Zoo models in roughly ascending complexity — the pool `stress_mix`
+/// cycles through and `scenario::gen` draws from.
+pub const STRESS_POOL: [&str; 10] = [
+    "mobilenet_v1",
+    "mobilenet_v2",
+    "east",
+    "arcface_mobile",
+    "retinaface",
+    "handlmk",
+    "efficientnet4",
+    "icn_quant",
+    "deeplab_v3",
+    "inception_v4",
+];
+
 /// Mixed stress workload for the §4.8 robustness tests: `n` models of
 /// escalating complexity drawn from the zoo.
 pub fn stress_mix(n: usize) -> Vec<App> {
-    const POOL: [&str; 10] = [
-        "mobilenet_v1",
-        "mobilenet_v2",
-        "east",
-        "arcface_mobile",
-        "retinaface",
-        "handlmk",
-        "efficientnet4",
-        "icn_quant",
-        "deeplab_v3",
-        "inception_v4",
-    ];
-    (0..n).map(|i| App::closed_loop(POOL[i % POOL.len()])).collect()
+    (0..n)
+        .map(|i| App::closed_loop(STRESS_POOL[i % STRESS_POOL.len()]))
+        .collect()
 }
 
 /// Periodic camera-frame workload (30 fps source) for open-loop tests.
@@ -84,11 +142,45 @@ mod tests {
     use crate::zoo;
 
     #[test]
-    fn by_name_resolves_named_scenarios() {
-        for n in WORKLOAD_NAMES {
-            assert!(by_name(n).is_some(), "{n} missing");
+    fn by_name_resolves_named_workloads() {
+        let soc = crate::soc::dimensity9000();
+        for n in [
+            "frs",
+            "ros",
+            "stress",
+            "stress:6",
+            "copies:mobilenet_v1",
+            "copies:east:3",
+            "slo",
+            "slo:0.8",
+        ] {
+            assert!(by_name(n, &soc).is_some(), "{n} missing");
         }
-        assert!(by_name("nope").is_none());
+        assert_eq!(by_name("stress:6", &soc).unwrap().len(), 6);
+        assert_eq!(by_name("copies:east:3", &soc).unwrap().len(), 3);
+        for n in [
+            "nope",
+            "copies",          // needs a model
+            "copies:not-a-model",
+            "stress:x",
+            "slo:-1",
+            "stress:8:9",
+        ] {
+            assert!(by_name(n, &soc).is_none(), "{n} should not resolve");
+        }
+    }
+
+    #[test]
+    fn slo_named_workload_scales_with_multiplier() {
+        let soc = crate::soc::dimensity9000();
+        let full = by_name("slo", &soc).unwrap();
+        let half = by_name("slo:0.5", &soc).unwrap();
+        assert_eq!(full.len(), SLO_MODELS.len());
+        for (f, h) in full.iter().zip(&half) {
+            let (f, h) = (f.slo_ms.unwrap(), h.slo_ms.unwrap());
+            assert!(f > 0.0);
+            assert!((h - f * 0.5).abs() < 1e-9, "multiplier not applied: {h} vs {f}");
+        }
     }
 
     #[test]

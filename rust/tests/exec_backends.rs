@@ -40,6 +40,60 @@ fn pinned_dispatch_trace_identical_on_both_backends() {
     assert!(sim.assignments.iter().all(|a| a.proc == cpu));
 }
 
+/// Cross-backend dispatch-trace determinism for *all four* schedulers,
+/// not just `Pinned`. The setup removes every timing-dependent input so
+/// each policy's decisions are a pure function of dispatch order:
+///
+/// * one session, chain-structured model → at most one ready task at any
+///   decision point, so queue order cannot depend on wall-clock jitter;
+/// * the monitor cache interval is effectively infinite → every decision
+///   on either backend sees the identical t=0 idle snapshot (ambient
+///   temperature, max frequency, zero load/backlog — the sim's initial
+///   thermal state matches the thread pool's static view);
+/// * a fixed request quota bounds both runs.
+///
+/// Under those conditions `vanilla`, `band`, `adms`, and `pinned` must
+/// each produce byte-identical assignment traces on the discrete-event
+/// SoC model and the wall-clock worker pool.
+#[test]
+fn all_four_schedulers_produce_identical_traces_across_backends() {
+    let soc = dimensity9000();
+    for name in ["vanilla", "band", "adms", "pinned"] {
+        let build = || {
+            Server::new(soc.clone())
+                .scheduler_name(name)
+                .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+                .window_size(6)
+                .config(SimConfig {
+                    monitor_cache_ms: 1e12, // freeze the t=0 snapshot
+                    max_requests: Some(3),
+                    duration_ms: 60_000.0,
+                    ..SimConfig::default()
+                })
+                .pace(0.02) // compress synthetic wall time in the pool
+        };
+        let sim = build().run_sim().unwrap_or_else(|e| panic!("{name} on sim: {e}"));
+        let pool = build()
+            .run_threadpool()
+            .unwrap_or_else(|e| panic!("{name} on threadpool: {e}"));
+        assert_eq!(sim.total_completed(), 3, "{name} on sim");
+        assert_eq!(pool.total_completed(), 3, "{name} on threadpool");
+        assert!(!sim.assignments.is_empty(), "{name}: empty trace");
+        assert_eq!(
+            sim.assignments, pool.assignments,
+            "{name}: dispatch trace diverged between backends"
+        );
+        // Arrival counts agree too (times are clock-specific).
+        assert_eq!(sim.arrivals.len(), pool.arrivals.len(), "{name}: arrival counts");
+        // Conservation on both backends.
+        for r in [&sim, &pool] {
+            for s in &r.sessions {
+                assert_eq!(s.issued, s.completed + s.failed + s.cancelled, "{name}");
+            }
+        }
+    }
+}
+
 /// Acceptance criterion: `vanilla`, `band`, and `adms` each run
 /// unmodified on both backends through the `Server` API.
 #[test]

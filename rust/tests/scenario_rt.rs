@@ -1,0 +1,307 @@
+//! Integration tests for the scenario engine: trace record/replay round
+//! trips, seeded determinism, mid-run session churn, and driver
+//! conservation invariants on both execution backends.
+
+use adms::exec::{ArrivalMode, Server, SessionEvent, SimConfig};
+use adms::scenario::{self, GenConfig, RunTrace, Scenario};
+use adms::sched::Pinned;
+use adms::sim::{App, SimReport};
+use adms::soc::dimensity9000;
+use adms::testing::prop::{check, iters};
+
+/// A scenario exercising every dynamic feature: a bursty SLO session, a
+/// late-joining Poisson session, a closed-loop → periodic rate change,
+/// and a mid-run stop.
+fn dynamic_scenario() -> Scenario {
+    Scenario::new("rt")
+        .start(0.0, App::closed_loop("retinaface"))
+        .start(
+            0.0,
+            App {
+                model: "arcface_mobile".into(),
+                slo_ms: Some(60.0),
+                mode: ArrivalMode::Bursty {
+                    rate_rps: 12.0,
+                    burst_factor: 4.0,
+                    period_ms: 800.0,
+                },
+            },
+        )
+        .start(
+            600.0,
+            App { model: "east".into(), slo_ms: None, mode: ArrivalMode::Poisson(10.0) },
+        )
+        .rate(1_200.0, 0, ArrivalMode::Periodic(40.0))
+        .stop(2_000.0, 1)
+}
+
+fn run_scenario_sim(
+    sc: &Scenario,
+    seed: u64,
+    duration: f64,
+) -> (Vec<App>, Vec<SessionEvent>, SimReport) {
+    let (apps, events) = sc.compile().unwrap();
+    let report = Server::new(dimensity9000())
+        .scheduler_name("adms")
+        .apps(apps.clone())
+        .events(events.clone())
+        .duration_ms(duration)
+        .seed(seed)
+        .run_sim()
+        .unwrap();
+    (apps, events, report)
+}
+
+/// Invariants that must hold for *any* run, churn or not.
+fn check_invariants(report: &SimReport) {
+    for s in &report.sessions {
+        assert_eq!(
+            s.issued,
+            s.completed + s.failed + s.cancelled,
+            "conservation violated for {}",
+            s.model
+        );
+        assert_eq!(s.latency.count(), s.completed, "{}", s.model);
+        if let Some(stop) = s.stop_ms {
+            assert!(stop >= s.start_ms, "{}: stats window inverted", s.model);
+        }
+        assert!(s.active_ms <= report.duration_ms + 1e-6);
+        if let Some(slo) = s.slo_satisfaction {
+            assert!((0.0..=1.0).contains(&slo));
+        }
+    }
+    // Arrivals stay inside each session's admission window.
+    assert_eq!(report.total_issued() as usize, report.arrivals.len());
+    for a in &report.arrivals {
+        let s = &report.sessions[a.session];
+        assert!(a.at >= s.start_ms - 1e-9, "{}: arrival before admission", s.model);
+        if let Some(stop) = s.stop_ms {
+            assert!(a.at <= stop + 1e-9, "{}: arrival after retirement", s.model);
+        }
+    }
+    // No dispatch lands on a retired session or an out-of-range target.
+    for a in &report.assignments {
+        assert!(a.proc < report.procs.len(), "dispatch to unknown processor");
+        assert!(a.session < report.sessions.len());
+    }
+    for e in &report.timeline {
+        if let Some(stop) = report.sessions[e.session].stop_ms {
+            assert!(
+                e.start <= stop + 1e-9,
+                "{}: unit dispatched after session stop",
+                report.sessions[e.session].model
+            );
+        }
+    }
+}
+
+/// Acceptance criterion: recording a run and replaying its trace on the
+/// sim backend reproduces the assignment trace, the arrival trace, and
+/// the per-session latency/SLO metrics bit-for-bit — through a JSON round
+/// trip of the trace file.
+#[test]
+fn record_replay_roundtrip_is_bit_identical_on_sim() {
+    let sc = dynamic_scenario();
+    let (apps, events, original) = run_scenario_sim(&sc, 7, 3_000.0);
+    assert!(
+        original.total_issued() > 10,
+        "scenario produced too little work: {} issued",
+        original.total_issued()
+    );
+    assert!(!original.assignments.is_empty());
+
+    let trace = RunTrace::record("dimensity9000", &apps, &events, &original, 7);
+    assert_eq!(trace.soc, "dimensity9000");
+    let parsed = RunTrace::from_json_str(&trace.to_json_string()).unwrap();
+    assert_eq!(parsed, trace, "trace did not survive the JSON round trip");
+
+    let replay_sc = parsed.to_replay_scenario();
+    let (rapps, revents) = replay_sc.compile().unwrap();
+    let replay = Server::new(dimensity9000())
+        .scheduler_name(&parsed.scheduler)
+        .apps(rapps)
+        .events(revents)
+        .duration_ms(parsed.duration_ms)
+        .seed(parsed.seed)
+        .run_sim()
+        .unwrap();
+
+    assert_eq!(replay.arrivals, original.arrivals, "arrival trace diverged");
+    assert_eq!(replay.assignments, original.assignments, "dispatch trace diverged");
+    for (a, b) in original.sessions.iter().zip(&replay.sessions) {
+        assert_eq!(a.issued, b.issued, "{}: issued", a.model);
+        assert_eq!(a.completed, b.completed, "{}: completed", a.model);
+        assert_eq!(a.failed, b.failed, "{}: failed", a.model);
+        assert_eq!(a.cancelled, b.cancelled, "{}: cancelled", a.model);
+        assert_eq!(a.latency.p50(), b.latency.p50(), "{}: p50", a.model);
+        assert_eq!(a.latency.p95(), b.latency.p95(), "{}: p95", a.model);
+        assert_eq!(a.slo_satisfaction, b.slo_satisfaction, "{}: SLO", a.model);
+    }
+    check_invariants(&original);
+    check_invariants(&replay);
+}
+
+/// Acceptance criterion: the same scenario with the same seed is
+/// bit-identical across two fresh sim runs.
+#[test]
+fn same_scenario_same_seed_is_bit_identical_on_sim() {
+    let sc = scenario::by_name("churn_mix").unwrap();
+    let run = || {
+        let (apps, events) = sc.compile().unwrap();
+        Server::new(dimensity9000())
+            .scheduler_name("band")
+            .apps(apps)
+            .events(events)
+            .duration_ms(6_500.0)
+            .seed(42)
+            .run_sim()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.arrivals, b.arrivals);
+    assert_eq!(a.energy_j, b.energy_j);
+    assert!(a.total_issued() > 0);
+    // The churn actually happened: session 0 retired at 6 s.
+    assert_eq!(a.sessions[0].stop_ms, Some(6_000.0));
+    check_invariants(&a);
+}
+
+/// Acceptance criterion (thread pool): a scenario with mid-run admission
+/// produces a bit-identical dispatch trace across two fresh wall-clock
+/// runs — and the same trace as the sim backend, since the deterministic
+/// setup (single chain session, frozen monitor snapshot) removes every
+/// timing-dependent input.
+#[test]
+fn threadpool_scenario_late_admission_is_deterministic() {
+    let soc = dimensity9000();
+    let cpu = soc.cpu_id();
+    let sc = Scenario::new("tp").start(30.0, App::closed_loop("mobilenet_v1"));
+    let build = || {
+        let (apps, events) = sc.compile().unwrap();
+        Server::new(soc.clone())
+            .scheduler(Pinned::new(cpu, cpu))
+            .apps(apps)
+            .events(events)
+            .window_size(6)
+            .config(SimConfig {
+                monitor_cache_ms: 1e12,
+                max_requests: Some(3),
+                duration_ms: 60_000.0,
+                ..SimConfig::default()
+            })
+            .pace(0.02)
+    };
+    let a = build().run_threadpool().unwrap();
+    let b = build().run_threadpool().unwrap();
+    let s = build().run_sim().unwrap();
+    assert!(!a.assignments.is_empty());
+    assert_eq!(a.assignments, b.assignments, "wall-clock runs diverged");
+    assert_eq!(a.assignments, s.assignments, "threadpool diverged from sim");
+    assert_eq!(a.total_completed(), 3);
+    // Admission happened mid-run on the wall clock.
+    assert!(a.sessions[0].start_ms >= 30.0, "start {}", a.sessions[0].start_ms);
+    assert_eq!(s.sessions[0].start_ms, 30.0);
+    check_invariants(&a);
+    check_invariants(&s);
+}
+
+/// Lifecycle semantics on the sim clock: late admission, retirement, and
+/// a closed-loop → periodic rate change all land exactly where the
+/// scenario says.
+#[test]
+fn churn_lifecycle_respected_on_sim() {
+    let sc = dynamic_scenario();
+    let (_, _, report) = run_scenario_sim(&sc, 11, 3_000.0);
+    // east (session 2) admitted at 600 ms.
+    assert_eq!(report.sessions[2].start_ms, 600.0);
+    assert!(report.arrivals.iter().any(|a| a.session == 2), "late session never issued");
+    // The bursty session retired at 2000 ms, cancelling pending work.
+    assert_eq!(report.sessions[1].stop_ms, Some(2_000.0));
+    // Session 0 switched to a 25 Hz camera cadence at 1200 ms: from then
+    // on arrival gaps are exactly 40 ms.
+    let s0: Vec<f64> = report
+        .arrivals
+        .iter()
+        .filter(|a| a.session == 0 && a.at > 1_200.0)
+        .map(|a| a.at)
+        .collect();
+    assert!(s0.len() >= 10, "only {} post-change arrivals", s0.len());
+    for w in s0.windows(2) {
+        assert!(
+            (w[1] - w[0] - 40.0).abs() < 1e-6,
+            "post-change gap {} != 40 ms",
+            w[1] - w[0]
+        );
+    }
+    check_invariants(&report);
+}
+
+/// The `Server::scenario` builder entry point compiles and runs.
+#[test]
+fn server_scenario_builder_runs_named_scenarios() {
+    let sc = scenario::by_name("phase_shift").unwrap();
+    let report = Server::new(dimensity9000())
+        .scheduler_name("band")
+        .scenario(&sc)
+        .duration_ms(1_000.0)
+        .run_sim()
+        .unwrap();
+    assert!(report.total_issued() > 0);
+    check_invariants(&report);
+}
+
+/// Driver conservation invariants under randomized churn scenarios on the
+/// sim backend, across all four schedulers.
+#[test]
+fn prop_conservation_under_randomized_churn_sim() {
+    check("churn conservation (sim)", iters(15), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(1..4),
+            duration_ms: g.f64(500.0, 2_500.0),
+            churn: 0.7,
+            rate_change: 0.7,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned"]);
+        let report = Server::new(dimensity9000())
+            .scheduler_name(sched)
+            .apps(apps)
+            .events(events)
+            .window_size(4) // fixed: the tuner would dominate the runtime
+            .duration_ms(cfg.duration_ms)
+            .seed(g.u64(0..1_000_000))
+            .run_sim()
+            .unwrap();
+        check_invariants(&report);
+    });
+}
+
+/// The same conservation invariants hold wall-clock: randomized churn on
+/// the thread-pool backend (fewer cases — each one costs real time).
+#[test]
+fn prop_conservation_under_randomized_churn_threadpool() {
+    check("churn conservation (threadpool)", iters(4), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(1..3),
+            duration_ms: g.f64(80.0, 200.0),
+            churn: 0.7,
+            rate_change: 0.5,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let report = Server::new(dimensity9000())
+            .scheduler_name("band")
+            .apps(apps)
+            .events(events)
+            .window_size(4)
+            .duration_ms(cfg.duration_ms)
+            .pace(0.01)
+            .seed(g.u64(0..1_000_000))
+            .run_threadpool()
+            .unwrap();
+        check_invariants(&report);
+    });
+}

@@ -7,7 +7,7 @@ use adms::analyzer;
 use adms::sched::{Adms, Band, ModelPlan, Pinned, Scheduler, VanillaTflite};
 use adms::sim::{App, ArrivalMode, Engine, SimConfig};
 use adms::soc::{soc_by_name, SOC_NAMES};
-use adms::testing::prop::check;
+use adms::testing::prop::{check, iters};
 use adms::zoo;
 use std::sync::Arc;
 
@@ -16,7 +16,7 @@ const MODELS: [&str; 6] =
 
 #[test]
 fn prop_partition_is_exhaustive_and_ordered() {
-    check("partition covers ops in order", 60, |g| {
+    check("partition covers ops in order", iters(60), |g| {
         let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
         let model = zoo::by_name(*g.pick(&MODELS)).unwrap();
         let ws = g.usize(1..15);
@@ -45,7 +45,7 @@ fn prop_partition_is_exhaustive_and_ordered() {
 
 #[test]
 fn prop_merged_counts_shrink_with_window_size() {
-    check("ws filtering never increases candidates", 40, |g| {
+    check("ws filtering never increases candidates", iters(40), |g| {
         let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
         let model = zoo::by_name(*g.pick(&MODELS)).unwrap();
         let ws = g.usize(2..12);
@@ -62,7 +62,7 @@ fn prop_merged_counts_shrink_with_window_size() {
 
 #[test]
 fn prop_schedulers_only_assign_supported_online_procs() {
-    check("assignments are valid", 30, |g| {
+    check("assignments are valid", iters(30), |g| {
         let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
         let model = zoo::by_name(*g.pick(&MODELS)).unwrap();
         let plan = ModelPlan::build(Arc::new(model), &soc, g.usize(1..8));
@@ -126,7 +126,7 @@ fn prop_schedulers_only_assign_supported_online_procs() {
 
 #[test]
 fn prop_engine_conserves_requests() {
-    check("completed+failed+inflight bounded by arrivals", 12, |g| {
+    check("completed+failed+inflight bounded by arrivals", iters(12), |g| {
         let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
         let n_apps = g.usize(1..4);
         let apps: Vec<App> = (0..n_apps)
@@ -162,6 +162,14 @@ fn prop_engine_conserves_requests() {
         assert!(report.total_fps() >= 0.0);
         for s in &report.sessions {
             assert_eq!(s.latency.count(), s.completed);
+            // Exact conservation: requests still open at the horizon are
+            // reported as cancelled.
+            assert_eq!(
+                s.issued,
+                s.completed + s.failed + s.cancelled,
+                "conservation violated for {}",
+                s.model
+            );
             if let Some(slo) = s.slo_satisfaction {
                 assert!((0.0..=1.0).contains(&slo));
             }
@@ -177,7 +185,7 @@ fn prop_engine_conserves_requests() {
 
 #[test]
 fn prop_timeline_respects_slot_capacity() {
-    check("concurrent residents <= slots", 8, |g| {
+    check("concurrent residents <= slots", iters(8), |g| {
         let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
         let slots: Vec<usize> = soc.processors.iter().map(|p| p.parallel_slots).collect();
         let apps: Vec<App> = (0..g.usize(2..5))
