@@ -25,8 +25,11 @@ fn main() {
         });
     }
     let g = zoo::deeplab_v3();
-    b.bench("tune_window_size/deeplab_v3", || {
-        std::hint::black_box(analyzer::tune_window_size(&g, &soc, 12));
+    // Bench the underlying sweep, not `tune_window_size`: the latter is
+    // memoized process-wide, so after one warm-up call it would time a
+    // cache lookup and hide any real tuner regression.
+    b.bench("tune_sweep_uncached/deeplab_v3", || {
+        std::hint::black_box(analyzer::tuner::sweep_window_sizes(&g, &soc, 12));
     });
     b.finish();
 }

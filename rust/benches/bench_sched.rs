@@ -50,17 +50,24 @@ fn main() {
     let ctx = SchedCtx { now: 10.0, soc: &soc, plans: &plans, procs: &views };
 
     let mut b = Bench::new("sched");
+    let mut out = Vec::new();
     let mut adms = Adms::default();
     b.bench("adms/decision_12ready", || {
-        std::hint::black_box(adms.schedule(&ctx, &ready));
+        out.clear();
+        adms.schedule(&ctx, &ready, &mut out);
+        std::hint::black_box(&out);
     });
     let mut band = Band::new();
     b.bench("band/decision_12ready", || {
-        std::hint::black_box(band.schedule(&ctx, &ready));
+        out.clear();
+        band.schedule(&ctx, &ready, &mut out);
+        std::hint::black_box(&out);
     });
     let mut tfl = VanillaTflite::default_for(&soc, 3);
     b.bench("tflite/decision_12ready", || {
-        std::hint::black_box(tfl.schedule(&ctx, &ready));
+        out.clear();
+        tfl.schedule(&ctx, &ready, &mut out);
+        std::hint::black_box(&out);
     });
     b.finish();
 }

@@ -2,33 +2,14 @@
 //! second across the three framework arms on the FRS workload — the
 //! quantity that bounds how fast the experiment harness regenerates the
 //! paper's figures.
+//!
+//! The measurement set lives in `adms::testing::bench::run_sim_suite` so
+//! `adms bench` (which also writes `BENCH_sim.json` for the tracked perf
+//! trajectory) and this `cargo bench` target time exactly the same code.
 
-use adms::experiments::common::{run_framework, Framework};
-use adms::sim::SimConfig;
-use adms::soc::dimensity9000;
-use adms::testing::bench::Bench;
-use adms::workload::frs;
+use adms::testing::bench::{print_sim_suite, run_sim_suite};
 
 fn main() {
-    let soc = dimensity9000();
-    let mut b = Bench::new("sim");
-    for fw in Framework::ALL {
-        let cfg = SimConfig { duration_ms: 2_000.0, ..Default::default() };
-        b.bench(&format!("frs_2s/{}", fw.label()), || {
-            std::hint::black_box(run_framework(&soc, fw, frs(), cfg.clone()));
-        });
-    }
-    // Scaling with concurrency (the Table 7 stress path).
-    for n in [4usize, 8] {
-        let cfg = SimConfig { duration_ms: 1_000.0, ..Default::default() };
-        b.bench(&format!("stress_1s/{n}_models"), || {
-            std::hint::black_box(run_framework(
-                &soc,
-                Framework::Adms,
-                adms::workload::stress_mix(n),
-                cfg.clone(),
-            ));
-        });
-    }
-    b.finish();
+    let (_, entries) = run_sim_suite();
+    print_sim_suite(&entries);
 }

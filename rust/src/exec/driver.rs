@@ -15,13 +15,20 @@
 //! stale timers from a replaced arrival process are ignored rather than
 //! double-driving the session. Conservation holds per session on every
 //! run: `issued == completed + failed + cancelled`.
+//!
+//! Hot-path discipline (see DESIGN.md §3b): the steady-state event loop
+//! performs no per-event allocations. Ready tasks live in an indexed
+//! [`ReadyQueue`] (O(1)-ish cancellation, recycled `dep_procs` buffers),
+//! per-request bookkeeping vectors are pooled, the monitor snapshot is
+//! borrowed rather than copied, serialized-session exposure reuses its
+//! scratch, and schedulers append into a reusable assignment buffer.
 
 use super::{
     App, ArrivalMode, ArrivalRecord, AssignRecord, DispatchCmd, EventKind, ExecEvent,
-    ExecutionBackend, RunToken, SessionEvent, SimConfig,
+    ExecutionBackend, ReadyQueue, RunToken, SessionEvent, SimConfig,
 };
-use crate::monitor::{HardwareMonitor, ProcView};
-use crate::sched::{ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
+use crate::monitor::HardwareMonitor;
+use crate::sched::{Assignment, ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
 use crate::sim::report::{SessionStats, SimReport};
 use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
@@ -30,10 +37,25 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Timer-key namespace: the top bit marks scenario-event timers, the low
-/// 32 bits of arrival keys carry the session id and bits 32..63 its epoch.
+/// 32 bits of arrival keys carry the session id and bits 32..62 its
+/// epoch. Epochs are wrapped to 31 bits ([`EPOCH_MASK`]) before packing —
+/// an unmasked epoch ≥ 2^31 would set bit 63 and collide with
+/// [`EVENT_KEY`], turning an arrival timer into a phantom scenario event.
 const EVENT_KEY: u64 = 1 << 63;
 
+/// Session arrival epochs live in 31 bits (wrap on overflow). The epoch
+/// only needs to distinguish a timer's arrival process from the session's
+/// *current* one, so 2^31 generations between a timer being armed and
+/// fired would be needed to alias — unreachable in practice.
+const EPOCH_MASK: u32 = 0x7FFF_FFFF;
+
+/// Bump an epoch, staying inside the 31-bit timer-key field.
+fn next_epoch(epoch: u32) -> u32 {
+    (epoch + 1) & EPOCH_MASK
+}
+
 fn arrival_key(session: SessId, epoch: u32) -> u64 {
+    debug_assert!(epoch <= EPOCH_MASK, "epoch must be pre-masked");
     ((epoch as u64) << 32) | session as u64
 }
 
@@ -56,6 +78,22 @@ struct ReqState {
     /// Aborted — failed (budget/exec error) or cancelled (session stop /
     /// run end). Units still resident on processors drain silently.
     dead: bool,
+}
+
+/// Recycled `ReqState` vectors: requests arrive and retire on every
+/// event in steady state, and these two per-request allocations were the
+/// last ones on that path.
+#[derive(Default)]
+struct ReqStatePool {
+    deps: Vec<Vec<usize>>,
+    procs: Vec<Vec<Option<usize>>>,
+}
+
+impl ReqStatePool {
+    fn recycle(&mut self, st: ReqState) {
+        self.deps.push(st.deps_remaining);
+        self.procs.push(st.unit_proc);
+    }
 }
 
 /// A dispatched unit the driver is waiting on.
@@ -189,11 +227,17 @@ fn arm_arrival_timer(
 /// completion is decremented later in the same handler. All three
 /// abort sites (session stop, exec error, failure sweep) share this so
 /// the conservation invariant has one implementation.
-fn clamp_dead_request(reqs: &mut HashMap<ReqId, ReqState>, id: ReqId, floor: usize) {
+fn clamp_dead_request(
+    reqs: &mut HashMap<ReqId, ReqState>,
+    id: ReqId,
+    floor: usize,
+    pool: &mut ReqStatePool,
+) {
     if let Some(st) = reqs.get_mut(&id) {
         st.units_left = st.units_left.min(floor);
         if st.units_left == 0 {
-            reqs.remove(&id);
+            let st = reqs.remove(&id).unwrap();
+            pool.recycle(st);
         }
     }
 }
@@ -261,12 +305,25 @@ impl Driver {
 
         // Request state.
         let mut reqs: HashMap<ReqId, ReqState> = Default::default();
+        let mut pool = ReqStatePool::default();
         let mut next_req: ReqId = 0;
-        let mut ready: Vec<PendingTask> = Vec::new();
+        let mut ready = ReadyQueue::new(napps);
         let mut run_seq: RunToken = 0;
         let mut inflight: HashMap<RunToken, Inflight> = Default::default();
         let mut assignments_trace: Vec<AssignRecord> = Vec::new();
         let mut arrivals_trace: Vec<ArrivalRecord> = Vec::new();
+
+        // Reusable hot-path scratch (see module docs): none of these
+        // allocate in steady state.
+        let mut sched_out: Vec<Assignment> = Vec::new();
+        let mut dispatched: Vec<usize> = Vec::new();
+        let mut taken_stamp: Vec<u64> = Vec::new();
+        let mut round: u64 = 0;
+        let mut first_by_sess: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); napps];
+        let mut exposed_idx: Vec<usize> = Vec::new();
+        let mut exposed_tasks: Vec<PendingTask> = Vec::new();
+        let mut aborted: Vec<ReqId> = Vec::new();
+        let mut open_scratch: Vec<ReqId> = Vec::new();
 
         let quota = self.cfg.max_requests.unwrap_or(u64::MAX);
 
@@ -295,7 +352,7 @@ impl Driver {
             }
         }
 
-        let debug = std::env::var_os("ADMS_SIM_DEBUG").is_some();
+        let debug = crate::util::env::sim_debug();
         let mut n_events: u64 = 0;
         let mut last_now: TimeMs = 0.0;
         loop {
@@ -339,28 +396,30 @@ impl Driver {
                             if s < napps && sess[s].started && !sess[s].stopped {
                                 sess[s].stopped = true;
                                 sess[s].stop_ms = Some(now);
-                                sess[s].epoch += 1;
+                                sess[s].epoch = next_epoch(sess[s].epoch);
                                 // Cancel pending work deterministically:
-                                // drop ready entries, abort open requests
-                                // in id order; inflight units drain.
-                                ready.retain(|t| t.session != s);
-                                let mut open: Vec<ReqId> = reqs
-                                    .iter()
-                                    .filter(|(_, st)| st.session == s && !st.dead)
-                                    .map(|(&id, _)| id)
-                                    .collect();
-                                open.sort_unstable();
-                                for id in open {
+                                // drop ready entries (indexed — no queue
+                                // scan), abort open requests in id order;
+                                // inflight units drain.
+                                ready.cancel_session(s);
+                                open_scratch.clear();
+                                open_scratch.extend(
+                                    reqs.iter()
+                                        .filter(|(_, st)| st.session == s && !st.dead)
+                                        .map(|(&id, _)| id),
+                                );
+                                open_scratch.sort_unstable();
+                                for &id in open_scratch.iter() {
                                     sess[s].cancelled += 1;
                                     let running = self.backend.running_units(id);
                                     reqs.get_mut(&id).unwrap().dead = true;
-                                    clamp_dead_request(&mut reqs, id, running);
+                                    clamp_dead_request(&mut reqs, id, running, &mut pool);
                                 }
                             }
                         }
                         EventKind::Rate { session: s, mode } => {
                             if s < napps && !sess[s].stopped {
-                                sess[s].epoch += 1;
+                                sess[s].epoch = next_epoch(sess[s].epoch);
                                 sess[s].app.mode = mode;
                                 if sess[s].started {
                                     arm_arrival_timer(
@@ -393,19 +452,26 @@ impl Driver {
                         next_req += 1;
                         let plan = &self.plans[s];
                         let nu = plan.num_units();
+                        let mut deps_remaining = pool.deps.pop().unwrap_or_default();
+                        deps_remaining.clear();
+                        deps_remaining.extend(plan.deps.iter().map(|d| d.len()));
+                        let mut unit_proc = pool.procs.pop().unwrap_or_default();
+                        unit_proc.clear();
+                        unit_proc.resize(nu, None);
                         let st = ReqState {
                             session: s,
                             arrival: now,
                             slo_ms: sess[s].app.slo_ms,
                             epoch,
-                            deps_remaining: plan.deps.iter().map(|d| d.len()).collect(),
-                            unit_proc: vec![None; nu],
+                            deps_remaining,
+                            unit_proc,
                             units_left: nu,
                             dead: false,
                         };
                         // Enqueue units with no dependencies.
                         for u in 0..nu {
                             if st.deps_remaining[u] == 0 {
+                                let dep_procs = ready.take_deps_buf();
                                 ready.push(PendingTask {
                                     req: id,
                                     session: s,
@@ -415,7 +481,7 @@ impl Driver {
                                     slo_ms: st.slo_ms,
                                     remaining_ms: plan
                                         .remaining_ms((0..nu).filter(|&x| x != u)),
-                                    dep_procs: vec![],
+                                    dep_procs,
                                 });
                             }
                         }
@@ -455,7 +521,7 @@ impl Driver {
                             if has_slo {
                                 sess[s].slo_n += 1;
                             }
-                            ready.retain(|t| t.req != done.req);
+                            ready.cancel_request(done.req);
                             // Not-yet-dispatched units will never run;
                             // only units still resident on processors
                             // (plus this one, decremented below) keep
@@ -464,7 +530,7 @@ impl Driver {
                             // +1: this event's own completion is
                             // decremented just below, in the shared
                             // retirement block.
-                            clamp_dead_request(&mut reqs, done.req, running + 1);
+                            clamp_dead_request(&mut reqs, done.req, running + 1, &mut pool);
                             rearm_closed_loop(
                                 self.backend.as_mut(),
                                 &sess[s],
@@ -485,28 +551,33 @@ impl Driver {
                             st.unit_proc[done.unit] = Some(done.proc);
                             st.units_left -= 1;
                             let plan = &self.plans[done.session];
-                            // Unlock consumers.
+                            let nu = plan.num_units();
+                            // Unlock consumers. `deps_remaining` and
+                            // `unit_proc` are borrowed apart so the
+                            // remaining-work estimate streams over
+                            // `unit_proc` without a collected scratch.
+                            let ReqState { deps_remaining, unit_proc, arrival, slo_ms, .. } =
+                                &mut *st;
                             for &c in &plan.consumers[done.unit] {
-                                st.deps_remaining[c] -= 1;
-                                if st.deps_remaining[c] == 0 {
-                                    let unfinished: Vec<usize> = (0..plan.num_units())
-                                        .filter(|&u| u != c && st.unit_proc[u].is_none())
-                                        .collect();
+                                deps_remaining[c] -= 1;
+                                if deps_remaining[c] == 0 {
+                                    let mut dep_procs = ready.take_deps_buf();
+                                    dep_procs.extend(plan.deps[c].iter().map(|&d| {
+                                        (d, unit_proc[d].unwrap_or(done.proc))
+                                    }));
+                                    let remaining = plan.remaining_ms(
+                                        (0..nu)
+                                            .filter(|&u| u != c && unit_proc[u].is_none()),
+                                    );
                                     ready.push(PendingTask {
                                         req: done.req,
                                         session: done.session,
                                         unit: c,
                                         ready_at: now,
-                                        req_arrival: st.arrival,
-                                        slo_ms: st.slo_ms,
-                                        remaining_ms: plan
-                                            .remaining_ms(unfinished.into_iter()),
-                                        dep_procs: plan.deps[c]
-                                            .iter()
-                                            .map(|&d| {
-                                                (d, st.unit_proc[d].unwrap_or(done.proc))
-                                            })
-                                            .collect(),
+                                        req_arrival: *arrival,
+                                        slo_ms: *slo_ms,
+                                        remaining_ms: remaining,
+                                        dep_procs,
                                     });
                                 }
                             }
@@ -539,11 +610,12 @@ impl Driver {
                                 now,
                             );
                         }
+                        pool.recycle(st);
                     }
                 }
                 ExecEvent::Tick { .. } => {
                     // Failure sweep: abort requests far past their budget.
-                    let mut aborted: Vec<ReqId> = Vec::new();
+                    aborted.clear();
                     for (&id, st) in reqs.iter_mut() {
                         if st.dead {
                             continue;
@@ -566,9 +638,9 @@ impl Driver {
                         // sort so re-arm order (and thus the event
                         // sequence) is reproducible under a fixed seed.
                         aborted.sort_unstable();
-                        ready.retain(|t| !aborted.contains(&t.req));
+                        ready.cancel_requests(&aborted);
                         // Closed-loop sessions re-arm after an abort.
-                        for id in aborted {
+                        for &id in aborted.iter() {
                             let (s, epoch) = {
                                 let st = &reqs[&id];
                                 (st.session, st.epoch)
@@ -584,7 +656,7 @@ impl Driver {
                             );
                             // Unscheduled units will never run; account
                             // them as done so the request can retire.
-                            clamp_dead_request(&mut reqs, id, running);
+                            clamp_dead_request(&mut reqs, id, running, &mut pool);
                         }
                     }
                 }
@@ -596,56 +668,82 @@ impl Driver {
                 if !dispatch_after || ready.is_empty() {
                     break;
                 }
-                // Monitor snapshot (respecting the cache interval).
-                let views: Vec<ProcView> =
-                    monitor.sample(now, || self.backend.proc_views()).to_vec();
+                // Monitor snapshot (respecting the cache interval) —
+                // borrowed from the cache; a refresh fills it in place.
+                let backend = &mut self.backend;
+                let views = monitor.sample_with(now, |buf| backend.fill_proc_views(buf));
                 // Serialized policies see only each session's earliest
                 // ready unit; other policies see the queue directly (no
                 // copy — this loop is the hot path).
-                let exposed: Option<Vec<usize>> = if self.scheduler.serializes_sessions() {
-                    let mut first: std::collections::BTreeMap<SessId, (usize, usize)> =
-                        Default::default();
-                    for (i, t) in ready.iter().enumerate() {
-                        let e = first.entry(t.session).or_insert((i, t.unit));
-                        if t.unit < e.1 {
-                            *e = (i, t.unit);
+                let serialized = self.scheduler.serializes_sessions();
+                if serialized {
+                    for e in first_by_sess.iter_mut() {
+                        *e = (u32::MAX, u32::MAX);
+                    }
+                    for (i, t) in ready.as_slice().iter().enumerate() {
+                        let e = &mut first_by_sess[t.session];
+                        if e.0 == u32::MAX || (t.unit as u32) < e.1 {
+                            *e = (i as u32, t.unit as u32);
                         }
                     }
-                    Some(first.values().map(|&(i, _)| i).collect())
-                } else {
-                    None
-                };
-                let ctx = SchedCtx { now, soc: &soc, plans: &self.plans, procs: &views };
-                let assignments = match &exposed {
-                    Some(idx) => {
-                        let exposed_tasks: Vec<PendingTask> =
-                            idx.iter().map(|&i| ready[i].clone()).collect();
-                        self.scheduler.schedule(&ctx, &exposed_tasks)
+                    exposed_idx.clear();
+                    // Ascending session order — the exposure order the old
+                    // BTreeMap gave.
+                    for e in first_by_sess.iter() {
+                        if e.0 != u32::MAX {
+                            exposed_idx.push(e.0 as usize);
+                        }
                     }
-                    None => self.scheduler.schedule(&ctx, &ready),
-                };
-                if assignments.is_empty() {
+                    // Clone the exposure into reusable scratch
+                    // (`clone_from` keeps each slot's dep buffer). Slots
+                    // beyond this round's count are NOT truncated away —
+                    // the scheduler sees a `..len` slice instead — so an
+                    // exposure count that shrinks and regrows never
+                    // drops and reallocates the slots' dep buffers.
+                    let tasks = ready.as_slice();
+                    for (j, &i) in exposed_idx.iter().enumerate() {
+                        if j < exposed_tasks.len() {
+                            exposed_tasks[j].clone_from(&tasks[i]);
+                        } else {
+                            exposed_tasks.push(tasks[i].clone());
+                        }
+                    }
+                }
+                let ctx = SchedCtx { now, soc: &soc, plans: &self.plans, procs: views };
+                sched_out.clear();
+                if serialized {
+                    let exposed = &exposed_tasks[..exposed_idx.len()];
+                    self.scheduler.schedule(&ctx, exposed, &mut sched_out);
+                } else {
+                    self.scheduler.schedule(&ctx, ready.as_slice(), &mut sched_out);
+                }
+                if sched_out.is_empty() {
                     break;
                 }
-                // Apply (validate defensively), collecting indices to drop.
-                let mut dispatched: Vec<usize> = Vec::new();
-                for a in assignments {
-                    let ridx = match &exposed {
-                        Some(idx) => match idx.get(a.ready_idx) {
+                // Apply (validate defensively), collecting indices to
+                // drop. `taken_stamp` marks indices dispatched this round
+                // (a stamp, not a set — no clearing between rounds).
+                dispatched.clear();
+                round += 1;
+                if taken_stamp.len() < ready.len() {
+                    taken_stamp.resize(ready.len(), 0);
+                }
+                for &a in &sched_out {
+                    let ridx = if serialized {
+                        match exposed_idx.get(a.ready_idx) {
                             Some(&r) => r,
                             None => continue,
-                        },
-                        None => {
-                            if a.ready_idx >= ready.len() {
-                                continue;
-                            }
-                            a.ready_idx
                         }
+                    } else {
+                        if a.ready_idx >= ready.len() {
+                            continue;
+                        }
+                        a.ready_idx
                     };
-                    if dispatched.contains(&ridx) {
+                    if taken_stamp[ridx] == round {
                         continue;
                     }
-                    let t = &ready[ridx];
+                    let t = &ready.as_slice()[ridx];
                     let plan = &self.plans[t.session];
                     if !plan.partition.units[t.unit].supports(a.proc) {
                         continue;
@@ -653,25 +751,25 @@ impl Driver {
                     let Some(exec_full) = plan.exec_ms[t.unit][a.proc] else {
                         continue;
                     };
+                    // Positional dep → bytes lookup (rows align with
+                    // `deps[unit]`; no linear search).
                     let xfer: f64 = t
                         .dep_procs
                         .iter()
-                        .map(|&(du, dp)| {
-                            let bytes = plan.xfer_bytes[t.unit]
-                                .iter()
-                                .find(|(d, _)| *d == du)
-                                .map(|(_, b)| *b)
-                                .unwrap_or(0);
+                        .enumerate()
+                        .map(|(k, &(du, dp))| {
+                            let bytes = plan.xfer_bytes_at(t.unit, k, du);
                             self.scheduler.transfer_cost_ms(&soc, dp, a.proc, bytes)
                         })
                         .sum();
                     let mgmt = self.scheduler.decision_overhead_ms(plan);
+                    let (req, session, unit) = (t.req, t.session, t.unit);
                     let token = run_seq + 1;
                     let accepted = self.backend.try_dispatch(DispatchCmd {
                         token,
-                        req: t.req,
-                        session: t.session,
-                        unit: t.unit,
+                        req,
+                        session,
+                        unit,
                         proc: a.proc,
                         exec_full_ms: exec_full,
                         xfer_ms: xfer,
@@ -681,23 +779,16 @@ impl Driver {
                         continue;
                     }
                     run_seq = token;
-                    inflight.insert(
-                        token,
-                        Inflight { req: t.req, session: t.session, unit: t.unit, proc: a.proc },
-                    );
-                    assignments_trace.push(AssignRecord {
-                        req: t.req,
-                        session: t.session,
-                        unit: t.unit,
-                        proc: a.proc,
-                    });
+                    inflight.insert(token, Inflight { req, session, unit, proc: a.proc });
+                    assignments_trace.push(AssignRecord { req, session, unit, proc: a.proc });
+                    taken_stamp[ridx] = round;
                     dispatched.push(ridx);
                 }
                 if dispatched.is_empty() {
                     break;
                 }
                 dispatched.sort_unstable_by(|a, b| b.cmp(a));
-                for i in dispatched {
+                for &i in dispatched.iter() {
                     ready.swap_remove(i);
                 }
             }
@@ -776,6 +867,35 @@ impl Driver {
             exec_errors: be.exec_errors,
             assignments: assignments_trace,
             arrivals: arrivals_trace,
+            events: n_events,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_key_round_trips_and_stays_out_of_event_namespace() {
+        for &epoch in &[0u32, 1, 7, 1 << 20, EPOCH_MASK - 1, EPOCH_MASK] {
+            for &session in &[0usize, 3, 4_000_000_000usize.min(usize::MAX)] {
+                let session = session & 0xFFFF_FFFF;
+                let key = arrival_key(session, epoch);
+                assert_eq!(key & EVENT_KEY, 0, "epoch {epoch} leaked into bit 63");
+                assert_eq!(decode_arrival(key), (session, epoch));
+            }
+        }
+    }
+
+    /// Epoch 2^31 − 1 + 1 wraps to 0 instead of colliding with
+    /// `EVENT_KEY` — the regression this namespace hazard fix is about.
+    #[test]
+    fn epoch_wraps_at_31_bits() {
+        assert_eq!(next_epoch(EPOCH_MASK), 0);
+        assert_eq!(next_epoch(0), 1);
+        let key = arrival_key(5, next_epoch(EPOCH_MASK - 1));
+        assert_eq!(key & EVENT_KEY, 0);
+        assert_eq!(decode_arrival(key), (5, EPOCH_MASK));
     }
 }

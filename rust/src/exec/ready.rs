@@ -1,0 +1,320 @@
+//! Indexed ready queue for the dispatch loop's hot path.
+//!
+//! The driver used to keep ready tasks in a flat `Vec<PendingTask>` and
+//! cancel with `retain(|t| ...)` full-queue scans — O(queue × aborted)
+//! on every failure sweep and session stop. This queue keeps the same
+//! dense task array (schedulers still see a plain `&[PendingTask]` in
+//! the *exact* order the flat vector would have had) but maintains
+//! per-request and per-session position indices on the side, so
+//! cancellation starts from the victims' known positions instead of
+//! scanning, and dispatch removal stays `swap_remove`-cheap.
+//!
+//! Order contract (the determinism referee — dispatch traces must be
+//! bit-identical to the pre-index driver):
+//!
+//! * `push` appends, exactly like `Vec::push`;
+//! * `swap_remove(i)` reorders exactly like `Vec::swap_remove(i)` (the
+//!   driver applies dispatched indices in descending order, as before);
+//! * the `cancel_*` operations compact survivors in place, preserving
+//!   their relative order exactly like `Vec::retain` — but the pass
+//!   starts at the first victim's position rather than index 0.
+//!
+//! The queue also recycles the `dep_procs` buffers of retired tasks
+//! (`take_deps_buf`), so steady-state pushes perform no allocation.
+
+use crate::sched::{PendingTask, ReqId, SessId};
+use crate::soc::ProcId;
+use std::collections::HashMap;
+
+/// Back-pointers from a task to its slots inside the two index lists,
+/// so removing/moving a task never scans a list (a busy session's list
+/// can hold its whole ready backlog — a linear scan there would put an
+/// O(backlog) factor back on the dispatch path).
+#[derive(Debug, Clone, Copy)]
+struct Slots {
+    req_slot: u32,
+    sess_slot: u32,
+}
+
+#[derive(Default)]
+pub struct ReadyQueue {
+    tasks: Vec<PendingTask>,
+    /// Parallel to `tasks`: where each task's position is recorded in
+    /// `by_req`/`by_sess` (kept in lock-step through swaps/truncations).
+    slots: Vec<Slots>,
+    /// Positions (into `tasks`) of each open request's ready units.
+    by_req: HashMap<ReqId, Vec<u32>>,
+    /// Positions of each session's ready units (sessions are dense ids).
+    by_sess: Vec<Vec<u32>>,
+    /// Recycled `dep_procs` buffers from retired tasks.
+    spare_deps: Vec<Vec<(usize, ProcId)>>,
+    /// Recycled position lists from fully-drained requests.
+    spare_pos: Vec<Vec<u32>>,
+    /// Scratch for cancellation position lists (reused across calls).
+    scratch: Vec<u32>,
+}
+
+impl ReadyQueue {
+    pub fn new(sessions: usize) -> Self {
+        ReadyQueue {
+            tasks: Vec::new(),
+            slots: Vec::new(),
+            by_req: HashMap::new(),
+            by_sess: (0..sessions).map(|_| Vec::new()).collect(),
+            spare_deps: Vec::new(),
+            spare_pos: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// The dense task array, in the order the scheduler must see.
+    pub fn as_slice(&self) -> &[PendingTask] {
+        &self.tasks
+    }
+
+    /// A cleared, possibly pre-allocated buffer for a new task's
+    /// `dep_procs` (recycled from retired tasks when available).
+    pub fn take_deps_buf(&mut self) -> Vec<(usize, ProcId)> {
+        self.spare_deps.pop().unwrap_or_default()
+    }
+
+    pub fn push(&mut self, task: PendingTask) {
+        let pos = self.tasks.len() as u32;
+        let spare = &mut self.spare_pos;
+        let rlist = self
+            .by_req
+            .entry(task.req)
+            .or_insert_with(|| spare.pop().unwrap_or_default());
+        let req_slot = rlist.len() as u32;
+        rlist.push(pos);
+        let slist = &mut self.by_sess[task.session];
+        let sess_slot = slist.len() as u32;
+        slist.push(pos);
+        self.slots.push(Slots { req_slot, sess_slot });
+        self.tasks.push(task);
+    }
+
+    /// Drop the task at `pos` from both index lists — O(1) via its
+    /// recorded slots; the list entries swapped into the freed slots get
+    /// their owners' back-pointers fixed up.
+    fn unindex(&mut self, pos: usize) {
+        let s = self.slots[pos];
+        let req = self.tasks[pos].req;
+        let sess = self.tasks[pos].session;
+        let mut drained = false;
+        if let Some(list) = self.by_req.get_mut(&req) {
+            list.swap_remove(s.req_slot as usize);
+            if let Some(&moved) = list.get(s.req_slot as usize) {
+                self.slots[moved as usize].req_slot = s.req_slot;
+            }
+            drained = list.is_empty();
+        }
+        if drained {
+            if let Some(buf) = self.by_req.remove(&req) {
+                self.spare_pos.push(buf);
+            }
+        }
+        let list = &mut self.by_sess[sess];
+        list.swap_remove(s.sess_slot as usize);
+        if let Some(&moved) = list.get(s.sess_slot as usize) {
+            self.slots[moved as usize].sess_slot = s.sess_slot;
+        }
+    }
+
+    /// The task at `old` is about to move to `new`: point its list
+    /// entries (found O(1) through its back-pointers) at the new
+    /// position. Its own slots don't change.
+    fn reindex(&mut self, old: usize, new: usize) {
+        let s = self.slots[old];
+        let req = self.tasks[old].req;
+        let sess = self.tasks[old].session;
+        if let Some(list) = self.by_req.get_mut(&req) {
+            list[s.req_slot as usize] = new as u32;
+        }
+        self.by_sess[sess][s.sess_slot as usize] = new as u32;
+    }
+
+    /// Remove the task at `pos` with `Vec::swap_remove` order semantics
+    /// (the last task takes its place). Its `dep_procs` buffer is
+    /// recycled.
+    pub fn swap_remove(&mut self, pos: usize) {
+        let last = self.tasks.len() - 1;
+        self.unindex(pos);
+        if pos != last {
+            self.reindex(last, pos);
+        }
+        let mut t = self.tasks.swap_remove(pos);
+        self.slots.swap_remove(pos);
+        let mut deps = std::mem::take(&mut t.dep_procs);
+        deps.clear();
+        self.spare_deps.push(deps);
+    }
+
+    /// Remove every ready task of `req`, preserving survivor order.
+    pub fn cancel_request(&mut self, req: ReqId) -> usize {
+        let mut positions = std::mem::take(&mut self.scratch);
+        positions.clear();
+        if let Some(list) = self.by_req.get(&req) {
+            positions.extend_from_slice(list);
+        }
+        let n = self.remove_positions(&mut positions);
+        self.scratch = positions;
+        n
+    }
+
+    /// Remove every ready task of session `sess`, preserving survivor
+    /// order (exactly `retain(|t| t.session != sess)`).
+    pub fn cancel_session(&mut self, sess: SessId) -> usize {
+        let mut positions = std::mem::take(&mut self.scratch);
+        positions.clear();
+        positions.extend_from_slice(&self.by_sess[sess]);
+        let n = self.remove_positions(&mut positions);
+        self.scratch = positions;
+        n
+    }
+
+    /// Remove every ready task of any request in `reqs`, preserving
+    /// survivor order (exactly `retain(|t| !reqs.contains(&t.req))`).
+    pub fn cancel_requests(&mut self, reqs: &[ReqId]) -> usize {
+        let mut positions = std::mem::take(&mut self.scratch);
+        positions.clear();
+        for r in reqs {
+            if let Some(list) = self.by_req.get(r) {
+                positions.extend_from_slice(list);
+            }
+        }
+        let n = self.remove_positions(&mut positions);
+        self.scratch = positions;
+        n
+    }
+
+    /// Compact out the tasks at `positions` (unsorted, duplicate-free),
+    /// shifting survivors left from the first victim onwards — the same
+    /// final order `Vec::retain` would produce, without scanning the
+    /// prefix before the first victim.
+    fn remove_positions(&mut self, positions: &mut Vec<u32>) -> usize {
+        if positions.is_empty() {
+            return 0;
+        }
+        positions.sort_unstable();
+        positions.dedup();
+        let mut w = positions[0] as usize;
+        let mut vi = 0usize;
+        for r in w..self.tasks.len() {
+            if vi < positions.len() && positions[vi] as usize == r {
+                // Victim: unlink, recycle its deps buffer, leave a shell
+                // to be truncated (or swapped rightwards) below.
+                vi += 1;
+                self.unindex(r);
+                let mut deps = std::mem::take(&mut self.tasks[r].dep_procs);
+                deps.clear();
+                self.spare_deps.push(deps);
+            } else {
+                // Survivor: shift into the first hole, order preserved.
+                if r != w {
+                    self.reindex(r, w);
+                    self.tasks.swap(r, w);
+                    self.slots.swap(r, w);
+                }
+                w += 1;
+            }
+        }
+        self.tasks.truncate(w);
+        self.slots.truncate(w);
+        positions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(req: ReqId, sess: SessId, unit: usize) -> PendingTask {
+        PendingTask {
+            req,
+            session: sess,
+            unit,
+            ready_at: 0.0,
+            req_arrival: 0.0,
+            slo_ms: None,
+            remaining_ms: 0.0,
+            dep_procs: Vec::new(),
+        }
+    }
+
+    fn keys(q: &ReadyQueue) -> Vec<(ReqId, SessId, usize)> {
+        q.as_slice().iter().map(|t| (t.req, t.session, t.unit)).collect()
+    }
+
+    #[test]
+    fn swap_remove_matches_vec_semantics() {
+        let mut q = ReadyQueue::new(2);
+        for (r, s, u) in [(0, 0, 0), (1, 1, 0), (2, 0, 1), (3, 1, 1)] {
+            q.push(task(r, s, u));
+        }
+        q.swap_remove(1); // last (3,1,1) moves into slot 1
+        assert_eq!(keys(&q), vec![(0, 0, 0), (3, 1, 1), (2, 0, 1)]);
+        q.swap_remove(2);
+        assert_eq!(keys(&q), vec![(0, 0, 0), (3, 1, 1)]);
+    }
+
+    #[test]
+    fn cancel_session_preserves_survivor_order() {
+        let mut q = ReadyQueue::new(3);
+        for (r, s) in [(0, 0), (1, 1), (2, 2), (3, 1), (4, 0), (5, 1)] {
+            q.push(task(r, s, 0));
+        }
+        assert_eq!(q.cancel_session(1), 3);
+        assert_eq!(keys(&q), vec![(0, 0, 0), (2, 2, 0), (4, 0, 0)]);
+        assert_eq!(q.cancel_session(1), 0);
+    }
+
+    #[test]
+    fn cancel_requests_matches_retain() {
+        let mut q = ReadyQueue::new(1);
+        for r in 0..6u64 {
+            q.push(task(r, 0, 0));
+        }
+        assert_eq!(q.cancel_requests(&[1, 4]), 2);
+        assert_eq!(
+            keys(&q),
+            vec![(0, 0, 0), (2, 0, 0), (3, 0, 0), (5, 0, 0)]
+        );
+    }
+
+    #[test]
+    fn indices_survive_interleaved_ops() {
+        let mut q = ReadyQueue::new(2);
+        for i in 0..8u64 {
+            q.push(task(i, (i % 2) as usize, i as usize));
+        }
+        q.swap_remove(0); // 7 moves to front
+        q.cancel_session(1); // drops 1,3,5 (7 moved; still session 1)… and 7
+        // session-1 reqs were 1,3,5,7 — all gone
+        assert!(keys(&q).iter().all(|&(_, s, _)| s == 0));
+        assert_eq!(q.cancel_request(2), 1);
+        assert_eq!(q.cancel_request(2), 0);
+        // survivors: 4, 6 in original relative order
+        assert_eq!(keys(&q), vec![(4, 0, 4), (6, 0, 6)]);
+    }
+
+    #[test]
+    fn deps_buffers_are_recycled() {
+        let mut q = ReadyQueue::new(1);
+        let mut t = task(0, 0, 0);
+        t.dep_procs = vec![(0, 1), (1, 2)];
+        q.push(t);
+        q.swap_remove(0);
+        let buf = q.take_deps_buf();
+        assert!(buf.is_empty());
+        assert!(buf.capacity() >= 2, "buffer was not recycled");
+    }
+}

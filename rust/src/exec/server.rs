@@ -251,10 +251,10 @@ impl Server {
                 .ok_or_else(|| anyhow!("unknown model '{}'", app.model))?;
             let ws = match self.window_size {
                 Some(ws) => ws,
-                None if tuned => tuner::tune_window_size(&g, &self.soc, 12).0,
+                None if tuned => tuner::tuned_window_size(&g, &self.soc, 12),
                 None => 1,
             };
-            plans.push(ModelPlan::build(Arc::new(g), &self.soc, ws));
+            plans.push(ModelPlan::build_cached(Arc::new(g), &self.soc, ws));
         }
         Ok(Built {
             cfg: self.cfg,

@@ -2,6 +2,14 @@
 //! monolithic engine. Owns the virtual clock, the event heap, thermal/DVFS
 //! dynamics, power accounting, and the contention-aware service-time
 //! model; the request lifecycle lives in [`Driver`](super::Driver).
+//!
+//! Hot-path discipline (DESIGN.md §3b): per-event work is O(changed
+//! state), not O(processors × slots). Busy/slot time is integrated
+//! lazily per processor at occupancy-change points instead of scanning
+//! every processor on every heap event; `running_units` is an O(1)
+//! counter lookup; and the contention model's distinct-session census is
+//! maintained incrementally instead of allocating + sorting + deduping a
+//! session vector on every dispatch and view refresh.
 
 use super::{
     proc_slots, BackendReport, DispatchCmd, ExecEvent, ExecutionBackend, OrdF64, RunToken,
@@ -16,7 +24,7 @@ use crate::thermal::ThermalState;
 use crate::util::stats::TimeSeries;
 use crate::TimeMs;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Sessions touching a processor within this window still count as
 /// resident for the contention model.
@@ -89,8 +97,18 @@ struct ProcState {
     running: Vec<Running>,
     /// Estimated ms of work resident (running remainder + committed).
     backlog_ms: f64,
-    /// Sessions that recently touched this processor: (session, time).
+    /// Distinct sessions currently running here, with residency counts
+    /// (≤ slots entries — maintained on dispatch/complete so the
+    /// contention census never rebuilds a sorted session set).
+    run_sessions: Vec<(SessId, u32)>,
+    /// Sessions that recently touched this processor: (session, time),
+    /// at most one entry per session.
     recent_sessions: Vec<(SessId, TimeMs)>,
+    /// Clock of the last busy/slot-time integration for this processor.
+    /// Occupancy is constant between integration points, so flushing at
+    /// every occupancy change (and at ticks/views/finish) accumulates
+    /// exactly what the old per-event full scan did.
+    last_acct: TimeMs,
     busy_ms: f64,      // wall time with ≥1 task, total
     slot_ms: f64,      // Σ per-slot occupied time, total
     tick_busy_ms: f64, // within current tick (for power/util)
@@ -98,6 +116,39 @@ struct ProcState {
     dispatches: u64,
     temp_series: TimeSeries,
     freq_series: TimeSeries,
+}
+
+impl ProcState {
+    /// Integrate busy/slot time up to `to` at the current occupancy.
+    fn account(&mut self, to: TimeMs) {
+        let n = self.running.len();
+        if n > 0 {
+            let dt = to - self.last_acct;
+            if dt > 0.0 {
+                self.busy_ms += dt;
+                self.tick_busy_ms += dt;
+                self.slot_ms += dt * n as f64;
+                self.tick_slot_ms += dt * n as f64;
+            }
+        }
+        self.last_acct = to;
+    }
+
+    fn run_add(&mut self, s: SessId) {
+        match self.run_sessions.iter_mut().find(|(rs, _)| *rs == s) {
+            Some(e) => e.1 += 1,
+            None => self.run_sessions.push((s, 1)),
+        }
+    }
+
+    fn run_sub(&mut self, s: SessId) {
+        if let Some(i) = self.run_sessions.iter().position(|&(rs, _)| rs == s) {
+            self.run_sessions[i].1 -= 1;
+            if self.run_sessions[i].1 == 0 {
+                self.run_sessions.swap_remove(i);
+            }
+        }
+    }
 }
 
 /// Discrete-event SoC backend on a virtual clock.
@@ -109,6 +160,11 @@ pub struct SimBackend {
     heap: BinaryHeap<Reverse<QEv>>,
     seq: u64,
     now: TimeMs,
+    /// Units of each request currently resident on processors — the O(1)
+    /// backing for [`ExecutionBackend::running_units`] (the driver asks
+    /// on every abort; scanning every slot of every processor was
+    /// O(procs × slots) per query).
+    req_units: HashMap<ReqId, u32>,
     energy: EnergyMeter,
     power_series: TimeSeries,
     timeline: Vec<TimelineEvent>,
@@ -122,7 +178,9 @@ impl SimBackend {
                 thermal: ThermalState::new(ambient),
                 running: Vec::new(),
                 backlog_ms: 0.0,
+                run_sessions: Vec::new(),
                 recent_sessions: Vec::new(),
+                last_acct: 0.0,
                 busy_ms: 0.0,
                 slot_ms: 0.0,
                 tick_busy_ms: 0.0,
@@ -139,6 +197,7 @@ impl SimBackend {
             heap: BinaryHeap::new(),
             seq: 0,
             now: 0.0,
+            req_units: HashMap::new(),
             energy: EnergyMeter::new(),
             power_series: TimeSeries::default(),
             timeline: Vec::new(),
@@ -159,6 +218,7 @@ impl SimBackend {
         let mut total_w = BOARD_BASELINE_W;
         for (i, p) in self.procs.iter_mut().enumerate() {
             let spec = &self.soc.processors[i];
+            p.account(now);
             let util_power = (p.tick_busy_ms / self.cfg.tick_ms).clamp(0.0, 1.0);
             let fs = p.thermal.freq_scale(spec);
             let w =
@@ -196,29 +256,34 @@ impl ExecutionBackend for SimBackend {
     }
 
     fn proc_views(&mut self) -> Vec<ProcView> {
+        let mut out = Vec::new();
+        self.fill_proc_views(&mut out);
+        out
+    }
+
+    fn fill_proc_views(&mut self, out: &mut Vec<ProcView>) {
         let now = self.now;
         let soc = &self.soc;
         let tick = self.cfg.tick_ms;
-        self.procs
-            .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                let spec = &soc.processors[i];
-                ProcView {
-                    id: i,
-                    kind: spec.kind,
-                    temp_c: p.thermal.temp_c,
-                    freq_mhz: p.thermal.freq_mhz(spec),
-                    freq_scale: p.thermal.freq_scale(spec),
-                    offline: p.thermal.offline,
-                    load: p.running.len() as f64 / proc_slots(spec) as f64,
-                    backlog_ms: p.backlog_ms,
-                    active_sessions: active_sessions(p, now),
-                    util: (p.tick_busy_ms / tick).min(1.0),
-                    headroom_c: p.thermal.headroom_c(spec),
-                }
-            })
-            .collect()
+        out.extend(self.procs.iter_mut().enumerate().map(|(i, p)| {
+            let spec = &soc.processors[i];
+            // Bring tick-window utilization current (occupancy since the
+            // last change point hasn't been integrated yet).
+            p.account(now);
+            ProcView {
+                id: i,
+                kind: spec.kind,
+                temp_c: p.thermal.temp_c,
+                freq_mhz: p.thermal.freq_mhz(spec),
+                freq_scale: p.thermal.freq_scale(spec),
+                offline: p.thermal.offline,
+                load: p.running.len() as f64 / proc_slots(spec) as f64,
+                backlog_ms: p.backlog_ms,
+                active_sessions: active_sessions(p, now),
+                util: (p.tick_busy_ms / tick).min(1.0),
+                headroom_c: p.thermal.headroom_c(spec),
+            }
+        }));
     }
 
     fn try_dispatch(&mut self, cmd: DispatchCmd) -> bool {
@@ -248,19 +313,20 @@ impl ExecutionBackend for SimBackend {
         };
         let end = run.end;
         self.push(end, Ev::Complete { proc: cmd.proc, token: cmd.token });
+        *self.req_units.entry(cmd.req).or_insert(0) += 1;
         let p = &mut self.procs[cmd.proc];
+        // Occupancy changes here: settle the interval at the old count.
+        p.account(now);
         p.backlog_ms += service;
         p.dispatches += 1;
         touch_session(p, cmd.session, now);
+        p.run_add(cmd.session);
         p.running.push(run);
         true
     }
 
     fn running_units(&self, req: ReqId) -> usize {
-        self.procs
-            .iter()
-            .map(|p| p.running.iter().filter(|r| r.req == req).count())
-            .sum()
+        self.req_units.get(&req).copied().unwrap_or(0) as usize
     }
 
     fn next_event(&mut self) -> ExecEvent {
@@ -269,8 +335,10 @@ impl ExecutionBackend for SimBackend {
                 return ExecEvent::Drained { at: self.now };
             };
             // Past the horizon: surface the event untouched so the driver
-            // can stop; crucially, do NOT account busy time beyond the
-            // duration (preserves the old engine's busy_frac semantics).
+            // can stop; crucially, do NOT advance the clock or account
+            // busy time beyond the duration (preserves the old engine's
+            // busy_frac semantics — the lazy accounting below only ever
+            // integrates up to the last in-horizon event).
             if now > self.cfg.duration_ms {
                 return match ev {
                     Ev::Timer(key) => ExecEvent::Timer { at: now, key },
@@ -279,19 +347,6 @@ impl ExecutionBackend for SimBackend {
                         ExecEvent::Completed { at: now, token, error: false }
                     }
                 };
-            }
-            // Accumulate busy time since the previous event.
-            let dt = now - self.now;
-            if dt > 0.0 {
-                for p in self.procs.iter_mut() {
-                    if !p.running.is_empty() {
-                        p.busy_ms += dt;
-                        p.tick_busy_ms += dt;
-                        let n = p.running.len() as f64;
-                        p.slot_ms += dt * n;
-                        p.tick_slot_ms += dt * n;
-                    }
-                }
             }
             self.now = now;
 
@@ -307,7 +362,16 @@ impl ExecutionBackend for SimBackend {
                     else {
                         continue;
                     };
+                    // Occupancy changes: settle the interval first.
+                    self.procs[proc].account(now);
                     let done = self.procs[proc].running.remove(pos);
+                    self.procs[proc].run_sub(done.session);
+                    if let Some(n) = self.req_units.get_mut(&done.req) {
+                        *n -= 1;
+                        if *n == 0 {
+                            self.req_units.remove(&done.req);
+                        }
+                    }
                     self.procs[proc].backlog_ms =
                         (self.procs[proc].backlog_ms - (done.end - done.start)).max(0.0);
                     if self.timeline.len() < self.cfg.timeline_cap {
@@ -327,7 +391,14 @@ impl ExecutionBackend for SimBackend {
     }
 
     fn finish(self: Box<Self>, duration_ms: TimeMs) -> BackendReport {
-        let this = *self;
+        let mut this = *self;
+        // Close the books: integrate still-running occupancy up to the
+        // last in-horizon event (the old per-event scan had already done
+        // this by the time the driver stopped).
+        let now = this.now;
+        for p in this.procs.iter_mut() {
+            p.account(now);
+        }
         let soc = this.soc;
         let procs = this
             .procs
@@ -355,32 +426,34 @@ impl ExecutionBackend for SimBackend {
     }
 }
 
+/// Distinct sessions resident on `p` at `now`: currently running ones
+/// (`run_sessions` — incrementally maintained, no duplicates) plus
+/// recently-touching ones still inside the window and not already
+/// counted. Equal to the old sort+dedup over the concatenated multiset,
+/// without building it.
 fn active_sessions(p: &ProcState, now: TimeMs) -> usize {
-    let mut sessions: Vec<SessId> = p.running.iter().map(|r| r.session).collect();
+    let mut n = p.run_sessions.len();
     for &(s, t) in &p.recent_sessions {
-        if now - t <= SESSION_WINDOW_MS {
-            sessions.push(s);
+        if now - t <= SESSION_WINDOW_MS && !p.run_sessions.iter().any(|&(rs, _)| rs == s) {
+            n += 1;
         }
     }
-    sessions.sort_unstable();
-    sessions.dedup();
-    sessions.len()
+    n
 }
 
 /// `active_sessions` with `extra` included exactly once (the session of a
 /// task being dispatched must not double-count against its own recent
 /// residency).
 fn active_sessions_with(p: &ProcState, now: TimeMs, extra: SessId) -> usize {
-    let mut sessions: Vec<SessId> = p.running.iter().map(|r| r.session).collect();
-    for &(s, t) in &p.recent_sessions {
-        if now - t <= SESSION_WINDOW_MS {
-            sessions.push(s);
-        }
+    let mut n = active_sessions(p, now);
+    let counted = p.run_sessions.iter().any(|&(rs, _)| rs == extra)
+        || p.recent_sessions
+            .iter()
+            .any(|&(s, t)| s == extra && now - t <= SESSION_WINDOW_MS);
+    if !counted {
+        n += 1;
     }
-    sessions.push(extra);
-    sessions.sort_unstable();
-    sessions.dedup();
-    sessions.len()
+    n
 }
 
 fn touch_session(p: &mut ProcState, s: SessId, now: TimeMs) {

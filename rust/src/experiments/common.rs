@@ -31,7 +31,7 @@ impl Framework {
     pub fn window_size(self, g: &Graph, soc: &SocSpec) -> usize {
         match self {
             Framework::Tflite | Framework::Band => 1,
-            Framework::Adms => tuner::tune_window_size(g, soc, 12).0,
+            Framework::Adms => tuner::tuned_window_size(g, soc, 12),
         }
     }
 

@@ -71,7 +71,7 @@ pub fn run() -> String {
 
     // Subgraph-level: ADMS with tuned partitioning.
     let r_sub = Engine::new(soc.clone(), cfg, apps, Box::new(Adms::default()), &|g| {
-        crate::analyzer::tuner::tune_window_size(g, &kirin970(), 12).0
+        crate::analyzer::tuner::tuned_window_size(g, &kirin970(), 12)
     })
     .unwrap()
     .run();

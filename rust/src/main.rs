@@ -12,6 +12,8 @@
 //!                         traces; --probe keeps the legacy AOT
 //!                         numerics-probe path (PJRT)
 //!   scenario              list/show/generate dynamic scenarios
+//!   bench                 run the simulator throughput suite and write
+//!                         BENCH_sim.json (the tracked perf trajectory)
 //!   models | socs         list the zoo / SoC presets
 
 use adms::analyzer;
@@ -51,7 +53,7 @@ fn env_logger_lite() {
 }
 
 const USAGE: &str =
-    "adms <experiment|partition|tune|simulate|serve|scenario|models|socs> [options]";
+    "adms <experiment|partition|tune|simulate|serve|scenario|bench|models|socs> [options]";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first().map(String::as_str) else {
@@ -67,6 +69,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
         "scenario" => cmd_scenario(rest),
+        "bench" => cmd_bench(rest),
         "models" => {
             for m in zoo::MODEL_NAMES {
                 let g = zoo::by_name(m).unwrap();
@@ -409,6 +412,10 @@ fn print_serve_report(report: &adms::sim::SimReport) {
         "SLO %"
     );
     for s in &report.sessions {
+        // '~' marks reservoir-subsampled percentiles (see Summary docs):
+        // past 65 536 completions p50/p95 are estimates, and pretending
+        // otherwise on million-request runs would be dishonest.
+        let approx = if s.latency.is_subsampled() { "~" } else { "" };
         println!(
             "{:20} {:>7} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9} {:>8}",
             s.model,
@@ -416,8 +423,8 @@ fn print_serve_report(report: &adms::sim::SimReport) {
             s.completed,
             s.failed,
             s.cancelled,
-            fnum(s.latency.p50(), 2),
-            fnum(s.latency.p95(), 2),
+            format!("{approx}{}", fnum(s.latency.p50(), 2)),
+            format!("{approx}{}", fnum(s.latency.p95(), 2)),
             fnum(s.latency.mean(), 2),
             s.slo_satisfaction
                 .map(|v| fnum(v * 100.0, 1))
@@ -426,14 +433,20 @@ fn print_serve_report(report: &adms::sim::SimReport) {
     }
     println!(
         "total: {} issued, {} completed, {} failed, {} cancelled, {} exec errors, \
-         {} dispatches traced",
+         {} dispatches traced, {} driver events",
         report.total_issued(),
         report.total_completed(),
         report.total_failed(),
         report.total_cancelled(),
         report.exec_errors,
-        report.assignments.len()
+        report.assignments.len(),
+        report.events
     );
+    if report.latency_subsampled() {
+        println!(
+            "note: '~' percentiles are reservoir estimates (> 65536 samples per session)"
+        );
+    }
     for p in &report.procs {
         println!(
             "  {:22} busy {:5.1}%  dispatches {:6}",
@@ -462,6 +475,35 @@ fn maybe_record(
             trace.arrivals.len(),
             trace.assignments.len()
         );
+    }
+    Ok(())
+}
+
+/// `adms bench`: run the simulator throughput suite (the same
+/// measurements as `cargo bench --bench bench_sim`) and persist the
+/// results as `BENCH_sim.json` — the tracked perf trajectory that
+/// EXPERIMENTS.md §Perf and the CI smoke-bench job consume.
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "out", takes_value: true, help: "results file (JSON)", default: Some("BENCH_sim.json") },
+        OptSpec { name: "json", takes_value: false, help: "also print the JSON to stdout", default: None },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("adms bench [--out FILE] [--json]", &specs));
+        println!("budget per measurement: ADMS_BENCH_MS (ms, default 300)");
+        return Ok(());
+    }
+    let (budget_ms, entries) = adms::testing::bench::run_sim_suite();
+    println!();
+    adms::testing::bench::print_sim_suite(&entries);
+    let json = adms::testing::bench::sim_suite_json(budget_ms, &entries).to_pretty();
+    let path = args.get_or("out", "BENCH_sim.json");
+    std::fs::write(&path, &json).map_err(|e| anyhow::anyhow!("--out '{path}': {e}"))?;
+    println!("\nwrote {} bench entries to {path}", entries.len());
+    if args.flag("json") {
+        println!("{json}");
     }
     Ok(())
 }

@@ -64,14 +64,30 @@ impl HardwareMonitor {
         }
     }
 
-    /// Get the (possibly stale) snapshot at time `now`.
+    /// Get the (possibly stale) snapshot at time `now`. Thin wrapper over
+    /// [`HardwareMonitor::sample_with`] so the cache-miss rule has one
+    /// source of truth.
     pub fn sample(
         &mut self,
         now: TimeMs,
         refresh_fn: impl FnOnce() -> Vec<ProcView>,
     ) -> &[ProcView] {
+        self.sample_with(now, |buf| buf.extend(refresh_fn()))
+    }
+
+    /// [`HardwareMonitor::sample`] with an in-place refresh: on a cache
+    /// miss `refresh_fn` fills the monitor's own (cleared) buffer instead
+    /// of returning a fresh `Vec`. This is the dispatch loop's hot-path
+    /// form — a refresh reuses the cached vector's capacity, and a cache
+    /// hit borrows the snapshot without copying it.
+    pub fn sample_with(
+        &mut self,
+        now: TimeMs,
+        refresh_fn: impl FnOnce(&mut Vec<ProcView>),
+    ) -> &[ProcView] {
         if now - self.last_refresh >= self.cache_interval_ms || self.cached.is_empty() {
-            self.cached = refresh_fn();
+            self.cached.clear();
+            refresh_fn(&mut self.cached);
             self.last_refresh = now;
             self.refreshes += 1;
         }
@@ -125,6 +141,21 @@ mod tests {
         assert_eq!(s[0].temp_c, 30.0);
         assert_eq!(m.refresh_count(), 1);
         assert_eq!(m.staleness(30.0), 30.0);
+    }
+
+    #[test]
+    fn sample_with_matches_sample_semantics() {
+        let mut m = HardwareMonitor::new(50.0);
+        let s = m.sample_with(0.0, |out| out.extend(view(30.0)));
+        assert_eq!(s[0].temp_c, 30.0);
+        // Cache hit: the closure must not run and no copy is made.
+        let s = m.sample_with(30.0, |_| panic!("refreshed too early"));
+        assert_eq!(s[0].temp_c, 30.0);
+        assert_eq!(m.refresh_count(), 1);
+        // Miss at the interval boundary refreshes in place.
+        let s = m.sample_with(50.0, |out| out.extend(view(55.0)));
+        assert_eq!(s[0].temp_c, 55.0);
+        assert_eq!(m.refresh_count(), 2);
     }
 
     #[test]

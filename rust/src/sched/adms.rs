@@ -21,7 +21,7 @@
 //! transfers + a thermal-headroom penalty proportional to the task's cost
 //! (§3.4: hot processors receive less computationally intensive tasks).
 
-use super::{free_slot_census, Assignment, PendingTask, SchedCtx, Scheduler};
+use super::{free_slot_census_into, Assignment, PendingTask, SchedCtx, Scheduler};
 use crate::soc::cost;
 use crate::TimeMs;
 
@@ -58,11 +58,16 @@ impl Default for AdmsConfig {
 #[derive(Debug, Default)]
 pub struct Adms {
     pub cfg: AdmsConfig,
+    // Per-decision scratch, reused across calls so the dispatch loop's
+    // steady state performs no allocations.
+    free: Vec<usize>,
+    backlog_bump: Vec<TimeMs>,
+    taken: Vec<bool>,
 }
 
 impl Adms {
     pub fn new(cfg: AdmsConfig) -> Self {
-        Adms { cfg }
+        Adms { cfg, ..Default::default() }
     }
 
     /// State-aware expected-completion cost of running `t` on `proc`
@@ -85,12 +90,9 @@ impl Adms {
         let xfer: f64 = t
             .dep_procs
             .iter()
-            .map(|&(dep_unit, dep_proc)| {
-                let bytes = plan.xfer_bytes[t.unit]
-                    .iter()
-                    .find(|(d, _)| *d == dep_unit)
-                    .map(|(_, b)| *b)
-                    .unwrap_or(0);
+            .enumerate()
+            .map(|(k, &(dep_unit, dep_proc))| {
+                let bytes = plan.xfer_bytes_at(t.unit, k, dep_unit);
                 cost::transfer_ms(ctx.soc, dep_proc, proc, bytes)
             })
             .sum();
@@ -137,12 +139,19 @@ impl Scheduler for Adms {
         "adms"
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
-        let mut free = free_slot_census(ctx);
-        let mut backlog_bump: Vec<TimeMs> = vec![0.0; ctx.soc.num_processors()];
-        let mut out: Vec<Assignment> = Vec::new();
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
+        // Scratch is moved out for the duration of the call (placement
+        // costing needs `&self`) and restored at the end, so repeated
+        // decisions reuse the same buffers.
+        let mut free = std::mem::take(&mut self.free);
+        let mut backlog_bump = std::mem::take(&mut self.backlog_bump);
+        let mut taken = std::mem::take(&mut self.taken);
+        free_slot_census_into(ctx, &mut free);
+        backlog_bump.clear();
+        backlog_bump.resize(ctx.soc.num_processors(), 0.0);
+        taken.clear();
+        taken.resize(ready.len(), false);
         let window = self.cfg.loop_call_size.max(1);
-        let mut taken = vec![false; ready.len()];
 
         // Each round: within the decision window, find each task's best
         // placement, rank tasks by Eq 4, commit the lowest; repeat until
@@ -190,7 +199,9 @@ impl Scheduler for Adms {
                 None => break,
             }
         }
-        out
+        self.free = free;
+        self.backlog_bump = backlog_bump;
+        self.taken = taken;
     }
 }
 
@@ -236,6 +247,12 @@ mod tests {
         }
     }
 
+    fn run_sched(s: &mut Adms, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        s.schedule(ctx, ready, &mut out);
+        out
+    }
+
     #[test]
     fn assigns_ready_tasks_to_supported_procs() {
         let soc = dimensity9000();
@@ -245,7 +262,7 @@ mod tests {
         let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
-        let a = s.schedule(&ctx, &ready);
+        let a = run_sched(&mut s, &ctx, &ready);
         assert_eq!(a.len(), 1);
         let proc = a[0].proc;
         assert!(plans[0].partition.units[0].supports(proc));
@@ -261,12 +278,12 @@ mod tests {
         let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
-        let cool_choice = s.schedule(&ctx, &ready)[0].proc;
+        let cool_choice = run_sched(&mut s, &ctx, &ready)[0].proc;
         // …then overheat it and expect a different choice.
         v[cool_choice].temp_c = 67.5;
         v[cool_choice].headroom_c = 0.5;
         let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
-        let hot_choice = s.schedule(&ctx, &ready)[0].proc;
+        let hot_choice = run_sched(&mut s, &ctx, &ready)[0].proc;
         assert_ne!(hot_choice, cool_choice, "scheduler ignored thermal state");
     }
 
@@ -279,10 +296,10 @@ mod tests {
         let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
-        let first = s.schedule(&ctx, &ready)[0].proc;
+        let first = run_sched(&mut s, &ctx, &ready)[0].proc;
         v[first].backlog_ms = 500.0; // far beyond B_max
         let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
-        let second = s.schedule(&ctx, &ready)[0].proc;
+        let second = run_sched(&mut s, &ctx, &ready)[0].proc;
         assert_ne!(second, first, "scheduler ignored backlog");
     }
 
@@ -349,7 +366,7 @@ mod tests {
         let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
-        let a = s.schedule(&ctx, &ready);
+        let a = run_sched(&mut s, &ctx, &ready);
         assert_eq!(a.len(), 1);
         assert_eq!(a[0].proc, 0, "only the CPU is online");
     }

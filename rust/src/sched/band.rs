@@ -8,15 +8,20 @@
 //! temperature, so under throttling its estimates drift and it keeps
 //! piling work onto hot processors.
 
-use super::{free_slot_census, Assignment, PendingTask, SchedCtx, Scheduler};
+use super::{free_slot_census_into, Assignment, PendingTask, SchedCtx, Scheduler};
 use crate::soc::cost;
 
 #[derive(Debug, Default)]
-pub struct Band;
+pub struct Band {
+    // Per-decision scratch, reused across calls (hot-path: the dispatch
+    // loop invokes `schedule` on every event that frees capacity).
+    free: Vec<usize>,
+    backlog: Vec<f64>,
+}
 
 impl Band {
     pub fn new() -> Self {
-        Band
+        Band::default()
     }
 }
 
@@ -25,13 +30,15 @@ impl Scheduler for Band {
         "band"
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
-        let mut free = free_slot_census(ctx);
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
+        let free = &mut self.free;
+        free_slot_census_into(ctx, free);
         // Band's own bookkeeping of backlog it has dispatched: approximate
         // with the monitor's backlog figure (its queues are its own, so
         // this much it does know).
-        let mut backlog: Vec<f64> = ctx.procs.iter().map(|p| p.backlog_ms).collect();
-        let mut out = Vec::new();
+        let backlog = &mut self.backlog;
+        backlog.clear();
+        backlog.extend(ctx.procs.iter().map(|p| p.backlog_ms));
         // Greedy shortest-expected-latency, first-come-first-considered.
         for (idx, t) in ready.iter().enumerate() {
             let plan = &ctx.plans[t.session];
@@ -46,17 +53,14 @@ impl Scheduler for Band {
                     Some(e) => e,
                     None => continue,
                 };
-                // Transfer costs for dependencies produced elsewhere.
+                // Transfer costs for dependencies produced elsewhere
+                // (`dep_procs` rows align with `deps[unit]` — positional).
                 let xfer: f64 = t
                     .dep_procs
                     .iter()
-                    .map(|&(dep_unit, dep_proc)| {
-                        let bytes = plan
-                            .xfer_bytes[t.unit]
-                            .iter()
-                            .find(|(d, _)| *d == dep_unit)
-                            .map(|(_, b)| *b)
-                            .unwrap_or(0);
+                    .enumerate()
+                    .map(|(k, &(dep_unit, dep_proc))| {
+                        let bytes = plan.xfer_bytes_at(t.unit, k, dep_unit);
                         cost::transfer_ms(ctx.soc, dep_proc, p, bytes)
                     })
                     .sum();
@@ -71,6 +75,5 @@ impl Scheduler for Band {
                 out.push(Assignment { ready_idx: idx, proc: p });
             }
         }
-        out
     }
 }

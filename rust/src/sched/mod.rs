@@ -35,7 +35,7 @@ pub type ReqId = u64;
 pub type SessId = usize;
 
 /// A schedulable unit-subgraph instance awaiting dispatch.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct PendingTask {
     pub req: ReqId,
     pub session: SessId,
@@ -51,7 +51,38 @@ pub struct PendingTask {
     /// (the `C_remaining` of Eq 3).
     pub remaining_ms: f64,
     /// Processor each completed dependency ran on (for transfer pricing).
+    /// Entries are ordered to match `ModelPlan::deps[unit]`, which is what
+    /// lets transfer bytes be looked up positionally (no linear search).
     pub dep_procs: Vec<(usize, ProcId)>,
+}
+
+impl Clone for PendingTask {
+    fn clone(&self) -> Self {
+        PendingTask {
+            req: self.req,
+            session: self.session,
+            unit: self.unit,
+            ready_at: self.ready_at,
+            req_arrival: self.req_arrival,
+            slo_ms: self.slo_ms,
+            remaining_ms: self.remaining_ms,
+            dep_procs: self.dep_procs.clone(),
+        }
+    }
+
+    /// Reuses `self.dep_procs`' allocation — the dispatch loop clones
+    /// serialized-session exposures into scratch buffers on every
+    /// decision round, and this keeps that clone allocation-free.
+    fn clone_from(&mut self, source: &Self) {
+        self.req = source.req;
+        self.session = source.session;
+        self.unit = source.unit;
+        self.ready_at = source.ready_at;
+        self.req_arrival = source.req_arrival;
+        self.slo_ms = source.slo_ms;
+        self.remaining_ms = source.remaining_ms;
+        self.dep_procs.clone_from(&source.dep_procs);
+    }
 }
 
 /// What the scheduler sees when asked for a decision.
@@ -96,6 +127,13 @@ pub fn free_slot_census(ctx: &SchedCtx) -> Vec<usize> {
     ctx.procs.iter().map(|v| ctx.free_slots(v)).collect()
 }
 
+/// [`free_slot_census`] into a reusable buffer — the per-decision scratch
+/// form every scheduler uses on the hot path.
+pub fn free_slot_census_into(ctx: &SchedCtx, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend(ctx.procs.iter().map(|v| ctx.free_slots(v)));
+}
+
 /// An assignment decision: ready-queue index → processor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Assignment {
@@ -105,12 +143,18 @@ pub struct Assignment {
 
 /// Scheduling policy interface. The engine calls [`Scheduler::schedule`]
 /// whenever new tasks become ready or a processor frees a slot; the
-/// scheduler returns any number of assignments (the engine validates
-/// support/capacity and ignores invalid ones defensively).
+/// scheduler appends any number of assignments to `out` (the engine
+/// validates support/capacity and ignores invalid ones defensively).
+///
+/// `out` is a caller-owned scratch buffer, cleared by the caller before
+/// the call — schedulers must only append. This keeps the steady-state
+/// dispatch loop free of per-decision allocations; policies keep their
+/// own intermediate state (slot censuses, backlog bumps) in reusable
+/// member scratch for the same reason.
 pub trait Scheduler: Send {
     fn name(&self) -> &'static str;
 
-    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment>;
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>);
 
     /// Per-dispatch scheduling/management overhead in ms, given the
     /// session's plan (candidate-set size drives it — see

@@ -3,18 +3,20 @@
 //! experiment ("average latency for MobileNetV1 on various processors")
 //! and the Fig 3 single-processor measurements.
 
-use super::{free_slot_census, Assignment, PendingTask, SchedCtx, Scheduler};
+use super::{free_slot_census_into, Assignment, PendingTask, SchedCtx, Scheduler};
 use crate::soc::ProcId;
 
 #[derive(Debug)]
 pub struct Pinned {
     target: ProcId,
     cpu: ProcId,
+    /// Per-decision slot-census scratch, reused across calls.
+    free: Vec<usize>,
 }
 
 impl Pinned {
     pub fn new(target: ProcId, cpu: ProcId) -> Self {
-        Pinned { target, cpu }
+        Pinned { target, cpu, free: Vec::new() }
     }
 }
 
@@ -31,9 +33,9 @@ impl Scheduler for Pinned {
         0.02 // fixed-placement interpreter, same as vanilla TFLite
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
-        let mut free = free_slot_census(ctx);
-        let mut out = Vec::new();
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
+        let free = &mut self.free;
+        free_slot_census_into(ctx, free);
         for (idx, t) in ready.iter().enumerate() {
             let plan = &ctx.plans[t.session];
             let target = if plan.partition.units[t.unit].supports(self.target) {
@@ -47,6 +49,5 @@ impl Scheduler for Pinned {
             free[target] -= 1;
             out.push(Assignment { ready_idx: idx, proc: target });
         }
-        out
     }
 }

@@ -17,12 +17,14 @@ pub const NNAPI_SYNC_MS: f64 = 1.2;
 pub struct VanillaTflite {
     delegates: Vec<ProcId>,
     cpu: ProcId,
+    /// Per-decision slot-census scratch, reused across calls.
+    free: Vec<usize>,
 }
 
 impl VanillaTflite {
     /// `delegates` must provide one entry per session.
     pub fn new(delegates: Vec<ProcId>, cpu: ProcId) -> Self {
-        VanillaTflite { delegates, cpu }
+        VanillaTflite { delegates, cpu, free: Vec::new() }
     }
 
     /// Vanilla TFLite 2.16 (the paper's baseline version): the NNAPI
@@ -32,7 +34,7 @@ impl VanillaTflite {
     /// ArcFace-ResNet50) and its §1 observation that "the majority of DL
     /// inference tasks are performed on CPUs".
     pub fn default_for(soc: &crate::soc::SocSpec, sessions: usize) -> Self {
-        VanillaTflite { delegates: vec![soc.cpu_id(); sessions], cpu: soc.cpu_id() }
+        VanillaTflite::new(vec![soc.cpu_id(); sessions], soc.cpu_id())
     }
 
     /// TFLite with an explicitly enabled NNAPI/accelerator delegate
@@ -45,7 +47,7 @@ impl VanillaTflite {
             .or_else(|| soc.proc_by_kind(ProcKind::Dsp))
             .or_else(|| soc.proc_by_kind(ProcKind::Gpu))
             .unwrap_or_else(|| soc.cpu_id());
-        VanillaTflite { delegates: vec![acc; sessions], cpu: soc.cpu_id() }
+        VanillaTflite::new(vec![acc; sessions], soc.cpu_id())
     }
 
     /// Round-robin sessions over the given delegate list (used by the
@@ -53,7 +55,7 @@ impl VanillaTflite {
     /// DSP, etc.).
     pub fn round_robin(procs: &[ProcId], sessions: usize, cpu: ProcId) -> Self {
         let delegates = (0..sessions).map(|s| procs[s % procs.len()]).collect();
-        VanillaTflite { delegates, cpu }
+        VanillaTflite::new(delegates, cpu)
     }
 }
 
@@ -90,9 +92,9 @@ impl Scheduler for VanillaTflite {
         }
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask]) -> Vec<Assignment> {
-        let mut free = super::free_slot_census(ctx);
-        let mut out = Vec::new();
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
+        let free = &mut self.free;
+        super::free_slot_census_into(ctx, free);
         for (idx, t) in ready.iter().enumerate() {
             let plan = &ctx.plans[t.session];
             let delegate = self.delegates.get(t.session).copied().unwrap_or(self.cpu);
@@ -110,6 +112,5 @@ impl Scheduler for VanillaTflite {
             free[target] -= 1;
             out.push(Assignment { ready_idx: idx, proc: target });
         }
-        out
     }
 }

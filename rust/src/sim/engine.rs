@@ -40,7 +40,7 @@ impl Engine {
             let g = crate::zoo::by_name(&app.model)
                 .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", app.model))?;
             let ws = window_size(&g);
-            plans.push(ModelPlan::build(Arc::new(g), &soc, ws));
+            plans.push(ModelPlan::build_cached(Arc::new(g), &soc, ws));
         }
         Ok(Engine { soc, cfg, apps, plans, scheduler })
     }

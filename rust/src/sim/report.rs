@@ -83,6 +83,10 @@ pub struct SimReport {
     /// Request arrivals in arrival order; with `assignments` this makes
     /// the run replayable (`scenario::trace::RunTrace`).
     pub arrivals: Vec<crate::exec::ArrivalRecord>,
+    /// Backend events processed by the driver loop (timers, completions,
+    /// ticks). With wall time this gives the `adms bench` events/sec
+    /// figure — the scheduler-loop throughput the perf gate tracks.
+    pub events: u64,
 }
 
 impl SimReport {
@@ -128,6 +132,13 @@ impl SimReport {
 
     pub fn total_cancelled(&self) -> u64 {
         self.sessions.iter().map(|s| s.cancelled).sum()
+    }
+
+    /// True when any session's latency percentiles come from a reservoir
+    /// subsample rather than the full population (million-request runs) —
+    /// reports should label p50/p95 accordingly.
+    pub fn latency_subsampled(&self) -> bool {
+        self.sessions.iter().any(|s| s.latency.is_subsampled())
     }
 
     /// Failure rate over all *retired* requests — completed + failed

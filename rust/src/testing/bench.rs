@@ -46,13 +46,16 @@ fn fmt_ns(ns: f64) -> String {
 
 impl Bench {
     pub fn new(group: &str) -> Self {
-        // Honor a time budget override for CI smoke runs.
-        let budget_ms = std::env::var("ADMS_BENCH_MS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(300.0);
+        // Honor a time budget override for CI smoke runs (ADMS_BENCH_MS).
+        let budget_ms = crate::util::env::bench_budget_ms(300.0);
         println!("\n== bench group: {group} ==");
         Bench { group: group.to_string(), budget_ms, results: Vec::new() }
+    }
+
+    /// The per-measurement time budget this harness runs under
+    /// (`ADMS_BENCH_MS` or the 300 ms default).
+    pub fn budget_ms(&self) -> f64 {
+        self.budget_ms
     }
 
     /// Time a closure: warm up, then measure batches until the budget is
@@ -101,5 +104,118 @@ impl Bench {
     pub fn finish(self) {
         println!("== {} done ({} benches) ==", self.group, self.results.len());
     }
+}
+
+/// One measured entry of the simulator throughput suite.
+#[derive(Debug, Clone)]
+pub struct SimSuiteEntry {
+    pub name: String,
+    pub stats: Stats,
+    /// Simulated horizon covered by one measured run, ms.
+    pub sim_ms: f64,
+    /// Backend events the driver processed in one run.
+    pub events: u64,
+}
+
+impl SimSuiteEntry {
+    /// Simulated milliseconds advanced per wall-clock second — the
+    /// headline throughput figure the perf gate tracks (EXPERIMENTS.md
+    /// §Perf; the ISSUE-3 acceptance bar is ≥3× the pre-refactor value).
+    pub fn sim_ms_per_wall_s(&self) -> f64 {
+        self.sim_ms * 1e9 / self.stats.median_ns
+    }
+
+    /// Driver events processed per wall-clock second.
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 * 1e9 / self.stats.median_ns
+    }
+}
+
+/// The `bench_sim` measurement suite, shared by the `cargo bench` target
+/// and the `adms bench` subcommand: full simulated seconds per wall
+/// second across the three framework arms on the FRS workload, plus
+/// stress-mix scaling (the Table 7 path). Returns the measured entries;
+/// progress prints criterion-style as it runs.
+pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
+    use crate::experiments::common::{run_framework, Framework};
+    use crate::exec::SimConfig;
+    use crate::soc::dimensity9000;
+    use crate::workload::{frs, stress_mix};
+
+    use std::cell::Cell;
+
+    let soc = dimensity9000();
+    let mut b = Bench::new("sim");
+    let budget = b.budget_ms();
+    let mut entries = Vec::new();
+    for fw in Framework::ALL {
+        let cfg = SimConfig { duration_ms: 2_000.0, ..Default::default() };
+        let name = format!("frs_2s/{}", fw.label());
+        // The event census rides along inside the timed closure (it is
+        // identical every run — the sim is seed-deterministic), so no
+        // extra untimed run is needed.
+        let events = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = run_framework(&soc, fw, frs(), cfg.clone());
+            events.set(r.events);
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry { name, stats, sim_ms: 2_000.0, events: events.get() });
+    }
+    // Scaling with concurrency (the Table 7 stress path).
+    for n in [4usize, 8] {
+        let cfg = SimConfig { duration_ms: 1_000.0, ..Default::default() };
+        let name = format!("stress_1s/{n}_models");
+        let events = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = run_framework(&soc, Framework::Adms, stress_mix(n), cfg.clone());
+            events.set(r.events);
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry { name, stats, sim_ms: 1_000.0, events: events.get() });
+    }
+    b.finish();
+    (budget, entries)
+}
+
+/// Render the suite's headline figures (one line per entry) — shared by
+/// the `cargo bench` target and `adms bench` so their reports can't
+/// drift apart.
+pub fn print_sim_suite(entries: &[SimSuiteEntry]) {
+    for e in entries {
+        println!(
+            "{:<28} {:>12.0} sim-ms/wall-s   {:>12.0} events/s",
+            e.name,
+            e.sim_ms_per_wall_s(),
+            e.events_per_sec()
+        );
+    }
+}
+
+/// Serialize a sim-suite run for `BENCH_sim.json` (the tracked perf
+/// trajectory — CI uploads it as an artifact).
+pub fn sim_suite_json(budget_ms: f64, entries: &[SimSuiteEntry]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let rows = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("iters", Json::Num(e.stats.iters as f64)),
+                ("median_ns", Json::Num(e.stats.median_ns)),
+                ("mean_ns", Json::Num(e.stats.mean_ns)),
+                ("p95_ns", Json::Num(e.stats.p95_ns)),
+                ("sim_ms", Json::Num(e.sim_ms)),
+                ("sim_ms_per_wall_s", Json::Num(e.sim_ms_per_wall_s())),
+                ("events", Json::Num(e.events as f64)),
+                ("events_per_sec", Json::Num(e.events_per_sec())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("group", Json::Str("sim".into())),
+        ("budget_ms", Json::Num(budget_ms)),
+        ("entries", Json::Arr(rows)),
+    ])
 }
 

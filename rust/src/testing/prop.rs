@@ -82,21 +82,15 @@ impl Gen {
 
 /// Iteration count for a property suite: the `PROP_ITERS` environment
 /// variable when set (CI's nightly fuzz job raises it far beyond the
-/// in-PR default), else `default`.
+/// in-PR default), else `default`. See [`crate::util::env`].
 pub fn iters(default: u64) -> u64 {
-    std::env::var("PROP_ITERS")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or(default)
+    crate::util::env::prop_iters(default)
 }
 
 /// Run `prop` against `cases` generated inputs. Panics (failing the test)
 /// on the first violated property with a replayable seed.
 pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
-    let base_seed = std::env::var("ADMS_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok());
+    let base_seed = crate::util::env::prop_seed();
     if let Some(seed) = base_seed {
         // Replay mode: a single case at the exact seed.
         let mut g = Gen::new(seed, 64);

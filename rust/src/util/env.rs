@@ -1,0 +1,63 @@
+//! Central registry of environment variables the crate recognizes.
+//!
+//! Hot paths must not call `std::env::var*` per event (it takes a
+//! process-global lock), and scattered ad-hoc reads made the recognized
+//! set undiscoverable. Every variable is read through here; the full
+//! table lives in README.md §Environment variables.
+//!
+//! | variable          | effect                                              |
+//! |-------------------|-----------------------------------------------------|
+//! | `ADMS_SIM_DEBUG`  | any value: periodic driver-loop progress to stderr  |
+//! | `ADMS_BENCH_MS`   | per-measurement time budget for `testing::bench`    |
+//! | `PROP_ITERS`      | overrides every property suite's iteration count    |
+//! | `ADMS_PROP_SEED`  | replay a single property case at this exact seed    |
+
+/// Any value enables periodic dispatch-loop progress lines on stderr.
+pub const SIM_DEBUG: &str = "ADMS_SIM_DEBUG";
+/// Per-measurement bench budget in milliseconds (CI smoke runs set 20).
+pub const BENCH_MS: &str = "ADMS_BENCH_MS";
+/// Property-suite iteration override (nightly fuzz sets 1000).
+pub const PROP_ITERS: &str = "PROP_ITERS";
+/// Single-seed property replay (printed by failing property runs).
+pub const PROP_SEED: &str = "ADMS_PROP_SEED";
+
+/// `ADMS_SIM_DEBUG` — read once per run by the driver, never per event.
+pub fn sim_debug() -> bool {
+    std::env::var_os(SIM_DEBUG).is_some()
+}
+
+/// `ADMS_BENCH_MS`, else `default` (the bench harness's 300 ms).
+pub fn bench_budget_ms(default: f64) -> f64 {
+    std::env::var(BENCH_MS)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `PROP_ITERS` when set and positive, else `default`.
+pub fn prop_iters(default: u64) -> u64 {
+    std::env::var(PROP_ITERS)
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// `ADMS_PROP_SEED` when set and parseable.
+pub fn prop_seed() -> Option<u64> {
+    std::env::var(PROP_SEED).ok().and_then(|s| s.parse::<u64>().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Env mutation is process-global, so these only exercise the
+    // default paths (CI may set the real variables for the whole
+    // process).
+    #[test]
+    fn defaults_flow_through() {
+        assert!(bench_budget_ms(300.0) > 0.0);
+        assert!(prop_iters(7) >= 1);
+    }
+}

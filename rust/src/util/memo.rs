@@ -1,0 +1,66 @@
+//! Process-wide memoization for pure, run-defining computations
+//! (model plans, window-size tuning). One shared implementation so the
+//! key-identity rules live in a single place.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Mutex, OnceLock};
+
+/// A lazy, mutex-guarded memo table. Declare as a `static` next to the
+/// function it caches:
+///
+/// ```ignore
+/// static CACHE: Memo<(String, usize), Output> = Memo::new();
+/// CACHE.get_or_insert_with((name.clone(), ws), || expensive(name, ws))
+/// ```
+///
+/// Values are returned by clone — keep them cheap to clone (or wrap in
+/// `Arc`). A racing miss may compute twice; last insert wins, which is
+/// fine for pure functions. The compute closure runs *outside* the
+/// lock, so the critical section is only the lookup/insert.
+pub struct Memo<K, V> {
+    map: OnceLock<Mutex<HashMap<K, V>>>,
+}
+
+impl<K: Eq + Hash, V: Clone> Default for Memo<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash, V: Clone> Memo<K, V> {
+    pub const fn new() -> Self {
+        Memo { map: OnceLock::new() }
+    }
+
+    pub fn get_or_insert_with(&self, key: K, compute: impl FnOnce() -> V) -> V {
+        let map = self.map.get_or_init(Default::default);
+        if let Some(v) = map.lock().unwrap().get(&key) {
+            return v.clone();
+        }
+        let v = compute();
+        map.lock().unwrap().insert(key, v.clone());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static CACHE: Memo<u32, u64> = Memo::new();
+
+    #[test]
+    fn computes_once_per_key() {
+        let mut calls = 0;
+        for _ in 0..3 {
+            let v = CACHE.get_or_insert_with(7, || {
+                calls += 1;
+                42
+            });
+            assert_eq!(v, 42);
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(CACHE.get_or_insert_with(8, || 43), 43);
+    }
+}

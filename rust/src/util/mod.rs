@@ -5,7 +5,9 @@
 //! normally pulls from crates.io (serde, clap, rand, criterion, proptest)
 //! are implemented here as small, well-tested modules instead.
 
+pub mod env;
 pub mod json;
+pub mod memo;
 pub mod rng;
 pub mod stats;
 pub mod cli;

@@ -91,6 +91,14 @@ impl Summary {
         self.mean() * self.count as f64
     }
 
+    /// True once more observations have been added than the reservoir
+    /// holds: percentiles are then estimates over a uniform random
+    /// subsample, not exact order statistics. Reports must label p50/p95
+    /// accordingly (million-request runs cross the default 65 536 cap).
+    pub fn is_subsampled(&self) -> bool {
+        self.count > self.cap as u64
+    }
+
     /// Percentile in `[0, 100]` by linear interpolation over the reservoir.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
@@ -261,6 +269,23 @@ mod tests {
         assert_eq!(s.count(), 10_000);
         // Median of 0..10000 should still be near 5000 via the reservoir.
         assert!((s.p50() - 5000.0).abs() < 1500.0);
+    }
+
+    #[test]
+    fn subsampling_is_flagged_exactly_past_the_cap() {
+        let mut s = Summary::with_capacity(16);
+        for i in 0..16 {
+            s.add(i as f64);
+            assert!(!s.is_subsampled(), "exact at {} samples", i + 1);
+        }
+        s.add(16.0);
+        assert!(s.is_subsampled(), "reservoir engaged but not flagged");
+        // The default-capacity summary stays exact for small populations.
+        let mut d = Summary::new();
+        for i in 0..1000 {
+            d.add(i as f64);
+        }
+        assert!(!d.is_subsampled());
     }
 
     #[test]
