@@ -134,12 +134,15 @@ pub fn sweep_window_sizes(g: &Graph, soc: &SocSpec, max_ws: usize) -> Vec<SweepP
 /// Memoized tuning result. The sweep is a pure function of (model, SoC,
 /// `max_ws`), and every serving run re-tunes the same model-SoC pairs —
 /// the paper itself stores tuned window sizes in a configuration file
-/// (§3.2), so a process-wide cache keyed like [`TunedConfig`] (by graph
-/// and SoC *names* — custom definitions must use distinct names) only
-/// makes that store implicit. `Arc` keeps cache hits to a pointer clone.
+/// (§3.2), so a process-wide cache keyed like [`TunedConfig`] — plus the
+/// graph's structural fingerprint, so same-name graphs with different
+/// structure never share a tuning (custom SoC definitions must still use
+/// distinct names) — only makes that store implicit. `Arc` keeps cache
+/// hits to a pointer clone.
 fn tune_cached(g: &Graph, soc: &SocSpec, max_ws: usize) -> Arc<(usize, Vec<SweepPoint>)> {
-    static CACHE: Memo<(String, String, usize), Arc<(usize, Vec<SweepPoint>)>> = Memo::new();
-    let key = (g.name.clone(), soc.name.clone(), max_ws);
+    static CACHE: Memo<(String, u64, String, usize), Arc<(usize, Vec<SweepPoint>)>> =
+        Memo::new();
+    let key = (g.name.clone(), g.fingerprint(), soc.name.clone(), max_ws);
     CACHE.get_or_insert_with(key, || {
         let sweep = sweep_window_sizes(g, soc, max_ws);
         let best = sweep

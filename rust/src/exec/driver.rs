@@ -847,6 +847,8 @@ impl Driver {
                     } else {
                         None
                     },
+                    slo_ok: se.slo_ok,
+                    slo_n: se.slo_n,
                     start_ms: se.start_ms,
                     stop_ms: se.stop_ms,
                     active_ms,

@@ -67,6 +67,59 @@ enum SchedChoice {
     Custom(Box<dyn Scheduler>),
 }
 
+/// A cloneable, replayable description of one serving run — everything a
+/// [`Server`] resolves at build time, minus live state. Schedulers are
+/// referenced *by name* (each replay constructs a fresh instance), which
+/// is what makes the spec `Clone + Send`: the fleet layer hands one spec
+/// per arm to its worker shards, and each shard stamps a per-device seed
+/// into `cfg.seed` and calls [`RunSpec::run_sim`] independently. Plans
+/// and window tuning are memoized process-wide, so replaying a spec on N
+/// shards computes them once.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub soc: SocSpec,
+    /// Scheduler name (see [`SCHEDULER_NAMES`]).
+    pub scheduler: String,
+    pub apps: Vec<App>,
+    pub events: Vec<SessionEvent>,
+    pub cfg: SimConfig,
+    /// Fixed partitioning window (`None` = per-policy default).
+    pub window_size: Option<usize>,
+}
+
+impl RunSpec {
+    /// Materialize a [`Server`] for this spec (validation — unknown
+    /// models, schedulers, session references — happens at run time,
+    /// exactly as with a hand-built server).
+    pub fn server(&self) -> Server {
+        let mut s = Server::new(self.soc.clone())
+            .scheduler_name(&self.scheduler)
+            .apps(self.apps.clone())
+            .events(self.events.clone())
+            .config(self.cfg.clone());
+        if let Some(ws) = self.window_size {
+            s = s.window_size(ws);
+        }
+        s
+    }
+
+    /// Replay the spec on the discrete-event SoC backend.
+    pub fn run_sim(&self) -> Result<SimReport> {
+        self.server().run_sim()
+    }
+
+    /// Resolve the spec once without running it: validates every name
+    /// (models, scheduler, session references) and *actually builds* the
+    /// plans and window tuning, populating the process-wide memo tables.
+    /// The fleet layer calls this per arm before spawning shards so
+    /// workers start from shared cached partitionings instead of racing
+    /// to compute them (`Memo` runs compute outside its lock, so a cold
+    /// N-way race would do the most expensive setup work N times).
+    pub fn warm_caches(&self) -> Result<()> {
+        self.server().build().map(|_| ())
+    }
+}
+
 /// Builder for a scheduler-driven multi-DNN server. See the module docs
 /// for an end-to-end example.
 pub struct Server {

@@ -160,6 +160,14 @@ pub struct SimBackend {
     heap: BinaryHeap<Reverse<QEv>>,
     seq: u64,
     now: TimeMs,
+    /// Start of the current governor-tick window (time of the last
+    /// processed `Ev::Tick`, 0 before the first). Mid-tick utilization is
+    /// `tick_busy_ms` over the elapsed part of this window — dividing by
+    /// the *full* `tick_ms` (the old bug) understated the reported
+    /// `ProcView::util` between ticks — and `finish` integrates energy
+    /// over the partial window `[last_tick, duration]` the tick loop
+    /// never covers.
+    last_tick: TimeMs,
     /// Units of each request currently resident on processors — the O(1)
     /// backing for [`ExecutionBackend::running_units`] (the driver asks
     /// on every abort; scanning every slot of every processor was
@@ -197,6 +205,7 @@ impl SimBackend {
             heap: BinaryHeap::new(),
             seq: 0,
             now: 0.0,
+            last_tick: 0.0,
             req_units: HashMap::new(),
             energy: EnergyMeter::new(),
             power_series: TimeSeries::default(),
@@ -233,6 +242,7 @@ impl SimBackend {
         }
         self.energy.accumulate(total_w, self.cfg.tick_ms);
         self.power_series.push(now, total_w);
+        self.last_tick = now;
         let next = now + self.cfg.tick_ms;
         self.push(next, Ev::Tick);
     }
@@ -264,12 +274,29 @@ impl ExecutionBackend for SimBackend {
     fn fill_proc_views(&mut self, out: &mut Vec<ProcView>) {
         let now = self.now;
         let soc = &self.soc;
-        let tick = self.cfg.tick_ms;
+        // Utilization is busy time over the *elapsed* part of the current
+        // tick window, not over the full tick: a snapshot 10 ms into a
+        // 100 ms tick with the processor saturated must read 1.0, not 0.1
+        // (dividing by `tick_ms` was the bug). Scope note: `ProcView::
+        // util` is monitor-surface truth for any policy or telemetry
+        // reading it — no in-tree scheduler consumes it today (they read
+        // load/backlog/headroom), so the fix corrects the reported
+        // metric, not historical scheduling decisions. Exactly at a tick
+        // boundary nothing of the window has elapsed yet, so fall back
+        // to the instantaneous occupancy.
+        let elapsed = now - self.last_tick;
         out.extend(self.procs.iter_mut().enumerate().map(|(i, p)| {
             let spec = &soc.processors[i];
             // Bring tick-window utilization current (occupancy since the
             // last change point hasn't been integrated yet).
             p.account(now);
+            let util = if elapsed > 0.0 {
+                (p.tick_busy_ms / elapsed).min(1.0)
+            } else if p.running.is_empty() {
+                0.0
+            } else {
+                1.0
+            };
             ProcView {
                 id: i,
                 kind: spec.kind,
@@ -280,7 +307,7 @@ impl ExecutionBackend for SimBackend {
                 load: p.running.len() as f64 / proc_slots(spec) as f64,
                 backlog_ms: p.backlog_ms,
                 active_sessions: active_sessions(p, now),
-                util: (p.tick_busy_ms / tick).min(1.0),
+                util,
                 headroom_c: p.thermal.headroom_c(spec),
             }
         }));
@@ -399,6 +426,39 @@ impl ExecutionBackend for SimBackend {
         for p in this.procs.iter_mut() {
             p.account(now);
         }
+        // Tail window: the governor loop accumulates energy only at tick
+        // boundaries, so the partial tick between the last `Ev::Tick` and
+        // the end of the run was silently dropped — with `tick_ms = 700`
+        // and a 1000 ms horizon, 30 % of the run drew no energy at all.
+        // Integrate thermal state and the meter over `[last_tick,
+        // duration_ms]` at the post-last-tick processor state so
+        // `energy_j`/`avg_watts` cover the full run regardless of how
+        // `duration_ms` aligns with the tick cadence. Busy time within
+        // the tail is whatever `tick_busy_ms` accumulated up to the last
+        // in-horizon event (exact for idle and drained runs, a lower
+        // bound when work was still resident at the horizon).
+        let tail = duration_ms - this.last_tick;
+        if tail > 0.0 {
+            let mut total_w = BOARD_BASELINE_W;
+            for (i, p) in this.procs.iter_mut().enumerate() {
+                let spec = &this.soc.processors[i];
+                let util = (p.tick_busy_ms / tail).clamp(0.0, 1.0);
+                let fs = p.thermal.freq_scale(spec);
+                let w =
+                    processor_power_w(spec, util, if p.thermal.offline { 0.2 } else { fs });
+                // Complete the window exactly like `tick` does —
+                // integrate, govern, sample — so tail-window heating can
+                // still trip the throttle counters and the temp/freq
+                // series close at the horizon rather than the last tick.
+                p.thermal.integrate(spec, this.ambient, w, tail);
+                p.thermal.govern(spec, duration_ms);
+                total_w += w;
+                p.temp_series.push(duration_ms, p.thermal.temp_c);
+                p.freq_series.push(duration_ms, p.thermal.freq_mhz(spec));
+            }
+            this.energy.accumulate(total_w, tail);
+            this.power_series.push(duration_ms, total_w);
+        }
         let soc = this.soc;
         let procs = this
             .procs
@@ -459,4 +519,103 @@ fn active_sessions_with(p: &ProcState, now: TimeMs, extra: SessId) -> usize {
 fn touch_session(p: &mut ProcState, s: SessId, now: TimeMs) {
     p.recent_sessions.retain(|&(ss, t)| ss != s && now - t <= SESSION_WINDOW_MS);
     p.recent_sessions.push((s, now));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::dimensity9000;
+
+    /// Drive the backend the way the driver does: pop events until one
+    /// lands past the horizon (or the heap drains), without processing it.
+    fn drive_to_end(be: &mut SimBackend, dur: TimeMs) {
+        loop {
+            match be.next_event() {
+                ExecEvent::Drained { .. } => break,
+                ev if ev.at() > dur => break,
+                _ => {}
+            }
+        }
+    }
+
+    /// Regression for the dropped-tail-window energy bug: an idle run's
+    /// energy must equal (board + Σ processor idle) power × duration for
+    /// *any* tick size, including tick sizes that do not divide the
+    /// horizon (the old accounting stopped at the last full tick, so
+    /// `tick_ms = 700` lost 30 % of a 1000 ms run's energy).
+    #[test]
+    fn idle_energy_covers_full_duration_regardless_of_tick() {
+        let soc = dimensity9000();
+        let idle_w: f64 =
+            BOARD_BASELINE_W + soc.processors.iter().map(|p| p.idle_w).sum::<f64>();
+        let dur = 1_000.0;
+        for tick_ms in [100.0, 333.0, 700.0] {
+            let cfg = SimConfig { duration_ms: dur, tick_ms, ..SimConfig::default() };
+            let mut be = Box::new(SimBackend::new(soc.clone(), cfg));
+            drive_to_end(&mut be, dur);
+            let report = be.finish(dur);
+            let want_j = idle_w * dur / 1e3;
+            assert!(
+                (report.energy_j - want_j).abs() < 1e-9,
+                "tick {tick_ms}: energy {} J, want {want_j} J",
+                report.energy_j
+            );
+        }
+    }
+
+    /// The tail also closes the power time series and keeps average
+    /// power honest: energy over the horizon is exactly idle power even
+    /// when the horizon is not a multiple of the tick (900 ms, 400 ms
+    /// ticks → the old meter covered only 800 ms).
+    #[test]
+    fn idle_average_power_is_idle_power() {
+        let soc = dimensity9000();
+        let idle_w: f64 =
+            BOARD_BASELINE_W + soc.processors.iter().map(|p| p.idle_w).sum::<f64>();
+        let cfg = SimConfig { duration_ms: 900.0, tick_ms: 400.0, ..SimConfig::default() };
+        let mut be = Box::new(SimBackend::new(soc, cfg));
+        drive_to_end(&mut be, 900.0);
+        let report = be.finish(900.0);
+        assert!((report.energy_j / 0.9 - idle_w).abs() < 1e-9);
+        // The final power sample sits at the horizon, not the last tick.
+        assert_eq!(report.power.times.last().copied(), Some(900.0));
+    }
+
+    /// Regression for the mid-tick utilization bug: a processor saturated
+    /// since the start of the tick window must report util ≈ 1.0 on a
+    /// snapshot taken mid-window (the old code divided the busy time by
+    /// the full `tick_ms`, reporting 0.5 at the 50 ms point of a 100 ms
+    /// tick — wrong monitor-surface truth for anything reading
+    /// `ProcView::util`, though no in-tree scheduler does today).
+    #[test]
+    fn mid_tick_view_reports_elapsed_window_utilization() {
+        let soc = dimensity9000();
+        let cfg = SimConfig { duration_ms: 10_000.0, tick_ms: 100.0, ..SimConfig::default() };
+        let mut be = SimBackend::new(soc, cfg);
+        // Fresh backend at t = 0: nothing elapsed, nothing running.
+        assert_eq!(be.proc_views()[0].util, 0.0);
+        let ok = be.try_dispatch(DispatchCmd {
+            token: 1,
+            req: 0,
+            session: 0,
+            unit: 0,
+            proc: 0,
+            exec_full_ms: 5_000.0,
+            xfer_ms: 0.0,
+            mgmt_ms: 0.0,
+        });
+        assert!(ok);
+        // Advance mid-tick via a timer at t = 50 (the tick is at 100).
+        be.arm_timer(50.0, 7);
+        let ev = be.next_event();
+        assert_eq!(ev.at(), 50.0);
+        let views = be.proc_views();
+        assert!(
+            views[0].util > 0.99,
+            "busy since t=0 but util reads {}",
+            views[0].util
+        );
+        // An idle processor on the same snapshot still reads 0.
+        assert_eq!(views[1].util, 0.0);
+    }
 }

@@ -1,0 +1,490 @@
+//! Fleet-scale sharded simulation: a population of devices, not one
+//! phone.
+//!
+//! The ROADMAP's north star is a system serving heavy traffic from
+//! millions of users, but a single `adms serve` run simulates exactly one
+//! device. This layer runs **N independent devices** — each one an
+//! evaluation *arm* ([`ArmSpec`]: SoC preset × scheduler × workload or
+//! scenario) with a per-device seed derived deterministically from the
+//! fleet seed — sharded across worker threads, and merges the per-device
+//! results into a [`FleetReport`] without ever shipping raw sample
+//! vectors between threads (per-device latency populations collapse into
+//! the fixed-size [`Digest`] histograms of `util::stats`).
+//!
+//! ## Determinism
+//!
+//! `adms fleet --devices N --seed S` is bit-deterministic across worker
+//! counts, by construction:
+//!
+//! 1. device `d` always runs arm `d % arms` with seed
+//!    [`device_seed`]`(S, d)` — independent of which worker executes it;
+//! 2. each device simulation is seed-deterministic (the PR-2/PR-3
+//!    record-replay and rerun-identity properties);
+//! 3. per-device digests land in a slot indexed by device id, and the
+//!    final merge folds them **in device-id order on one thread** — so
+//!    every floating-point accumulation happens in the same order no
+//!    matter how the devices were sharded. Worker threads only decide
+//!    *when* a digest is produced, never how it is combined.
+//!
+//! The plan / window-tuning memo tables (`util::memo`) are mutex-guarded
+//! and keyed by graph fingerprint, so shards share one cached
+//! partitioning per (model, SoC, ws) instead of recomputing it per
+//! device.
+
+use crate::exec::{RunSpec, SimConfig, SCHEDULER_NAMES};
+use crate::sim::SimReport;
+use crate::soc::soc_by_name;
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+use crate::util::stats::Digest;
+use anyhow::{anyhow, bail, Result};
+
+/// One evaluation arm of the fleet: which SoC preset the device is, which
+/// scheduling policy it runs, and what workload its user drives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArmSpec {
+    /// SoC preset name (`soc::SOC_NAMES`).
+    pub soc: String,
+    /// Scheduler name (`exec::SCHEDULER_NAMES`).
+    pub scheduler: String,
+    /// Workload in the `workload::resolve` grammar (named workload or
+    /// comma-separated zoo models), or `scenario:<name-or-file>` for a
+    /// dynamic scenario (`scenario::resolve`).
+    pub workload: String,
+}
+
+impl ArmSpec {
+    pub fn label(&self) -> String {
+        format!("{}/{}/{}", self.soc, self.scheduler, self.workload)
+    }
+
+    /// Resolve the arm to a cloneable [`RunSpec`] (validating every
+    /// name), with `cfg` as the shared per-device execution config.
+    pub fn to_run_spec(&self, cfg: &SimConfig) -> Result<RunSpec> {
+        let soc = soc_by_name(&self.soc)
+            .ok_or_else(|| anyhow!("arm '{}': unknown soc '{}'", self.label(), self.soc))?;
+        if !SCHEDULER_NAMES.contains(&self.scheduler.as_str()) {
+            bail!(
+                "arm '{}': unknown scheduler '{}' (expected one of: {})",
+                self.label(),
+                self.scheduler,
+                SCHEDULER_NAMES.join(", ")
+            );
+        }
+        let (apps, events) = if let Some(rest) = self.workload.strip_prefix("scenario:") {
+            let sc = crate::scenario::resolve(rest)
+                .map_err(|e| anyhow!("arm '{}': {e}", self.label()))?;
+            sc.compile().map_err(|e| anyhow!("arm '{}': {e}", self.label()))?
+        } else {
+            let apps = crate::workload::resolve(&self.workload, &soc).map_err(|e| {
+                anyhow!("arm '{}': {e} (or scenario:<name-or-file>)", self.label())
+            })?;
+            (apps, Vec::new())
+        };
+        Ok(RunSpec {
+            soc,
+            scheduler: self.scheduler.clone(),
+            apps,
+            events,
+            cfg: cfg.clone(),
+            window_size: None,
+        })
+    }
+}
+
+/// A fleet: `devices` simulated devices assigned round-robin over `arms`,
+/// all sharing one execution config (horizon, tick, quota) and deriving
+/// per-device seeds from `seed`.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub arms: Vec<ArmSpec>,
+    pub devices: usize,
+    pub seed: u64,
+    /// Per-device execution config; `cfg.seed` is overwritten per device.
+    pub cfg: SimConfig,
+}
+
+/// The seed device `d` simulates under in a fleet seeded `fleet_seed`:
+/// a SplitMix64 mix of both, so neighbouring devices get decorrelated
+/// streams and the mapping never depends on sharding.
+pub fn device_seed(fleet_seed: u64, device: usize) -> u64 {
+    splitmix64(splitmix64(fleet_seed) ^ splitmix64(device as u64 ^ 0x9e37_79b9_7f4a_7c15))
+}
+
+/// Everything the fleet keeps per device: counters and fixed-size
+/// digests, never raw samples — a thousand-device fleet ships a thousand
+/// of these across threads, not a thousand latency vectors.
+#[derive(Debug, Clone)]
+pub struct DeviceDigest {
+    pub device: usize,
+    pub arm: usize,
+    pub seed: u64,
+    /// Actual simulated span of this device's run, ms.
+    pub sim_ms: f64,
+    pub issued: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    pub latency: Digest,
+    pub slo_ok: u64,
+    pub slo_n: u64,
+    pub energy_j: f64,
+    pub throttle_events: u64,
+    /// Σ busy fraction over processors (with `procs`, an exact average).
+    pub busy_frac_sum: f64,
+    pub procs: u64,
+    pub events: u64,
+}
+
+impl DeviceDigest {
+    pub fn from_report(device: usize, arm: usize, seed: u64, r: &SimReport) -> Self {
+        let mut latency = Digest::new();
+        for s in &r.sessions {
+            latency.merge(&Digest::from_summary(&s.latency));
+        }
+        DeviceDigest {
+            device,
+            arm,
+            seed,
+            sim_ms: r.duration_ms,
+            issued: r.total_issued(),
+            completed: r.total_completed(),
+            failed: r.total_failed(),
+            cancelled: r.total_cancelled(),
+            latency,
+            slo_ok: r.sessions.iter().map(|s| s.slo_ok).sum(),
+            slo_n: r.sessions.iter().map(|s| s.slo_n).sum(),
+            energy_j: r.energy_j,
+            throttle_events: r.procs.iter().map(|p| p.throttle_events).sum(),
+            busy_frac_sum: r.procs.iter().map(|p| p.busy_frac).sum(),
+            procs: r.procs.len() as u64,
+            events: r.events,
+        }
+    }
+}
+
+/// Aggregate over a set of devices (one arm, or the whole fleet).
+/// (`Default` is the empty aggregate: zero devices, empty digest.)
+#[derive(Debug, Clone, Default)]
+pub struct FleetAgg {
+    pub devices: u64,
+    pub sim_ms: f64,
+    pub issued: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    pub latency: Digest,
+    pub slo_ok: u64,
+    pub slo_n: u64,
+    pub energy_j: f64,
+    pub throttle_events: u64,
+    pub busy_frac_sum: f64,
+    pub procs: u64,
+    pub events: u64,
+}
+
+impl FleetAgg {
+    fn absorb(&mut self, d: &DeviceDigest) {
+        self.devices += 1;
+        self.sim_ms += d.sim_ms;
+        self.issued += d.issued;
+        self.completed += d.completed;
+        self.failed += d.failed;
+        self.cancelled += d.cancelled;
+        self.latency.merge(&d.latency);
+        self.slo_ok += d.slo_ok;
+        self.slo_n += d.slo_n;
+        self.energy_j += d.energy_j;
+        self.throttle_events += d.throttle_events;
+        self.busy_frac_sum += d.busy_frac_sum;
+        self.procs += d.procs;
+        self.events += d.events;
+    }
+
+    /// Exact SLO attainment over every SLO-scored request in the set.
+    pub fn slo_satisfaction(&self) -> Option<f64> {
+        if self.slo_n > 0 {
+            Some(self.slo_ok as f64 / self.slo_n as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Completed requests per simulated device-second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.sim_ms > 0.0 {
+            self.completed as f64 / (self.sim_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean device power over the set, W.
+    pub fn avg_watts(&self) -> f64 {
+        if self.sim_ms > 0.0 {
+            self.energy_j / (self.sim_ms / 1e3)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn avg_busy_frac(&self) -> f64 {
+        if self.procs > 0 {
+            self.busy_frac_sum / self.procs as f64
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let num_or_zero = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
+        Json::obj(vec![
+            ("devices", Json::Num(self.devices as f64)),
+            ("sim_ms", Json::Num(self.sim_ms)),
+            ("issued", Json::Num(self.issued as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("p50_ms", num_or_zero(self.latency.p50())),
+            ("p95_ms", num_or_zero(self.latency.p95())),
+            ("p99_ms", num_or_zero(self.latency.p99())),
+            ("mean_ms", num_or_zero(self.latency.mean())),
+            ("max_ms", num_or_zero(self.latency.max())),
+            // True when any folded-in session had engaged its reservoir:
+            // the percentiles above are then estimates weighted by
+            // reservoir (not true) populations — same disclosure as the
+            // '~' marker in serve output.
+            ("latency_subsampled", Json::Bool(self.latency.is_subsampled())),
+            ("slo_ok", Json::Num(self.slo_ok as f64)),
+            ("slo_n", Json::Num(self.slo_n as f64)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("avg_watts", Json::Num(self.avg_watts())),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("throttle_events", Json::Num(self.throttle_events as f64)),
+            ("avg_busy_frac", Json::Num(self.avg_busy_frac())),
+            ("events", Json::Num(self.events as f64)),
+        ])
+    }
+}
+
+/// One arm's aggregate inside a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ArmReport {
+    pub spec: ArmSpec,
+    pub agg: FleetAgg,
+}
+
+/// The merged result of a fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub devices: usize,
+    pub seed: u64,
+    pub arms: Vec<ArmReport>,
+    /// Fleet-wide aggregate — folded over raw device digests in
+    /// device-id order (NOT over per-arm aggregates): that fold order is
+    /// what the bit-determinism guarantee and `tests/fleet_rt.rs`'s
+    /// byte-equality assertions pin down, so don't "simplify" it to an
+    /// arm-order fold (it would reorder the f64 accumulations).
+    pub total: FleetAgg,
+}
+
+impl FleetReport {
+    fn merge(spec: &FleetSpec, digests: Vec<DeviceDigest>) -> Self {
+        let mut arms: Vec<ArmReport> = spec
+            .arms
+            .iter()
+            .map(|a| ArmReport { spec: a.clone(), agg: FleetAgg::default() })
+            .collect();
+        let mut total = FleetAgg::default();
+        // Device-id order: `digests` is indexed by device id, so both the
+        // per-arm and the fleet-wide folds see every device in the same
+        // order regardless of worker count.
+        for d in &digests {
+            arms[d.arm].agg.absorb(d);
+            total.absorb(d);
+        }
+        FleetReport { devices: spec.devices, seed: spec.seed, arms, total }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arms = self
+            .arms
+            .iter()
+            .map(|a| {
+                let mut obj = match a.agg.to_json() {
+                    Json::Obj(o) => o,
+                    _ => unreachable!("agg serializes as an object"),
+                };
+                obj.insert("arm".into(), Json::Str(a.spec.label()));
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::obj(vec![
+            ("devices", Json::Num(self.devices as f64)),
+            // A string, not a number: the report is a reproducibility
+            // record, and u64 seeds above 2^53 would round through f64.
+            ("seed", Json::Str(self.seed.to_string())),
+            ("arms", Json::Arr(arms)),
+            ("total", self.total.to_json()),
+        ])
+    }
+
+    /// Render the per-arm table plus fleet totals for the CLI.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:36} {:>4} {:>9} {:>7} {:>8} {:>8} {:>7} {:>9} {:>8} {:>6}",
+            "arm", "dev", "completed", "failed", "p50 ms", "p95 ms", "SLO %", "req/s", "avg W",
+            "thrtl"
+        );
+        let mut any_subsampled = false;
+        let mut row = |label: &str, a: &FleetAgg| {
+            // '~' marks reservoir-estimated percentiles, as in serve
+            // output (sessions past the Summary cap fold in subsampled).
+            let approx = if a.latency.is_subsampled() { "~" } else { "" };
+            any_subsampled |= a.latency.is_subsampled();
+            let _ = writeln!(
+                out,
+                "{:36} {:>4} {:>9} {:>7} {:>8} {:>8} {:>7} {:>9.2} {:>8.2} {:>6}",
+                label,
+                a.devices,
+                a.completed,
+                a.failed,
+                format!(
+                    "{approx}{:.2}",
+                    if a.latency.is_empty() { 0.0 } else { a.latency.p50() }
+                ),
+                format!(
+                    "{approx}{:.2}",
+                    if a.latency.is_empty() { 0.0 } else { a.latency.p95() }
+                ),
+                a.slo_satisfaction()
+                    .map(|v| format!("{:.1}", v * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+                a.throughput_rps(),
+                a.avg_watts(),
+                a.throttle_events,
+            );
+        };
+        for a in &self.arms {
+            row(&a.spec.label(), &a.agg);
+        }
+        row("fleet total", &self.total);
+        if any_subsampled {
+            let _ = writeln!(
+                out,
+                "note: '~' percentiles are reservoir estimates (a session exceeded the \
+                 per-device sample cap)"
+            );
+        }
+        out
+    }
+}
+
+/// What one worker shard returns: (device id, digest) pairs, or the
+/// first device error it hit.
+type ShardResult = Result<Vec<(usize, DeviceDigest)>>;
+
+/// Run the fleet, sharded over `workers` threads. Device `d` runs arm
+/// `d % arms` under seed [`device_seed`]`(spec.seed, d)`; results merge
+/// in device-id order (see the module docs for the determinism argument).
+pub fn run_fleet(spec: &FleetSpec, workers: usize) -> Result<FleetReport> {
+    if spec.arms.is_empty() {
+        bail!("fleet has no arms: give at least one (soc, scheduler, workload) triple");
+    }
+    if spec.devices == 0 {
+        bail!("fleet has no devices (--devices must be ≥ 1)");
+    }
+    // Resolve and validate every arm up front, on one thread, and warm
+    // the plan/tuning memo tables (`RunSpec::warm_caches` really builds
+    // the plans) so the shards start from shared cached partitionings
+    // instead of racing to compute them N ways on a cold process.
+    let run_specs: Vec<RunSpec> =
+        spec.arms.iter().map(|a| a.to_run_spec(&spec.cfg)).collect::<Result<_>>()?;
+    for (rs, arm) in run_specs.iter().zip(&spec.arms) {
+        rs.warm_caches().map_err(|e| anyhow!("arm '{}': {e}", arm.label()))?;
+    }
+    let workers = workers.clamp(1, spec.devices);
+
+    let results: Vec<ShardResult> = std::thread::scope(|scope| {
+        let run_specs = &run_specs;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut d = w;
+                    while d < spec.devices {
+                        let arm = d % run_specs.len();
+                        let mut rs = run_specs[arm].clone();
+                        rs.cfg.seed = device_seed(spec.seed, d);
+                        let report = rs.run_sim().map_err(|e| {
+                            anyhow!("device {d} (arm '{}'): {e}", spec.arms[arm].label())
+                        })?;
+                        out.push((d, DeviceDigest::from_report(d, arm, rs.cfg.seed, &report)));
+                        d += workers;
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("fleet worker panicked")).collect()
+    });
+
+    let mut digests: Vec<Option<DeviceDigest>> = vec![None; spec.devices];
+    for r in results {
+        for (d, dig) in r? {
+            digests[d] = Some(dig);
+        }
+    }
+    let digests: Vec<DeviceDigest> =
+        digests.into_iter().map(|d| d.expect("every device simulated")).collect();
+    Ok(FleetReport::merge(spec, digests))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_seeds_are_distinct_and_stable() {
+        let seen: std::collections::HashSet<u64> =
+            (0..256).map(|d| device_seed(42, d)).collect();
+        assert_eq!(seen.len(), 256, "device seeds collided");
+        // Stable across calls (a pure function of (fleet seed, device)).
+        assert_eq!(device_seed(42, 7), device_seed(42, 7));
+        assert_ne!(device_seed(42, 7), device_seed(43, 7));
+    }
+
+    #[test]
+    fn arm_validation_rejects_unknown_names() {
+        let cfg = SimConfig::default();
+        let bad_soc =
+            ArmSpec { soc: "nope".into(), scheduler: "adms".into(), workload: "frs".into() };
+        assert!(bad_soc.to_run_spec(&cfg).is_err());
+        let bad_sched =
+            ArmSpec { soc: "dimensity9000".into(), scheduler: "nope".into(), workload: "frs".into() };
+        assert!(bad_sched.to_run_spec(&cfg).is_err());
+        let bad_wl = ArmSpec {
+            soc: "dimensity9000".into(),
+            scheduler: "adms".into(),
+            workload: "not_a_workload".into(),
+        };
+        assert!(bad_wl.to_run_spec(&cfg).is_err());
+        let ok = ArmSpec {
+            soc: "dimensity9000".into(),
+            scheduler: "band".into(),
+            workload: "mobilenet_v1,east".into(),
+        };
+        let rs = ok.to_run_spec(&cfg).unwrap();
+        assert_eq!(rs.apps.len(), 2);
+        let sc = ArmSpec {
+            soc: "dimensity9000".into(),
+            scheduler: "adms".into(),
+            workload: "scenario:churn_mix".into(),
+        };
+        let rs = sc.to_run_spec(&cfg).unwrap();
+        assert!(!rs.events.is_empty(), "scenario arm lost its lifecycle events");
+    }
+}

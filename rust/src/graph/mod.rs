@@ -70,6 +70,43 @@ impl Graph {
         self.nodes.iter().map(|n| n.param_bytes).sum()
     }
 
+    /// Structural fingerprint: FNV-1a over every planning-relevant
+    /// property — op kinds, edges, output shapes, FLOP/parameter
+    /// annotations, and the activation dtype width. Two graphs with equal
+    /// names but different fingerprints are *different models*: the plan
+    /// and tuner memo tables ([`crate::sched::ModelPlan::build_cached`],
+    /// `analyzer::tuner`) key on this alongside the name so a same-name
+    /// structural variant can never be served a stale cached plan.
+    /// Node display names are deliberately excluded — they don't affect
+    /// partitioning or costs.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        mix(self.dtype_bytes);
+        mix(self.nodes.len() as u64);
+        for n in &self.nodes {
+            mix(n.kind as u64);
+            mix(n.inputs.len() as u64);
+            for &i in &n.inputs {
+                mix(i as u64);
+            }
+            mix(n.out_shape.rank as u64);
+            for &d in &n.out_shape.dims {
+                mix(d);
+            }
+            mix(n.flops);
+            mix(n.param_bytes);
+        }
+        h
+    }
+
     /// Consumers adjacency: for each node, which nodes read its output.
     pub fn consumers(&self) -> Vec<Vec<NodeId>> {
         let mut out = vec![Vec::new(); self.nodes.len()];
@@ -204,5 +241,25 @@ mod tests {
         let g = tiny();
         assert!(g.nodes[1].flops > 0); // conv
         assert!(g.total_flops() > 0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_structure_not_names() {
+        let a = tiny();
+        // Renaming the graph or its nodes changes nothing structural.
+        let mut renamed = a.clone();
+        renamed.name = "something_else".into();
+        renamed.nodes[1].name = "renamed_op".into();
+        assert_eq!(a.fingerprint(), renamed.fingerprint());
+        // Any structural edit — kind, shape, flops, dtype — changes it.
+        let mut kind = a.clone();
+        kind.nodes[1].kind = OpKind::DepthwiseConv2d;
+        assert_ne!(a.fingerprint(), kind.fingerprint());
+        let mut flops = a.clone();
+        flops.nodes[1].flops += 1;
+        assert_ne!(a.fingerprint(), flops.fingerprint());
+        let mut dtype = a.clone();
+        dtype.dtype_bytes = 1;
+        assert_ne!(a.fingerprint(), dtype.fingerprint());
     }
 }

@@ -26,6 +26,10 @@
 //! * [`scenario`] — the open-system workload layer: timed session
 //!   churn/burst/phase scenarios (JSON-serializable, seed-generatable)
 //!   and run-trace record/replay;
+//! * [`fleet`] — fleet-scale sharded simulation: N independent devices
+//!   (SoC × scheduler × workload arms, per-device seeds derived from one
+//!   fleet seed) across worker threads, merged into a deterministic
+//!   [`fleet::FleetReport`] of mergeable digests;
 //! * [`coordinator`] / [`runtime`] — the AOT-artifact path: HLO stages
 //!   compiled through PJRT (behind the `pjrt` feature) and the legacy
 //!   probe-serving coordinator, with Python never on the request path;
@@ -49,6 +53,7 @@ pub mod exec;
 pub mod sim;
 pub mod scenario;
 pub mod workload;
+pub mod fleet;
 pub mod metrics;
 pub mod coordinator;
 pub mod runtime;

@@ -12,6 +12,9 @@
 //!                         traces; --probe keeps the legacy AOT
 //!                         numerics-probe path (PJRT)
 //!   scenario              list/show/generate dynamic scenarios
+//!   fleet                 simulate a population of devices — (SoC ×
+//!                         scheduler × workload) arms sharded across
+//!                         worker threads, merged into one FleetReport
 //!   bench                 run the simulator throughput suite and write
 //!                         BENCH_sim.json (the tracked perf trajectory)
 //!   models | socs         list the zoo / SoC presets
@@ -53,7 +56,7 @@ fn env_logger_lite() {
 }
 
 const USAGE: &str =
-    "adms <experiment|partition|tune|simulate|serve|scenario|bench|models|socs> [options]";
+    "adms <experiment|partition|tune|simulate|serve|scenario|fleet|bench|models|socs> [options]";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first().map(String::as_str) else {
@@ -69,6 +72,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "serve" => cmd_serve(rest),
         "scenario" => cmd_scenario(rest),
+        "fleet" => cmd_fleet(rest),
         "bench" => cmd_bench(rest),
         "models" => {
             for m in zoo::MODEL_NAMES {
@@ -330,40 +334,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let sched = args.get_or("sched", "adms");
     let mut events = Vec::new();
     let apps = if let Some(scn) = args.get("scenario") {
-        let sc = match adms::scenario::by_name(scn) {
-            Some(sc) => sc,
-            None => {
-                let text = std::fs::read_to_string(scn).map_err(|e| {
-                    anyhow::anyhow!(
-                        "--scenario '{scn}': not a named scenario ({}) and not a readable \
-                         file: {e}",
-                        adms::scenario::SCENARIO_NAMES.join(", ")
-                    )
-                })?;
-                adms::scenario::Scenario::from_json_str(&text)?
-            }
-        };
+        let sc = adms::scenario::resolve(scn).map_err(|e| anyhow::anyhow!("--scenario {e}"))?;
         let (apps, ev) = sc.compile()?;
         events = ev;
         apps
     } else {
         let wl = args.get_or("workload", "frs");
-        let mut apps = match adms::workload::by_name(&wl, &soc) {
-            Some(apps) => apps,
-            None => {
-                let mut apps = Vec::new();
-                for m in wl.split(',').filter(|s| !s.is_empty()) {
-                    if zoo::by_name(m).is_none() {
-                        bail!(
-                            "unknown workload/model '{m}' (named workloads: {})",
-                            adms::workload::WORKLOAD_NAMES.join(", ")
-                        );
-                    }
-                    apps.push(App::closed_loop(m));
-                }
-                apps
-            }
-        };
+        let mut apps = adms::workload::resolve(&wl, &soc)
+            .map_err(|e| anyhow::anyhow!("--workload: {e}"))?;
         if let Some(slo) = args.get("slo") {
             let slo: f64 = slo
                 .parse()
@@ -475,6 +453,110 @@ fn maybe_record(
             trace.arrivals.len(),
             trace.assignments.len()
         );
+    }
+    Ok(())
+}
+
+/// `adms fleet`: simulate a population of devices. Arms are the cross
+/// product of `--socs × --scheds × --workloads`; device `i` runs arm
+/// `i % arms` under a seed derived from `--seed` and `i`. The report is
+/// bit-identical for any `--workers` value (the merge is device-ordered).
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    use adms::fleet::{run_fleet, ArmSpec, FleetSpec};
+    let specs = [
+        OptSpec { name: "devices", takes_value: true, help: "number of simulated devices", default: Some("8") },
+        OptSpec { name: "seed", takes_value: true, help: "fleet seed (per-device seeds derive from it)", default: Some("42") },
+        OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = ADMS_FLEET_WORKERS or available parallelism; never affects results)", default: Some("0") },
+        OptSpec { name: "socs", takes_value: true, help: "comma-separated SoC presets", default: Some("dimensity9000") },
+        OptSpec { name: "scheds", takes_value: true, help: "comma-separated schedulers (vanilla|band|adms|pinned)", default: Some("adms") },
+        OptSpec { name: "workloads", takes_value: true, help: "comma-separated workloads: names, model lists (use + within an arm, e.g. retinaface+east), or scenario:<name-or-file>", default: Some("frs") },
+        OptSpec { name: "duration", takes_value: true, help: "per-device horizon, simulated ms", default: Some("5000") },
+        OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
+        OptSpec { name: "json", takes_value: true, help: "also write the FleetReport as JSON here", default: None },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("adms fleet [options]", &specs));
+        println!("socs: {}", SOC_NAMES.join(", "));
+        println!("named workloads: {}", adms::workload::WORKLOAD_NAMES.join(", "));
+        println!("named scenarios: {}", adms::scenario::SCENARIO_NAMES.join(", "));
+        return Ok(());
+    }
+    let csv = |key: &str, default: &str| -> Vec<String> {
+        args.get_or(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    };
+    let socs = csv("socs", "dimensity9000");
+    let scheds = csv("scheds", "adms");
+    // `,` separates arms; `+` separates models within one arm's list.
+    // Scenario entries are left untouched — a `scenario:` value is a name
+    // or a file path, where '+' is a legitimate character.
+    let workloads: Vec<String> = csv("workloads", "frs")
+        .into_iter()
+        .map(|w| {
+            if w.starts_with("scenario:") {
+                w
+            } else {
+                w.replace('+', ",")
+            }
+        })
+        .collect();
+    let mut arms = Vec::new();
+    for soc in &socs {
+        for sched in &scheds {
+            for wl in &workloads {
+                arms.push(ArmSpec {
+                    soc: soc.clone(),
+                    scheduler: sched.clone(),
+                    workload: wl.clone(),
+                });
+            }
+        }
+    }
+    let requests = args.get_u64("requests", 0)?;
+    let cfg = adms::exec::SimConfig {
+        duration_ms: args.get_f64("duration", 5_000.0)?,
+        max_requests: (requests > 0).then_some(requests),
+        ..Default::default()
+    };
+    let spec = FleetSpec {
+        arms,
+        devices: args.get_usize("devices", 8)?,
+        seed: args.get_u64("seed", 42)?,
+        cfg,
+    };
+    let workers = match args.get_usize("workers", 0)? {
+        0 => adms::util::env::fleet_workers().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(usize::from).unwrap_or(4).min(8)
+        }),
+        n => n,
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_fleet(&spec, workers)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    println!(
+        "fleet: {} devices × {} arm(s), seed {}, {} workers",
+        spec.devices,
+        report.arms.len(),
+        spec.seed,
+        workers.min(spec.devices)
+    );
+    print!("{}", report.render());
+    println!(
+        "simulated {:.1} device-seconds in {:.2} s wall ({:.0} sim-ms/wall-s), {} driver events",
+        report.total.sim_ms / 1e3,
+        wall_s,
+        report.total.sim_ms / wall_s.max(1e-9),
+        report.total.events
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().to_pretty())
+            .map_err(|e| anyhow::anyhow!("--json '{path}': {e}"))?;
+        println!("wrote FleetReport to {path}");
     }
     Ok(())
 }

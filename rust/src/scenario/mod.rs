@@ -195,6 +195,22 @@ pub fn by_name(name: &str) -> Option<Scenario> {
     }
 }
 
+/// The full scenario grammar shared by `adms serve --scenario` and fleet
+/// arm specs: a named scenario ([`by_name`]), else a path to a scenario
+/// JSON file.
+pub fn resolve(name: &str) -> Result<Scenario> {
+    if let Some(sc) = by_name(name) {
+        return Ok(sc);
+    }
+    let text = std::fs::read_to_string(name).map_err(|e| {
+        anyhow::anyhow!(
+            "'{name}': not a named scenario ({}) and not a readable file: {e}",
+            SCENARIO_NAMES.join(", ")
+        )
+    })?;
+    Scenario::from_json_str(&text)
+}
+
 /// One-line description for `adms scenario list`.
 pub fn describe(name: &str) -> &'static str {
     match name {
@@ -300,6 +316,9 @@ mod tests {
             assert!(!describe(n).is_empty());
         }
         assert!(by_name("nope").is_none());
+        // `resolve` covers names and falls through to (missing) files.
+        assert_eq!(resolve("churn_mix").unwrap().name, "churn_mix");
+        assert!(resolve("/no/such/scenario.json").is_err());
     }
 
     #[test]

@@ -99,12 +99,14 @@ impl ModelPlan {
     /// Memoized [`ModelPlan::build`]: partitioning and cost annotation are
     /// pure functions of (model, SoC, window size), and serving paths
     /// rebuild the same plans on every run — the cache turns that into a
-    /// table clone. Keyed by `(graph.name, soc.name, window_size)`, the
-    /// same identity [`crate::analyzer::tuner::TunedConfig`] uses; custom
-    /// SoC/graph definitions must therefore use distinct names.
+    /// table clone. Keyed by `(graph.name, graph.fingerprint(), soc.name,
+    /// window_size)`: the structural fingerprint means two same-name
+    /// graphs with different op/edge content can never share a cached
+    /// plan (custom SoC definitions must still use distinct names — the
+    /// SoC side has no fingerprint).
     pub fn build_cached(graph: Arc<Graph>, soc: &SocSpec, window_size: usize) -> Self {
-        static CACHE: Memo<(String, String, usize), ModelPlan> = Memo::new();
-        let key = (graph.name.clone(), soc.name.clone(), window_size);
+        static CACHE: Memo<(String, u64, String, usize), ModelPlan> = Memo::new();
+        let key = (graph.name.clone(), graph.fingerprint(), soc.name.clone(), window_size);
         CACHE.get_or_insert_with(key, || ModelPlan::build(graph, soc, window_size))
     }
 
@@ -209,6 +211,31 @@ mod tests {
             assert_eq!(a.est_total_ms, p.est_total_ms);
             assert_eq!(a.avg_unit_ms, p.avg_unit_ms);
         }
+    }
+
+    /// Two structurally different graphs carrying the *same* name must
+    /// not share a cached plan — the memo key includes the structural
+    /// fingerprint precisely so a name collision cannot serve one model
+    /// the other's partition.
+    #[test]
+    fn build_cached_distinguishes_same_name_different_structure() {
+        let soc = dimensity9000();
+        let mut a = zoo::mobilenet_v1();
+        let mut b = zoo::east();
+        a.name = "fingerprint_collision_probe".into();
+        b.name = "fingerprint_collision_probe".into();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let pa = ModelPlan::build_cached(Arc::new(a.clone()), &soc, 3);
+        let pb = ModelPlan::build_cached(Arc::new(b.clone()), &soc, 3);
+        // Under the old name-only key the second lookup would have
+        // returned mobilenet's plan for east's graph.
+        assert_eq!(pa.num_units(), ModelPlan::build(Arc::new(a), &soc, 3).num_units());
+        assert_eq!(pb.num_units(), ModelPlan::build(Arc::new(b), &soc, 3).num_units());
+        assert_ne!(
+            (pa.num_units(), pa.est_total_ms),
+            (pb.num_units(), pb.est_total_ms),
+            "same-name structural variants shared a cached plan"
+        );
     }
 
     #[test]

@@ -35,6 +35,14 @@ pub struct SessionStats {
     /// Fraction of requests finishing within their SLO (failures count
     /// as misses). `None` when the session has no SLO.
     pub slo_satisfaction: Option<f64>,
+    /// Requests that finished within their SLO (numerator of
+    /// `slo_satisfaction`). Raw counts so aggregation layers (the fleet
+    /// digest) can merge SLO attainment exactly instead of averaging
+    /// per-session ratios.
+    pub slo_ok: u64,
+    /// SLO-scored retirements (completions + failures of SLO-carrying
+    /// requests — the denominator).
+    pub slo_n: u64,
     /// When the session was admitted (0 for static workloads).
     pub start_ms: TimeMs,
     /// When a `SessionStop` event retired it (`None` = ran to the end).

@@ -174,6 +174,36 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
         });
         entries.push(SimSuiteEntry { name, stats, sim_ms: 1_000.0, events: events.get() });
     }
+    // Fleet throughput: a sharded device population per measured run
+    // (`sim_ms` is summed over devices, so the headline figure stays
+    // simulated-ms per wall-second — now aggregated across shards).
+    {
+        use crate::fleet::{run_fleet, ArmSpec, FleetSpec};
+        let (devices, workers) = (6usize, 2usize);
+        let spec = FleetSpec {
+            arms: vec![ArmSpec {
+                soc: "dimensity9000".into(),
+                scheduler: "adms".into(),
+                workload: "frs".into(),
+            }],
+            devices,
+            seed: 42,
+            cfg: SimConfig { duration_ms: 500.0, ..Default::default() },
+        };
+        let name = format!("fleet_0.5s/{devices}dev_{workers}w");
+        let events = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = run_fleet(&spec, workers).expect("fleet bench run");
+            events.set(r.total.events);
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry {
+            name,
+            stats,
+            sim_ms: devices as f64 * 500.0,
+            events: events.get(),
+        });
+    }
     b.finish();
     (budget, entries)
 }

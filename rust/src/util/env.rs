@@ -7,10 +7,11 @@
 //!
 //! | variable          | effect                                              |
 //! |-------------------|-----------------------------------------------------|
-//! | `ADMS_SIM_DEBUG`  | any value: periodic driver-loop progress to stderr  |
-//! | `ADMS_BENCH_MS`   | per-measurement time budget for `testing::bench`    |
-//! | `PROP_ITERS`      | overrides every property suite's iteration count    |
-//! | `ADMS_PROP_SEED`  | replay a single property case at this exact seed    |
+//! | `ADMS_SIM_DEBUG`      | any value: periodic driver-loop progress to stderr  |
+//! | `ADMS_BENCH_MS`       | per-measurement time budget for `testing::bench`    |
+//! | `PROP_ITERS`          | overrides every property suite's iteration count    |
+//! | `ADMS_PROP_SEED`      | replay a single property case at this exact seed    |
+//! | `ADMS_FLEET_WORKERS`  | default worker-thread count for `adms fleet`        |
 
 /// Any value enables periodic dispatch-loop progress lines on stderr.
 pub const SIM_DEBUG: &str = "ADMS_SIM_DEBUG";
@@ -20,6 +21,8 @@ pub const BENCH_MS: &str = "ADMS_BENCH_MS";
 pub const PROP_ITERS: &str = "PROP_ITERS";
 /// Single-seed property replay (printed by failing property runs).
 pub const PROP_SEED: &str = "ADMS_PROP_SEED";
+/// Default `adms fleet` worker count when `--workers` is 0/auto.
+pub const FLEET_WORKERS: &str = "ADMS_FLEET_WORKERS";
 
 /// `ADMS_SIM_DEBUG` — read once per run by the driver, never per event.
 pub fn sim_debug() -> bool {
@@ -46,6 +49,16 @@ pub fn prop_iters(default: u64) -> u64 {
 /// `ADMS_PROP_SEED` when set and parseable.
 pub fn prop_seed() -> Option<u64> {
     std::env::var(PROP_SEED).ok().and_then(|s| s.parse::<u64>().ok())
+}
+
+/// `ADMS_FLEET_WORKERS` when set and positive. Worker count never
+/// affects fleet *results* (the merge is device-ordered), only wall
+/// time, so an env default is safe.
+pub fn fleet_workers() -> Option<usize> {
+    std::env::var(FLEET_WORKERS)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
 }
 
 #[cfg(test)]

@@ -91,6 +91,14 @@ impl Summary {
         self.mean() * self.count as f64
     }
 
+    /// The retained sample reservoir (the full population when fewer than
+    /// `cap` observations were added). [`Digest::from_summary`] folds
+    /// these into its histogram so percentile fidelity survives the
+    /// summary → digest conversion.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     /// True once more observations have been added than the reservoir
     /// holds: percentiles are then estimates over a uniform random
     /// subsample, not exact order statistics. Reports must label p50/p95
@@ -150,6 +158,185 @@ impl Summary {
                 self.samples.push(s);
             }
         }
+    }
+}
+
+/// Log-spaced histogram bins of [`Digest`]: `DECADES` decades starting
+/// at `LO_MS`, `PER_DECADE` bins each, plus an underflow and an overflow
+/// bin. 16 bins/decade bounds the within-bin relative error of a
+/// percentile estimate to ~±7 %.
+const DIGEST_LO_MS: f64 = 1e-2;
+const DIGEST_DECADES: usize = 7;
+const DIGEST_PER_DECADE: usize = 16;
+const DIGEST_BINS: usize = DIGEST_DECADES * DIGEST_PER_DECADE + 2;
+
+/// A mergeable metrics digest: fixed log-spaced histogram plus exact
+/// count/sum/min/max moments. Unlike [`Summary`], two digests combine
+/// without shipping raw sample vectors — bin counts add exactly (u64),
+/// so a fleet of per-device digests merges into per-arm and fleet-wide
+/// percentiles at a fixed 130-bucket footprint per metric.
+///
+/// Determinism: `merge` is exact for the integer fields; the f64 `sum`
+/// accumulates in call order, so callers that need bit-identical results
+/// across thread counts must merge in a fixed order (the fleet layer
+/// merges by device id, never by completion order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Digest {
+    counts: Vec<u64>,
+    /// Observations represented in the histogram (reservoir-bounded when
+    /// built [`Digest::from_summary`] — percentile ranks use this).
+    hist_n: u64,
+    /// True population size (may exceed `hist_n` for subsampled sources).
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Digest {
+    pub fn new() -> Self {
+        Digest {
+            counts: vec![0; DIGEST_BINS],
+            hist_n: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bin(x: f64) -> usize {
+        if x.is_nan() || x <= DIGEST_LO_MS {
+            return 0; // underflow (NaN counts as underflow, never panics)
+        }
+        let b = ((x / DIGEST_LO_MS).log10() * DIGEST_PER_DECADE as f64).floor() as isize;
+        if b >= (DIGEST_BINS - 2) as isize {
+            DIGEST_BINS - 1 // overflow
+        } else {
+            1 + b as usize
+        }
+    }
+
+    /// Lower edge of bin `i` (underflow edges clamp to 0 / `LO_MS`).
+    fn bin_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            DIGEST_LO_MS * 10f64.powf((i - 1) as f64 / DIGEST_PER_DECADE as f64)
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.counts[Self::bin(x)] += 1;
+        self.hist_n += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Convert a [`Summary`]: exact moments (count/sum/min/max) from the
+    /// Welford state, histogram from the sample reservoir. For subsampled
+    /// summaries the percentiles are therefore estimates over the same
+    /// reservoir the summary itself reports from — no fidelity is lost in
+    /// the conversion.
+    pub fn from_summary(s: &Summary) -> Self {
+        let mut d = Digest::new();
+        for &x in s.samples() {
+            d.counts[Self::bin(x)] += 1;
+            d.hist_n += 1;
+        }
+        d.count = s.count();
+        d.sum = if s.count() == 0 { 0.0 } else { s.sum() };
+        d.min = s.min();
+        d.max = s.max();
+        d
+    }
+
+    /// Fold `other` into `self`. Bin counts and populations add exactly;
+    /// see the type docs for the f64-ordering caveat.
+    pub fn merge(&mut self, other: &Digest) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.hist_n += other.hist_n;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// True when the histogram holds fewer observations than the true
+    /// population — i.e. some folded-in [`Summary`] had engaged its
+    /// reservoir. Percentiles are then estimates, and a merge of
+    /// subsampled and exact sources weights each by its *histogram*
+    /// population (reservoir-bounded), not its true count; reports must
+    /// label p50/p95 accordingly (the same `~` convention
+    /// [`Summary::is_subsampled`] feeds in serve output).
+    pub fn is_subsampled(&self) -> bool {
+        self.hist_n < self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile in `[0, 100]`: find the bin holding the rank, then
+    /// interpolate linearly inside it between its edges (clamped to the
+    /// observed min/max so tails never over-shoot the data).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.hist_n == 0 {
+            return f64::NAN;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * self.hist_n as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (seen + c) as f64 >= rank {
+                let frac = ((rank - seen as f64) / c as f64).clamp(0.0, 1.0);
+                let lo = Self::bin_lo(i);
+                let hi = if i + 1 < DIGEST_BINS { Self::bin_lo(i + 1) } else { self.max };
+                let v = lo + (hi - lo) * frac;
+                return v.clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
     }
 }
 
@@ -286,6 +473,88 @@ mod tests {
             d.add(i as f64);
         }
         assert!(!d.is_subsampled());
+    }
+
+    #[test]
+    fn digest_percentiles_approximate_the_population() {
+        let mut d = Digest::new();
+        for i in 1..=1000 {
+            d.add(i as f64 * 0.1); // 0.1 .. 100 ms
+        }
+        assert_eq!(d.count(), 1000);
+        assert!((d.mean() - 50.05).abs() < 1e-9);
+        assert_eq!(d.min(), 0.1);
+        assert_eq!(d.max(), 100.0);
+        // Log-binned estimates: within the per-bin relative error.
+        assert!((d.p50() - 50.0).abs() / 50.0 < 0.08, "p50 {}", d.p50());
+        assert!((d.p95() - 95.0).abs() / 95.0 < 0.08, "p95 {}", d.p95());
+        assert!(d.percentile(100.0) <= d.max());
+        assert!(d.percentile(0.0) >= d.min());
+    }
+
+    #[test]
+    fn digest_merge_equals_combined_and_is_order_exact() {
+        let mut a = Digest::new();
+        let mut b = Digest::new();
+        let mut all = Digest::new();
+        for i in 0..400 {
+            let x = ((i as f64).sin().abs() + 0.01) * 30.0;
+            if i % 2 == 0 {
+                a.add(x);
+            } else {
+                b.add(x);
+            }
+            all.add(x);
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), all.count());
+        assert_eq!(m.counts, all.counts, "bin counts must add exactly");
+        assert_eq!(m.min(), all.min());
+        assert_eq!(m.max(), all.max());
+        assert!((m.mean() - all.mean()).abs() < 1e-9);
+        // Percentiles depend only on the (exact) bin counts, so the
+        // merged digest reports bit-identical percentiles.
+        assert_eq!(m.p50(), all.p50());
+        assert_eq!(m.p95(), all.p95());
+        // Merging an empty digest is the identity on counts and extrema.
+        let before = m.clone();
+        m.merge(&Digest::new());
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn digest_flags_subsampled_sources_through_merges() {
+        let mut s = Summary::with_capacity(16);
+        for i in 0..40 {
+            s.add(i as f64);
+        }
+        let d = Digest::from_summary(&s);
+        assert!(d.is_subsampled(), "reservoir engaged but digest unflagged");
+        let mut exact = Digest::new();
+        exact.add(1.0);
+        assert!(!exact.is_subsampled());
+        let mut m = exact.clone();
+        m.merge(&d);
+        assert!(m.is_subsampled(), "subsampling flag must survive merges");
+    }
+
+    #[test]
+    fn digest_from_summary_preserves_moments() {
+        let mut s = Summary::new();
+        for i in 1..=500 {
+            s.add(i as f64);
+        }
+        let d = Digest::from_summary(&s);
+        assert_eq!(d.count(), s.count());
+        assert_eq!(d.min(), s.min());
+        assert_eq!(d.max(), s.max());
+        assert!((d.mean() - s.mean()).abs() < 1e-9);
+        assert!((d.p50() - s.p50()).abs() / s.p50() < 0.08);
+        // Empty summaries convert to empty digests (no NaN sums).
+        let e = Digest::from_summary(&Summary::new());
+        assert!(e.is_empty());
+        assert!(e.p50().is_nan());
     }
 
     #[test]

@@ -54,6 +54,34 @@ pub fn by_name(name: &str, soc: &SocSpec) -> Option<Vec<App>> {
     Some(apps)
 }
 
+/// The full workload grammar shared by `adms serve --workload` and fleet
+/// arm specs: a named workload ([`by_name`]) or, failing that, a
+/// comma-separated list of zoo models served closed-loop. The error
+/// names the exact model that failed to resolve, not just the whole
+/// string.
+pub fn resolve(name: &str, soc: &SocSpec) -> anyhow::Result<Vec<App>> {
+    if let Some(apps) = by_name(name, soc) {
+        return Ok(apps);
+    }
+    let mut apps = Vec::new();
+    for m in name.split(',').filter(|s| !s.is_empty()) {
+        if crate::zoo::by_name(m).is_none() {
+            anyhow::bail!(
+                "unknown workload/model '{m}' (named workloads: {})",
+                WORKLOAD_NAMES.join(", ")
+            );
+        }
+        apps.push(App::closed_loop(m));
+    }
+    if apps.is_empty() {
+        anyhow::bail!(
+            "empty workload '{name}' (named workloads: {})",
+            WORKLOAD_NAMES.join(", ")
+        );
+    }
+    Ok(apps)
+}
+
 /// Fig 9 SLO baselines on `soc`: the cost model's end-to-end estimate at
 /// window size 1, scaled by the same max/mean factor the Fig 9 experiment
 /// applies (2.5 — real-device single-inference max vs our noise-free
@@ -168,6 +196,20 @@ mod tests {
         ] {
             assert!(by_name(n, &soc).is_none(), "{n} should not resolve");
         }
+    }
+
+    #[test]
+    fn resolve_accepts_names_and_model_lists() {
+        let soc = crate::soc::dimensity9000();
+        assert_eq!(resolve("frs", &soc).unwrap().len(), 3);
+        assert_eq!(resolve("stress:5", &soc).unwrap().len(), 5);
+        let list = resolve("mobilenet_v2,east", &soc).unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].model, "mobilenet_v2");
+        assert!(resolve("", &soc).is_err());
+        // The error pinpoints the offending model, not the whole list.
+        let err = resolve("mobilenet_v2,not_a_model", &soc).unwrap_err().to_string();
+        assert!(err.contains("'not_a_model'"), "unhelpful error: {err}");
     }
 
     #[test]
