@@ -20,18 +20,14 @@ fn main() {
         .processors
         .iter()
         .enumerate()
-        .map(|(id, p)| ProcView {
-            id,
-            kind: p.kind,
-            temp_c: 45.0,
-            freq_mhz: p.max_freq(),
-            freq_scale: 1.0,
-            offline: false,
-            load: 0.25,
-            backlog_ms: 8.0,
-            active_sessions: 2,
-            util: 0.5,
-            headroom_c: p.throttle_temp_c - 45.0,
+        .map(|(id, p)| {
+            // Nameplate view under a realistic mid-run load profile.
+            let mut v = ProcView::nameplate(id, p, 45.0);
+            v.load = 0.25;
+            v.backlog_ms = 8.0;
+            v.active_sessions = 2;
+            v.util = 0.5;
+            v
         })
         .collect();
     // A 12-task ready queue across the three sessions.
@@ -47,7 +43,13 @@ fn main() {
             dep_procs: vec![],
         })
         .collect();
-    let ctx = SchedCtx { now: 10.0, soc: &soc, plans: &plans, procs: &views };
+    let ctx = SchedCtx {
+        now: 10.0,
+        soc: &soc,
+        plans: &plans,
+        procs: &views,
+        batch: adms::sched::BatchCtx::OFF,
+    };
 
     let mut b = Bench::new("sched");
     let mut out = Vec::new();

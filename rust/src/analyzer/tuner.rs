@@ -135,14 +135,20 @@ pub fn sweep_window_sizes(g: &Graph, soc: &SocSpec, max_ws: usize) -> Vec<SweepP
 /// `max_ws`), and every serving run re-tunes the same model-SoC pairs —
 /// the paper itself stores tuned window sizes in a configuration file
 /// (§3.2), so a process-wide cache keyed like [`TunedConfig`] — plus the
-/// graph's structural fingerprint, so same-name graphs with different
-/// structure never share a tuning (custom SoC definitions must still use
-/// distinct names) — only makes that store implicit. `Arc` keeps cache
-/// hits to a pointer clone.
+/// structural fingerprints of *both* the graph and the SoC, so neither
+/// same-name graphs with different structure nor same-name custom SoC
+/// definitions can ever share a tuning — only makes that store implicit.
+/// `Arc` keeps cache hits to a pointer clone.
 fn tune_cached(g: &Graph, soc: &SocSpec, max_ws: usize) -> Arc<(usize, Vec<SweepPoint>)> {
-    static CACHE: Memo<(String, u64, String, usize), Arc<(usize, Vec<SweepPoint>)>> =
+    static CACHE: Memo<(String, u64, String, u64, usize), Arc<(usize, Vec<SweepPoint>)>> =
         Memo::new();
-    let key = (g.name.clone(), g.fingerprint(), soc.name.clone(), max_ws);
+    let key = (
+        g.name.clone(),
+        g.fingerprint(),
+        soc.name.clone(),
+        soc.fingerprint(),
+        max_ws,
+    );
     CACHE.get_or_insert_with(key, || {
         let sweep = sweep_window_sizes(g, soc, max_ws);
         let best = sweep

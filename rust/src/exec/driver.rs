@@ -43,6 +43,13 @@ use std::sync::Arc;
 /// [`EVENT_KEY`], turning an arrival timer into a phantom scenario event.
 const EVENT_KEY: u64 = 1 << 63;
 
+/// Batch-window poke timer: wakes the dispatch loop when a held
+/// batchable task's coalescing window expires. Lives in the
+/// [`EVENT_KEY`] namespace at an index (bit 62) no real scenario event
+/// list can reach, so it can never be mistaken for an arrival key or a
+/// scenario event.
+const BATCH_POKE: u64 = EVENT_KEY | (1 << 62);
+
 /// Session arrival epochs live in 31 bits (wrap on overflow). The epoch
 /// only needs to distinguish a timer's arrival process from the session's
 /// *current* one, so 2^31 generations between a timer being armed and
@@ -96,13 +103,17 @@ impl ReqStatePool {
     }
 }
 
-/// A dispatched unit the driver is waiting on.
-#[derive(Debug, Clone, Copy)]
+/// A dispatched task group the driver is waiting on: the lead's identity
+/// plus the non-lead members (empty — and allocation-free — for a
+/// single-task dispatch). One backend completion fans out to every
+/// member's per-request lifecycle.
+#[derive(Debug, Clone)]
 struct Inflight {
     req: ReqId,
     session: SessId,
     unit: usize,
     proc: usize,
+    extra: Vec<(ReqId, SessId)>,
 }
 
 /// Live per-session state (stats + arrival process).
@@ -303,11 +314,35 @@ impl Driver {
 
         let mut sess: Vec<Sess> = self.apps.iter().cloned().map(Sess::new).collect();
 
+        // Batching (group dispatch) configuration. With `batch_max = 1`
+        // every batching structure below is inert and the dispatch path
+        // is bit-exactly the pre-batching one.
+        let batch_max = self.cfg.batch_max.max(1);
+        let batching = batch_max > 1;
+        let batch_window = self.cfg.batch_window_ms.max(0.0);
+        // Per-session coalescing kind (the plan graph's structural
+        // fingerprint): sessions with equal kinds run the same model and
+        // may batch with each other.
+        let sess_kinds: Vec<u64> =
+            self.plans.iter().map(|p| p.graph.fingerprint()).collect();
+        // Whether a session has at least one same-kind sibling — only
+        // then can a coalescing window ever pay off (a unique model waits
+        // for peers that cannot exist).
+        let kind_multi: Vec<bool> = sess_kinds
+            .iter()
+            .enumerate()
+            .map(|(i, k)| sess_kinds.iter().enumerate().any(|(j, k2)| j != i && k2 == k))
+            .collect();
+
         // Request state.
         let mut reqs: HashMap<ReqId, ReqState> = Default::default();
         let mut pool = ReqStatePool::default();
         let mut next_req: ReqId = 0;
-        let mut ready = ReadyQueue::new(napps);
+        let mut ready = if batching {
+            ReadyQueue::with_kinds(sess_kinds.clone())
+        } else {
+            ReadyQueue::new(napps)
+        };
         let mut run_seq: RunToken = 0;
         let mut inflight: HashMap<RunToken, Inflight> = Default::default();
         let mut assignments_trace: Vec<AssignRecord> = Vec::new();
@@ -324,6 +359,17 @@ impl Driver {
         let mut exposed_tasks: Vec<PendingTask> = Vec::new();
         let mut aborted: Vec<ReqId> = Vec::new();
         let mut open_scratch: Vec<ReqId> = Vec::new();
+        // Batching scratch (touched only when `batching`).
+        let mut cand_kinds: Vec<u64> = Vec::new();
+        let mut cand_taken: Vec<bool> = Vec::new();
+        let mut member_cand: Vec<usize> = Vec::new();
+        let mut peer_scratch: Vec<u32> = Vec::new();
+        let mut fanout: Vec<(ReqId, SessId)> = Vec::new();
+        // Deadlines (f64 bits) of currently-armed BATCH_POKE timers, so a
+        // group held across many dispatch rounds arms one poke per
+        // deadline instead of one per round. Entries retire as the clock
+        // passes them (see the BATCH_POKE handler).
+        let mut armed_pokes: Vec<u64> = Vec::new();
 
         let quota = self.cfg.max_requests.unwrap_or(u64::MAX);
 
@@ -375,6 +421,14 @@ impl Driver {
             let mut dispatch_after = true;
             match ev {
                 ExecEvent::Drained { .. } => break,
+                ExecEvent::Timer { key, .. } if key == BATCH_POKE => {
+                    // A held batchable task's coalescing window expired:
+                    // retire every poke deadline the clock has reached
+                    // (so a future hold at the same instant can re-arm),
+                    // then give the scheduler a round — the hold
+                    // predicate is now false for the expired task.
+                    armed_pokes.retain(|&bits| f64::from_bits(bits) > now);
+                }
                 ExecEvent::Timer { key, .. } if key & EVENT_KEY != 0 => {
                     let idx = (key & !EVENT_KEY) as usize;
                     let Some(tev) = self.events.get(idx).cloned() else {
@@ -505,112 +559,133 @@ impl Driver {
                         // unique) — nothing to schedule against.
                         continue;
                     };
-                    if error {
-                        // Payload execution failed: abort the request
-                        // (mirroring the failure sweep) so it is reported
-                        // as failed, never as completed-within-SLO.
-                        let newly_dead = match reqs.get_mut(&done.req) {
-                            Some(st) if !st.dead => {
-                                st.dead = true;
-                                Some((st.session, st.slo_ms.is_some(), st.epoch))
+                    // Fan the (group) completion out per member, lead
+                    // first then members in member order — for a
+                    // single-task dispatch this loop runs exactly once
+                    // over exactly the old body.
+                    fanout.clear();
+                    fanout.push((done.req, done.session));
+                    fanout.extend(done.extra.iter().copied());
+                    let mut processed = 0usize;
+                    for &(m_req, m_session) in fanout.iter() {
+                        if error {
+                            // Payload execution failed: abort the request
+                            // (mirroring the failure sweep) so it is
+                            // reported as failed, never as
+                            // completed-within-SLO. A group error aborts
+                            // every member — the fused execution is one
+                            // payload.
+                            let newly_dead = match reqs.get_mut(&m_req) {
+                                Some(st) if !st.dead => {
+                                    st.dead = true;
+                                    Some((st.session, st.slo_ms.is_some(), st.epoch))
+                                }
+                                _ => None,
+                            };
+                            if let Some((s, has_slo, epoch)) = newly_dead {
+                                sess[s].failed += 1;
+                                if has_slo {
+                                    sess[s].slo_n += 1;
+                                }
+                                ready.cancel_request(m_req);
+                                // Not-yet-dispatched units will never run;
+                                // only units still resident on processors
+                                // (plus this one, decremented below) keep
+                                // the request alive.
+                                let running = self.backend.running_units(m_req);
+                                // +1: this event's own completion is
+                                // decremented just below, in the shared
+                                // retirement block.
+                                clamp_dead_request(&mut reqs, m_req, running + 1, &mut pool);
+                                rearm_closed_loop(
+                                    self.backend.as_mut(),
+                                    &sess[s],
+                                    s,
+                                    epoch,
+                                    quota,
+                                    now,
+                                );
                             }
-                            _ => None,
+                        }
+                        let finished = {
+                            let Some(st) = reqs.get_mut(&m_req) else { continue };
+                            processed += 1;
+                            if st.dead {
+                                // Aborted while running; drop silently.
+                                st.units_left -= 1;
+                                st.units_left == 0
+                            } else {
+                                st.unit_proc[done.unit] = Some(done.proc);
+                                st.units_left -= 1;
+                                let plan = &self.plans[m_session];
+                                let nu = plan.num_units();
+                                // Unlock consumers. `deps_remaining` and
+                                // `unit_proc` are borrowed apart so the
+                                // remaining-work estimate streams over
+                                // `unit_proc` without a collected scratch.
+                                let ReqState {
+                                    deps_remaining, unit_proc, arrival, slo_ms, ..
+                                } = &mut *st;
+                                for &c in &plan.consumers[done.unit] {
+                                    deps_remaining[c] -= 1;
+                                    if deps_remaining[c] == 0 {
+                                        let mut dep_procs = ready.take_deps_buf();
+                                        dep_procs.extend(plan.deps[c].iter().map(|&d| {
+                                            (d, unit_proc[d].unwrap_or(done.proc))
+                                        }));
+                                        let remaining = plan.remaining_ms(
+                                            (0..nu)
+                                                .filter(|&u| u != c && unit_proc[u].is_none()),
+                                        );
+                                        ready.push(PendingTask {
+                                            req: m_req,
+                                            session: m_session,
+                                            unit: c,
+                                            ready_at: now,
+                                            req_arrival: *arrival,
+                                            slo_ms: *slo_ms,
+                                            remaining_ms: remaining,
+                                            dep_procs,
+                                        });
+                                    }
+                                }
+                                st.units_left == 0
+                            }
                         };
-                        if let Some((s, has_slo, epoch)) = newly_dead {
-                            sess[s].failed += 1;
-                            if has_slo {
-                                sess[s].slo_n += 1;
+                        if finished {
+                            let st = reqs.remove(&m_req).unwrap();
+                            let s = st.session;
+                            if !st.dead {
+                                let latency = now - st.arrival;
+                                sess[s].completed += 1;
+                                sess[s].lat.add(latency);
+                                if let Some(slo) = st.slo_ms {
+                                    sess[s].slo_n += 1;
+                                    if latency <= slo {
+                                        sess[s].slo_ok += 1;
+                                    }
+                                }
+                                // Failed requests already re-armed their
+                                // session at abort time — re-arming here
+                                // too would double the closed loop and
+                                // snowball under sustained overload.
+                                rearm_closed_loop(
+                                    self.backend.as_mut(),
+                                    &sess[s],
+                                    s,
+                                    st.epoch,
+                                    quota,
+                                    now,
+                                );
                             }
-                            ready.cancel_request(done.req);
-                            // Not-yet-dispatched units will never run;
-                            // only units still resident on processors
-                            // (plus this one, decremented below) keep
-                            // the request alive.
-                            let running = self.backend.running_units(done.req);
-                            // +1: this event's own completion is
-                            // decremented just below, in the shared
-                            // retirement block.
-                            clamp_dead_request(&mut reqs, done.req, running + 1, &mut pool);
-                            rearm_closed_loop(
-                                self.backend.as_mut(),
-                                &sess[s],
-                                s,
-                                epoch,
-                                quota,
-                                now,
-                            );
+                            pool.recycle(st);
                         }
                     }
-                    let finished = {
-                        let Some(st) = reqs.get_mut(&done.req) else { continue };
-                        if st.dead {
-                            // Aborted while running; drop silently.
-                            st.units_left -= 1;
-                            st.units_left == 0
-                        } else {
-                            st.unit_proc[done.unit] = Some(done.proc);
-                            st.units_left -= 1;
-                            let plan = &self.plans[done.session];
-                            let nu = plan.num_units();
-                            // Unlock consumers. `deps_remaining` and
-                            // `unit_proc` are borrowed apart so the
-                            // remaining-work estimate streams over
-                            // `unit_proc` without a collected scratch.
-                            let ReqState { deps_remaining, unit_proc, arrival, slo_ms, .. } =
-                                &mut *st;
-                            for &c in &plan.consumers[done.unit] {
-                                deps_remaining[c] -= 1;
-                                if deps_remaining[c] == 0 {
-                                    let mut dep_procs = ready.take_deps_buf();
-                                    dep_procs.extend(plan.deps[c].iter().map(|&d| {
-                                        (d, unit_proc[d].unwrap_or(done.proc))
-                                    }));
-                                    let remaining = plan.remaining_ms(
-                                        (0..nu)
-                                            .filter(|&u| u != c && unit_proc[u].is_none()),
-                                    );
-                                    ready.push(PendingTask {
-                                        req: done.req,
-                                        session: done.session,
-                                        unit: c,
-                                        ready_at: now,
-                                        req_arrival: *arrival,
-                                        slo_ms: *slo_ms,
-                                        remaining_ms: remaining,
-                                        dep_procs,
-                                    });
-                                }
-                            }
-                            st.units_left == 0
-                        }
-                    };
-                    if finished {
-                        let st = reqs.remove(&done.req).unwrap();
-                        let s = st.session;
-                        if !st.dead {
-                            let latency = now - st.arrival;
-                            sess[s].completed += 1;
-                            sess[s].lat.add(latency);
-                            if let Some(slo) = st.slo_ms {
-                                sess[s].slo_n += 1;
-                                if latency <= slo {
-                                    sess[s].slo_ok += 1;
-                                }
-                            }
-                            // Failed requests already re-armed their
-                            // session at abort time — re-arming here too
-                            // would double the closed loop and snowball
-                            // under sustained overload.
-                            rearm_closed_loop(
-                                self.backend.as_mut(),
-                                &sess[s],
-                                s,
-                                st.epoch,
-                                quota,
-                                now,
-                            );
-                        }
-                        pool.recycle(st);
+                    if processed == 0 {
+                        // No member had live state (defensive — mirrors
+                        // the old single-task `continue`): nothing to
+                        // schedule against.
+                        continue;
                     }
                 }
                 ExecEvent::Tick { .. } => {
@@ -709,7 +784,28 @@ impl Driver {
                         }
                     }
                 }
-                let ctx = SchedCtx { now, soc: &soc, plans: &self.plans, procs: views };
+                // Batching view of the candidate slice: per-candidate
+                // coalescing keys for the scheduler (and the canonical
+                // member-resolution rule both sides share).
+                if batching {
+                    cand_kinds.clear();
+                    if serialized {
+                        cand_kinds.extend(
+                            exposed_idx.iter().map(|&i| ready.kind_key_at(i)),
+                        );
+                    } else {
+                        cand_kinds.extend((0..ready.len()).map(|i| ready.kind_key_at(i)));
+                    }
+                    cand_taken.clear();
+                    cand_taken.resize(cand_kinds.len(), false);
+                }
+                let bctx = if batching {
+                    crate::sched::BatchCtx { max: batch_max, kinds: &cand_kinds }
+                } else {
+                    crate::sched::BatchCtx::OFF
+                };
+                let ctx =
+                    SchedCtx { now, soc: &soc, plans: &self.plans, procs: views, batch: bctx };
                 sched_out.clear();
                 if serialized {
                     let exposed = &exposed_tasks[..exposed_idx.len()];
@@ -729,16 +825,17 @@ impl Driver {
                     taken_stamp.resize(ready.len(), 0);
                 }
                 for &a in &sched_out {
+                    let cand_idx = a.ready_idx;
                     let ridx = if serialized {
-                        match exposed_idx.get(a.ready_idx) {
+                        match exposed_idx.get(cand_idx) {
                             Some(&r) => r,
                             None => continue,
                         }
                     } else {
-                        if a.ready_idx >= ready.len() {
+                        if cand_idx >= ready.len() {
                             continue;
                         }
-                        a.ready_idx
+                        cand_idx
                     };
                     if taken_stamp[ridx] == round {
                         continue;
@@ -748,20 +845,116 @@ impl Driver {
                     if !plan.partition.units[t.unit].supports(a.proc) {
                         continue;
                     }
-                    let Some(exec_full) = plan.exec_ms[t.unit][a.proc] else {
+                    let Some(exec_unit) = plan.exec_ms[t.unit][a.proc] else {
                         continue;
                     };
-                    // Positional dep → bytes lookup (rows align with
-                    // `deps[unit]`; no linear search).
-                    let xfer: f64 = t
-                        .dep_procs
-                        .iter()
-                        .enumerate()
-                        .map(|(k, &(du, dp))| {
-                            let bytes = plan.xfer_bytes_at(t.unit, k, du);
-                            self.scheduler.transfer_cost_ms(&soc, dp, a.proc, bytes)
-                        })
-                        .sum();
+                    // Resolve the group: the canonical member rule over
+                    // the candidate slice, against what this round has
+                    // already committed or reserved. Every resolved task
+                    // (lead included) is reserved in `cand_taken` no
+                    // matter how this assignment ends — held and rejected
+                    // groups must not leak members into later groups the
+                    // scheduler priced without them.
+                    let b_want = if batching { a.batch.clamp(1, batch_max) } else { 1 };
+                    member_cand.clear();
+                    if b_want > 1 {
+                        if serialized {
+                            bctx.members(cand_idx, b_want, &cand_taken, &mut member_cand);
+                        } else {
+                            // Same canonical rule — first b−1 untaken
+                            // same-key candidates in ascending order —
+                            // resolved through the queue's coalescing
+                            // index instead of a full-queue scan: here
+                            // candidate index IS queue position, and
+                            // `peers` returns exactly the same-key
+                            // positions (sorted ascending = candidate
+                            // order).
+                            peer_scratch.clear();
+                            peer_scratch.extend_from_slice(ready.peers(cand_idx));
+                            peer_scratch.sort_unstable();
+                            for &p in peer_scratch.iter() {
+                                if member_cand.len() + 1 >= b_want {
+                                    break;
+                                }
+                                let p = p as usize;
+                                if p != cand_idx && !cand_taken[p] {
+                                    member_cand.push(p);
+                                }
+                            }
+                        }
+                    }
+                    if batching {
+                        cand_taken[cand_idx] = true;
+                        for &m in &member_cand {
+                            cand_taken[m] = true;
+                        }
+                    }
+                    let b = 1 + member_cand.len();
+                    // Coalescing window: a growable group may wait for
+                    // peers — but only while the task's model has a LIVE
+                    // sibling session (a statically-known sibling that
+                    // has stopped can never produce peers — waiting for
+                    // it would add dead latency under churn), and never
+                    // beyond the window. The hold predicate compares
+                    // against `t.ready_at + batch_window` — the exact
+                    // f64 the poke timer is armed at — so the fired
+                    // timer's instant always falls outside the hold
+                    // (`now - ready_at < window` would livelock the sim
+                    // whenever `(a + w) - a < w` rounds true).
+                    let hold_deadline = t.ready_at + batch_window;
+                    if batching
+                        && batch_window > 0.0
+                        && b < batch_max
+                        && kind_multi[t.session]
+                        && now < hold_deadline
+                        && {
+                            let k = sess_kinds[t.session];
+                            sess_kinds.iter().enumerate().any(|(j, &k2)| {
+                                j != t.session
+                                    && k2 == k
+                                    && sess[j].started
+                                    && !sess[j].stopped
+                            })
+                        }
+                    {
+                        // One poke per deadline: dispatch rounds re-visit
+                        // held groups on every event, and re-arming the
+                        // same instant each time would flood the heap.
+                        if !armed_pokes.contains(&hold_deadline.to_bits()) {
+                            armed_pokes.push(hold_deadline.to_bits());
+                            self.backend.arm_timer(hold_deadline, BATCH_POKE);
+                        }
+                        continue;
+                    }
+                    // Group-curve execution price (bit-exact unit price
+                    // at b = 1) and transfer costs summed over every
+                    // member's dependencies. Positional dep → bytes
+                    // lookup (rows align with `deps[unit]`; no linear
+                    // search).
+                    let exec_full =
+                        crate::soc::cost::batch_latency_ms(&soc.processors[a.proc], exec_unit, b);
+                    let member_xfer = |t: &PendingTask| -> f64 {
+                        let plan = &self.plans[t.session];
+                        t.dep_procs
+                            .iter()
+                            .enumerate()
+                            .map(|(k, &(du, dp))| {
+                                let bytes = plan.xfer_bytes_at(t.unit, k, du);
+                                self.scheduler.transfer_cost_ms(&soc, dp, a.proc, bytes)
+                            })
+                            .sum()
+                    };
+                    let mut xfer: f64 = member_xfer(t);
+                    let mut extra: Vec<(ReqId, SessId)> = Vec::new();
+                    if b > 1 {
+                        extra.reserve_exact(member_cand.len());
+                        for &m in &member_cand {
+                            let mpos = if serialized { exposed_idx[m] } else { m };
+                            let mt = &ready.as_slice()[mpos];
+                            xfer += member_xfer(mt);
+                            extra.push((mt.req, mt.session));
+                        }
+                    }
                     let mgmt = self.scheduler.decision_overhead_ms(plan);
                     let (req, session, unit) = (t.req, t.session, t.unit);
                     let token = run_seq + 1;
@@ -774,15 +967,27 @@ impl Driver {
                         exec_full_ms: exec_full,
                         xfer_ms: xfer,
                         mgmt_ms: mgmt,
+                        extra: extra.clone(),
                     });
                     if !accepted {
                         continue;
                     }
                     run_seq = token;
-                    inflight.insert(token, Inflight { req, session, unit, proc: a.proc });
-                    assignments_trace.push(AssignRecord { req, session, unit, proc: a.proc });
+                    assignments_trace.push(AssignRecord {
+                        req,
+                        session,
+                        unit,
+                        proc: a.proc,
+                        members: extra.clone(),
+                    });
                     taken_stamp[ridx] = round;
                     dispatched.push(ridx);
+                    for &m in &member_cand {
+                        let mpos = if serialized { exposed_idx[m] } else { m };
+                        taken_stamp[mpos] = round;
+                        dispatched.push(mpos);
+                    }
+                    inflight.insert(token, Inflight { req, session, unit, proc: a.proc, extra });
                 }
                 if dispatched.is_empty() {
                     break;

@@ -21,12 +21,32 @@
 //!
 //! The queue also recycles the `dep_procs` buffers of retired tasks
 //! (`take_deps_buf`), so steady-state pushes perform no allocation.
+//!
+//! **Coalescing index (ISSUE 5).** When constructed
+//! [`ReadyQueue::with_kinds`], the queue additionally indexes tasks by
+//! their *coalescing key* — (per-session model kind, unit), folded by
+//! [`coalesce_key`] — so the driver can surface *batchable sets* (tasks
+//! fusable into one group dispatch) alongside single tasks without
+//! scanning the queue. The index is pure bookkeeping: it never affects
+//! task order, and a queue built with [`ReadyQueue::new`] maintains no
+//! kind index at all, keeping the batching-off hot path byte-identical
+//! to the pre-batching queue.
 
 use crate::sched::{PendingTask, ReqId, SessId};
 use crate::soc::ProcId;
+use crate::util::rng::splitmix64;
 use std::collections::HashMap;
 
-/// Back-pointers from a task to its slots inside the two index lists,
+/// Fold a session's model-kind key and a unit index into the coalescing
+/// key batchable tasks share: tasks with equal keys run the same unit of
+/// structurally-identical models and may fuse into one group dispatch.
+/// (SplitMix64 over the XOR keeps distinct `(kind, unit)` pairs from
+/// colliding in practice; the kind side is a graph fingerprint already.)
+pub fn coalesce_key(kind: u64, unit: usize) -> u64 {
+    splitmix64(kind ^ (unit as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
+/// Back-pointers from a task to its slots inside the index lists,
 /// so removing/moving a task never scans a list (a busy session's list
 /// can hold its whole ready backlog — a linear scan there would put an
 /// O(backlog) factor back on the dispatch path).
@@ -34,21 +54,31 @@ use std::collections::HashMap;
 struct Slots {
     req_slot: u32,
     sess_slot: u32,
+    /// Slot inside the task's `by_kind` list (unused when the queue has
+    /// no coalescing index).
+    kind_slot: u32,
 }
 
 #[derive(Default)]
 pub struct ReadyQueue {
     tasks: Vec<PendingTask>,
     /// Parallel to `tasks`: where each task's position is recorded in
-    /// `by_req`/`by_sess` (kept in lock-step through swaps/truncations).
+    /// `by_req`/`by_sess`/`by_kind` (kept in lock-step through
+    /// swaps/truncations).
     slots: Vec<Slots>,
     /// Positions (into `tasks`) of each open request's ready units.
     by_req: HashMap<ReqId, Vec<u32>>,
     /// Positions of each session's ready units (sessions are dense ids).
     by_sess: Vec<Vec<u32>>,
+    /// Per-session model-kind keys (`None` = no coalescing index).
+    sess_kinds: Option<Vec<u64>>,
+    /// Coalescing index: [`coalesce_key`] → positions of the batchable
+    /// set (unsorted — cancellation swaps entries; consumers wanting
+    /// queue order sort a scratch copy).
+    by_kind: HashMap<u64, Vec<u32>>,
     /// Recycled `dep_procs` buffers from retired tasks.
     spare_deps: Vec<Vec<(usize, ProcId)>>,
-    /// Recycled position lists from fully-drained requests.
+    /// Recycled position lists from fully-drained requests/kinds.
     spare_pos: Vec<Vec<u32>>,
     /// Scratch for cancellation position lists (reused across calls).
     scratch: Vec<u32>,
@@ -61,9 +91,56 @@ impl ReadyQueue {
             slots: Vec::new(),
             by_req: HashMap::new(),
             by_sess: (0..sessions).map(|_| Vec::new()).collect(),
+            sess_kinds: None,
+            by_kind: HashMap::new(),
             spare_deps: Vec::new(),
             spare_pos: Vec::new(),
             scratch: Vec::new(),
+        }
+    }
+
+    /// A queue that additionally maintains the coalescing index:
+    /// `kinds[s]` is session `s`'s model-kind key (typically the plan
+    /// graph's structural fingerprint) — sessions with equal keys are
+    /// candidates for cross-session batching.
+    pub fn with_kinds(kinds: Vec<u64>) -> Self {
+        let mut q = ReadyQueue::new(kinds.len());
+        q.sess_kinds = Some(kinds);
+        q
+    }
+
+    /// The coalescing key of the task at `pos` (meaningless — 0 — when
+    /// the queue maintains no kind index).
+    pub fn kind_key_at(&self, pos: usize) -> u64 {
+        match &self.sess_kinds {
+            Some(kinds) => {
+                let t = &self.tasks[pos];
+                coalesce_key(kinds[t.session], t.unit)
+            }
+            None => 0,
+        }
+    }
+
+    /// Positions (unsorted) of every ready task batchable with the task
+    /// at `pos`, *including* `pos` itself. Empty when the queue has no
+    /// coalescing index.
+    pub fn peers(&self, pos: usize) -> &[u32] {
+        if self.sess_kinds.is_none() {
+            return &[];
+        }
+        self.by_kind
+            .get(&self.kind_key_at(pos))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Size of the batchable set containing the task at `pos` (1 when no
+    /// index is maintained — a task is always batchable with itself).
+    pub fn group_len(&self, pos: usize) -> usize {
+        if self.sess_kinds.is_none() {
+            1
+        } else {
+            self.peers(pos).len()
         }
     }
 
@@ -98,11 +175,24 @@ impl ReadyQueue {
         let slist = &mut self.by_sess[task.session];
         let sess_slot = slist.len() as u32;
         slist.push(pos);
-        self.slots.push(Slots { req_slot, sess_slot });
+        let kind_slot = match &self.sess_kinds {
+            Some(kinds) => {
+                let key = coalesce_key(kinds[task.session], task.unit);
+                let klist = self
+                    .by_kind
+                    .entry(key)
+                    .or_insert_with(|| spare.pop().unwrap_or_default());
+                let slot = klist.len() as u32;
+                klist.push(pos);
+                slot
+            }
+            None => 0,
+        };
+        self.slots.push(Slots { req_slot, sess_slot, kind_slot });
         self.tasks.push(task);
     }
 
-    /// Drop the task at `pos` from both index lists — O(1) via its
+    /// Drop the task at `pos` from every index list — O(1) via its
     /// recorded slots; the list entries swapped into the freed slots get
     /// their owners' back-pointers fixed up.
     fn unindex(&mut self, pos: usize) {
@@ -127,6 +217,22 @@ impl ReadyQueue {
         if let Some(&moved) = list.get(s.sess_slot as usize) {
             self.slots[moved as usize].sess_slot = s.sess_slot;
         }
+        if self.sess_kinds.is_some() {
+            let key = self.kind_key_at(pos);
+            let mut kind_drained = false;
+            if let Some(list) = self.by_kind.get_mut(&key) {
+                list.swap_remove(s.kind_slot as usize);
+                if let Some(&moved) = list.get(s.kind_slot as usize) {
+                    self.slots[moved as usize].kind_slot = s.kind_slot;
+                }
+                kind_drained = list.is_empty();
+            }
+            if kind_drained {
+                if let Some(buf) = self.by_kind.remove(&key) {
+                    self.spare_pos.push(buf);
+                }
+            }
+        }
     }
 
     /// The task at `old` is about to move to `new`: point its list
@@ -140,6 +246,12 @@ impl ReadyQueue {
             list[s.req_slot as usize] = new as u32;
         }
         self.by_sess[sess][s.sess_slot as usize] = new as u32;
+        if self.sess_kinds.is_some() {
+            let key = self.kind_key_at(old);
+            if let Some(list) = self.by_kind.get_mut(&key) {
+                list[s.kind_slot as usize] = new as u32;
+            }
+        }
     }
 
     /// Remove the task at `pos` with `Vec::swap_remove` order semantics
@@ -304,6 +416,46 @@ mod tests {
         assert_eq!(q.cancel_request(2), 0);
         // survivors: 4, 6 in original relative order
         assert_eq!(keys(&q), vec![(4, 0, 4), (6, 0, 6)]);
+    }
+
+    /// The coalescing index surfaces batchable sets — same (session
+    /// kind, unit) — and stays exact through pushes, dispatch removals,
+    /// and cancellations.
+    #[test]
+    fn coalescing_index_tracks_batchable_sets() {
+        // Sessions 0 and 1 run the same model (kind 7); session 2 a
+        // different one.
+        let mut q = ReadyQueue::with_kinds(vec![7, 7, 99]);
+        q.push(task(0, 0, 0)); // pos 0: kind (7, 0)
+        q.push(task(1, 1, 0)); // pos 1: kind (7, 0) — peer of pos 0
+        q.push(task(2, 2, 0)); // pos 2: kind (99, 0)
+        q.push(task(3, 0, 1)); // pos 3: kind (7, 1) — different unit
+        assert_eq!(q.group_len(0), 2);
+        assert_eq!(q.group_len(1), 2);
+        assert_eq!(q.group_len(2), 1);
+        assert_eq!(q.group_len(3), 1);
+        let mut p: Vec<u32> = q.peers(0).to_vec();
+        p.sort_unstable();
+        assert_eq!(p, vec![0, 1]);
+        assert_eq!(q.kind_key_at(0), q.kind_key_at(1));
+        assert_ne!(q.kind_key_at(0), q.kind_key_at(2));
+        assert_ne!(q.kind_key_at(0), q.kind_key_at(3));
+        // Dispatch removal keeps the index exact (pos 3 moves into 0).
+        q.swap_remove(0);
+        assert_eq!(keys(&q), vec![(3, 0, 1), (1, 1, 0), (2, 2, 0)]);
+        assert_eq!(q.group_len(0), 1); // the moved (7,1) task
+        assert_eq!(q.group_len(1), 1); // (7,0) lost its peer
+        // Cancellation unlinks from the kind index too.
+        q.push(task(4, 1, 1)); // pos 3: (7,1) — peer of pos 0
+        assert_eq!(q.group_len(0), 2);
+        q.cancel_session(1);
+        assert_eq!(q.group_len(0), 1);
+        // Un-indexed queues report singleton groups and no peers.
+        let mut plain = ReadyQueue::new(2);
+        plain.push(task(0, 0, 0));
+        plain.push(task(1, 1, 0));
+        assert_eq!(plain.group_len(0), 1);
+        assert!(plain.peers(0).is_empty());
     }
 
     #[test]

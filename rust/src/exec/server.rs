@@ -244,6 +244,24 @@ impl Server {
         self
     }
 
+    /// Largest task group one dispatch may fuse (`--batch-max`): ready
+    /// tasks of the same (model structure, unit) across sessions coalesce
+    /// into one slot-occupying group priced by the per-processor batch
+    /// curve. `1` (the default) disables batching bit-exactly.
+    pub fn batch_max(mut self, n: usize) -> Self {
+        self.cfg.batch_max = n.max(1);
+        self
+    }
+
+    /// Coalescing window in ms (`--batch-window`): how long a batchable
+    /// task may be held past its ready time waiting for peers when its
+    /// group is still below `batch_max`. Only meaningful with
+    /// `batch_max > 1`.
+    pub fn batch_window_ms(mut self, ms: f64) -> Self {
+        self.cfg.batch_window_ms = ms.max(0.0);
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self

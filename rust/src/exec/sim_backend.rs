@@ -80,7 +80,11 @@ impl Ord for QEv {
     }
 }
 
-/// A task currently resident on a processor slot.
+/// A task group currently resident on a processor slot. A fused group
+/// occupies ONE slot for its whole batched duration, counts as ONE
+/// resident execution for the contention census (the lead's session),
+/// and is metered once — but every member request's unit is tracked in
+/// `req_units` so the driver's abort bookkeeping sees it as resident.
 #[derive(Debug, Clone)]
 struct Running {
     token: RunToken,
@@ -89,6 +93,8 @@ struct Running {
     unit: usize,
     start: TimeMs,
     end: TimeMs,
+    /// Non-lead group members (empty for single-task dispatches).
+    extra: Vec<(ReqId, SessId)>,
 }
 
 /// Dynamic per-processor state.
@@ -322,7 +328,7 @@ impl ExecutionBackend for SimBackend {
         }
         // Service time: exec at current frequency × contention
         // + transfers + per-dispatch management overhead.
-        let fs = pstate.thermal.freq_scale(spec).max(0.05);
+        let fs = pstate.thermal.freq_scale(spec).max(crate::sched::ModelPlan::FREQ_FLOOR);
         let exec = cmd.exec_full_ms / fs;
         // Distinct sessions resident on this processor, counting the
         // dispatching task's session exactly once.
@@ -337,10 +343,14 @@ impl ExecutionBackend for SimBackend {
             unit: cmd.unit,
             start: now,
             end: now + service,
+            extra: cmd.extra,
         };
         let end = run.end;
         self.push(end, Ev::Complete { proc: cmd.proc, token: cmd.token });
         *self.req_units.entry(cmd.req).or_insert(0) += 1;
+        for &(r, _) in &run.extra {
+            *self.req_units.entry(r).or_insert(0) += 1;
+        }
         let p = &mut self.procs[cmd.proc];
         // Occupancy changes here: settle the interval at the old count.
         p.account(now);
@@ -393,11 +403,17 @@ impl ExecutionBackend for SimBackend {
                     self.procs[proc].account(now);
                     let done = self.procs[proc].running.remove(pos);
                     self.procs[proc].run_sub(done.session);
-                    if let Some(n) = self.req_units.get_mut(&done.req) {
-                        *n -= 1;
-                        if *n == 0 {
-                            self.req_units.remove(&done.req);
+                    let drop_unit = |req: ReqId, units: &mut HashMap<ReqId, u32>| {
+                        if let Some(n) = units.get_mut(&req) {
+                            *n -= 1;
+                            if *n == 0 {
+                                units.remove(&req);
+                            }
                         }
+                    };
+                    drop_unit(done.req, &mut self.req_units);
+                    for &(r, _) in &done.extra {
+                        drop_unit(r, &mut self.req_units);
                     }
                     self.procs[proc].backlog_ms =
                         (self.procs[proc].backlog_ms - (done.end - done.start)).max(0.0);
@@ -581,6 +597,53 @@ mod tests {
         assert_eq!(report.power.times.last().copied(), Some(900.0));
     }
 
+    /// A fused group occupies ONE slot but tracks every member request's
+    /// unit as resident, and its single completion drains all of them —
+    /// the backend side of the group-dispatch contract (ISSUE 5).
+    #[test]
+    fn group_dispatch_occupies_one_slot_and_tracks_member_units() {
+        let soc = dimensity9000();
+        let slots0 = proc_slots(&soc.processors[0]);
+        let cfg = SimConfig { duration_ms: 10_000.0, ..SimConfig::default() };
+        let mut be = SimBackend::new(soc, cfg);
+        let ok = be.try_dispatch(DispatchCmd {
+            token: 1,
+            req: 0,
+            session: 0,
+            unit: 0,
+            proc: 0,
+            exec_full_ms: 5.0,
+            xfer_ms: 0.0,
+            mgmt_ms: 0.0,
+            extra: vec![(1, 1), (2, 2)],
+        });
+        assert!(ok);
+        // One slot occupied by the whole group…
+        let views = be.proc_views();
+        assert!((views[0].load - 1.0 / slots0 as f64).abs() < 1e-12);
+        // …and one resident session for the contention census (the fused
+        // execution is a single kernel).
+        assert_eq!(views[0].active_sessions, 1);
+        // …but every member request's unit is resident.
+        for r in 0..3u64 {
+            assert_eq!(be.running_units(r), 1, "req {r} not resident");
+        }
+        // The single group completion drains all members at once.
+        loop {
+            match be.next_event() {
+                ExecEvent::Completed { token, .. } => {
+                    assert_eq!(token, 1);
+                    break;
+                }
+                ExecEvent::Drained { .. } => panic!("drained before completion"),
+                _ => {}
+            }
+        }
+        for r in 0..3u64 {
+            assert_eq!(be.running_units(r), 0, "req {r} leaked a resident unit");
+        }
+    }
+
     /// Regression for the mid-tick utilization bug: a processor saturated
     /// since the start of the tick window must report util ≈ 1.0 on a
     /// snapshot taken mid-window (the old code divided the busy time by
@@ -603,6 +666,7 @@ mod tests {
             exec_full_ms: 5_000.0,
             xfer_ms: 0.0,
             mgmt_ms: 0.0,
+            extra: Vec::new(),
         });
         assert!(ok);
         // Advance mid-tick via a timer at t = 50 (the tick is at 100).

@@ -63,6 +63,10 @@ struct Inflight {
     proc: usize,
     start_ms: TimeMs,
     est_ms: f64,
+    /// Non-lead group members (empty for single-task dispatches): the
+    /// fused group holds one worker slot for its whole batched duration,
+    /// but each member request's unit counts as resident.
+    extra: Vec<(ReqId, SessId)>,
 }
 
 struct ProcPool {
@@ -340,13 +344,17 @@ impl ExecutionBackend for ThreadPoolBackend {
                 proc: cmd.proc,
                 start_ms: now,
                 est_ms,
+                extra: cmd.extra,
             },
         );
         true
     }
 
     fn running_units(&self, req: ReqId) -> usize {
-        self.inflight.values().filter(|f| f.req == req).count()
+        self.inflight
+            .values()
+            .filter(|f| f.req == req || f.extra.iter().any(|&(r, _)| r == req))
+            .count()
     }
 
     fn next_event(&mut self) -> ExecEvent {

@@ -40,7 +40,10 @@ use crate::util::stats::Digest;
 use anyhow::{anyhow, bail, Result};
 
 /// One evaluation arm of the fleet: which SoC preset the device is, which
-/// scheduling policy it runs, and what workload its user drives.
+/// scheduling policy it runs, and what workload its user drives — plus an
+/// optional per-arm batching override, so batched and unbatched arms can
+/// ride one fleet (the config is part of the cloneable [`RunSpec`], so
+/// batched arms stay worker-count-deterministic like every other arm).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArmSpec {
     /// SoC preset name (`soc::SOC_NAMES`).
@@ -51,15 +54,44 @@ pub struct ArmSpec {
     /// comma-separated zoo models), or `scenario:<name-or-file>` for a
     /// dynamic scenario (`scenario::resolve`).
     pub workload: String,
+    /// Per-arm `batch_max` override (`None` = the fleet-wide config's).
+    pub batch_max: Option<usize>,
+    /// Per-arm `batch_window_ms` override (`None` = the fleet-wide
+    /// config's).
+    pub batch_window_ms: Option<f64>,
 }
 
 impl ArmSpec {
+    /// An arm with no per-arm batching override.
+    pub fn new(soc: &str, scheduler: &str, workload: &str) -> Self {
+        ArmSpec {
+            soc: soc.into(),
+            scheduler: scheduler.into(),
+            workload: workload.into(),
+            batch_max: None,
+            batch_window_ms: None,
+        }
+    }
+
+    /// Builder: run this arm batched (`batch_max`, coalescing window).
+    pub fn batched(mut self, batch_max: usize, window_ms: f64) -> Self {
+        self.batch_max = Some(batch_max.max(1));
+        self.batch_window_ms = Some(window_ms.max(0.0));
+        self
+    }
+
     pub fn label(&self) -> String {
-        format!("{}/{}/{}", self.soc, self.scheduler, self.workload)
+        match self.batch_max {
+            Some(b) if b > 1 => {
+                format!("{}/{}/{} (batch {b})", self.soc, self.scheduler, self.workload)
+            }
+            _ => format!("{}/{}/{}", self.soc, self.scheduler, self.workload),
+        }
     }
 
     /// Resolve the arm to a cloneable [`RunSpec`] (validating every
-    /// name), with `cfg` as the shared per-device execution config.
+    /// name), with `cfg` as the shared per-device execution config
+    /// (per-arm batching overrides applied on top).
     pub fn to_run_spec(&self, cfg: &SimConfig) -> Result<RunSpec> {
         let soc = soc_by_name(&self.soc)
             .ok_or_else(|| anyhow!("arm '{}': unknown soc '{}'", self.label(), self.soc))?;
@@ -81,12 +113,19 @@ impl ArmSpec {
             })?;
             (apps, Vec::new())
         };
+        let mut cfg = cfg.clone();
+        if let Some(b) = self.batch_max {
+            cfg.batch_max = b.max(1);
+        }
+        if let Some(w) = self.batch_window_ms {
+            cfg.batch_window_ms = w.max(0.0);
+        }
         Ok(RunSpec {
             soc,
             scheduler: self.scheduler.clone(),
             apps,
             events,
-            cfg: cfg.clone(),
+            cfg,
             window_size: None,
         })
     }
@@ -460,31 +499,23 @@ mod tests {
     #[test]
     fn arm_validation_rejects_unknown_names() {
         let cfg = SimConfig::default();
-        let bad_soc =
-            ArmSpec { soc: "nope".into(), scheduler: "adms".into(), workload: "frs".into() };
+        let bad_soc = ArmSpec::new("nope", "adms", "frs");
         assert!(bad_soc.to_run_spec(&cfg).is_err());
-        let bad_sched =
-            ArmSpec { soc: "dimensity9000".into(), scheduler: "nope".into(), workload: "frs".into() };
+        let bad_sched = ArmSpec::new("dimensity9000", "nope", "frs");
         assert!(bad_sched.to_run_spec(&cfg).is_err());
-        let bad_wl = ArmSpec {
-            soc: "dimensity9000".into(),
-            scheduler: "adms".into(),
-            workload: "not_a_workload".into(),
-        };
+        let bad_wl = ArmSpec::new("dimensity9000", "adms", "not_a_workload");
         assert!(bad_wl.to_run_spec(&cfg).is_err());
-        let ok = ArmSpec {
-            soc: "dimensity9000".into(),
-            scheduler: "band".into(),
-            workload: "mobilenet_v1,east".into(),
-        };
+        let ok = ArmSpec::new("dimensity9000", "band", "mobilenet_v1,east");
         let rs = ok.to_run_spec(&cfg).unwrap();
         assert_eq!(rs.apps.len(), 2);
-        let sc = ArmSpec {
-            soc: "dimensity9000".into(),
-            scheduler: "adms".into(),
-            workload: "scenario:churn_mix".into(),
-        };
+        let sc = ArmSpec::new("dimensity9000", "adms", "scenario:churn_mix");
         let rs = sc.to_run_spec(&cfg).unwrap();
         assert!(!rs.events.is_empty(), "scenario arm lost its lifecycle events");
+        // Per-arm batching overrides land in the run spec's config.
+        let batched = ArmSpec::new("dimensity9000", "adms", "frs").batched(4, 5.0);
+        let rs = batched.to_run_spec(&cfg).unwrap();
+        assert_eq!(rs.cfg.batch_max, 4);
+        assert_eq!(rs.cfg.batch_window_ms, 5.0);
+        assert!(batched.label().contains("batch 4"));
     }
 }

@@ -271,6 +271,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "requests", takes_value: true, help: "requests per session; 0 = unbounded (default 64 for --workload, unbounded for --scenario so churn plays out to --duration)", default: None },
         OptSpec { name: "duration", takes_value: true, help: "horizon, ms", default: Some("60000") },
         OptSpec { name: "slo", takes_value: true, help: "per-request SLO in ms (all sessions)", default: None },
+        OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse (1 = batching off)", default: Some("1") },
+        OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms: how long a batchable task may wait for peers", default: Some("0") },
         OptSpec { name: "pace", takes_value: true, help: "synthetic payload pace multiplier", default: Some("1") },
         OptSpec { name: "seed", takes_value: true, help: "rng seed", default: Some("42") },
         OptSpec { name: "probe", takes_value: false, help: "legacy: serve the AOT numerics probe (PJRT)", default: None },
@@ -303,12 +305,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("trace references unknown soc '{}'", trace.soc))?;
         let sc = trace.to_replay_scenario();
         let (apps, events) = sc.compile()?;
+        // The trace's batch config is run-defining: a batched recording
+        // replayed unbatched would legitimately diverge.
         let server = Server::new(soc)
             .scheduler_name(&trace.scheduler)
             .apps(apps.clone())
             .events(events.clone())
             .duration_ms(trace.duration_ms)
             .seed(trace.seed)
+            .batch_max(trace.batch_max)
+            .batch_window_ms(trace.batch_window_ms)
             .pace(pace);
         let report = match trace.backend.as_str() {
             "sim" => server.run_sim()?,
@@ -326,7 +332,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             report.arrivals.len(),
             report.assignments.len()
         );
-        maybe_record(&args, &trace.soc, &apps, &events, &report, trace.seed)?;
+        maybe_record(
+            &args,
+            &trace.soc,
+            &apps,
+            &events,
+            &report,
+            trace.seed,
+            (trace.batch_max, trace.batch_window_ms),
+        )?;
         return Ok(());
     }
 
@@ -352,12 +366,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
         apps
     };
+    let batch_max = args.get_usize("batch-max", 1)?;
+    let batch_window = args.get_f64("batch-window", 0.0)?;
     let mut server = Server::new(soc)
         .scheduler_name(&sched)
         .apps(apps.clone())
         .events(events.clone())
         .duration_ms(args.get_f64("duration", 60_000.0)?)
         .seed(seed)
+        .batch_max(batch_max)
+        .batch_window_ms(batch_window)
         .pace(pace);
     // Scenarios control their own lifecycle: an implicit quota would end
     // the run before the declared churn plays out, so only an explicit
@@ -373,7 +391,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         other => bail!("unknown backend '{other}' (threadpool|sim)"),
     };
     print_serve_report(&report);
-    maybe_record(&args, &soc_name, &apps, &events, &report, seed)?;
+    maybe_record(&args, &soc_name, &apps, &events, &report, seed, (batch_max, batch_window))?;
     Ok(())
 }
 
@@ -436,6 +454,8 @@ fn print_serve_report(report: &adms::sim::SimReport) {
 }
 
 /// Honor `--record <file>`: persist the run trace for later `--replay`.
+/// `batch` is the (batch_max, batch_window_ms) the run executed under —
+/// stamped into the trace so a batched recording replays batched.
 fn maybe_record(
     args: &adms::util::cli::Args,
     soc_name: &str,
@@ -443,9 +463,11 @@ fn maybe_record(
     events: &[adms::exec::SessionEvent],
     report: &adms::sim::SimReport,
     seed: u64,
+    batch: (usize, f64),
 ) -> Result<()> {
     if let Some(path) = args.get("record") {
-        let trace = adms::scenario::RunTrace::record(soc_name, apps, events, report, seed);
+        let trace = adms::scenario::RunTrace::record(soc_name, apps, events, report, seed)
+            .with_batch(batch.0, batch.1);
         std::fs::write(path, trace.to_json_string())
             .map_err(|e| anyhow::anyhow!("--record '{path}': {e}"))?;
         println!(
@@ -472,6 +494,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "workloads", takes_value: true, help: "comma-separated workloads: names, model lists (use + within an arm, e.g. retinaface+east), or scenario:<name-or-file>", default: Some("frs") },
         OptSpec { name: "duration", takes_value: true, help: "per-device horizon, simulated ms", default: Some("5000") },
         OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
+        OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse, all arms (1 = off)", default: Some("1") },
+        OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms for batchable tasks", default: Some("0") },
         OptSpec { name: "json", takes_value: true, help: "also write the FleetReport as JSON here", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
@@ -509,11 +533,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     for soc in &socs {
         for sched in &scheds {
             for wl in &workloads {
-                arms.push(ArmSpec {
-                    soc: soc.clone(),
-                    scheduler: sched.clone(),
-                    workload: wl.clone(),
-                });
+                arms.push(ArmSpec::new(soc, sched, wl));
             }
         }
     }
@@ -521,6 +541,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let cfg = adms::exec::SimConfig {
         duration_ms: args.get_f64("duration", 5_000.0)?,
         max_requests: (requests > 0).then_some(requests),
+        batch_max: args.get_usize("batch-max", 1)?.max(1),
+        batch_window_ms: args.get_f64("batch-window", 0.0)?.max(0.0),
         ..Default::default()
     };
     let spec = FleetSpec {
@@ -569,25 +591,83 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "out", takes_value: true, help: "results file (JSON)", default: Some("BENCH_sim.json") },
         OptSpec { name: "json", takes_value: false, help: "also print the JSON to stdout", default: None },
+        OptSpec { name: "check", takes_value: false, help: "fail if events/sec regresses >20% vs the existing --out file (read before overwriting)", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
     let args = parse(argv, &specs)?;
     if args.flag("help") {
-        println!("{}", render_help("adms bench [--out FILE] [--json]", &specs));
+        println!("{}", render_help("adms bench [--out FILE] [--json] [--check]", &specs));
         println!("budget per measurement: ADMS_BENCH_MS (ms, default 300)");
         return Ok(());
     }
+    let path = args.get_or("out", "BENCH_sim.json");
+    // Baseline for --check: whatever the previous run committed at the
+    // --out path, read BEFORE this run overwrites it.
+    let baseline = if args.flag("check") {
+        match std::fs::read_to_string(&path) {
+            Ok(text) => Some(bench_baseline(&text)?),
+            Err(_) => {
+                println!("bench --check: no baseline at {path}; measuring without a gate");
+                None
+            }
+        }
+    } else {
+        None
+    };
     let (budget_ms, entries) = adms::testing::bench::run_sim_suite();
     println!();
     adms::testing::bench::print_sim_suite(&entries);
     let json = adms::testing::bench::sim_suite_json(budget_ms, &entries).to_pretty();
-    let path = args.get_or("out", "BENCH_sim.json");
     std::fs::write(&path, &json).map_err(|e| anyhow::anyhow!("--out '{path}': {e}"))?;
     println!("\nwrote {} bench entries to {path}", entries.len());
     if args.flag("json") {
         println!("{json}");
     }
+    if let Some(base) = baseline {
+        let mut regressions = Vec::new();
+        for e in &entries {
+            if let Some(&old) = base.get(&e.name) {
+                let new = e.events_per_sec();
+                if old > 0.0 && new < 0.8 * old {
+                    regressions.push(format!(
+                        "{}: {:.0} events/s vs baseline {:.0} ({:+.1}%)",
+                        e.name,
+                        new,
+                        old,
+                        100.0 * (new / old - 1.0)
+                    ));
+                }
+            }
+        }
+        if regressions.is_empty() {
+            println!("bench --check: no entry regressed >20% vs the baseline");
+        } else {
+            bail!(
+                "bench --check: events/sec regressed >20% vs {path}:\n  {}",
+                regressions.join("\n  ")
+            );
+        }
+    }
     Ok(())
+}
+
+/// Parse a committed `BENCH_sim.json` into `name → events_per_sec` for
+/// the `bench --check` regression gate.
+fn bench_baseline(text: &str) -> Result<std::collections::HashMap<String, f64>> {
+    let v = adms::util::json::parse(text).map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+    let entries = v
+        .get("entries")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("baseline: missing 'entries'"))?;
+    let mut out = std::collections::HashMap::new();
+    for e in entries {
+        if let (Some(name), Some(eps)) =
+            (e.get("name").as_str(), e.get("events_per_sec").as_f64())
+        {
+            out.insert(name.to_string(), eps);
+        }
+    }
+    Ok(out)
 }
 
 fn cmd_scenario(argv: &[String]) -> Result<()> {

@@ -8,7 +8,7 @@
 //! reality by up to the cache interval, and each refresh charges a small
 //! amount of CPU time (the sampling daemon's cost).
 
-use crate::soc::{ProcId, ProcKind};
+use crate::soc::{ProcId, ProcKind, ProcessorSpec};
 use crate::TimeMs;
 
 /// Monitor's view of one processor — what the paper's scheduler reads:
@@ -35,6 +35,29 @@ pub struct ProcView {
     pub util: f64,
     /// Thermal headroom before the throttle threshold, °C.
     pub headroom_c: f64,
+}
+
+impl ProcView {
+    /// Nameplate view of an idle processor at `temp_c`: max frequency, no
+    /// load/backlog, online. This is the canonical "cold snapshot" that
+    /// scheduler tests and benches used to hand-roll in three places —
+    /// one constructor so a new `ProcView` field can't silently get three
+    /// different defaults.
+    pub fn nameplate(id: ProcId, spec: &ProcessorSpec, temp_c: f64) -> Self {
+        ProcView {
+            id,
+            kind: spec.kind,
+            temp_c,
+            freq_mhz: spec.max_freq(),
+            freq_scale: 1.0,
+            offline: false,
+            load: 0.0,
+            backlog_ms: 0.0,
+            active_sessions: 0,
+            util: 0.0,
+            headroom_c: spec.throttle_temp_c - temp_c,
+        }
+    }
 }
 
 /// Caching monitor. `sample` returns the cached snapshot unless it is

@@ -44,6 +44,11 @@ pub struct RunTrace {
     pub soc: String,
     pub seed: u64,
     pub duration_ms: f64,
+    /// Group-dispatch config the run executed under (`1`/`0.0` =
+    /// unbatched — omitted from the JSON so pre-batching traces and
+    /// unbatched recordings stay byte-identical).
+    pub batch_max: usize,
+    pub batch_window_ms: f64,
     pub sessions: Vec<TraceSession>,
     /// Rate-change event times from the recorded scenario, `(session,
     /// at_ms)`. Replays re-fire them (re-arming the replay schedule) so
@@ -94,11 +99,22 @@ impl RunTrace {
             soc: soc.to_string(),
             seed,
             duration_ms: report.duration_ms,
+            batch_max: 1,
+            batch_window_ms: 0.0,
             sessions,
             rate_events,
             arrivals: report.arrivals.clone(),
             assignments: report.assignments.clone(),
         }
+    }
+
+    /// Stamp the group-dispatch config the run executed under, so a
+    /// replay can re-run it batched (a batched trace replayed unbatched
+    /// would legitimately diverge).
+    pub fn with_batch(mut self, batch_max: usize, batch_window_ms: f64) -> Self {
+        self.batch_max = batch_max.max(1);
+        self.batch_window_ms = batch_window_ms.max(0.0);
+        self
     }
 
     /// Rebuild the run as a scenario of [`ArrivalMode::Replay`] sessions:
@@ -155,36 +171,41 @@ impl RunTrace {
             .iter()
             .map(|a| Json::Arr(vec![Json::Num(a.session as f64), Json::Num(a.at)]))
             .collect();
+        // Group dispatches use the shared flattened row form
+        // (`AssignRecord::to_row`): the member list rides on the classic
+        // four-tuple, and single-task records stay exactly the old
+        // four-tuple, keeping unbatched traces byte-identical.
         let assignments: Vec<Json> = self
             .assignments
             .iter()
-            .map(|a| {
-                Json::Arr(vec![
-                    Json::Num(a.req as f64),
-                    Json::Num(a.session as f64),
-                    Json::Num(a.unit as f64),
-                    Json::Num(a.proc as f64),
-                ])
-            })
+            .map(|a| Json::Arr(a.to_row().into_iter().map(Json::Num).collect()))
             .collect();
         let rate_events: Vec<Json> = self
             .rate_events
             .iter()
             .map(|&(s, at)| Json::Arr(vec![Json::Num(s as f64), Json::Num(at)]))
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::Num(1.0)),
             ("scheduler", Json::Str(self.scheduler.clone())),
             ("backend", Json::Str(self.backend.clone())),
             ("soc", Json::Str(self.soc.clone())),
             ("seed", Json::Num(self.seed as f64)),
             ("duration_ms", Json::Num(self.duration_ms)),
+        ];
+        // Batch config only when the run was actually batched, so
+        // unbatched (and pre-batching) traces keep their exact bytes.
+        if self.batch_max > 1 {
+            fields.push(("batch_max", Json::Num(self.batch_max as f64)));
+            fields.push(("batch_window_ms", Json::Num(self.batch_window_ms)));
+        }
+        fields.extend([
             ("sessions", Json::Arr(sessions)),
             ("rate_events", Json::Arr(rate_events)),
             ("arrivals", Json::Arr(arrivals)),
             ("assignments", Json::Arr(assignments)),
-        ])
-        .to_pretty()
+        ]);
+        Json::obj(fields).to_pretty()
     }
 
     pub fn from_json_str(s: &str) -> Result<RunTrace> {
@@ -244,12 +265,23 @@ impl RunTrace {
             .ok_or_else(|| anyhow!("trace: missing 'assignments'"))?
             .iter()
             .map(|a| {
-                let t = tuple(a, 4, "assignment")?;
-                Ok(AssignRecord {
-                    req: t[0] as u64,
-                    session: t[1] as usize,
-                    unit: t[2] as usize,
-                    proc: t[3] as usize,
+                // The shared flattened row form (`AssignRecord::to_row`):
+                // [req, session, unit, proc] plus an even number of
+                // (member_req, member_session) pairs.
+                let arr =
+                    a.as_arr().ok_or_else(|| anyhow!("trace: malformed assignment entry"))?;
+                let nums = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| anyhow!("trace: non-numeric assignment field"))
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+                AssignRecord::from_row(&nums).ok_or_else(|| {
+                    anyhow!(
+                        "trace: assignment entry has {} fields, expected 4 + 2·members",
+                        nums.len()
+                    )
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -277,6 +309,8 @@ impl RunTrace {
                 .get("duration_ms")
                 .as_f64()
                 .ok_or_else(|| anyhow!("trace: missing 'duration_ms'"))?,
+            batch_max: v.get("batch_max").as_u64().map(|b| (b as usize).max(1)).unwrap_or(1),
+            batch_window_ms: v.get("batch_window_ms").as_f64().unwrap_or(0.0).max(0.0),
             sessions,
             rate_events,
             arrivals,
@@ -296,6 +330,8 @@ mod tests {
             soc: "kirin970".into(),
             seed: 7,
             duration_ms: 1234.5,
+            batch_max: 1,
+            batch_window_ms: 0.0,
             sessions: vec![
                 TraceSession {
                     model: "mobilenet_v1".into(),
@@ -316,7 +352,7 @@ mod tests {
                 ArrivalRecord { session: 1, at: 100.125 },
                 ArrivalRecord { session: 0, at: 33.375 },
             ],
-            assignments: vec![AssignRecord { req: 0, session: 0, unit: 0, proc: 3 }],
+            assignments: vec![AssignRecord::single(0, 0, 0, 3)],
         }
     }
 
@@ -324,8 +360,33 @@ mod tests {
     fn trace_roundtrips_through_json() {
         let t = tiny_trace();
         let s = t.to_json_string();
+        // Unbatched traces keep the classic shape: no batch fields, and
+        // assignments as plain four-tuples.
+        assert!(!s.contains("batch_max"));
         let back = RunTrace::from_json_str(&s).unwrap();
         assert_eq!(back, t);
+    }
+
+    /// A batched trace round-trips its batch config and the member lists
+    /// of group dispatches.
+    #[test]
+    fn batched_trace_roundtrips_members_and_config() {
+        let mut t = tiny_trace().with_batch(4, 6.5);
+        t.assignments = vec![
+            AssignRecord::single(0, 0, 0, 3),
+            AssignRecord {
+                req: 1,
+                session: 0,
+                unit: 0,
+                proc: 3,
+                members: vec![(2, 1), (3, 1)],
+            },
+        ];
+        let s = t.to_json_string();
+        assert!(s.contains("batch_max"));
+        let back = RunTrace::from_json_str(&s).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.assignments[1].group_size(), 3);
     }
 
     #[test]

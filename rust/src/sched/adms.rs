@@ -63,6 +63,7 @@ pub struct Adms {
     free: Vec<usize>,
     backlog_bump: Vec<TimeMs>,
     taken: Vec<bool>,
+    members: Vec<usize>,
 }
 
 impl Adms {
@@ -70,23 +71,48 @@ impl Adms {
         Adms { cfg, ..Default::default() }
     }
 
-    /// State-aware expected-completion cost of running `t` on `proc`
-    /// (`extra_backlog` accounts for same-round commitments). `None` if
-    /// the processor is offline or does not support the unit.
+    /// Deadline slack of one task (the Eq 1 budget remaining): SLO — or
+    /// the 1.5× end-to-end fallback without one — minus the time already
+    /// elapsed since the request arrived.
+    fn slack_ms(&self, ctx: &SchedCtx, t: &PendingTask) -> f64 {
+        let plan = &ctx.plans[t.session];
+        let t_slo = t.slo_ms.unwrap_or(plan.est_total_ms * 1.5);
+        t_slo - (ctx.now - t.req_arrival)
+    }
+
+    /// State-aware expected-completion cost of running a group of `batch`
+    /// fused instances of `t` on `proc` (`extra_backlog` accounts for
+    /// same-round commitments; `batch = 1` is the classic single-task
+    /// price). The execution term follows the per-processor batch curve
+    /// ([`cost::batch_latency_ms`]) at the *monitored* frequency. `None`
+    /// if the processor is offline or does not support the unit.
     pub fn placement_cost(
         &self,
         ctx: &SchedCtx,
         t: &PendingTask,
         proc: usize,
         extra_backlog: TimeMs,
+        batch: usize,
     ) -> Option<f64> {
         let plan = &ctx.plans[t.session];
         let view = &ctx.procs[proc];
         if view.offline {
             return None;
         }
-        // Price at the *monitored* frequency, not nameplate.
-        let exec = plan.exec_estimate(t.unit, proc, view.freq_scale.max(0.05))?;
+        // Price at the monitored frequency, not nameplate. The batch
+        // curve applies to the full-frequency unit cost; `b = 1` reduces
+        // to `exec_estimate` bit-exactly.
+        let full = cost::batch_latency_ms(
+            &ctx.soc.processors[proc],
+            plan.exec_ms[t.unit][proc]?,
+            batch,
+        );
+        let exec = full / view.freq_scale.max(crate::sched::ModelPlan::FREQ_FLOOR);
+        // The driver charges a group the SUM of every member's transfer
+        // costs; members share the lead's unit and dependency structure,
+        // so estimate that as batch × the lead's (exact at batch = 1 —
+        // `x * 1.0 ≡ x` — and whenever members' dep placements match the
+        // lead's).
         let xfer: f64 = t
             .dep_procs
             .iter()
@@ -95,31 +121,30 @@ impl Adms {
                 let bytes = plan.xfer_bytes_at(t.unit, k, dep_unit);
                 cost::transfer_ms(ctx.soc, dep_proc, proc, bytes)
             })
-            .sum();
+            .sum::<f64>()
+            * batch as f64;
         // Thermal-headroom penalty: steer heavy work off hot processors.
         let over = (self.cfg.thermal_margin_c - view.headroom_c).max(0.0);
         let s_thermal = self.cfg.thermal_penalty * over * exec;
         Some(view.backlog_ms + extra_backlog + exec + xfer + s_thermal)
     }
 
-    /// Eq 4 priority for task `t` given its candidate completion estimate
-    /// on processor `proc`. Lower = dispatched earlier.
-    pub fn priority(
+    /// Eq 4 with the deadline term evaluated on an explicit slack — for
+    /// a group dispatch the *minimum* slack over its members, so a batch
+    /// is never scheduled later than its most urgent request warrants.
+    fn priority_with_slack(
         &self,
         ctx: &SchedCtx,
         t: &PendingTask,
         proc: usize,
         t_latency: TimeMs,
+        slack_ms: f64,
     ) -> f64 {
         let plan = &ctx.plans[t.session];
         let view = &ctx.procs[proc];
 
-        // Eq 1: deadline slack. Without an SLO, fall back to 1.5× the
-        // plan's end-to-end estimate as the expected response time.
-        let t_slo = t.slo_ms.unwrap_or(plan.est_total_ms * 1.5);
-        let elapsed = ctx.now - t.req_arrival;
-        let s_deadline =
-            self.cfg.gamma * ((t_slo - elapsed) - (t_latency + t.remaining_ms));
+        // Eq 1: deadline slack (see `slack_ms`).
+        let s_deadline = self.cfg.gamma * (slack_ms - (t_latency + t.remaining_ms));
 
         // Eq 2: waiting fairness, normalized by average unit time.
         let wait = (ctx.now - t.ready_at).max(0.0);
@@ -131,6 +156,18 @@ impl Adms {
             * t.remaining_ms;
 
         s_deadline + s_wait + s_resource
+    }
+
+    /// Eq 4 priority for task `t` given its candidate completion estimate
+    /// on processor `proc`. Lower = dispatched earlier.
+    pub fn priority(
+        &self,
+        ctx: &SchedCtx,
+        t: &PendingTask,
+        proc: usize,
+        t_latency: TimeMs,
+    ) -> f64 {
+        self.priority_with_slack(ctx, t, proc, t_latency, self.slack_ms(ctx, t))
     }
 }
 
@@ -146,18 +183,23 @@ impl Scheduler for Adms {
         let mut free = std::mem::take(&mut self.free);
         let mut backlog_bump = std::mem::take(&mut self.backlog_bump);
         let mut taken = std::mem::take(&mut self.taken);
+        let mut members = std::mem::take(&mut self.members);
         free_slot_census_into(ctx, &mut free);
         backlog_bump.clear();
         backlog_bump.resize(ctx.soc.num_processors(), 0.0);
         taken.clear();
         taken.resize(ready.len(), false);
         let window = self.cfg.loop_call_size.max(1);
+        let batching = ctx.batch.enabled();
 
-        // Each round: within the decision window, find each task's best
-        // placement, rank tasks by Eq 4, commit the lowest; repeat until
-        // no capacity or no candidates remain.
+        // Each round: within the decision window, find each task's (or,
+        // under batching, each group's) best placement, rank by Eq 4,
+        // commit the lowest; repeat until no capacity or no candidates
+        // remain. A group occupies ONE slot — the fused execution is a
+        // single kernel invocation — priced off the batch curve, and its
+        // deadline term uses the minimum slack over its members.
         loop {
-            let mut best: Option<(usize, usize, f64)> = None; // (idx, proc, priority)
+            let mut best: Option<(usize, usize, f64, usize)> = None; // (idx, proc, prio, b)
             let mut considered = 0;
             for (idx, t) in ready.iter().enumerate() {
                 if taken[idx] {
@@ -167,34 +209,58 @@ impl Scheduler for Adms {
                 if considered > window {
                     break;
                 }
-                // Best placement for this task.
+                let b = if batching { ctx.batch.group_limit(idx, &taken) } else { 1 };
+                // Best placement for this task/group.
                 let mut placed: Option<(usize, f64)> = None;
                 for p in 0..ctx.soc.num_processors() {
                     if free[p] == 0 {
                         continue;
                     }
-                    if let Some(c) = self.placement_cost(ctx, t, p, backlog_bump[p]) {
+                    if let Some(c) = self.placement_cost(ctx, t, p, backlog_bump[p], b) {
                         if placed.map(|(_, pc)| c < pc).unwrap_or(true) {
                             placed = Some((p, c));
                         }
                     }
                 }
                 let Some((p, completion)) = placed else { continue };
-                let prio = self.priority(ctx, t, p, completion);
-                if best.map(|(_, _, b)| prio < b).unwrap_or(true) {
-                    best = Some((idx, p, prio));
+                // Group slack: the most urgent member drives Eq 1.
+                let mut slack = self.slack_ms(ctx, t);
+                if b > 1 {
+                    members.clear();
+                    ctx.batch.members(idx, b, &taken, &mut members);
+                    for &m in &members {
+                        slack = slack.min(self.slack_ms(ctx, &ready[m]));
+                    }
+                }
+                let prio = self.priority_with_slack(ctx, t, p, completion, slack);
+                if best.map(|(_, _, bp, _)| prio < bp).unwrap_or(true) {
+                    best = Some((idx, p, prio, b));
                 }
             }
             match best {
-                Some((idx, p, _)) => {
+                Some((idx, p, _, b)) => {
                     taken[idx] = true;
+                    if b > 1 {
+                        // Reserve the members so later rounds (and the
+                        // driver) see the same group this price assumed.
+                        members.clear();
+                        ctx.batch.members(idx, b, &taken, &mut members);
+                        for &m in &members {
+                            taken[m] = true;
+                        }
+                    }
                     free[p] -= 1;
                     let t = &ready[idx];
+                    let view_fs = ctx.procs[p].freq_scale;
                     let exec = ctx.plans[t.session]
-                        .exec_estimate(t.unit, p, ctx.procs[p].freq_scale.max(0.05))
+                        .exec_ms[t.unit][p]
+                        .map(|full| {
+                            cost::batch_latency_ms(&ctx.soc.processors[p], full, b)
+                                / view_fs.max(crate::sched::ModelPlan::FREQ_FLOOR)
+                        })
                         .unwrap_or(0.0);
                     backlog_bump[p] += exec;
-                    out.push(Assignment { ready_idx: idx, proc: p });
+                    out.push(Assignment { ready_idx: idx, proc: p, batch: b });
                 }
                 None => break,
             }
@@ -202,6 +268,7 @@ impl Scheduler for Adms {
         self.free = free;
         self.backlog_bump = backlog_bump;
         self.taken = taken;
+        self.members = members;
     }
 }
 
@@ -218,20 +285,17 @@ mod tests {
         soc.processors
             .iter()
             .enumerate()
-            .map(|(id, p)| ProcView {
-                id,
-                kind: p.kind,
-                temp_c: 30.0,
-                freq_mhz: p.max_freq(),
-                freq_scale: 1.0,
-                offline: false,
-                load: 0.0,
-                backlog_ms: 0.0,
-                active_sessions: 0,
-                util: 0.0,
-                headroom_c: p.throttle_temp_c - 30.0,
-            })
+            .map(|(id, p)| ProcView::nameplate(id, p, 30.0))
             .collect()
+    }
+
+    fn mk_ctx<'a>(
+        now: f64,
+        soc: &'a crate::soc::SocSpec,
+        plans: &'a [ModelPlan],
+        procs: &'a [ProcView],
+    ) -> SchedCtx<'a> {
+        SchedCtx { now, soc, plans, procs, batch: crate::sched::BatchCtx::OFF }
     }
 
     fn pending(unit: usize, now: f64) -> PendingTask {
@@ -259,7 +323,7 @@ mod tests {
         let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
         let plans = vec![plan];
         let v = views(&soc);
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
         let a = run_sched(&mut s, &ctx, &ready);
@@ -275,14 +339,14 @@ mod tests {
         let plans = vec![plan];
         let mut v = views(&soc);
         // Find the proc ADMS picks when everything is cool…
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
         let cool_choice = run_sched(&mut s, &ctx, &ready)[0].proc;
         // …then overheat it and expect a different choice.
         v[cool_choice].temp_c = 67.5;
         v[cool_choice].headroom_c = 0.5;
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let hot_choice = run_sched(&mut s, &ctx, &ready)[0].proc;
         assert_ne!(hot_choice, cool_choice, "scheduler ignored thermal state");
     }
@@ -293,12 +357,12 @@ mod tests {
         let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
         let plans = vec![plan];
         let mut v = views(&soc);
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
         let first = run_sched(&mut s, &ctx, &ready)[0].proc;
         v[first].backlog_ms = 500.0; // far beyond B_max
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let second = run_sched(&mut s, &ctx, &ready)[0].proc;
         assert_ne!(second, first, "scheduler ignored backlog");
     }
@@ -309,14 +373,14 @@ mod tests {
         let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
         let plans = vec![plan];
         let v = views(&soc);
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let s = Adms::default();
         let t = pending(0, 0.0);
-        let base = s.placement_cost(&ctx, &t, 0, 0.0).unwrap();
+        let base = s.placement_cost(&ctx, &t, 0, 0.0, 1).unwrap();
         let mut v2 = views(&soc);
         v2[0].freq_scale = 0.33;
-        let ctx2 = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v2 };
-        let slow = s.placement_cost(&ctx2, &t, 0, 0.0).unwrap();
+        let ctx2 = mk_ctx(0.0, &soc, &plans, &v2);
+        let slow = s.placement_cost(&ctx2, &t, 0, 0.0, 1).unwrap();
         assert!(slow > base, "throttled estimate not reflected: {slow} vs {base}");
     }
 
@@ -328,7 +392,7 @@ mod tests {
         let v = views(&soc);
         let s = Adms::default();
         let mut t = pending(0, 0.0);
-        let ctx = SchedCtx { now: 100.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(100.0, &soc, &plans, &v);
         t.ready_at = 99.0;
         let fresh = s.priority(&ctx, &t, 0, 5.0);
         t.ready_at = 0.0; // has waited 100 ms
@@ -343,7 +407,7 @@ mod tests {
         let plans = vec![plan];
         let v = views(&soc);
         let s = Adms::default();
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let mut tight = pending(0, 0.0);
         tight.slo_ms = Some(10.0);
         let mut loose = pending(0, 0.0);
@@ -363,7 +427,7 @@ mod tests {
         for view in v.iter_mut().skip(1) {
             view.offline = true;
         }
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &v };
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
         let mut s = Adms::default();
         let ready = vec![pending(0, 0.0)];
         let a = run_sched(&mut s, &ctx, &ready);

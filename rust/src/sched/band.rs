@@ -17,6 +17,8 @@ pub struct Band {
     // loop invokes `schedule` on every event that frees capacity).
     free: Vec<usize>,
     backlog: Vec<f64>,
+    taken: Vec<bool>,
+    members: Vec<usize>,
 }
 
 impl Band {
@@ -39,9 +41,20 @@ impl Scheduler for Band {
         let backlog = &mut self.backlog;
         backlog.clear();
         backlog.extend(ctx.procs.iter().map(|p| p.backlog_ms));
+        let batching = ctx.batch.enabled();
+        let taken = &mut self.taken;
+        taken.clear();
+        taken.resize(ready.len(), false);
         // Greedy shortest-expected-latency, first-come-first-considered.
+        // Under batching a task already reserved as a group member is
+        // skipped, and each lead fuses its same-(model, unit) peers into
+        // one slot priced off the batch curve.
         for (idx, t) in ready.iter().enumerate() {
+            if taken[idx] {
+                continue;
+            }
             let plan = &ctx.plans[t.session];
+            let b = if batching { ctx.batch.group_limit(idx, taken) } else { 1 };
             let mut best: Option<(usize, f64)> = None;
             for p in 0..ctx.soc.num_processors() {
                 if free[p] == 0 {
@@ -49,12 +62,14 @@ impl Scheduler for Band {
                 }
                 // State-blind: assumes full frequency (scale = 1.0), no
                 // thermal awareness.
-                let exec = match plan.exec_estimate(t.unit, p, 1.0) {
-                    Some(e) => e,
+                let exec = match plan.exec_ms[t.unit][p] {
+                    Some(e) => cost::batch_latency_ms(&ctx.soc.processors[p], e, b),
                     None => continue,
                 };
                 // Transfer costs for dependencies produced elsewhere
                 // (`dep_procs` rows align with `deps[unit]` — positional).
+                // The driver charges a group every member's transfers;
+                // estimate as b × the lead's (exact at b = 1).
                 let xfer: f64 = t
                     .dep_procs
                     .iter()
@@ -63,16 +78,25 @@ impl Scheduler for Band {
                         let bytes = plan.xfer_bytes_at(t.unit, k, dep_unit);
                         cost::transfer_ms(ctx.soc, dep_proc, p, bytes)
                     })
-                    .sum();
+                    .sum::<f64>()
+                    * b as f64;
                 let expected = backlog[p] + exec + xfer;
                 if best.map(|(_, b)| expected < b).unwrap_or(true) {
                     best = Some((p, expected));
                 }
             }
             if let Some((p, exp)) = best {
+                taken[idx] = true;
+                if b > 1 {
+                    self.members.clear();
+                    ctx.batch.members(idx, b, taken, &mut self.members);
+                    for &m in &self.members {
+                        taken[m] = true;
+                    }
+                }
                 free[p] -= 1;
                 backlog[p] += exp;
-                out.push(Assignment { ready_idx: idx, proc: p });
+                out.push(Assignment { ready_idx: idx, proc: p, batch: b });
             }
         }
     }

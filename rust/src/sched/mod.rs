@@ -85,6 +85,78 @@ impl Clone for PendingTask {
     }
 }
 
+/// Batching context the driver hands the scheduler: the per-dispatch
+/// group-size cap and the coalescing key of every task it is shown.
+///
+/// Two ready tasks are *batchable* — fusable into one group dispatch that
+/// occupies a single processor slot — exactly when their coalescing keys
+/// are equal: same model structure (graph fingerprint) and same unit
+/// index, so the fused execution shares weights, plan, and kernel. The
+/// driver and every policy resolve group members through
+/// [`BatchCtx::members`], so the scheduler's pricing and the driver's
+/// dispatch can never disagree about which tasks a group contains.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCtx<'a> {
+    /// Largest group one dispatch may fuse (`1` = batching disabled).
+    pub max: usize,
+    /// Coalescing key per shown task, aligned with the `ready` slice
+    /// (empty when batching is disabled).
+    pub kinds: &'a [u64],
+}
+
+impl BatchCtx<'_> {
+    /// The disabled context (the pre-batching scheduler contract).
+    pub const OFF: BatchCtx<'static> = BatchCtx { max: 1, kinds: &[] };
+
+    /// Whether group dispatch is on for this decision round.
+    pub fn enabled(&self) -> bool {
+        self.max > 1 && !self.kinds.is_empty()
+    }
+
+    /// Largest group task `lead` could head right now: itself plus every
+    /// not-yet-taken same-key task, capped at `max`. `taken[i]` marks
+    /// tasks already committed this round (may be shorter than the ready
+    /// slice; missing entries count as free).
+    pub fn group_limit(&self, lead: usize, taken: &[bool]) -> usize {
+        if !self.enabled() || lead >= self.kinds.len() {
+            return 1;
+        }
+        let key = self.kinds[lead];
+        let mut n = 1;
+        for (i, &k) in self.kinds.iter().enumerate() {
+            if i != lead && k == key && !taken.get(i).copied().unwrap_or(false) {
+                n += 1;
+                if n == self.max {
+                    break;
+                }
+            }
+        }
+        n
+    }
+
+    /// Append the member indices of a group of size `b` led by `lead`
+    /// (the lead itself is *not* appended): the first `b − 1` not-taken
+    /// same-key tasks in ascending index order. This is the canonical
+    /// member-resolution rule — deterministic, and shared by the pricing
+    /// (scheduler) and dispatch (driver) sides.
+    pub fn members(&self, lead: usize, b: usize, taken: &[bool], out: &mut Vec<usize>) {
+        if !self.enabled() || b <= 1 || lead >= self.kinds.len() {
+            return;
+        }
+        let key = self.kinds[lead];
+        let mut need = b - 1;
+        for (i, &k) in self.kinds.iter().enumerate() {
+            if need == 0 {
+                break;
+            }
+            if i != lead && k == key && !taken.get(i).copied().unwrap_or(false) {
+                out.push(i);
+                need -= 1;
+            }
+        }
+    }
+}
+
 /// What the scheduler sees when asked for a decision.
 pub struct SchedCtx<'a> {
     pub now: TimeMs,
@@ -93,6 +165,8 @@ pub struct SchedCtx<'a> {
     pub plans: &'a [ModelPlan],
     /// Monitor snapshot — possibly stale, per the monitor cache interval.
     pub procs: &'a [ProcView],
+    /// Group-dispatch context ([`BatchCtx::OFF`] when batching is off).
+    pub batch: BatchCtx<'a>,
 }
 
 impl<'a> SchedCtx<'a> {
@@ -134,11 +208,26 @@ pub fn free_slot_census_into(ctx: &SchedCtx, out: &mut Vec<usize>) {
     out.extend(ctx.procs.iter().map(|v| ctx.free_slots(v)));
 }
 
-/// An assignment decision: ready-queue index → processor.
+/// One scheduling decision: a *group* of ready tasks → processor. The
+/// dispatch unit grew from a single task to a task group (ISSUE 5): the
+/// group's lead is `ready_idx`, and `batch − 1` further members are
+/// resolved by the canonical [`BatchCtx::members`] rule. `batch = 1` is
+/// the classic single-task assignment and the only value schedulers emit
+/// when batching is off.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Assignment {
     pub ready_idx: usize,
     pub proc: ProcId,
+    /// Group size to fuse into this dispatch (≥ 1; the driver clamps to
+    /// the configured `batch_max` and the actually-available peers).
+    pub batch: usize,
+}
+
+impl Assignment {
+    /// A single-task (unbatched) assignment.
+    pub fn single(ready_idx: usize, proc: ProcId) -> Self {
+        Assignment { ready_idx, proc, batch: 1 }
+    }
 }
 
 /// Scheduling policy interface. The engine calls [`Scheduler::schedule`]
@@ -195,19 +284,7 @@ mod tests {
         soc.processors
             .iter()
             .enumerate()
-            .map(|(id, p)| ProcView {
-                id,
-                kind: p.kind,
-                temp_c: 30.0,
-                freq_mhz: p.max_freq(),
-                freq_scale: 1.0,
-                offline: false,
-                load: 0.0,
-                backlog_ms: 0.0,
-                active_sessions: 0,
-                util: 0.0,
-                headroom_c: p.throttle_temp_c - 30.0,
-            })
+            .map(|(id, p)| ProcView::nameplate(id, p, 30.0))
             .collect()
     }
 
@@ -218,7 +295,13 @@ mod tests {
         views[1].offline = true;
         views[2].load = 1.0;
         let plans: Vec<ModelPlan> = vec![];
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &views };
+        let ctx = SchedCtx {
+            now: 0.0,
+            soc: &soc,
+            plans: &plans,
+            procs: &views,
+            batch: BatchCtx::OFF,
+        };
         let avail = ctx.available_procs();
         assert!(!avail.contains(&1));
         assert!(!avail.contains(&2));
@@ -243,7 +326,13 @@ mod tests {
             views[1].load = 0.7; // ≥ 1 free slot → available
         }
         let plans: Vec<ModelPlan> = vec![];
-        let ctx = SchedCtx { now: 0.0, soc: &soc, plans: &plans, procs: &views };
+        let ctx = SchedCtx {
+            now: 0.0,
+            soc: &soc,
+            plans: &plans,
+            procs: &views,
+            batch: BatchCtx::OFF,
+        };
         let census = free_slot_census(&ctx);
         let avail = ctx.available_procs();
         for (id, &free) in census.iter().enumerate() {
@@ -256,5 +345,36 @@ mod tests {
         }
         assert!(!avail.contains(&0), "0.4 free slots must round to unavailable");
         assert!(avail.contains(&1));
+    }
+
+    /// The canonical group rules: `group_limit` counts untaken same-key
+    /// tasks capped at `max`, and `members` resolves the first `b − 1` of
+    /// them in ascending index order — the shared contract between
+    /// scheduler pricing and driver dispatch.
+    #[test]
+    fn batch_ctx_group_limit_and_members_agree() {
+        let kinds = [7u64, 3, 7, 7, 3, 7];
+        let b = BatchCtx { max: 3, kinds: &kinds };
+        assert!(b.enabled());
+        let free = vec![false; kinds.len()];
+        // Key 7 has 4 tasks; the cap clips the group at 3.
+        assert_eq!(b.group_limit(0, &free), 3);
+        assert_eq!(b.group_limit(1, &free), 2);
+        let mut m = Vec::new();
+        b.members(0, 3, &free, &mut m);
+        assert_eq!(m, vec![2, 3]);
+        // Taken peers are skipped, shrinking the group.
+        let mut taken = free.clone();
+        taken[2] = true;
+        assert_eq!(b.group_limit(0, &taken), 3); // 0, 3, 5 still free
+        m.clear();
+        b.members(0, 3, &taken, &mut m);
+        assert_eq!(m, vec![3, 5]);
+        // Disabled contexts never group.
+        assert!(!BatchCtx::OFF.enabled());
+        assert_eq!(BatchCtx::OFF.group_limit(0, &free), 1);
+        m.clear();
+        BatchCtx::OFF.members(0, 4, &free, &mut m);
+        assert!(m.is_empty());
     }
 }

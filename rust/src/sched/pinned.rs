@@ -12,11 +12,13 @@ pub struct Pinned {
     cpu: ProcId,
     /// Per-decision slot-census scratch, reused across calls.
     free: Vec<usize>,
+    taken: Vec<bool>,
+    members: Vec<usize>,
 }
 
 impl Pinned {
     pub fn new(target: ProcId, cpu: ProcId) -> Self {
-        Pinned { target, cpu, free: Vec::new() }
+        Pinned { target, cpu, free: Vec::new(), taken: Vec::new(), members: Vec::new() }
     }
 }
 
@@ -36,7 +38,14 @@ impl Scheduler for Pinned {
     fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
         let free = &mut self.free;
         free_slot_census_into(ctx, free);
+        let batching = ctx.batch.enabled();
+        let taken = &mut self.taken;
+        taken.clear();
+        taken.resize(ready.len(), false);
         for (idx, t) in ready.iter().enumerate() {
+            if taken[idx] {
+                continue;
+            }
             let plan = &ctx.plans[t.session];
             let target = if plan.partition.units[t.unit].supports(self.target) {
                 self.target
@@ -46,8 +55,19 @@ impl Scheduler for Pinned {
             if ctx.procs[target].offline || free[target] == 0 {
                 continue;
             }
+            // Same-(model, unit) tasks of concurrent sessions fuse into
+            // one pinned-processor slot when batching is enabled.
+            let b = if batching { ctx.batch.group_limit(idx, taken) } else { 1 };
+            taken[idx] = true;
+            if b > 1 {
+                self.members.clear();
+                ctx.batch.members(idx, b, taken, &mut self.members);
+                for &m in &self.members {
+                    taken[m] = true;
+                }
+            }
             free[target] -= 1;
-            out.push(Assignment { ready_idx: idx, proc: target });
+            out.push(Assignment { ready_idx: idx, proc: target, batch: b });
         }
     }
 }

@@ -39,6 +39,12 @@ pub struct ModelPlan {
 }
 
 impl ModelPlan {
+    /// Floor applied to frequency scales in every execution estimate —
+    /// the single source of truth for the "deep throttle still prices
+    /// finite" clamp (call sites used to repeat `.max(0.05)` and could
+    /// drift apart).
+    pub const FREQ_FLOOR: f64 = 0.05;
+
     pub fn build(graph: Arc<Graph>, soc: &SocSpec, window_size: usize) -> Self {
         let partition = analyzer::partition(&graph, soc, window_size);
         let units = &partition.units;
@@ -100,13 +106,19 @@ impl ModelPlan {
     /// pure functions of (model, SoC, window size), and serving paths
     /// rebuild the same plans on every run — the cache turns that into a
     /// table clone. Keyed by `(graph.name, graph.fingerprint(), soc.name,
-    /// window_size)`: the structural fingerprint means two same-name
-    /// graphs with different op/edge content can never share a cached
-    /// plan (custom SoC definitions must still use distinct names — the
-    /// SoC side has no fingerprint).
+    /// soc.fingerprint(), window_size)`: structural fingerprints on BOTH
+    /// sides, so neither two same-name graphs with different op/edge
+    /// content nor two same-name SoCs with different processor/support/
+    /// thermal definitions can ever share a cached plan.
     pub fn build_cached(graph: Arc<Graph>, soc: &SocSpec, window_size: usize) -> Self {
-        static CACHE: Memo<(String, u64, String, usize), ModelPlan> = Memo::new();
-        let key = (graph.name.clone(), graph.fingerprint(), soc.name.clone(), window_size);
+        static CACHE: Memo<(String, u64, String, u64, usize), ModelPlan> = Memo::new();
+        let key = (
+            graph.name.clone(),
+            graph.fingerprint(),
+            soc.name.clone(),
+            soc.fingerprint(),
+            window_size,
+        );
         CACHE.get_or_insert_with(key, || ModelPlan::build(graph, soc, window_size))
     }
 
@@ -124,8 +136,11 @@ impl ModelPlan {
     }
 
     /// Execution estimate for a unit on a processor at a frequency scale.
+    /// The scale is floored at 0.05 here — the single authoritative clamp
+    /// (deep-throttle estimates stay finite); call sites used to repeat
+    /// `.max(0.05)` themselves and could drift apart.
     pub fn exec_estimate(&self, unit: usize, proc: ProcId, freq_scale: f64) -> Option<TimeMs> {
-        self.exec_ms[unit][proc].map(|t| t / freq_scale.max(1e-3))
+        self.exec_ms[unit][proc].map(|t| t / freq_scale.max(Self::FREQ_FLOOR))
     }
 
     /// Remaining-work estimate: sum of best-case unit costs for the given
@@ -235,6 +250,38 @@ mod tests {
             (pa.num_units(), pa.est_total_ms),
             (pb.num_units(), pb.est_total_ms),
             "same-name structural variants shared a cached plan"
+        );
+    }
+
+    /// Two structurally different *SoCs* carrying the same name must not
+    /// share a cached plan — the documented memo-collision gap: the old
+    /// key carried `soc.name` with no structural fingerprint, so a custom
+    /// SoC definition reusing a preset's name would be served the
+    /// preset's partitioning. Mirrors the graph-fingerprint collision
+    /// test above.
+    #[test]
+    fn build_cached_distinguishes_same_name_different_socs() {
+        let g = Arc::new(zoo::mobilenet_v1());
+        let mut a = dimensity9000();
+        let mut b = crate::soc::kirin970();
+        a.name = "soc_collision_probe".into();
+        b.name = "soc_collision_probe".into();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let pa = ModelPlan::build_cached(Arc::clone(&g), &a, 3);
+        let pb = ModelPlan::build_cached(Arc::clone(&g), &b, 3);
+        // Each cached plan must match a fresh build against its own SoC
+        // (under the old name-only key the second lookup would have
+        // returned the dimensity partitioning for the kirin).
+        let fa = ModelPlan::build(Arc::clone(&g), &a, 3);
+        let fb = ModelPlan::build(Arc::clone(&g), &b, 3);
+        assert_eq!(pa.num_units(), fa.num_units());
+        assert_eq!(pa.est_total_ms, fa.est_total_ms);
+        assert_eq!(pb.num_units(), fb.num_units());
+        assert_eq!(pb.est_total_ms, fb.est_total_ms);
+        assert_ne!(
+            (pa.num_units(), pa.est_total_ms),
+            (pb.num_units(), pb.est_total_ms),
+            "same-name SoC variants shared a cached plan"
         );
     }
 

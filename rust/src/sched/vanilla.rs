@@ -19,12 +19,20 @@ pub struct VanillaTflite {
     cpu: ProcId,
     /// Per-decision slot-census scratch, reused across calls.
     free: Vec<usize>,
+    taken: Vec<bool>,
+    members: Vec<usize>,
 }
 
 impl VanillaTflite {
     /// `delegates` must provide one entry per session.
     pub fn new(delegates: Vec<ProcId>, cpu: ProcId) -> Self {
-        VanillaTflite { delegates, cpu, free: Vec::new() }
+        VanillaTflite {
+            delegates,
+            cpu,
+            free: Vec::new(),
+            taken: Vec::new(),
+            members: Vec::new(),
+        }
     }
 
     /// Vanilla TFLite 2.16 (the paper's baseline version): the NNAPI
@@ -95,7 +103,14 @@ impl Scheduler for VanillaTflite {
     fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
         let free = &mut self.free;
         super::free_slot_census_into(ctx, free);
+        let batching = ctx.batch.enabled();
+        let taken = &mut self.taken;
+        taken.clear();
+        taken.resize(ready.len(), false);
         for (idx, t) in ready.iter().enumerate() {
+            if taken[idx] {
+                continue;
+            }
             let plan = &ctx.plans[t.session];
             let delegate = self.delegates.get(t.session).copied().unwrap_or(self.cpu);
             // Delegate if the unit is supported there, else CPU fallback.
@@ -109,8 +124,20 @@ impl Scheduler for VanillaTflite {
             if ctx.procs[target].offline || free[target] == 0 {
                 continue;
             }
+            // Group dispatch models a multi-instance interpreter invoke:
+            // concurrent sessions of the same model on the same delegate
+            // fuse into one slot (models batched NNAPI executions).
+            let b = if batching { ctx.batch.group_limit(idx, taken) } else { 1 };
+            taken[idx] = true;
+            if b > 1 {
+                self.members.clear();
+                ctx.batch.members(idx, b, taken, &mut self.members);
+                for &m in &self.members {
+                    taken[m] = true;
+                }
+            }
             free[target] -= 1;
-            out.push(Assignment { ready_idx: idx, proc: target });
+            out.push(Assignment { ready_idx: idx, proc: target, batch: b });
         }
     }
 }

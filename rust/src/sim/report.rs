@@ -207,4 +207,105 @@ impl SimReport {
             .filter_map(|p| p.first_throttle_ms)
             .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.min(t))))
     }
+
+    /// Serialize every run observable — per-session conservation counters
+    /// and latency statistics, per-processor accounting, energy, the full
+    /// assignment trace (with group member lists) and arrival trace, the
+    /// timeline, and the driver event census. Byte-equality of
+    /// `to_json().to_pretty()` between two runs is bit-equality of the
+    /// report — this is the witness the `--batch-max 1` golden-
+    /// equivalence property compares.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let sessions: Vec<Json> = self
+            .sessions
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("model", Json::Str(s.model.clone())),
+                    ("issued", Json::Num(s.issued as f64)),
+                    ("completed", Json::Num(s.completed as f64)),
+                    ("failed", Json::Num(s.failed as f64)),
+                    ("cancelled", Json::Num(s.cancelled as f64)),
+                    ("lat_count", Json::Num(s.latency.count() as f64)),
+                    ("lat_mean", Json::Num(s.latency.mean())),
+                    ("lat_p50", Json::Num(s.latency.p50())),
+                    ("lat_p95", Json::Num(s.latency.p95())),
+                    ("lat_p99", Json::Num(s.latency.p99())),
+                    ("lat_max", Json::Num(s.latency.max())),
+                    ("lat_subsampled", Json::Bool(s.latency.is_subsampled())),
+                    ("fps", Json::Num(s.fps)),
+                    (
+                        "slo_satisfaction",
+                        s.slo_satisfaction.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("slo_ok", Json::Num(s.slo_ok as f64)),
+                    ("slo_n", Json::Num(s.slo_n as f64)),
+                    ("start_ms", Json::Num(s.start_ms)),
+                    ("stop_ms", s.stop_ms.map(Json::Num).unwrap_or(Json::Null)),
+                    ("active_ms", Json::Num(s.active_ms)),
+                ])
+            })
+            .collect();
+        let procs: Vec<Json> = self
+            .procs
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::Str(p.name.clone())),
+                    ("busy_frac", Json::Num(p.busy_frac)),
+                    ("avg_load", Json::Num(p.avg_load)),
+                    ("dispatches", Json::Num(p.dispatches as f64)),
+                    ("throttle_events", Json::Num(p.throttle_events as f64)),
+                    (
+                        "first_throttle_ms",
+                        p.first_throttle_ms.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        // Assignments in the shared flattened row form (see
+        // `AssignRecord::to_row` — single-task records are the classic
+        // four-tuple, bit-for-bit).
+        let assignments: Vec<Json> = self
+            .assignments
+            .iter()
+            .map(|a| Json::Arr(a.to_row().into_iter().map(Json::Num).collect()))
+            .collect();
+        let arrivals: Vec<Json> = self
+            .arrivals
+            .iter()
+            .map(|a| Json::Arr(vec![Json::Num(a.session as f64), Json::Num(a.at)]))
+            .collect();
+        let timeline: Vec<Json> = self
+            .timeline
+            .iter()
+            .map(|e| {
+                Json::Arr(vec![
+                    Json::Num(e.proc as f64),
+                    Json::Num(e.session as f64),
+                    Json::Num(e.req as f64),
+                    Json::Num(e.unit as f64),
+                    Json::Num(e.start),
+                    Json::Num(e.end),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("duration_ms", Json::Num(self.duration_ms)),
+            ("sessions", Json::Arr(sessions)),
+            ("procs", Json::Arr(procs)),
+            ("power_samples", Json::Num(self.power.len() as f64)),
+            ("power_mean_w", Json::Num(self.power.mean())),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("monitor_refreshes", Json::Num(self.monitor_refreshes as f64)),
+            ("exec_errors", Json::Num(self.exec_errors as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("assignments", Json::Arr(assignments)),
+            ("arrivals", Json::Arr(arrivals)),
+            ("timeline", Json::Arr(timeline)),
+        ])
+    }
 }

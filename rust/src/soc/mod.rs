@@ -146,6 +146,61 @@ impl SocSpec {
             .expect("every SoC has a CPU")
     }
 
+    /// Structural fingerprint: FNV-1a over every cost-model-relevant
+    /// property — processor kinds, compute/bandwidth/overhead numbers,
+    /// DVFS ladders, slot counts, support/efficiency tables, contention
+    /// and thermal/power parameters, the transfer model, and the ambient
+    /// temperature. The plan and tuner memo tables key on this alongside
+    /// `name`, mirroring [`crate::graph::Graph::fingerprint`] on the
+    /// model side: two custom SoC definitions that share a name but
+    /// differ structurally can never be served each other's cached
+    /// partitioning. Display names (`name`, `device`, processor names)
+    /// are deliberately excluded — they don't affect plans or costs.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: &mut u64, x: u64) {
+            for b in x.to_le_bytes() {
+                *h ^= b as u64;
+                *h = h.wrapping_mul(PRIME);
+            }
+        }
+        fn mixf(h: &mut u64, x: f64) {
+            mix(h, x.to_bits());
+        }
+        let mut h = OFFSET;
+        mixf(&mut h, self.ambient_c);
+        mixf(&mut h, self.transfer.base_ms);
+        mixf(&mut h, self.transfer.dram_gbps);
+        mix(&mut h, self.processors.len() as u64);
+        for p in &self.processors {
+            mix(&mut h, p.kind as u64);
+            mixf(&mut h, p.peak_gflops);
+            mixf(&mut h, p.mem_bw_gbps);
+            mixf(&mut h, p.launch_overhead_ms);
+            mixf(&mut h, p.op_overhead_ms);
+            mix(&mut h, p.freqs_mhz.len() as u64);
+            for &f in &p.freqs_mhz {
+                mixf(&mut h, f);
+            }
+            mix(&mut h, p.parallel_slots as u64);
+            mixf(&mut h, p.support.fp32_factor);
+            for (k, e) in p.support.entries() {
+                mix(&mut h, k as u64);
+                mixf(&mut h, e);
+            }
+            mixf(&mut h, p.contention_c);
+            mixf(&mut h, p.contention_p);
+            mixf(&mut h, p.thermal_r);
+            mixf(&mut h, p.thermal_c);
+            mixf(&mut h, p.tdp_w);
+            mixf(&mut h, p.idle_w);
+            mixf(&mut h, p.throttle_temp_c);
+            mixf(&mut h, p.critical_temp_c);
+        }
+        h
+    }
+
     /// The accelerator a vanilla TFLite delegate would pick: the non-CPU
     /// processor with the highest peak compute.
     pub fn best_accelerator(&self) -> Option<ProcId> {
@@ -210,6 +265,39 @@ mod tests {
         }
         // Out-of-range levels clamp to the slowest state.
         assert_eq!(cpu.freq_scale(99), cpu.min_freq() / cpu.max_freq());
+    }
+
+    #[test]
+    fn fingerprint_tracks_structure_not_names() {
+        let a = dimensity9000();
+        // Renaming the SoC, device, or a processor changes nothing
+        // structural.
+        let mut renamed = a.clone();
+        renamed.name = "custom_soc".into();
+        renamed.device = "Bench Phone".into();
+        renamed.processors[0].name = "renamed-cluster".into();
+        assert_eq!(a.fingerprint(), renamed.fingerprint());
+        // Any cost-relevant edit changes it: peak compute, support
+        // tables, DVFS ladder, thermal parameters, transfer model.
+        let mut peak = a.clone();
+        peak.processors[1].peak_gflops *= 1.5;
+        assert_ne!(a.fingerprint(), peak.fingerprint());
+        let mut support = a.clone();
+        support.processors[1].support =
+            support.processors[1].support.clone().without(&[crate::graph::OpKind::Add]);
+        assert_ne!(a.fingerprint(), support.fingerprint());
+        let mut ladder = a.clone();
+        ladder.processors[0].freqs_mhz.pop();
+        assert_ne!(a.fingerprint(), ladder.fingerprint());
+        let mut thermal = a.clone();
+        thermal.processors[2].throttle_temp_c += 1.0;
+        assert_ne!(a.fingerprint(), thermal.fingerprint());
+        let mut xfer = a.clone();
+        xfer.transfer.dram_gbps *= 2.0;
+        assert_ne!(a.fingerprint(), xfer.fingerprint());
+        // Presets are mutually distinct.
+        assert_ne!(dimensity9000().fingerprint(), kirin970().fingerprint());
+        assert_ne!(dimensity9000().fingerprint(), snapdragon835().fingerprint());
     }
 
     #[test]

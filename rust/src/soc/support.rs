@@ -79,6 +79,13 @@ impl SupportTable {
         self.eff.insert(kind, e);
         self
     }
+
+    /// Deterministic (BTreeMap-ordered) iteration over the support
+    /// entries — the input [`crate::soc::SocSpec::fingerprint`] folds
+    /// into its structural hash.
+    pub fn entries(&self) -> impl Iterator<Item = (OpKind, f64)> + '_ {
+        self.eff.iter().map(|(&k, &e)| (k, e))
+    }
 }
 
 /// CPU: supports every op. `conv_eff` is low because TFLite's CPU kernels

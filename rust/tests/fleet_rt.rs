@@ -8,26 +8,17 @@ use adms::fleet::{device_seed, run_fleet, ArmSpec, FleetSpec};
 fn small_fleet() -> FleetSpec {
     FleetSpec {
         arms: vec![
-            ArmSpec {
-                soc: "dimensity9000".into(),
-                scheduler: "adms".into(),
-                workload: "frs".into(),
-            },
-            ArmSpec {
-                soc: "kirin970".into(),
-                scheduler: "band".into(),
-                workload: "mobilenet_v2,east".into(),
-            },
+            ArmSpec::new("dimensity9000", "adms", "frs"),
+            ArmSpec::new("kirin970", "band", "mobilenet_v2,east"),
             // frs_burst's bursty identification stream is RNG-driven
             // from t = 0, so this arm is seed-sensitive inside the short
             // horizon below (the closed-loop arms are not).
-            ArmSpec {
-                soc: "dimensity9000".into(),
-                scheduler: "pinned".into(),
-                workload: "scenario:frs_burst".into(),
-            },
+            ArmSpec::new("dimensity9000", "pinned", "scenario:frs_burst"),
+            // A batched arm: group dispatch must be just as
+            // worker-count-deterministic as the classic path.
+            ArmSpec::new("dimensity9000", "adms", "copies:mobilenet_v1:3").batched(3, 5.0),
         ],
-        devices: 7, // deliberately not a multiple of arms or workers
+        devices: 9, // deliberately not a multiple of arms or workers
         seed: 1234,
         cfg: SimConfig {
             duration_ms: 1_200.0,
@@ -86,10 +77,10 @@ fn fleet_seed_reaches_the_devices() {
 fn fleet_arm_assignment_and_conservation() {
     let spec = small_fleet();
     let r = run_fleet(&spec, 4).unwrap();
-    assert_eq!(r.arms.len(), 3);
-    // 7 devices over 3 arms: 3 / 2 / 2.
+    assert_eq!(r.arms.len(), 4);
+    // 9 devices over 4 arms: 3 / 2 / 2 / 2.
     let per_arm: Vec<u64> = r.arms.iter().map(|a| a.agg.devices).collect();
-    assert_eq!(per_arm, vec![3, 2, 2]);
+    assert_eq!(per_arm, vec![3, 2, 2, 2]);
     assert_eq!(r.total.devices as usize, spec.devices);
     for (field, total, by_arm) in [
         ("issued", r.total.issued, r.arms.iter().map(|a| a.agg.issued).sum::<u64>()),
@@ -109,6 +100,10 @@ fn fleet_arm_assignment_and_conservation() {
     // device ran ≥ 1.2 simulated seconds at ≥ idle power.
     assert!(r.total.energy_j > 0.0);
     assert!(r.total.latency.count() > 0);
+    // The batched arm really ran (its per-arm override reached the
+    // devices) and labels itself as batched.
+    assert!(r.arms[3].spec.label().contains("batch 3"), "{}", r.arms[3].spec.label());
+    assert!(r.arms[3].agg.completed > 0, "batched arm completed nothing");
 }
 
 /// Worker counts beyond the device count clamp instead of idling or
