@@ -49,6 +49,7 @@ fn main() {
         plans: &plans,
         procs: &views,
         batch: adms::sched::BatchCtx::OFF,
+        weights: adms::sched::WeightsView::OFF,
     };
 
     let mut b = Bench::new("sched");

@@ -314,6 +314,28 @@ impl Driver {
 
         let mut sess: Vec<Sess> = self.apps.iter().cloned().map(Sess::new).collect();
 
+        // Weight residency (memory-budgeted runs only). With
+        // `mem_budget_bytes = 0` no cache is ever constructed, no load
+        // latency is ever charged, and the dispatch path is bit-exactly
+        // the pre-residency one — the same provable-no-op contract
+        // `batch_max = 1` gives batching.
+        let mut wcache: Option<crate::weights::WeightCache> =
+            if self.cfg.mem_budget_bytes > 0 {
+                let manifests = self
+                    .plans
+                    .iter()
+                    .map(crate::weights::ShardManifest::from_plan)
+                    .collect();
+                Some(crate::weights::WeightCache::new(
+                    &soc,
+                    self.cfg.mem_budget_bytes,
+                    self.cfg.mem_policy,
+                    manifests,
+                ))
+            } else {
+                None
+            };
+
         // Batching (group dispatch) configuration. With `batch_max = 1`
         // every batching structure below is inert and the dispatch path
         // is bit-exactly the pre-batching one.
@@ -559,6 +581,12 @@ impl Driver {
                         // unique) — nothing to schedule against.
                         continue;
                     };
+                    // Release the residency pin the dispatch took (one
+                    // per group — the lead's commit covered every
+                    // member, which shares its shard by definition).
+                    if let Some(c) = wcache.as_mut() {
+                        c.unpin(done.session, done.unit, done.proc);
+                    }
                     // Fan the (group) completion out per member, lead
                     // first then members in member order — for a
                     // single-task dispatch this loop runs exactly once
@@ -804,8 +832,14 @@ impl Driver {
                 } else {
                     crate::sched::BatchCtx::OFF
                 };
-                let ctx =
-                    SchedCtx { now, soc: &soc, plans: &self.plans, procs: views, batch: bctx };
+                let ctx = SchedCtx {
+                    now,
+                    soc: &soc,
+                    plans: &self.plans,
+                    procs: views,
+                    batch: bctx,
+                    weights: crate::sched::WeightsView { cache: wcache.as_ref() },
+                };
                 sched_out.clear();
                 if serialized {
                     let exposed = &exposed_tasks[..exposed_idx.len()];
@@ -957,6 +991,16 @@ impl Driver {
                     }
                     let mgmt = self.scheduler.decision_overhead_ms(plan);
                     let (req, session, unit) = (t.req, t.session, t.unit);
+                    // Weight residency: price the lead's shard on the
+                    // chosen processor (pure — state only mutates on an
+                    // accepted dispatch, so a lost slot race below cannot
+                    // corrupt the cache). Members share the lead's shard
+                    // by the coalescing-key definition, so one load
+                    // covers the whole group.
+                    let load = match wcache.as_ref() {
+                        Some(c) => c.price(&soc, now, session, unit, a.proc),
+                        None => 0.0,
+                    };
                     let token = run_seq + 1;
                     let accepted = self.backend.try_dispatch(DispatchCmd {
                         token,
@@ -967,10 +1011,17 @@ impl Driver {
                         exec_full_ms: exec_full,
                         xfer_ms: xfer,
                         mgmt_ms: mgmt,
+                        load_ms: load,
                         extra: extra.clone(),
                     });
                     if !accepted {
                         continue;
+                    }
+                    if let Some(c) = wcache.as_mut() {
+                        // Commit charges exactly what `price` quoted (the
+                        // state is unchanged in between) and pins the
+                        // shard until the group's completion event.
+                        c.commit(&soc, now, session, unit, a.proc);
                     }
                     run_seq = token;
                     assignments_trace.push(AssignRecord {
@@ -1072,6 +1123,9 @@ impl Driver {
             timeline: be.timeline,
             monitor_refreshes: monitor.refresh_count(),
             exec_errors: be.exec_errors,
+            // All-zero on unbudgeted runs (no cache constructed), so the
+            // report serializes identically either way.
+            cache: wcache.as_ref().map(|c| c.stats()).unwrap_or_default(),
             assignments: assignments_trace,
             arrivals: arrivals_trace,
             events: n_events,

@@ -262,6 +262,22 @@ impl Server {
         self
     }
 
+    /// Per-processor weight-residency budget in bytes (`--mem-budget`):
+    /// `0` (the default) disables residency modeling bit-exactly;
+    /// [`SPEC_BUDGET`](crate::weights::SPEC_BUDGET) budgets each
+    /// processor at its preset `weight_mem_bytes`.
+    pub fn mem_budget_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.mem_budget_bytes = bytes;
+        self
+    }
+
+    /// Eviction policy for full residency domains (`--mem-policy`).
+    /// Only meaningful with a non-zero memory budget.
+    pub fn mem_policy(mut self, policy: crate::weights::MemPolicy) -> Self {
+        self.cfg.mem_policy = policy;
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self

@@ -120,6 +120,8 @@ struct ProcState {
     tick_busy_ms: f64, // within current tick (for power/util)
     tick_slot_ms: f64,
     dispatches: u64,
+    /// Dispatches that paid a weight cold-load (`cmd.load_ms > 0`).
+    cold_loads: u64,
     temp_series: TimeSeries,
     freq_series: TimeSeries,
 }
@@ -200,6 +202,7 @@ impl SimBackend {
                 tick_busy_ms: 0.0,
                 tick_slot_ms: 0.0,
                 dispatches: 0,
+                cold_loads: 0,
                 temp_series: TimeSeries::default(),
                 freq_series: TimeSeries::default(),
             })
@@ -335,7 +338,11 @@ impl ExecutionBackend for SimBackend {
         let nsess =
             active_sessions_with(pstate, now, cmd.session).max(pstate.running.len() + 1);
         let mult = spec.contention_mult(nsess);
-        let service = exec * mult + cmd.xfer_ms + cmd.mgmt_ms;
+        // Weight cold-load latency is flash streaming — serialized
+        // before execution, unscaled by DVFS or contention (0.0 on
+        // unbudgeted runs, keeping this line bit-exact with the
+        // pre-residency service time).
+        let service = exec * mult + cmd.load_ms + cmd.xfer_ms + cmd.mgmt_ms;
         let run = Running {
             token: cmd.token,
             req: cmd.req,
@@ -356,6 +363,9 @@ impl ExecutionBackend for SimBackend {
         p.account(now);
         p.backlog_ms += service;
         p.dispatches += 1;
+        if cmd.load_ms > 0.0 {
+            p.cold_loads += 1;
+        }
         touch_session(p, cmd.session, now);
         p.run_add(cmd.session);
         p.running.push(run);
@@ -489,6 +499,7 @@ impl ExecutionBackend for SimBackend {
                 throttle_events: p.thermal.throttle_events,
                 first_throttle_ms: p.thermal.first_throttle_ms,
                 dispatches: p.dispatches,
+                cold_loads: p.cold_loads,
             })
             .collect();
         BackendReport {
@@ -615,6 +626,7 @@ mod tests {
             exec_full_ms: 5.0,
             xfer_ms: 0.0,
             mgmt_ms: 0.0,
+            load_ms: 0.0,
             extra: vec![(1, 1), (2, 2)],
         });
         assert!(ok);
@@ -666,6 +678,7 @@ mod tests {
             exec_full_ms: 5_000.0,
             xfer_ms: 0.0,
             mgmt_ms: 0.0,
+            load_ms: 0.0,
             extra: Vec::new(),
         });
         assert!(ok);

@@ -81,6 +81,8 @@ struct ProcPool {
     /// Start of the current ≥ 1-task interval, if one is open.
     busy_since: Option<TimeMs>,
     dispatches: u64,
+    /// Dispatches that paid a weight cold-load (`cmd.load_ms > 0`).
+    cold_loads: u64,
 }
 
 /// Wall-clock serving backend.
@@ -161,6 +163,7 @@ impl ThreadPoolBackend {
                     busy_ms: 0.0,
                     busy_since: None,
                     dispatches: 0,
+                    cold_loads: 0,
                 }
             })
             .collect();
@@ -305,7 +308,10 @@ impl ExecutionBackend for ThreadPoolBackend {
         if self.pools[cmd.proc].inflight >= slots {
             return false;
         }
-        let est_ms = cmd.exec_full_ms + cmd.xfer_ms + cmd.mgmt_ms;
+        // Cold weight loads pace the synthetic payload too: the thread
+        // pool stands in for a device whose first touch of a model on a
+        // processor streams the weights from flash (0.0 unbudgeted).
+        let est_ms = cmd.exec_full_ms + cmd.load_ms + cmd.xfer_ms + cmd.mgmt_ms;
         // Real stage payload when the session provides one for this unit
         // (unit 0 eats the session input; later units the predecessor's
         // output), synthetic cost-model pacing otherwise.
@@ -335,6 +341,9 @@ impl ExecutionBackend for ThreadPoolBackend {
         }
         pool.inflight += 1;
         pool.dispatches += 1;
+        if cmd.load_ms > 0.0 {
+            pool.cold_loads += 1;
+        }
         self.inflight.insert(
             cmd.token,
             Inflight {
@@ -395,8 +404,9 @@ impl ExecutionBackend for ThreadPoolBackend {
         let pools = std::mem::take(&mut self.pools);
         let mut procs = Vec::new();
         for (i, pool) in pools.into_iter().enumerate() {
-            let ProcPool { tx, handles, slot_ms, mut busy_ms, busy_since, dispatches, .. } =
-                pool;
+            let ProcPool {
+                tx, handles, slot_ms, mut busy_ms, busy_since, dispatches, cold_loads, ..
+            } = pool;
             drop(tx);
             for h in handles {
                 let _ = h.join();
@@ -414,6 +424,7 @@ impl ExecutionBackend for ThreadPoolBackend {
                 throttle_events: 0,
                 first_throttle_ms: None,
                 dispatches,
+                cold_loads,
             });
         }
         BackendReport {

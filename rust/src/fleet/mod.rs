@@ -173,6 +173,13 @@ pub struct DeviceDigest {
     pub busy_frac_sum: f64,
     pub procs: u64,
     pub events: u64,
+    /// Weight-cache counters (all zero on unbudgeted runs — the driver
+    /// never constructs a cache, so the report carries defaults).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_bytes_loaded: u64,
+    pub cold_load_ms: f64,
 }
 
 impl DeviceDigest {
@@ -198,6 +205,11 @@ impl DeviceDigest {
             busy_frac_sum: r.procs.iter().map(|p| p.busy_frac).sum(),
             procs: r.procs.len() as u64,
             events: r.events,
+            cache_hits: r.cache.hits,
+            cache_misses: r.cache.misses,
+            cache_evictions: r.cache.evictions,
+            cache_bytes_loaded: r.cache.bytes_loaded,
+            cold_load_ms: r.cache.cold_load_ms,
         }
     }
 }
@@ -220,6 +232,11 @@ pub struct FleetAgg {
     pub busy_frac_sum: f64,
     pub procs: u64,
     pub events: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_bytes_loaded: u64,
+    pub cold_load_ms: f64,
 }
 
 impl FleetAgg {
@@ -238,6 +255,11 @@ impl FleetAgg {
         self.busy_frac_sum += d.busy_frac_sum;
         self.procs += d.procs;
         self.events += d.events;
+        self.cache_hits += d.cache_hits;
+        self.cache_misses += d.cache_misses;
+        self.cache_evictions += d.cache_evictions;
+        self.cache_bytes_loaded += d.cache_bytes_loaded;
+        self.cold_load_ms += d.cold_load_ms;
     }
 
     /// Exact SLO attainment over every SLO-scored request in the set.
@@ -302,6 +324,11 @@ impl FleetAgg {
             ("throttle_events", Json::Num(self.throttle_events as f64)),
             ("avg_busy_frac", Json::Num(self.avg_busy_frac())),
             ("events", Json::Num(self.events as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+            ("cache_bytes_loaded", Json::Num(self.cache_bytes_loaded as f64)),
+            ("cold_load_ms", Json::Num(self.cold_load_ms)),
         ])
     }
 }
@@ -411,6 +438,18 @@ impl FleetReport {
             row(&a.spec.label(), &a.agg);
         }
         row("fleet total", &self.total);
+        if self.total.cache_hits + self.total.cache_misses > 0 {
+            let _ = writeln!(
+                out,
+                "weights: {} hits / {} misses / {} evictions, {:.1} MiB \
+                 cold-loaded ({:.0} ms stall)",
+                self.total.cache_hits,
+                self.total.cache_misses,
+                self.total.cache_evictions,
+                self.total.cache_bytes_loaded as f64 / (1u64 << 20) as f64,
+                self.total.cold_load_ms,
+            );
+        }
         if any_subsampled {
             let _ = writeln!(
                 out,

@@ -64,6 +64,22 @@ impl GraphBuilder {
         self.conv_like(OpKind::DilatedConv2d, x, c_out, k, 1, dilation)
     }
 
+    /// One half of a spatially factorized convolution (a 1×k or k×1
+    /// kernel), stride 1. Weight and FLOP counts scale with `k`, not `k²`
+    /// — InceptionV4's 1×7/7×1 pairs and block-C 1×3/3×1 splits use this.
+    pub fn factorized_conv2d(&mut self, x: NodeId, c_out: u64, k: u64) -> NodeId {
+        let s = self.shape(x);
+        let flops = 2 * s.h() * s.w() * c_out * s.c() * k;
+        let params = (s.c() * c_out * k + c_out) * self.dtype_bytes;
+        self.push(
+            OpKind::Conv2d,
+            vec![x],
+            TensorShape::nhwc(s.n(), s.h(), s.w(), c_out),
+            flops,
+            params,
+        )
+    }
+
     fn conv_like(
         &mut self,
         kind: OpKind,
@@ -344,6 +360,18 @@ mod tests {
             assert_eq!(g.nodes[p].out_shape.c(), 8);
             assert_eq!(g.nodes[p].kind, OpKind::Split);
         }
+    }
+
+    #[test]
+    fn factorized_conv_scales_with_k_not_k_squared() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input([1, 17, 17, 192]);
+        let f = b.factorized_conv2d(x, 224, 7);
+        let g = b.finish();
+        assert_eq!(g.nodes[f].kind, OpKind::Conv2d);
+        assert_eq!(g.nodes[f].out_shape, TensorShape::nhwc(1, 17, 17, 224));
+        assert_eq!(g.nodes[f].param_bytes, (192 * 224 * 7 + 224) * 4);
+        assert_eq!(g.nodes[f].flops, 2 * 17 * 17 * 224 * 192 * 7);
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! * [`soc`] / [`thermal`] / [`power`] — a calibrated heterogeneous
 //!   mobile-SoC simulator (Dimensity 9000, Kirin 970, Snapdragon 835)
 //!   with DVFS ladders, lumped-RC thermal dynamics, and power accounting;
+//! * [`weights`] — model weights as a scheduled resource: per-model
+//!   shard manifests aligned with unit subgraphs, and the per-processor
+//!   residency cache (cold-load pricing, cost-aware eviction) behind
+//!   `--mem-budget`;
 //! * [`exec`] — the backend-agnostic execution core: the shared
 //!   scheduler-driven dispatch loop ([`exec::Driver`]), the
 //!   [`exec::ExecutionBackend`] contract, its two substrates
@@ -49,6 +53,7 @@ pub mod power;
 pub mod monitor;
 pub mod analyzer;
 pub mod sched;
+pub mod weights;
 pub mod exec;
 pub mod sim;
 pub mod scenario;

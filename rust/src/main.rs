@@ -17,7 +17,9 @@
 //!                         worker threads, merged into one FleetReport
 //!   bench                 run the simulator throughput suite and write
 //!                         BENCH_sim.json (the tracked perf trajectory)
-//!   models | socs         list the zoo / SoC presets
+//!   models | socs         list the zoo (with weight/activation
+//!                         footprints; --model for per-unit shards) /
+//!                         the SoC presets
 
 use adms::analyzer;
 use adms::experiments;
@@ -74,18 +76,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "scenario" => cmd_scenario(rest),
         "fleet" => cmd_fleet(rest),
         "bench" => cmd_bench(rest),
-        "models" => {
-            for m in zoo::MODEL_NAMES {
-                let g = zoo::by_name(m).unwrap();
-                println!(
-                    "{m:18} {:22} {:4} ops  {:8.2} GFLOPs",
-                    zoo::display_name(m),
-                    g.num_real_ops(),
-                    g.total_flops() as f64 / 1e9
-                );
-            }
-            Ok(())
-        }
+        "models" => cmd_models(rest),
         "socs" => {
             for s in SOC_NAMES {
                 let soc = soc_by_name(s).unwrap();
@@ -109,6 +100,109 @@ fn dispatch(argv: &[String]) -> Result<()> {
         }
         other => bail!("unknown command '{other}'\nusage: {USAGE}"),
     }
+}
+
+/// `adms models`: the zoo listing, footprint-aware. The summary table
+/// partitions every model on `--soc` at `--ws` and reports its shard
+/// manifest totals; `--model` prints the per-unit shard table (weight and
+/// peak-activation bytes per unit — the numbers `--mem-budget` schedules
+/// against).
+fn cmd_models(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", takes_value: true, help: "print the per-unit shard table for one model", default: None },
+        OptSpec { name: "soc", takes_value: true, help: "SoC whose partition defines the units", default: Some("dimensity9000") },
+        OptSpec { name: "ws", takes_value: true, help: "partition window size", default: Some("1") },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("adms models [--model NAME] [--soc SOC] [--ws N]", &specs));
+        println!("models: {}", zoo::MODEL_NAMES.join(", "));
+        return Ok(());
+    }
+    let soc_name = args.get_or("soc", "dimensity9000");
+    let soc =
+        soc_by_name(&soc_name).ok_or_else(|| anyhow::anyhow!("unknown soc '{soc_name}'"))?;
+    let ws = args.get_usize("ws", 1)?.max(1);
+    const MIB: f64 = (1u64 << 20) as f64;
+    if let Some(name) = args.get("model") {
+        let g = zoo::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (`adms models` lists them)"))?;
+        let m = adms::weights::ShardManifest::build(&g, &analyzer::partition(&g, &soc, ws));
+        println!(
+            "{} — {} unit(s) at window {ws} on {soc_name}, manifest fingerprint {:016x}",
+            zoo::display_name(name),
+            m.shards.len(),
+            m.fingerprint
+        );
+        println!("{:>5} {:>5} {:>12} {:>13}", "unit", "ops", "weights MiB", "peak act MiB");
+        for sh in &m.shards {
+            println!(
+                "{:>5} {:>5} {:>12.2} {:>13.2}",
+                sh.unit,
+                sh.ops,
+                sh.weight_bytes as f64 / MIB,
+                sh.activation_bytes as f64 / MIB
+            );
+        }
+        println!(
+            "{:>5} {:>5} {:>12.2} {:>13.2}",
+            "all",
+            m.shards.iter().map(|sh| sh.ops).sum::<usize>(),
+            m.total_weight_bytes() as f64 / MIB,
+            m.peak_activation_bytes() as f64 / MIB
+        );
+    } else {
+        println!(
+            "{:18} {:22} {:>4} {:>8} {:>5} {:>11} {:>13}",
+            "model", "display", "ops", "GFLOPs", "units", "weights MiB", "peak act MiB"
+        );
+        for name in zoo::MODEL_NAMES {
+            let g = zoo::by_name(name).unwrap();
+            let m = adms::weights::ShardManifest::build(&g, &analyzer::partition(&g, &soc, ws));
+            println!(
+                "{name:18} {:22} {:>4} {:>8.2} {:>5} {:>11.2} {:>13.2}",
+                zoo::display_name(name),
+                g.num_real_ops(),
+                g.total_flops() as f64 / 1e9,
+                m.shards.len(),
+                m.total_weight_bytes() as f64 / MIB,
+                m.peak_activation_bytes() as f64 / MIB
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Parse a `--mem-budget` value: `0`/`off` disables residency modeling,
+/// `spec` uses each processor's `weight_mem_bytes` from the SoC preset,
+/// and a number with an optional K/M/G suffix (KiB/MiB/GiB) is a uniform
+/// per-processor byte budget.
+fn parse_mem_budget(s: &str) -> Result<u64> {
+    let t = s.trim();
+    if t.eq_ignore_ascii_case("off") {
+        return Ok(0);
+    }
+    if t.eq_ignore_ascii_case("spec") {
+        return Ok(adms::weights::SPEC_BUDGET);
+    }
+    let (digits, mult) = match t.as_bytes().last() {
+        Some(&b'k') | Some(&b'K') => (&t[..t.len() - 1], 1u64 << 10),
+        Some(&b'm') | Some(&b'M') => (&t[..t.len() - 1], 1u64 << 20),
+        Some(&b'g') | Some(&b'G') => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t, 1),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--mem-budget: expected BYTES[K|M|G], 'spec', or 'off', got '{s}'"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("--mem-budget '{s}' overflows u64"))
+}
+
+fn parse_mem_policy(s: &str) -> Result<adms::weights::MemPolicy> {
+    adms::weights::MemPolicy::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("--mem-policy: expected 'cost' or 'lru', got '{s}'"))
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
@@ -273,6 +367,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "slo", takes_value: true, help: "per-request SLO in ms (all sessions)", default: None },
         OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse (1 = batching off)", default: Some("1") },
         OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms: how long a batchable task may wait for peers", default: Some("0") },
+        OptSpec { name: "mem-budget", takes_value: true, help: "per-processor weight-residency budget: BYTES[K|M|G], 'spec' (SoC preset budgets), or 'off' (0 = residency modeling disabled)", default: Some("0") },
+        OptSpec { name: "mem-policy", takes_value: true, help: "weight-cache eviction policy: cost (GreedyDual-Size) | lru", default: Some("cost") },
         OptSpec { name: "pace", takes_value: true, help: "synthetic payload pace multiplier", default: Some("1") },
         OptSpec { name: "seed", takes_value: true, help: "rng seed", default: Some("42") },
         OptSpec { name: "probe", takes_value: false, help: "legacy: serve the AOT numerics probe (PJRT)", default: None },
@@ -376,6 +472,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .seed(seed)
         .batch_max(batch_max)
         .batch_window_ms(batch_window)
+        .mem_budget_bytes(parse_mem_budget(&args.get_or("mem-budget", "0"))?)
+        .mem_policy(parse_mem_policy(&args.get_or("mem-policy", "cost"))?)
         .pace(pace);
     // Scenarios control their own lifecycle: an implicit quota would end
     // the run before the declared churn plays out, so only an explicit
@@ -444,11 +542,34 @@ fn print_serve_report(report: &adms::sim::SimReport) {
         );
     }
     for p in &report.procs {
+        if p.cold_loads > 0 {
+            println!(
+                "  {:22} busy {:5.1}%  dispatches {:6}  cold loads {:4}",
+                p.name,
+                100.0 * p.busy_frac,
+                p.dispatches,
+                p.cold_loads
+            );
+        } else {
+            println!(
+                "  {:22} busy {:5.1}%  dispatches {:6}",
+                p.name,
+                100.0 * p.busy_frac,
+                p.dispatches
+            );
+        }
+    }
+    let c = &report.cache;
+    if c.hits + c.misses > 0 {
         println!(
-            "  {:22} busy {:5.1}%  dispatches {:6}",
-            p.name,
-            100.0 * p.busy_frac,
-            p.dispatches
+            "weights: {} hits / {} misses / {} evictions, {:.1} MiB cold-loaded \
+             ({:.0} ms stall), {:.1} MiB resident at end",
+            c.hits,
+            c.misses,
+            c.evictions,
+            c.bytes_loaded as f64 / (1u64 << 20) as f64,
+            c.cold_load_ms,
+            c.bytes_resident as f64 / (1u64 << 20) as f64,
         );
     }
 }
@@ -496,6 +617,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
         OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse, all arms (1 = off)", default: Some("1") },
         OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms for batchable tasks", default: Some("0") },
+        OptSpec { name: "mem-budget", takes_value: true, help: "per-processor weight-residency budget, all arms: BYTES[K|M|G], 'spec', or 'off'", default: Some("0") },
+        OptSpec { name: "mem-policy", takes_value: true, help: "weight-cache eviction policy: cost | lru", default: Some("cost") },
         OptSpec { name: "json", takes_value: true, help: "also write the FleetReport as JSON here", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
@@ -543,6 +666,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         max_requests: (requests > 0).then_some(requests),
         batch_max: args.get_usize("batch-max", 1)?.max(1),
         batch_window_ms: args.get_f64("batch-window", 0.0)?.max(0.0),
+        mem_budget_bytes: parse_mem_budget(&args.get_or("mem-budget", "0"))?,
+        mem_policy: parse_mem_policy(&args.get_or("mem-policy", "cost"))?,
         ..Default::default()
     };
     let spec = FleetSpec {

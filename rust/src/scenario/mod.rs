@@ -183,7 +183,14 @@ fn validate_mode(mode: &ArrivalMode) -> Result<()> {
 }
 
 /// Named dynamic scenarios accepted by `adms serve --scenario`.
-pub const SCENARIO_NAMES: [&str; 3] = ["frs_burst", "churn_mix", "phase_shift"];
+pub const SCENARIO_NAMES: [&str; 6] = [
+    "frs_burst",
+    "churn_mix",
+    "phase_shift",
+    "model_churn",
+    "cold_start_storm",
+    "cache_thrash",
+];
 
 /// Look up a named scenario.
 pub fn by_name(name: &str) -> Option<Scenario> {
@@ -191,6 +198,9 @@ pub fn by_name(name: &str) -> Option<Scenario> {
         "frs_burst" => Some(frs_burst()),
         "churn_mix" => Some(churn_mix()),
         "phase_shift" => Some(phase_shift()),
+        "model_churn" => Some(model_churn()),
+        "cold_start_storm" => Some(cold_start_storm()),
+        "cache_thrash" => Some(cache_thrash()),
         _ => None,
     }
 }
@@ -217,6 +227,9 @@ pub fn describe(name: &str) -> &'static str {
         "frs_burst" => "FRS with bursty identification load and a heavy model joining mid-run",
         "churn_mix" => "sessions of escalating complexity join every few seconds, earlier ones retire",
         "phase_shift" => "camera pipeline shifting 30 fps -> burst -> 10 fps under a closed-loop classifier",
+        "model_churn" => "a rotating cast of models joins and retires so delegate weights churn across processors",
+        "cold_start_storm" => "six distinct models all admitted within the first two seconds, every shard cold",
+        "cache_thrash" => "alternating heavyweight models whose combined weights exceed any residency budget",
         _ => "",
     }
 }
@@ -296,6 +309,79 @@ pub fn phase_shift() -> Scenario {
             ArrivalMode::Bursty { rate_rps: 30.0, burst_factor: 3.0, period_ms: 1_000.0 },
         )
         .rate(8_000.0, 0, ArrivalMode::Periodic(100.0))
+}
+
+/// Weight-residency churn (`--mem-budget` scenarios): a rotating cast of
+/// models with disjoint weights joins and retires every ~2.5 s, so the
+/// processors' residency domains keep turning over. On an unbudgeted run
+/// this is just session churn; under a budget it is the eviction-policy
+/// workout.
+pub fn model_churn() -> Scenario {
+    Scenario::new("model_churn")
+        .start(0.0, App::closed_loop("mobilenet_v2"))
+        .start(0.0, App::closed_loop("retinaface"))
+        .start(
+            2_500.0,
+            App { model: "east".into(), slo_ms: None, mode: ArrivalMode::Poisson(6.0) },
+        )
+        .stop(5_000.0, 0)
+        .start(5_000.0, App::closed_loop("efficientnet4"))
+        .stop(7_500.0, 1)
+        .start(
+            7_500.0,
+            App {
+                model: "arcface_mobile".into(),
+                slo_ms: Some(60.0),
+                mode: ArrivalMode::Periodic(40.0),
+            },
+        )
+        .stop(10_000.0, 2)
+        .start(10_000.0, App::closed_loop("handlmk"))
+        .stop(12_500.0, 3)
+}
+
+/// Cold-start storm: six distinct models are all admitted within the
+/// first two seconds of the run, so every first dispatch of every unit
+/// on every processor is a cold load. The multi-DNN admission spike is
+/// where cache-aware placement (ADMS pricing residency misses) separates
+/// most sharply from cache-blind baselines.
+pub fn cold_start_storm() -> Scenario {
+    Scenario::new("cold_start_storm")
+        .start(0.0, App::closed_loop("mobilenet_v1"))
+        .start(
+            400.0,
+            App {
+                model: "mobilenet_v2".into(),
+                slo_ms: Some(50.0),
+                mode: ArrivalMode::Periodic(40.0),
+            },
+        )
+        .start(800.0, App::closed_loop("retinaface"))
+        .start(
+            1_200.0,
+            App {
+                model: "arcface_mobile".into(),
+                slo_ms: Some(60.0),
+                mode: ArrivalMode::Periodic(50.0),
+            },
+        )
+        .start(1_600.0, App::closed_loop("handlmk"))
+        .start(
+            2_000.0,
+            App { model: "east".into(), slo_ms: None, mode: ArrivalMode::Poisson(4.0) },
+        )
+}
+
+/// Cache thrash: heavyweight models (hundreds of MB of fp32 weights
+/// between them) running concurrently, with the heaviest joining mid-run
+/// — under a constrained budget every domain's working set exceeds its
+/// capacity and eviction policy dominates throughput.
+pub fn cache_thrash() -> Scenario {
+    Scenario::new("cache_thrash")
+        .start(0.0, App::closed_loop("inception_v4"))
+        .start(0.0, App { model: "east".into(), slo_ms: None, mode: ArrivalMode::Poisson(3.0) })
+        .start(3_000.0, App::closed_loop("arcface_resnet50"))
+        .stop(9_000.0, 1)
 }
 
 #[cfg(test)]

@@ -126,7 +126,14 @@ impl Adms {
         // Thermal-headroom penalty: steer heavy work off hot processors.
         let over = (self.cfg.thermal_margin_c - view.headroom_c).max(0.0);
         let s_thermal = self.cfg.thermal_penalty * over * exec;
-        Some(view.backlog_ms + extra_backlog + exec + xfer + s_thermal)
+        // Weight-residency miss price: what the driver will charge to
+        // cold-load (or wait on) this unit's shard on `proc`. Exactly
+        // 0.0 on unbudgeted runs (`WeightsView::OFF`), keeping this sum
+        // bit-identical to the cache-blind cost there. This is what
+        // makes ADMS cache-aware: a slower processor whose shard is
+        // warm can beat a faster one that must stream weights first.
+        let load = ctx.residency_miss_ms(t.session, t.unit, proc);
+        Some(view.backlog_ms + extra_backlog + exec + xfer + s_thermal + load)
     }
 
     /// Eq 4 with the deadline term evaluated on an explicit slack — for
@@ -295,7 +302,14 @@ mod tests {
         plans: &'a [ModelPlan],
         procs: &'a [ProcView],
     ) -> SchedCtx<'a> {
-        SchedCtx { now, soc, plans, procs, batch: crate::sched::BatchCtx::OFF }
+        SchedCtx {
+            now,
+            soc,
+            plans,
+            procs,
+            batch: crate::sched::BatchCtx::OFF,
+            weights: crate::sched::WeightsView::OFF,
+        }
     }
 
     fn pending(unit: usize, now: f64) -> PendingTask {

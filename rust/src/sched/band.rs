@@ -80,7 +80,12 @@ impl Scheduler for Band {
                     })
                     .sum::<f64>()
                     * b as f64;
-                let expected = backlog[p] + exec + xfer;
+                // Band's runtime does see delegate weight residency (its
+                // model pool prepares per-worker contexts), so its
+                // estimate includes the cold-load price — 0.0 exactly on
+                // unbudgeted runs, keeping the sum bit-identical there.
+                let load = ctx.residency_miss_ms(t.session, t.unit, p);
+                let expected = backlog[p] + exec + xfer + load;
                 if best.map(|(_, b)| expected < b).unwrap_or(true) {
                     best = Some((p, expected));
                 }

@@ -157,6 +157,19 @@ impl BatchCtx<'_> {
     }
 }
 
+/// Weight-residency context the driver hands the scheduler: a read-only
+/// view of the [`WeightCache`](crate::weights::WeightCache), present only
+/// on memory-budgeted runs ([`WeightsView::OFF`] otherwise).
+#[derive(Clone, Copy)]
+pub struct WeightsView<'a> {
+    pub cache: Option<&'a crate::weights::WeightCache>,
+}
+
+impl WeightsView<'_> {
+    /// The disabled context (the pre-residency scheduler contract).
+    pub const OFF: WeightsView<'static> = WeightsView { cache: None };
+}
+
 /// What the scheduler sees when asked for a decision.
 pub struct SchedCtx<'a> {
     pub now: TimeMs,
@@ -167,6 +180,9 @@ pub struct SchedCtx<'a> {
     pub procs: &'a [ProcView],
     /// Group-dispatch context ([`BatchCtx::OFF`] when batching is off).
     pub batch: BatchCtx<'a>,
+    /// Per-processor weight residency ([`WeightsView::OFF`] when the run
+    /// has no memory budget).
+    pub weights: WeightsView<'a>,
 }
 
 impl<'a> SchedCtx<'a> {
@@ -192,6 +208,18 @@ impl<'a> SchedCtx<'a> {
             .filter(|p| self.free_slots(p) > 0)
             .map(|p| p.id)
             .collect()
+    }
+
+    /// Cold-load delay that dispatching `(session, unit)` on `proc` right
+    /// now would incur — 0.0 when the shard is already warm (or warming
+    /// ahead of `now`), and exactly 0.0 on unbudgeted runs. Cache-aware
+    /// policies (ADMS, Band) add this to their placement cost; vanilla
+    /// and pinned stay cache-blind as baselines.
+    pub fn residency_miss_ms(&self, session: SessId, unit: usize, proc: ProcId) -> TimeMs {
+        match self.weights.cache {
+            Some(c) => c.price(self.soc, self.now, session, unit, proc),
+            None => 0.0,
+        }
     }
 }
 
@@ -301,6 +329,7 @@ mod tests {
             plans: &plans,
             procs: &views,
             batch: BatchCtx::OFF,
+            weights: WeightsView::OFF,
         };
         let avail = ctx.available_procs();
         assert!(!avail.contains(&1));
@@ -332,6 +361,7 @@ mod tests {
             plans: &plans,
             procs: &views,
             batch: BatchCtx::OFF,
+            weights: WeightsView::OFF,
         };
         let census = free_slot_census(&ctx);
         let avail = ctx.available_procs();

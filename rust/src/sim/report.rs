@@ -64,6 +64,9 @@ pub struct ProcStats {
     pub throttle_events: u64,
     pub first_throttle_ms: Option<TimeMs>,
     pub dispatches: u64,
+    /// Dispatches that paid a weight cold-load on this processor
+    /// (always 0 on unbudgeted runs).
+    pub cold_loads: u64,
 }
 
 /// Full execution report — produced identically by the discrete-event
@@ -85,6 +88,10 @@ pub struct SimReport {
     pub monitor_refreshes: u64,
     /// Payload execution errors (thread-pool backend).
     pub exec_errors: u64,
+    /// Weight-residency counters (`--mem-budget`). All-zero on
+    /// unbudgeted runs — the cache is never constructed — so the report
+    /// (and its JSON form) is identical to pre-residency builds there.
+    pub cache: crate::weights::CacheStats,
     /// Scheduling decisions in dispatch order — the cross-backend
     /// determinism witness.
     pub assignments: Vec<crate::exec::AssignRecord>,
@@ -256,6 +263,7 @@ impl SimReport {
                     ("busy_frac", Json::Num(p.busy_frac)),
                     ("avg_load", Json::Num(p.avg_load)),
                     ("dispatches", Json::Num(p.dispatches as f64)),
+                    ("cold_loads", Json::Num(p.cold_loads as f64)),
                     ("throttle_events", Json::Num(p.throttle_events as f64)),
                     (
                         "first_throttle_ms",
@@ -302,6 +310,17 @@ impl SimReport {
             ("energy_j", Json::Num(self.energy_j)),
             ("monitor_refreshes", Json::Num(self.monitor_refreshes as f64)),
             ("exec_errors", Json::Num(self.exec_errors as f64)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(self.cache.hits as f64)),
+                    ("misses", Json::Num(self.cache.misses as f64)),
+                    ("evictions", Json::Num(self.cache.evictions as f64)),
+                    ("bytes_loaded", Json::Num(self.cache.bytes_loaded as f64)),
+                    ("bytes_resident", Json::Num(self.cache.bytes_resident as f64)),
+                    ("cold_load_ms", Json::Num(self.cache.cold_load_ms)),
+                ]),
+            ),
             ("events", Json::Num(self.events as f64)),
             ("assignments", Json::Arr(assignments)),
             ("arrivals", Json::Arr(arrivals)),

@@ -93,6 +93,18 @@ pub fn batch_latency_ms(spec: &ProcessorSpec, unit_ms: TimeMs, b: usize) -> Time
     setup + marginal * (1.0 + (b - 1) as f64 * batch_marginal_frac(spec))
 }
 
+/// Cost of cold-loading `bytes` of model weights from flash storage into a
+/// processor's residency domain: one I/O issue overhead plus bytes over
+/// the storage sequential-read bandwidth. Calibrated so zero bytes cost
+/// *exactly* nothing — shards of pure elementwise/shape ops carry no
+/// weights, and pricing them at 0.0 keeps the unbudgeted path bit-exact.
+pub fn cold_load_ms(soc: &SocSpec, bytes: u64) -> TimeMs {
+    if bytes == 0 {
+        return 0.0;
+    }
+    soc.storage.base_ms + bytes as f64 / (soc.storage.read_gbps * 1e9) * 1e3
+}
+
 /// Cost of moving `bytes` between two processors (via shared DRAM). Zero
 /// when source and destination are the same processor.
 pub fn transfer_ms(soc: &SocSpec, from: usize, to: usize, bytes: u64) -> TimeMs {
@@ -188,6 +200,19 @@ mod tests {
         let npu = &soc.processors[soc.proc_by_kind(crate::soc::ProcKind::Npu).unwrap()];
         let cpu = &soc.processors[soc.cpu_id()];
         assert!(batch_marginal_frac(npu) < batch_marginal_frac(cpu));
+    }
+
+    #[test]
+    fn cold_load_is_free_at_zero_bytes_and_scales_linearly() {
+        let soc = dimensity9000();
+        assert_eq!(cold_load_ms(&soc, 0), 0.0);
+        let small = cold_load_ms(&soc, 1 << 20);
+        let large = cold_load_ms(&soc, 64 << 20);
+        assert!(small >= soc.storage.base_ms);
+        assert!(large > small);
+        // Past the fixed issue cost, 64× the bytes ≈ 64× the stream time.
+        let stream = |ms: f64| ms - soc.storage.base_ms;
+        assert!((stream(large) / stream(small) - 64.0).abs() < 1e-6);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod support;
 pub mod cost;
 pub mod presets;
 
-pub use cost::{op_latency_ms, subgraph_latency_ms, transfer_ms};
+pub use cost::{cold_load_ms, op_latency_ms, subgraph_latency_ms, transfer_ms};
 pub use presets::{dimensity9000, kirin970, snapdragon835, soc_by_name, SOC_NAMES};
 pub use support::SupportTable;
 
@@ -90,6 +90,12 @@ pub struct ProcessorSpec {
     /// Hard cutoff: the processor is taken offline above this (GPUs on the
     /// paper's testbed shut down entirely — Fig 12).
     pub critical_temp_c: f64,
+    /// Weight-residency domain capacity, bytes: how much delegate-prepared
+    /// model weight data can stay resident for this processor (NNAPI/TFLite
+    /// delegates keep a per-accelerator compiled copy). The weight cache
+    /// ([`crate::weights`]) evicts against this when a run sets a memory
+    /// budget; unbudgeted runs never consult it.
+    pub weight_mem_bytes: u64,
 }
 
 impl ProcessorSpec {
@@ -121,6 +127,15 @@ pub struct TransferModel {
     pub dram_gbps: f64,
 }
 
+/// Flash-storage read path: cold-loading model weights costs a fixed I/O
+/// issue overhead plus bytes over the UFS/eMMC sequential-read bandwidth.
+/// This is the storage-bandwidth term behind [`cost::cold_load_ms`].
+#[derive(Debug, Clone)]
+pub struct StorageModel {
+    pub base_ms: f64,
+    pub read_gbps: f64,
+}
+
 /// One system-on-chip: a named set of processors plus shared-memory
 /// transfer characteristics and an ambient operating temperature.
 #[derive(Debug, Clone)]
@@ -129,6 +144,7 @@ pub struct SocSpec {
     pub device: String,
     pub processors: Vec<ProcessorSpec>,
     pub transfer: TransferModel,
+    pub storage: StorageModel,
     pub ambient_c: f64,
 }
 
@@ -172,6 +188,8 @@ impl SocSpec {
         mixf(&mut h, self.ambient_c);
         mixf(&mut h, self.transfer.base_ms);
         mixf(&mut h, self.transfer.dram_gbps);
+        mixf(&mut h, self.storage.base_ms);
+        mixf(&mut h, self.storage.read_gbps);
         mix(&mut h, self.processors.len() as u64);
         for p in &self.processors {
             mix(&mut h, p.kind as u64);
@@ -197,6 +215,7 @@ impl SocSpec {
             mixf(&mut h, p.idle_w);
             mixf(&mut h, p.throttle_temp_c);
             mixf(&mut h, p.critical_temp_c);
+            mix(&mut h, p.weight_mem_bytes);
         }
         h
     }
@@ -225,8 +244,10 @@ mod tests {
             let cpu = &soc.processors[soc.cpu_id()];
             assert_eq!(cpu.kind, ProcKind::Cpu);
             assert!(soc.best_accelerator().is_some());
+            assert!(soc.storage.read_gbps > 0.0);
             for p in &soc.processors {
                 assert!(p.peak_gflops > 0.0);
+                assert!(p.weight_mem_bytes > 0);
                 assert!(!p.freqs_mhz.is_empty());
                 assert!(p.tdp_w > p.idle_w);
                 assert!(p.critical_temp_c > p.throttle_temp_c);
@@ -295,6 +316,12 @@ mod tests {
         let mut xfer = a.clone();
         xfer.transfer.dram_gbps *= 2.0;
         assert_ne!(a.fingerprint(), xfer.fingerprint());
+        let mut storage = a.clone();
+        storage.storage.read_gbps *= 2.0;
+        assert_ne!(a.fingerprint(), storage.fingerprint());
+        let mut mem = a.clone();
+        mem.processors[1].weight_mem_bytes /= 2;
+        assert_ne!(a.fingerprint(), mem.fingerprint());
         // Presets are mutually distinct.
         assert_ne!(dimensity9000().fingerprint(), kirin970().fingerprint());
         assert_ne!(dimensity9000().fingerprint(), snapdragon835().fingerprint());

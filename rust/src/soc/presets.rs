@@ -2,7 +2,9 @@
 //! and contention calibrated to Table 2; thermal behaviour to Fig 12).
 
 use super::support::{cpu_support, dsp_support, gpu_support, npu_support};
-use super::{ProcKind, ProcessorSpec, SocSpec, TransferModel};
+use super::{ProcKind, ProcessorSpec, SocSpec, StorageModel, TransferModel};
+
+const MIB: u64 = 1 << 20;
 
 pub const SOC_NAMES: [&str; 3] = ["dimensity9000", "kirin970", "snapdragon835"];
 
@@ -24,6 +26,8 @@ pub fn dimensity9000() -> SocSpec {
         device: "Redmi K50 Pro".into(),
         ambient_c: 25.0,
         transfer: TransferModel { base_ms: 0.15, dram_gbps: 60.0 },
+        // UFS 3.1 sequential read (~2 GB/s) behind the cold-load path.
+        storage: StorageModel { base_ms: 0.25, read_gbps: 2.0 },
         processors: vec![
             ProcessorSpec {
                 name: "Cortex-X2/A710/A510".into(),
@@ -43,6 +47,7 @@ pub fn dimensity9000() -> SocSpec {
                 idle_w: 0.5,
                 throttle_temp_c: 68.0,
                 critical_temp_c: 85.0,
+                weight_mem_bytes: 1024 * MIB,
             },
             ProcessorSpec {
                 name: "Mali-G710 MP10".into(),
@@ -62,6 +67,7 @@ pub fn dimensity9000() -> SocSpec {
                 idle_w: 0.3,
                 throttle_temp_c: 68.0,
                 critical_temp_c: 75.0,
+                weight_mem_bytes: 512 * MIB,
             },
             ProcessorSpec {
                 name: "MediaTek APU 5.0".into(),
@@ -81,6 +87,7 @@ pub fn dimensity9000() -> SocSpec {
                 idle_w: 0.2,
                 throttle_temp_c: 70.0,
                 critical_temp_c: 90.0,
+                weight_mem_bytes: 256 * MIB,
             },
             ProcessorSpec {
                 name: "MediaTek NPU".into(),
@@ -100,6 +107,7 @@ pub fn dimensity9000() -> SocSpec {
                 idle_w: 0.15,
                 throttle_temp_c: 70.0,
                 critical_temp_c: 90.0,
+                weight_mem_bytes: 256 * MIB,
             },
         ],
     }
@@ -115,6 +123,8 @@ pub fn kirin970() -> SocSpec {
         device: "Huawei P20".into(),
         ambient_c: 25.0,
         transfer: TransferModel { base_ms: 0.30, dram_gbps: 29.8 },
+        // UFS 2.1-era flash: ~0.85 GB/s sequential read.
+        storage: StorageModel { base_ms: 0.40, read_gbps: 0.85 },
         processors: vec![
             ProcessorSpec {
                 name: "Cortex-A73/A53".into(),
@@ -134,6 +144,7 @@ pub fn kirin970() -> SocSpec {
                 idle_w: 0.6,
                 throttle_temp_c: 68.0,
                 critical_temp_c: 85.0,
+                weight_mem_bytes: 768 * MIB,
             },
             ProcessorSpec {
                 name: "Mali-G72 MP12".into(),
@@ -153,6 +164,7 @@ pub fn kirin970() -> SocSpec {
                 idle_w: 0.5,
                 throttle_temp_c: 68.0,
                 critical_temp_c: 75.0,
+                weight_mem_bytes: 384 * MIB,
             },
             ProcessorSpec {
                 name: "HiSilicon DSP".into(),
@@ -172,6 +184,7 @@ pub fn kirin970() -> SocSpec {
                 idle_w: 0.2,
                 throttle_temp_c: 70.0,
                 critical_temp_c: 90.0,
+                weight_mem_bytes: 192 * MIB,
             },
             ProcessorSpec {
                 name: "Dual-core NPU".into(),
@@ -191,6 +204,7 @@ pub fn kirin970() -> SocSpec {
                 idle_w: 0.25,
                 throttle_temp_c: 70.0,
                 critical_temp_c: 90.0,
+                weight_mem_bytes: 192 * MIB,
             },
         ],
     }
@@ -205,6 +219,8 @@ pub fn snapdragon835() -> SocSpec {
         device: "Xiaomi 6".into(),
         ambient_c: 25.0,
         transfer: TransferModel { base_ms: 0.25, dram_gbps: 28.0 },
+        // UFS 2.1 flash: ~0.75 GB/s sequential read.
+        storage: StorageModel { base_ms: 0.40, read_gbps: 0.75 },
         processors: vec![
             ProcessorSpec {
                 name: "Kryo 280".into(),
@@ -224,6 +240,7 @@ pub fn snapdragon835() -> SocSpec {
                 idle_w: 0.5,
                 throttle_temp_c: 68.0,
                 critical_temp_c: 85.0,
+                weight_mem_bytes: 768 * MIB,
             },
             ProcessorSpec {
                 name: "Adreno 540".into(),
@@ -243,6 +260,7 @@ pub fn snapdragon835() -> SocSpec {
                 idle_w: 0.4,
                 throttle_temp_c: 68.0,
                 critical_temp_c: 75.0,
+                weight_mem_bytes: 384 * MIB,
             },
             ProcessorSpec {
                 name: "Hexagon 682".into(),
@@ -262,6 +280,7 @@ pub fn snapdragon835() -> SocSpec {
                 idle_w: 0.2,
                 throttle_temp_c: 70.0,
                 critical_temp_c: 90.0,
+                weight_mem_bytes: 192 * MIB,
             },
         ],
     }

@@ -239,6 +239,43 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             });
         }
     }
+    // Weight-residency churn (ISSUE 6): the model_churn scenario under a
+    // constrained per-processor budget, so every measured run exercises
+    // manifest lookup, cold-load pricing, pin/unpin, and eviction on the
+    // hot path. Gated by `adms bench --check` like every other row — the
+    // residency layer is not allowed to quietly tax the simulator.
+    {
+        use crate::exec::Server;
+        use crate::scenario::model_churn;
+        let (apps, events_list) = model_churn().compile().expect("model_churn compiles");
+        let cfg = SimConfig {
+            duration_ms: 1_000.0,
+            mem_budget_bytes: 64 << 20,
+            ..Default::default()
+        };
+        let name = "churn_1s/mem".to_string();
+        let events = Cell::new(0u64);
+        let completed = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = Server::new(soc.clone())
+                .scheduler_name("adms")
+                .apps(apps.clone())
+                .events(events_list.clone())
+                .config(cfg.clone())
+                .run_sim()
+                .expect("churn mem bench run");
+            events.set(r.events);
+            completed.set(r.total_completed());
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry {
+            name,
+            stats,
+            sim_ms: 1_000.0,
+            events: events.get(),
+            completed: completed.get(),
+        });
+    }
     // Fleet throughput: a sharded device population per measured run
     // (`sim_ms` is summed over devices, so the headline figure stays
     // simulated-ms per wall-second — now aggregated across shards).

@@ -1,0 +1,439 @@
+//! Per-processor weight residency cache with cost-aware eviction.
+
+use std::collections::BTreeMap;
+
+use super::ShardManifest;
+use crate::sched::SessId;
+use crate::soc::{cold_load_ms, ProcId, SocSpec};
+use crate::TimeMs;
+
+/// Sentinel budget: use each processor's own
+/// [`weight_mem_bytes`](crate::soc::ProcessorSpec::weight_mem_bytes)
+/// instead of one uniform byte count (`--mem-budget spec`).
+pub const SPEC_BUDGET: u64 = u64::MAX;
+
+const MIB_F: f64 = (1u64 << 20) as f64;
+
+/// Eviction policy for a full residency domain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemPolicy {
+    /// GreedyDual-Size: victims are the shards cheapest to re-load per
+    /// resident byte, aged by an inflation term so stale-but-expensive
+    /// shards do eventually leave. This is the default — flash reload
+    /// cost is exactly what eviction is spending.
+    #[default]
+    CostLru,
+    /// Plain least-recently-used, cost-blind. Kept as the ablation arm.
+    Lru,
+}
+
+impl MemPolicy {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cost" | "cost-lru" | "costlru" => Some(MemPolicy::CostLru),
+            "lru" => Some(MemPolicy::Lru),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            MemPolicy::CostLru => "cost",
+            MemPolicy::Lru => "lru",
+        }
+    }
+}
+
+/// Cumulative residency counters, reported in [`SimReport`]
+/// (crate::sim::SimReport). All-zero on unbudgeted runs (the cache is
+/// never constructed), which keeps their report serialization identical
+/// to pre-residency builds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Dispatches that found their shard warm (no load charged).
+    pub hits: u64,
+    /// Dispatches that paid a cold load or waited on one in flight.
+    pub misses: u64,
+    /// Shards evicted to make room.
+    pub evictions: u64,
+    /// Total bytes streamed from flash (including bypassed loads).
+    pub bytes_loaded: u64,
+    /// Bytes resident across all domains when the report was cut.
+    pub bytes_resident: u64,
+    /// Total cold-load latency charged to dispatches, ms.
+    pub cold_load_ms: f64,
+}
+
+/// One resident (or in-flight) shard copy on one processor.
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: u64,
+    /// Load completes at this time; `ready_at <= now` means warm.
+    ready_at: TimeMs,
+    /// Eviction score (policy-dependent); smaller evicts first.
+    score: f64,
+    /// Last-access sequence number — the deterministic tie-break.
+    seq: u64,
+    /// In-flight dispatches using this shard; pinned entries never evict.
+    pins: u32,
+}
+
+/// One processor's residency domain. Keys are `(manifest fingerprint,
+/// unit)` in a `BTreeMap` so victim scans walk a deterministic order —
+/// a `HashMap` here would make eviction ties (and therefore whole
+/// simulations) nondeterministic.
+#[derive(Debug, Clone, Default)]
+struct Domain {
+    budget: u64,
+    used: u64,
+    /// GreedyDual inflation level `L` (CostLru only).
+    inflate: f64,
+    entries: BTreeMap<(u64, usize), Entry>,
+}
+
+/// Weight residency across every processor of one SoC.
+///
+/// The driver owns one per memory-budgeted run and drives it in two
+/// phases: [`price`](WeightCache::price) is pure and safe to call while
+/// deciding (the scheduler calls it through
+/// [`SchedCtx::residency_miss_ms`](crate::sched::SchedCtx::residency_miss_ms));
+/// [`commit`](WeightCache::commit) mutates state and is called only
+/// after a dispatch actually lands, so a lost slot race never corrupts
+/// residency. Every commit pins the shard; the driver
+/// [`unpin`](WeightCache::unpin)s on completion.
+#[derive(Debug, Clone)]
+pub struct WeightCache {
+    policy: MemPolicy,
+    domains: Vec<Domain>,
+    /// Indexed by session id, aligned with the driver's plans.
+    manifests: Vec<ShardManifest>,
+    seq: u64,
+    stats: CacheStats,
+}
+
+impl WeightCache {
+    /// Build a cache for `soc` with one domain per processor. `budget`
+    /// is a uniform per-domain byte budget, or [`SPEC_BUDGET`] to use
+    /// each processor's `weight_mem_bytes`. `manifests[s]` must be the
+    /// manifest of session `s`'s plan.
+    pub fn new(
+        soc: &SocSpec,
+        budget: u64,
+        policy: MemPolicy,
+        manifests: Vec<ShardManifest>,
+    ) -> Self {
+        let domains = soc
+            .processors
+            .iter()
+            .map(|p| Domain {
+                budget: if budget == SPEC_BUDGET { p.weight_mem_bytes } else { budget },
+                ..Domain::default()
+            })
+            .collect();
+        WeightCache { policy, domains, manifests, seq: 0, stats: CacheStats::default() }
+    }
+
+    fn shard(&self, session: SessId, unit: usize) -> Option<((u64, usize), u64)> {
+        let m = self.manifests.get(session)?;
+        let s = m.shards.get(unit)?;
+        Some(((m.fingerprint, unit), s.weight_bytes))
+    }
+
+    /// Load latency a dispatch of `(session, unit)` on `proc` would pay
+    /// right now: `0` if warm, the in-flight remainder if loading, the
+    /// full [`cold_load_ms`] if cold. Pure — decision-time pricing.
+    pub fn price(
+        &self,
+        soc: &SocSpec,
+        now: TimeMs,
+        session: SessId,
+        unit: usize,
+        proc: ProcId,
+    ) -> TimeMs {
+        let Some((key, bytes)) = self.shard(session, unit) else { return 0.0 };
+        if bytes == 0 {
+            return 0.0;
+        }
+        match self.domains[proc].entries.get(&key) {
+            Some(e) if e.ready_at <= now => 0.0,
+            Some(e) => e.ready_at - now,
+            None => cold_load_ms(soc, bytes),
+        }
+    }
+
+    /// Record a landed dispatch: charge the load (same pricing as
+    /// [`price`](WeightCache::price)), transition the shard toward warm,
+    /// pin it, and evict to fit. Returns the charged load latency.
+    ///
+    /// A shard too large for its domain even after evicting every
+    /// unpinned entry *bypasses*: the full load is charged (streamed,
+    /// used, discarded) and nothing is inserted — so an oversized model
+    /// is slow on every dispatch rather than wedging the domain.
+    pub fn commit(
+        &mut self,
+        soc: &SocSpec,
+        now: TimeMs,
+        session: SessId,
+        unit: usize,
+        proc: ProcId,
+    ) -> TimeMs {
+        let Some((key, bytes)) = self.shard(session, unit) else { return 0.0 };
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.seq += 1;
+        let seq = self.seq;
+        let reload = cold_load_ms(soc, bytes);
+        let policy = self.policy;
+        let d = &mut self.domains[proc];
+        let score = match policy {
+            MemPolicy::CostLru => d.inflate + reload / (bytes as f64 / MIB_F),
+            MemPolicy::Lru => seq as f64,
+        };
+
+        if let Some(e) = d.entries.get_mut(&key) {
+            let charge = if e.ready_at <= now {
+                self.stats.hits += 1;
+                0.0
+            } else {
+                // A concurrent dispatch started this load; wait it out.
+                self.stats.misses += 1;
+                self.stats.cold_load_ms += e.ready_at - now;
+                e.ready_at - now
+            };
+            e.score = score;
+            e.seq = seq;
+            e.pins += 1;
+            return charge;
+        }
+
+        // Cold load.
+        self.stats.misses += 1;
+        self.stats.bytes_loaded += bytes;
+        self.stats.cold_load_ms += reload;
+        if bytes <= d.budget {
+            while d.used + bytes > d.budget {
+                // Victim: smallest (score, seq, key) among unpinned —
+                // fully ordered, so ties are deterministic.
+                let victim = d
+                    .entries
+                    .iter()
+                    .filter(|(_, e)| e.pins == 0)
+                    .min_by(|(ka, ea), (kb, eb)| {
+                        (ea.score, ea.seq, **ka)
+                            .partial_cmp(&(eb.score, eb.seq, **kb))
+                            .expect("finite eviction scores")
+                    })
+                    .map(|(k, _)| *k);
+                let Some(vk) = victim else { break };
+                let v = d.entries.remove(&vk).expect("victim resident");
+                d.used -= v.bytes;
+                self.stats.evictions += 1;
+                if policy == MemPolicy::CostLru {
+                    // GreedyDual aging: future insertions start at the
+                    // evicted score, so long-unused expensive shards
+                    // lose their head start.
+                    d.inflate = v.score;
+                }
+            }
+        }
+        if d.used + bytes <= d.budget {
+            d.entries.insert(
+                key,
+                Entry { bytes, ready_at: now + reload, score, seq, pins: 1 },
+            );
+            d.used += bytes;
+        }
+        reload
+    }
+
+    /// Release the pin a [`commit`](WeightCache::commit) took. Called by
+    /// the driver when the dispatch completes (or is torn down).
+    pub fn unpin(&mut self, session: SessId, unit: usize, proc: ProcId) {
+        if let Some((key, bytes)) = self.shard(session, unit) {
+            if bytes == 0 {
+                return;
+            }
+            if let Some(e) = self.domains[proc].entries.get_mut(&key) {
+                e.pins = e.pins.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Counters snapshot, with `bytes_resident` sampled live.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = self.stats;
+        s.bytes_resident = self.domains.iter().map(|d| d.used).sum();
+        s
+    }
+
+    /// Bytes currently resident on one processor.
+    pub fn resident_bytes(&self, proc: ProcId) -> u64 {
+        self.domains[proc].used
+    }
+
+    /// Byte budget of one processor's domain.
+    pub fn budget(&self, proc: ProcId) -> u64 {
+        self.domains[proc].budget
+    }
+
+    /// The manifest backing one session.
+    pub fn manifest(&self, session: SessId) -> &ShardManifest {
+        &self.manifests[session]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::presets::dimensity9000;
+    use crate::weights::Shard;
+
+    const MIB: u64 = 1 << 20;
+
+    /// A one-shard manifest with a chosen fingerprint and size.
+    fn mfst(fp: u64, bytes: u64) -> ShardManifest {
+        ShardManifest {
+            model: format!("m{fp}"),
+            graph_fp: fp,
+            dtype_bytes: 4,
+            window_size: 1,
+            shards: vec![Shard {
+                unit: 0,
+                weight_bytes: bytes,
+                activation_bytes: 0,
+                ops: 1,
+                fingerprint: fp,
+            }],
+            fingerprint: fp,
+        }
+    }
+
+    fn cache(budget: u64, policy: MemPolicy, sizes: &[u64]) -> (SocSpec, WeightCache) {
+        let soc = dimensity9000();
+        let manifests =
+            sizes.iter().enumerate().map(|(i, &b)| mfst(100 + i as u64, b)).collect();
+        let c = WeightCache::new(&soc, budget, policy, manifests);
+        (soc, c)
+    }
+
+    #[test]
+    fn warm_hit_is_free_and_loading_charges_the_remainder() {
+        let (soc, mut c) = cache(64 * MIB, MemPolicy::CostLru, &[4 * MIB]);
+        let full = c.price(&soc, 0.0, 0, 0, 0);
+        assert!(full > 0.0);
+        assert_eq!(full, c.commit(&soc, 0.0, 0, 0, 0));
+        // Mid-load: the second dispatcher waits out the remainder.
+        let half = c.price(&soc, full / 2.0, 0, 0, 0);
+        assert!((half - full / 2.0).abs() < 1e-9);
+        assert!((c.commit(&soc, full / 2.0, 0, 0, 0) - half).abs() < 1e-9);
+        // Past ready_at: warm, free.
+        assert_eq!(c.price(&soc, full + 1.0, 0, 0, 0), 0.0);
+        assert_eq!(c.commit(&soc, full + 1.0, 0, 0, 0), 0.0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert_eq!(s.bytes_loaded, 4 * MIB);
+        assert_eq!(s.bytes_resident, 4 * MIB);
+        // Residency is per-processor: proc 1 is still cold.
+        assert!(c.price(&soc, full + 1.0, 0, 0, 1) > 0.0);
+    }
+
+    #[test]
+    fn cost_aware_eviction_keeps_the_expensive_per_byte_shard() {
+        // Budget 10 MiB; B (1 MiB, older) + A (6 MiB, newer) resident;
+        // C (5 MiB) arrives. Plain LRU evicts B first (then A too, since
+        // B's megabyte doesn't make room). GreedyDual-Size evicts only A:
+        // per-byte reload of the small shard is dominated by the fixed
+        // I/O issue cost, so small shards are the expensive ones.
+        for (policy, want_evict, b_survives) in
+            [(MemPolicy::CostLru, 1, true), (MemPolicy::Lru, 2, false)]
+        {
+            let (soc, mut c) = cache(10 * MIB, policy, &[MIB, 6 * MIB, 5 * MIB]);
+            c.commit(&soc, 0.0, 0, 0, 0); // B
+            c.commit(&soc, 10.0, 1, 0, 0); // A
+            c.unpin(0, 0, 0);
+            c.unpin(1, 0, 0);
+            c.commit(&soc, 2000.0, 2, 0, 0); // C forces eviction
+            let s = c.stats();
+            assert_eq!(s.evictions, want_evict, "{policy:?}");
+            assert_eq!(
+                c.price(&soc, 3000.0, 0, 0, 0) == 0.0,
+                b_survives,
+                "{policy:?}: small-shard survival"
+            );
+            // A is evicted under both policies.
+            assert!(c.price(&soc, 3000.0, 1, 0, 0) > 0.0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn pinned_shards_never_evict_and_oversized_loads_bypass() {
+        let (soc, mut c) = cache(8 * MIB, MemPolicy::CostLru, &[6 * MIB, 6 * MIB, 32 * MIB]);
+        c.commit(&soc, 0.0, 0, 0, 0);
+        // Session 0's shard is pinned (no unpin): session 1 cannot make
+        // room, so its load bypasses — charged but not resident.
+        let charged = c.commit(&soc, 100.0, 1, 0, 0);
+        assert!(charged > 0.0);
+        let s = c.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.bytes_resident, 6 * MIB);
+        // Still cold on the next look.
+        assert!(c.price(&soc, 200.0, 1, 0, 0) > 0.0);
+        // A shard larger than the whole domain always bypasses, and
+        // never evicts anyone to try.
+        c.unpin(0, 0, 0);
+        assert!(c.commit(&soc, 300.0, 2, 0, 0) > 0.0);
+        let s = c.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.bytes_resident, 6 * MIB);
+        assert_eq!(c.price(&soc, 400.0, 0, 0, 0), 0.0, "resident shard untouched");
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_across_identical_runs() {
+        let drive = |c: &mut WeightCache, soc: &SocSpec| {
+            let mut trace = Vec::new();
+            for step in 0..40u64 {
+                let sess = (step % 5) as usize;
+                let t = step as f64 * 7.0;
+                trace.push(c.commit(soc, t, sess, 0, (step % 2) as usize));
+                if step % 3 == 0 {
+                    c.unpin(sess, 0, (step % 2) as usize);
+                }
+            }
+            trace
+        };
+        let sizes = [3 * MIB, 5 * MIB, 2 * MIB, 7 * MIB, 4 * MIB];
+        let (soc, mut a) = cache(9 * MIB, MemPolicy::CostLru, &sizes);
+        let (_, mut b) = cache(9 * MIB, MemPolicy::CostLru, &sizes);
+        assert_eq!(drive(&mut a, &soc), drive(&mut b, &soc));
+        assert_eq!(a.stats(), b.stats());
+        assert!(a.stats().evictions > 0, "scenario must actually churn");
+    }
+
+    #[test]
+    fn spec_budget_sentinel_uses_per_processor_budgets() {
+        let soc = dimensity9000();
+        let c = WeightCache::new(&soc, SPEC_BUDGET, MemPolicy::CostLru, vec![]);
+        for (i, p) in soc.processors.iter().enumerate() {
+            assert_eq!(c.budget(i), p.weight_mem_bytes);
+        }
+        let u = WeightCache::new(&soc, 16 * MIB, MemPolicy::CostLru, vec![]);
+        for i in 0..soc.processors.len() {
+            assert_eq!(u.budget(i), 16 * MIB);
+        }
+    }
+
+    #[test]
+    fn zero_weight_shards_are_invisible() {
+        let soc = dimensity9000();
+        let mut m = mfst(7, 0);
+        m.shards[0].weight_bytes = 0;
+        let mut c = WeightCache::new(&soc, 4 * MIB, MemPolicy::CostLru, vec![m]);
+        assert_eq!(c.price(&soc, 0.0, 0, 0, 0), 0.0);
+        assert_eq!(c.commit(&soc, 0.0, 0, 0, 0), 0.0);
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+}

@@ -1,0 +1,228 @@
+//! Per-model shard manifests, aligned 1:1 with unit subgraphs.
+
+use crate::analyzer::Partition;
+use crate::graph::Graph;
+use crate::sched::ModelPlan;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_mix(h: &mut u64, x: u64) {
+    for b in x.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// One loadable slice of a model's weights: the parameters of one unit
+/// subgraph, which is exactly what a delegate prepares on a processor
+/// before it can run that unit there.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Unit index within the owning plan's partition.
+    pub unit: usize,
+    /// Parameter bytes the delegate must stream in and lay out.
+    pub weight_bytes: u64,
+    /// Peak live-tensor footprint while executing the shard: the largest
+    /// single-op working set (inputs + output) across the unit's ops.
+    /// Activations are transient — they don't count against the
+    /// residency budget — but sizing them per shard is what the `models`
+    /// CLI table and future scratch-memory work read.
+    pub activation_bytes: u64,
+    /// Number of ops the shard's unit covers.
+    pub ops: usize,
+    /// FNV-1a over the shard's structural content, for memo keying.
+    pub fingerprint: u64,
+}
+
+/// Shard table for one model under one partition. Shards are indexed by
+/// unit: `manifest.shards[u]` is what unit `u` needs resident.
+#[derive(Debug, Clone)]
+pub struct ShardManifest {
+    /// Model name (matches `Graph::name`).
+    pub model: String,
+    /// Structural fingerprint of the source graph.
+    pub graph_fp: u64,
+    /// Tensor dtype width the weight bytes were derived at.
+    pub dtype_bytes: u64,
+    /// Partition window size the shard boundaries came from.
+    pub window_size: usize,
+    /// One shard per unit subgraph, in unit order.
+    pub shards: Vec<Shard>,
+    /// FNV-1a over the graph fingerprint and every shard fingerprint —
+    /// the cache's memo key: two sessions of the same model under the
+    /// same partition share residency.
+    pub fingerprint: u64,
+}
+
+impl ShardManifest {
+    /// Build the manifest for `g` under `part`. Weight bytes are the sum
+    /// of `param_bytes` over the unit's ops; activation bytes the peak
+    /// per-op working set.
+    pub fn build(g: &Graph, part: &Partition) -> Self {
+        let graph_fp = g.fingerprint();
+        let mut shards = Vec::with_capacity(part.units.len());
+        for (unit, u) in part.units.iter().enumerate() {
+            let mut weight_bytes = 0u64;
+            let mut activation_bytes = 0u64;
+            for &id in &u.ops {
+                let n = &g.nodes[id];
+                weight_bytes += n.param_bytes;
+                let in_bytes: u64 = n
+                    .inputs
+                    .iter()
+                    .map(|&i| g.nodes[i].out_bytes(g.dtype_bytes))
+                    .sum();
+                activation_bytes =
+                    activation_bytes.max(in_bytes + n.out_bytes(g.dtype_bytes));
+            }
+            let mut h = FNV_OFFSET;
+            fnv_mix(&mut h, unit as u64);
+            fnv_mix(&mut h, weight_bytes);
+            fnv_mix(&mut h, activation_bytes);
+            fnv_mix(&mut h, u.ops.len() as u64);
+            for &id in &u.ops {
+                fnv_mix(&mut h, id as u64);
+            }
+            shards.push(Shard {
+                unit,
+                weight_bytes,
+                activation_bytes,
+                ops: u.ops.len(),
+                fingerprint: h,
+            });
+        }
+        let mut h = FNV_OFFSET;
+        fnv_mix(&mut h, graph_fp);
+        fnv_mix(&mut h, g.dtype_bytes);
+        fnv_mix(&mut h, part.window_size as u64);
+        fnv_mix(&mut h, shards.len() as u64);
+        for s in &shards {
+            fnv_mix(&mut h, s.fingerprint);
+        }
+        ShardManifest {
+            model: g.name.clone(),
+            graph_fp,
+            dtype_bytes: g.dtype_bytes,
+            window_size: part.window_size,
+            shards,
+            fingerprint: h,
+        }
+    }
+
+    /// Build from an already-partitioned plan (the driver's path).
+    pub fn from_plan(plan: &ModelPlan) -> Self {
+        Self::build(&plan.graph, &plan.partition)
+    }
+
+    /// Total weight bytes across every shard — the model's whole
+    /// parameter footprint.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.weight_bytes).sum()
+    }
+
+    /// Largest single-shard activation working set.
+    pub fn peak_activation_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.activation_bytes).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyzer::partition;
+    use crate::soc::presets::dimensity9000;
+
+    fn manifest_for(name: &str) -> (Graph, ShardManifest) {
+        let g = crate::zoo::by_name(name).unwrap();
+        let soc = dimensity9000();
+        let part = partition(&g, &soc, 1);
+        let m = ShardManifest::build(&g, &part);
+        (g, m)
+    }
+
+    /// One footprint test per zoo model: the manifest's total weight
+    /// bytes must land within 10 % of the published parameter count for
+    /// the architecture the builder reconstructs (reference MB =
+    /// params × dtype width, decimal megabytes). This is the regression
+    /// guard for the zoo audit: a builder edit that silently doubles a
+    /// layer's width trips the matching test here.
+    macro_rules! footprint_test {
+        ($test:ident, $model:expr, $ref_mb:expr) => {
+            #[test]
+            fn $test() {
+                let (g, m) = manifest_for($model);
+                // Every param-bearing op is in exactly one shard.
+                assert_eq!(
+                    m.total_weight_bytes(),
+                    g.total_param_bytes(),
+                    "{}: manifest does not cover the graph", $model
+                );
+                let mb = m.total_weight_bytes() as f64 / 1e6;
+                assert!(
+                    (mb / $ref_mb - 1.0f64).abs() < 0.10,
+                    "{}: derived {:.2} MB vs reference {:.2} MB",
+                    $model, mb, $ref_mb
+                );
+                // Shards align 1:1 with units, every shard fingerprinted.
+                assert_eq!(m.shards.len(), m.shards.last().unwrap().unit + 1);
+                assert!(m.shards.iter().all(|s| s.fingerprint != 0));
+            }
+        };
+    }
+
+    footprint_test!(footprint_mobilenet_v1, "mobilenet_v1", 16.89);
+    footprint_test!(footprint_mobilenet_v1_quant, "mobilenet_v1_quant", 4.22);
+    footprint_test!(footprint_mobilenet_v2, "mobilenet_v2", 13.96);
+    footprint_test!(footprint_deeplab_v3, "deeplab_v3", 23.2);
+    footprint_test!(footprint_yolo_v3, "yolo_v3", 247.9);
+    footprint_test!(footprint_east, "east", 96.7);
+    footprint_test!(footprint_icn_quant, "icn_quant", 6.57);
+    footprint_test!(footprint_inception_v4, "inception_v4", 158.4);
+    footprint_test!(footprint_efficientnet4, "efficientnet4", 54.2);
+    footprint_test!(footprint_efficientdet, "efficientdet", 13.6);
+    footprint_test!(footprint_arcface_mobile, "arcface_mobile", 3.94);
+    footprint_test!(footprint_arcface_resnet50, "arcface_resnet50", 98.1);
+    footprint_test!(footprint_retinaface, "retinaface", 1.71);
+    footprint_test!(footprint_handlmk, "handlmk", 4.27);
+
+    #[test]
+    fn quant_weights_are_exactly_a_quarter_of_fp32() {
+        let (_, fp32) = manifest_for("mobilenet_v1");
+        let (_, int8) = manifest_for("mobilenet_v1_quant");
+        // Same architecture at 1/4 the dtype width; the quant graph adds
+        // only weightless (de)quantize ops.
+        assert_eq!(fp32.total_weight_bytes(), 4 * int8.total_weight_bytes());
+    }
+
+    #[test]
+    fn manifest_fingerprint_tracks_shard_content() {
+        let (_, a) = manifest_for("mobilenet_v1");
+        let (_, b) = manifest_for("mobilenet_v1");
+        assert_eq!(a.fingerprint, b.fingerprint);
+        let (_, other) = manifest_for("mobilenet_v2");
+        assert_ne!(a.fingerprint, other.fingerprint);
+        // A different partition of the same graph is a different manifest
+        // (shard boundaries move), but the graph fingerprint is shared.
+        let g = crate::zoo::mobilenet_v1();
+        let soc = dimensity9000();
+        let wide = ShardManifest::build(&g, &partition(&g, &soc, 4));
+        assert_eq!(wide.graph_fp, a.graph_fp);
+        if wide.shards.len() != a.shards.len() {
+            assert_ne!(wide.fingerprint, a.fingerprint);
+        }
+    }
+
+    #[test]
+    fn activation_bytes_track_peak_working_set() {
+        let (g, m) = manifest_for("mobilenet_v1");
+        assert!(m.peak_activation_bytes() > 0);
+        // No shard's working set can exceed the sum of all tensors.
+        let total: u64 = g
+            .nodes
+            .iter()
+            .map(|n| n.out_bytes(g.dtype_bytes))
+            .sum();
+        assert!(m.peak_activation_bytes() < 2 * total);
+    }
+}

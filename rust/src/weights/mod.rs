@@ -1,0 +1,34 @@
+//! Model weights as a first-class scheduled resource.
+//!
+//! The paper's runtime hands each unit subgraph to a delegate, and the
+//! delegate's first act on a processor it has never used is to *prepare*
+//! the weights there: stream them from flash and lay them out in the
+//! processor's format (NPU tiling, GPU textures, DSP VTCM spills). On
+//! real devices this cold preparation dominates first-inference latency
+//! — hundreds of milliseconds against single-digit steady-state — and
+//! the prepared copies compete for a bounded per-processor residency
+//! budget, so multi-DNN workloads churn each other's weights out.
+//!
+//! This module models that resource:
+//!
+//! * [`ShardManifest`] — per-model shard table, aligned 1:1 with the
+//!   [`ModelPlan`](crate::sched::ModelPlan)'s unit subgraphs: weight
+//!   bytes, peak activation bytes, and an FNV fingerprint per shard.
+//! * [`WeightCache`] — per-processor residency domains with byte
+//!   budgets (from [`ProcessorSpec::weight_mem_bytes`]
+//!   (crate::soc::ProcessorSpec) or a uniform CLI override),
+//!   cold/loading/warm shard states priced by
+//!   [`cold_load_ms`](crate::soc::cold_load_ms), and cost-aware LRU
+//!   ([`MemPolicy::CostLru`], GreedyDual-Size) eviction.
+//!
+//! The cache exists only on memory-budgeted runs (`--mem-budget`).
+//! Unbudgeted runs never construct one, never consult shard state, and
+//! produce byte-identical reports to runs before this module existed —
+//! the same provable-no-op contract batching established with
+//! `--batch-max 1`.
+
+mod cache;
+mod manifest;
+
+pub use cache::{CacheStats, MemPolicy, WeightCache, SPEC_BUDGET};
+pub use manifest::{Shard, ShardManifest};

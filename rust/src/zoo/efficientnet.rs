@@ -24,6 +24,9 @@ fn mbconv(
 
 /// EfficientNet-B4, 380×380, ~120 ops. Paper Table 1 mix: ADD 18.85 %,
 /// C2D 50.0 %, DW 24.59 %, DLG 1.64 % (two sigmoid gates), Others 1.64 %.
+/// The head follows the lite4 TFLite export (1280-wide, no SE blocks) —
+/// the only B4 variant the NNAPI delegates the paper drives can run —
+/// putting derived weights at ~13.6 M params vs. lite4's published 13.0 M.
 pub fn efficientnet4() -> Graph {
     let mut b = GraphBuilder::new("efficientnet4", 4);
     let x = b.input([1, 380, 380, 3]);
@@ -48,7 +51,7 @@ pub fn efficientnet4() -> Graph {
             c_in = c_out;
         }
     }
-    t = b.conv2d(t, 1792, 1, 1);
+    t = b.conv2d(t, 1280, 1, 1);
     t = b.logistic(t);
     let m = b.mean(t);
     let f = b.fully_connected(m, 1000);

@@ -138,11 +138,13 @@ pub fn retinaface() -> Graph {
 pub fn handlmk() -> Graph {
     let mut b = GraphBuilder::new("handlmk", 4);
     let x = b.input([1, 224, 224, 3]);
-    let mut t = b.conv2d(x, 24, 3, 2);
-    // Depthwise-separable residual blocks: dw + pw + add.
+    let mut t = b.conv2d(x, 32, 3, 2);
+    // Depthwise-separable residual blocks: dw + pw + add. Widths sized so
+    // derived weights land at ~1.07 M params, matching the MediaPipe
+    // hand_landmark export (~1 M params).
     let groups: [(u64, usize, u64); 5] =
-        [(24, 3, 2), (48, 3, 2), (96, 3, 2), (192, 3, 2), (288, 2, 2)];
-    let mut c_in = 24;
+        [(32, 3, 2), (64, 3, 2), (128, 3, 2), (256, 3, 2), (384, 2, 2)];
+    let mut c_in = 32;
     for (c_out, n, s) in groups {
         for i in 0..n {
             let stride = if i == 0 { s } else { 1 };

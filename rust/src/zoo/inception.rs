@@ -17,35 +17,35 @@ fn block_a(b: &mut GraphBuilder, x: NodeId) -> NodeId {
     b.concat(&[b0, b1, b2, b3])
 }
 
-/// Inception-B: factorized 7×7 branches (modeled as 7-wide convs) with a
-/// sigmoid gate on the pooled branch (the converted graph the paper
+/// Inception-B: factorized 7×7 branches (each 1×7 / 7×1 half is one op)
+/// with a sigmoid gate on the pooled branch (the converted graph the paper
 /// profiles carries these as LOGISTIC ops — the Table 1 "DLG" column).
 fn block_b(b: &mut GraphBuilder, x: NodeId) -> NodeId {
     let b0 = b.conv2d(x, 384, 1, 1);
     let b1a = b.conv2d(x, 192, 1, 1);
-    let b1b = b.conv2d(b1a, 224, 7, 1);
-    let b1 = b.conv2d(b1b, 256, 7, 1);
+    let b1b = b.factorized_conv2d(b1a, 224, 7);
+    let b1 = b.factorized_conv2d(b1b, 256, 7);
     let b2a = b.conv2d(x, 192, 1, 1);
-    let b2b = b.conv2d(b2a, 192, 7, 1);
-    let b2c = b.conv2d(b2b, 224, 7, 1);
-    let b2 = b.conv2d(b2c, 224, 7, 1);
+    let b2b = b.factorized_conv2d(b2a, 192, 7);
+    let b2c = b.factorized_conv2d(b2b, 224, 7);
+    let b2 = b.factorized_conv2d(b2c, 224, 7);
     let p = b.avg_pool2d(x, 3, 1);
     let b3a = b.conv2d(p, 128, 1, 1);
     let b3 = b.logistic(b3a);
     b.concat(&[b0, b1, b2, b3])
 }
 
-/// Inception-C: split 3×3 branches, sigmoid-gated pool projection.
+/// Inception-C: split 1×3 / 3×1 branches, sigmoid-gated pool projection.
 fn block_c(b: &mut GraphBuilder, x: NodeId) -> NodeId {
     let b0 = b.conv2d(x, 256, 1, 1);
     let b1a = b.conv2d(x, 384, 1, 1);
-    let b1l = b.conv2d(b1a, 256, 3, 1);
-    let b1r = b.conv2d(b1a, 256, 3, 1);
+    let b1l = b.factorized_conv2d(b1a, 256, 3);
+    let b1r = b.factorized_conv2d(b1a, 256, 3);
     let b2a = b.conv2d(x, 384, 1, 1);
-    let b2b = b.conv2d(b2a, 448, 3, 1);
-    let b2c = b.conv2d(b2b, 512, 3, 1);
-    let b2l = b.conv2d(b2c, 256, 3, 1);
-    let b2r = b.conv2d(b2c, 256, 3, 1);
+    let b2b = b.factorized_conv2d(b2a, 448, 3);
+    let b2c = b.factorized_conv2d(b2b, 512, 3);
+    let b2l = b.factorized_conv2d(b2c, 256, 3);
+    let b2r = b.factorized_conv2d(b2c, 256, 3);
     let p = b.avg_pool2d(x, 3, 1);
     let b3a = b.conv2d(p, 256, 1, 1);
     let b3 = b.logistic(b3a);
@@ -67,8 +67,8 @@ pub fn inception_v4() -> Graph {
     let l1 = b.conv2d(s1, 64, 1, 1);
     let l2 = b.conv2d(l1, 96, 3, 1);
     let r1 = b.conv2d(s1, 64, 1, 1);
-    let r2 = b.conv2d(r1, 64, 7, 1);
-    let r3 = b.conv2d(r2, 64, 7, 1);
+    let r2 = b.factorized_conv2d(r1, 64, 7);
+    let r3 = b.factorized_conv2d(r2, 64, 7);
     let r4 = b.conv2d(r3, 96, 3, 1);
     let s2 = b.concat(&[l2, r4]);
     let p2 = b.max_pool2d(s2, 3, 2);
@@ -93,8 +93,8 @@ pub fn inception_v4() -> Graph {
     let rb0a = b.conv2d(t, 192, 1, 1);
     let rb0 = b.conv2d(rb0a, 192, 3, 2);
     let rb1a = b.conv2d(t, 256, 1, 1);
-    let rb1b = b.conv2d(rb1a, 256, 7, 1);
-    let rb1c = b.conv2d(rb1b, 320, 7, 1);
+    let rb1b = b.factorized_conv2d(rb1a, 256, 7);
+    let rb1c = b.factorized_conv2d(rb1b, 320, 7);
     let rb1 = b.conv2d(rb1c, 320, 3, 2);
     let rbp = b.max_pool2d(t, 3, 2);
     t = b.concat(&[rb0, rb1, rbp]);

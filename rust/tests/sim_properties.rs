@@ -107,6 +107,7 @@ fn prop_schedulers_only_assign_supported_online_procs() {
             plans: &plans,
             procs: &views,
             batch: adms::sched::BatchCtx::OFF,
+            weights: adms::sched::WeightsView::OFF,
         };
         let mut scheds: Vec<Box<dyn Scheduler>> = vec![
             Box::new(Adms::default()),
@@ -510,4 +511,185 @@ fn prop_timeline_respects_slot_capacity() {
             }
         }
     });
+}
+
+/// Golden-equivalence referee for weight residency (ISSUE 6): an
+/// unlimited memory budget must be a bit-exact no-op. The driver only
+/// constructs a `WeightCache` when `mem_budget_bytes > 0`, so the
+/// residency layer must be invisible when disabled: for randomized churn
+/// scenarios across all four schedulers, a run with an explicit
+/// `mem_budget_bytes = 0` config (and a random — necessarily inert —
+/// eviction policy) produces a byte-identical `SimReport` JSON to the
+/// default config's run, `cache` block and per-proc `cold_loads`
+/// included (all-zero on both sides).
+///
+/// Scope note (mirrors the batching no-op referee above): the default
+/// config takes the residency-disabled code path, whose behavior the
+/// unchanged referee tests and the rerun/replay golden property already
+/// pin, and this property proves disabling the budget cannot diverge
+/// from it byte-wise.
+#[test]
+fn prop_unlimited_memory_is_byte_identical_noop() {
+    check("mem_budget=0 ≡ default dispatch (full-report JSON)", iters(8), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(1..4),
+            duration_ms: g.f64(400.0, 1_500.0),
+            churn: 0.6,
+            rate_change: 0.6,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned"]);
+        let seed = g.u64(0..1_000_000);
+        let run = |mem: Option<adms::weights::MemPolicy>| -> SimReport {
+            let mut server = Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.clone())
+                .events(events.clone())
+                .window_size(4)
+                .duration_ms(cfg.duration_ms)
+                .seed(seed);
+            if let Some(policy) = mem {
+                server = server.mem_budget_bytes(0).mem_policy(policy);
+            }
+            server.run_sim().unwrap()
+        };
+        let default = run(None);
+        // An explicit zero budget — under either policy — must be inert.
+        let policy = if g.bool() {
+            adms::weights::MemPolicy::CostLru
+        } else {
+            adms::weights::MemPolicy::Lru
+        };
+        let noop = run(Some(policy));
+        assert_eq!(
+            default.to_json().to_pretty(),
+            noop.to_json().to_pretty(),
+            "{sched}: --mem-budget 0 (policy {}) diverged from default dispatch",
+            policy.name()
+        );
+    });
+}
+
+/// Budgeted runs stay deterministic and conservative under churn: same
+/// seed → byte-identical report (pins eviction order at the run level —
+/// a `HashMap`-keyed cache would flunk this within an iteration or two),
+/// request conservation holds per session even when a `SessionStop`
+/// cancels work whose shard is still cold-loading (the mid-load-stop
+/// case: the charge was priced into the dispatch, and cancellation must
+/// neither strand a pin nor double-count the request), and the cache
+/// counters themselves are internally consistent.
+#[test]
+fn prop_budgeted_runs_deterministic_and_conservative() {
+    check("weight-cache dispatch deterministic + conservative", iters(6), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(2..5),
+            duration_ms: g.f64(500.0, 1_500.0),
+            // High churn: stops routinely land while shards load.
+            churn: 0.8,
+            rate_change: 0.5,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned"]);
+        let seed = g.u64(0..1_000_000);
+        // Tight enough that real workloads evict, in a randomized range.
+        let budget = (g.usize(4..64) as u64) << 20;
+        let policy = if g.bool() {
+            adms::weights::MemPolicy::CostLru
+        } else {
+            adms::weights::MemPolicy::Lru
+        };
+        let run = || -> SimReport {
+            Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.clone())
+                .events(events.clone())
+                .window_size(4)
+                .duration_ms(cfg.duration_ms)
+                .seed(seed)
+                .mem_budget_bytes(budget)
+                .mem_policy(policy)
+                .run_sim()
+                .unwrap()
+        };
+        let a = run();
+        for s in &a.sessions {
+            assert_eq!(
+                s.issued,
+                s.completed + s.failed + s.cancelled,
+                "{sched}: conservation violated for {} under a {budget}-byte budget",
+                s.model
+            );
+        }
+        // Counter consistency: every byte loaded belongs to a miss, and
+        // cold-load stall time only accrues alongside misses.
+        if a.cache.misses == 0 {
+            assert_eq!(a.cache.bytes_loaded, 0, "{sched}: bytes loaded without a miss");
+            assert_eq!(
+                a.cache.cold_load_ms, 0.0,
+                "{sched}: cold-load stall without a miss"
+            );
+        }
+        let cold_loads: u64 = a.procs.iter().map(|p| p.cold_loads).sum();
+        assert!(
+            cold_loads <= a.cache.misses,
+            "{sched}: {cold_loads} charged dispatches > {} cache misses",
+            a.cache.misses
+        );
+        let b = run();
+        assert_eq!(
+            a.to_json().to_pretty(),
+            b.to_json().to_pretty(),
+            "{sched}: budgeted rerun not bit-identical (policy {})",
+            policy.name()
+        );
+    });
+}
+
+/// Acceptance criterion (ISSUE 6): on the cold-start storm under a
+/// constrained budget, cache-aware ADMS must beat the cache-blind
+/// vanilla baseline on completed requests and on p95 latency. Vanilla
+/// pays the same cold-load charges at dispatch (the driver prices every
+/// arm identically) but cannot see residency when placing, so it keeps
+/// re-faulting weights the budget just evicted; ADMS prices the miss
+/// into `placement_cost` and steers work to processors whose shards are
+/// already warm.
+#[test]
+fn cache_aware_adms_beats_blind_vanilla_on_cold_start_storm() {
+    let (apps, events) = scenario::by_name("cold_start_storm").unwrap().compile().unwrap();
+    let run = |sched: &str| -> SimReport {
+        Server::new(soc_by_name("dimensity9000").unwrap())
+            .scheduler_name(sched)
+            .apps(apps.clone())
+            .events(events.clone())
+            .duration_ms(8_000.0)
+            .seed(42)
+            .mem_budget_bytes(48 << 20)
+            .run_sim()
+            .unwrap()
+    };
+    let adms = run("adms");
+    let vanilla = run("vanilla");
+    assert!(
+        adms.total_completed() > vanilla.total_completed(),
+        "adms completed {} ≤ vanilla {} on cold_start_storm",
+        adms.total_completed(),
+        vanilla.total_completed()
+    );
+    let p95 = |r: &SimReport| -> f64 {
+        let mut worst: f64 = 0.0;
+        for s in &r.sessions {
+            if s.completed > 0 {
+                worst = worst.max(s.latency.p95());
+            }
+        }
+        worst
+    };
+    assert!(
+        p95(&adms) < p95(&vanilla),
+        "adms p95 {:.2} ms ≥ vanilla {:.2} ms on cold_start_storm",
+        p95(&adms),
+        p95(&vanilla)
+    );
 }
