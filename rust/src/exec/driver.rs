@@ -392,8 +392,21 @@ impl Driver {
         // deadline instead of one per round. Entries retire as the clock
         // passes them (see the BATCH_POKE handler).
         let mut armed_pokes: Vec<u64> = Vec::new();
+        // Lookahead scratch (touched only when rollouts are active).
+        let mut cand_procs: Vec<usize> = Vec::new();
 
         let quota = self.cfg.max_requests.unwrap_or(u64::MAX);
+
+        // Sim-in-the-loop lookahead (DESIGN.md §3f): active only when the
+        // policy advertises rollout params (the `lookahead` wrapper).
+        // Degenerate configurations never get here — the server builds
+        // the bare base policy for horizon 0 / beam ≤ 1 — but filter
+        // defensively so a hand-built wrapper cannot reach the rollout
+        // path with parameters that could never discriminate.
+        let rollout = self
+            .scheduler
+            .rollout_params()
+            .filter(|r| r.horizon > 0 && r.beam > 1);
 
         // Scenario events ride the backend clock as timers. Only pending
         // `Start` events can create new work, so only they keep a
@@ -960,37 +973,153 @@ impl Driver {
                         }
                         continue;
                     }
-                    // Group-curve execution price (bit-exact unit price
-                    // at b = 1) and transfer costs summed over every
-                    // member's dependencies. Positional dep → bytes
-                    // lookup (rows align with `deps[unit]`; no linear
-                    // search).
-                    let exec_full =
-                        crate::soc::cost::batch_latency_ms(&soc.processors[a.proc], exec_unit, b);
-                    let member_xfer = |t: &PendingTask| -> f64 {
+                    // Transfer pricing, parameterized on the target
+                    // processor (lookahead prices every candidate with
+                    // the same rule): costs summed over every member's
+                    // dependencies. Positional dep → bytes lookup (rows
+                    // align with `deps[unit]`; no linear search).
+                    let member_xfer = |t: &PendingTask, to: usize| -> f64 {
                         let plan = &self.plans[t.session];
                         t.dep_procs
                             .iter()
                             .enumerate()
                             .map(|(k, &(du, dp))| {
                                 let bytes = plan.xfer_bytes_at(t.unit, k, du);
-                                self.scheduler.transfer_cost_ms(&soc, dp, a.proc, bytes)
+                                self.scheduler.transfer_cost_ms(&soc, dp, to, bytes)
                             })
                             .sum()
                     };
-                    let mut xfer: f64 = member_xfer(t);
+                    // Resolve the group's member identities once — the
+                    // group is a coalescing-key fact, identical for every
+                    // candidate processor — then the whole-group transfer
+                    // price as a function of the target (lead first, then
+                    // members in member order, preserving the summation
+                    // order of the pre-lookahead code bit-exactly).
                     let mut extra: Vec<(ReqId, SessId)> = Vec::new();
                     if b > 1 {
                         extra.reserve_exact(member_cand.len());
                         for &m in &member_cand {
                             let mpos = if serialized { exposed_idx[m] } else { m };
                             let mt = &ready.as_slice()[mpos];
-                            xfer += member_xfer(mt);
                             extra.push((mt.req, mt.session));
                         }
                     }
+                    let group_xfer = |to: usize| -> f64 {
+                        let mut x: f64 = member_xfer(t, to);
+                        for &m in &member_cand {
+                            let mpos = if serialized { exposed_idx[m] } else { m };
+                            x += member_xfer(&ready.as_slice()[mpos], to);
+                        }
+                        x
+                    };
                     let mgmt = self.scheduler.decision_overhead_ms(plan);
                     let (req, session, unit) = (t.req, t.session, t.unit);
+                    // Sim-in-the-loop lookahead (DESIGN.md §3f): evaluate
+                    // up to `beam` candidate processors by dispatching
+                    // this group on a forked simulation and rolling the
+                    // fork forward until the group itself completes AND
+                    // `min(horizon, inflight + 1)` completions have been
+                    // observed; commit the candidate with the earliest
+                    // stop time. The base policy's pick is candidate 0
+                    // and wins every tie (override requires a strictly
+                    // better score), so a rollout that discriminates
+                    // nothing changes nothing. Candidates the fork
+                    // rejects (offline / no free slot) score ∞; rollouts
+                    // that run past the sim horizon likewise. Backends
+                    // that cannot fork (wall clock) skip the whole block,
+                    // degenerating lookahead to its base policy. This is
+                    // a documented hot-path carve-out (DESIGN.md §3b):
+                    // O(beam) deep clones per decision buy placement
+                    // quality, and only the `lookahead` arm pays them.
+                    let mut target = a.proc;
+                    if let Some(rp) = rollout {
+                        cand_procs.clear();
+                        cand_procs.push(a.proc);
+                        for p in 0..soc.processors.len() {
+                            if cand_procs.len() >= rp.beam as usize {
+                                break;
+                            }
+                            if p != a.proc
+                                && plan.partition.units[unit].supports(p)
+                                && plan.exec_ms[unit][p].is_some()
+                            {
+                                cand_procs.push(p);
+                            }
+                        }
+                        if cand_procs.len() > 1 {
+                            let need = (rp.horizon as usize).min(inflight.len() + 1).max(1);
+                            let mut best = f64::INFINITY;
+                            for &p in &cand_procs {
+                                let Some(mut fb) = self.backend.fork() else {
+                                    break;
+                                };
+                                let Some(exec_p) = plan.exec_ms[unit][p] else {
+                                    continue;
+                                };
+                                let token = run_seq + 1;
+                                let ok = fb.try_dispatch(DispatchCmd {
+                                    token,
+                                    req,
+                                    session,
+                                    unit,
+                                    proc: p,
+                                    exec_full_ms: crate::soc::cost::batch_latency_ms(
+                                        &soc.processors[p],
+                                        exec_p,
+                                        b,
+                                    ),
+                                    xfer_ms: group_xfer(p),
+                                    mgmt_ms: mgmt,
+                                    load_ms: match wcache.as_ref() {
+                                        Some(c) => c.price(&soc, now, session, unit, p),
+                                        None => 0.0,
+                                    },
+                                    extra: extra.clone(),
+                                });
+                                if !ok {
+                                    continue;
+                                }
+                                let mut seen = 0usize;
+                                let mut placed = false;
+                                let score = loop {
+                                    let fev = fb.next_event();
+                                    if fev.at() > self.cfg.duration_ms {
+                                        break f64::INFINITY;
+                                    }
+                                    match fev {
+                                        ExecEvent::Drained { .. } => break f64::INFINITY,
+                                        ExecEvent::Completed { at, token: tk, .. } => {
+                                            seen += 1;
+                                            if tk == token {
+                                                placed = true;
+                                            }
+                                            if placed && seen >= need {
+                                                break at;
+                                            }
+                                        }
+                                        _ => {}
+                                    }
+                                };
+                                if score < best {
+                                    best = score;
+                                    target = p;
+                                }
+                            }
+                        }
+                    }
+                    // Group-curve execution price (bit-exact unit price
+                    // at b = 1) on the committed target.
+                    let exec_on_target = if target == a.proc {
+                        exec_unit
+                    } else {
+                        plan.exec_ms[unit][target].unwrap_or(exec_unit)
+                    };
+                    let exec_full = crate::soc::cost::batch_latency_ms(
+                        &soc.processors[target],
+                        exec_on_target,
+                        b,
+                    );
+                    let xfer: f64 = group_xfer(target);
                     // Weight residency: price the lead's shard on the
                     // chosen processor (pure — state only mutates on an
                     // accepted dispatch, so a lost slot race below cannot
@@ -998,7 +1127,7 @@ impl Driver {
                     // by the coalescing-key definition, so one load
                     // covers the whole group.
                     let load = match wcache.as_ref() {
-                        Some(c) => c.price(&soc, now, session, unit, a.proc),
+                        Some(c) => c.price(&soc, now, session, unit, target),
                         None => 0.0,
                     };
                     let token = run_seq + 1;
@@ -1007,7 +1136,7 @@ impl Driver {
                         req,
                         session,
                         unit,
-                        proc: a.proc,
+                        proc: target,
                         exec_full_ms: exec_full,
                         xfer_ms: xfer,
                         mgmt_ms: mgmt,
@@ -1021,14 +1150,14 @@ impl Driver {
                         // Commit charges exactly what `price` quoted (the
                         // state is unchanged in between) and pins the
                         // shard until the group's completion event.
-                        c.commit(&soc, now, session, unit, a.proc);
+                        c.commit(&soc, now, session, unit, target);
                     }
                     run_seq = token;
                     assignments_trace.push(AssignRecord {
                         req,
                         session,
                         unit,
-                        proc: a.proc,
+                        proc: target,
                         members: extra.clone(),
                     });
                     taken_stamp[ridx] = round;
@@ -1038,7 +1167,7 @@ impl Driver {
                         taken_stamp[mpos] = round;
                         dispatched.push(mpos);
                     }
-                    inflight.insert(token, Inflight { req, session, unit, proc: a.proc, extra });
+                    inflight.insert(token, Inflight { req, session, unit, proc: target, extra });
                 }
                 if dispatched.is_empty() {
                     break;

@@ -27,7 +27,10 @@ use super::{
 };
 use crate::analyzer::tuner;
 use crate::exec::threadpool::SessionWork;
-use crate::sched::{Adms, Band, ModelPlan, Pinned, Scheduler, VanillaTflite};
+use crate::sched::{
+    Adms, Band, BasePolicy, Lookahead, ModelPlan, Pinned, RolloutParams, Scheduler,
+    VanillaTflite,
+};
 use crate::sim::SimReport;
 use crate::soc::SocSpec;
 use crate::zoo;
@@ -35,16 +38,25 @@ use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
 /// Scheduler names accepted by [`scheduler_by_name`] and `--sched`.
-pub const SCHEDULER_NAMES: [&str; 4] = ["vanilla", "band", "adms", "pinned"];
+pub const SCHEDULER_NAMES: [&str; 5] = ["vanilla", "band", "adms", "pinned", "lookahead"];
 
 /// Construct a scheduler from its CLI name. `vanilla` (alias `tflite`)
 /// is the TFLite baseline, `band` the unit-subgraph greedy, `adms` the
 /// paper's processor-state-aware policy, `pinned` the best accelerator
-/// with CPU fallback.
+/// with CPU fallback, and `lookahead` a base policy (`cfg.lookahead_base`)
+/// refined by forked what-if rollouts on the sim backend.
+///
+/// `lookahead` with `cfg.lookahead_horizon == 0` or
+/// `cfg.lookahead_beam <= 1` returns the BARE base policy — the wrapper
+/// is never constructed, so `--horizon 0` degenerates to the base
+/// byte-exactly by construction (mirroring how `batch_max = 1` never
+/// builds the batching machinery). The report's `scheduler` field then
+/// names the base policy, which is the honest description of what ran.
 pub fn scheduler_by_name(
     name: &str,
     soc: &SocSpec,
     sessions: usize,
+    cfg: &SimConfig,
 ) -> Result<Box<dyn Scheduler>> {
     Ok(match name {
         "vanilla" | "tflite" => Box::new(VanillaTflite::default_for(soc, sessions)),
@@ -53,6 +65,20 @@ pub fn scheduler_by_name(
         "pinned" => {
             let target = soc.best_accelerator().unwrap_or_else(|| soc.cpu_id());
             Box::new(Pinned::new(target, soc.cpu_id()))
+        }
+        "lookahead" => {
+            let base = cfg.lookahead_base.build(soc, sessions);
+            if cfg.lookahead_horizon == 0 || cfg.lookahead_beam <= 1 {
+                base
+            } else {
+                Box::new(Lookahead::new(
+                    base,
+                    RolloutParams {
+                        horizon: cfg.lookahead_horizon,
+                        beam: cfg.lookahead_beam,
+                    },
+                ))
+            }
         }
         other => bail!(
             "unknown scheduler '{other}' (expected one of: {})",
@@ -156,9 +182,31 @@ impl Server {
     }
 
     /// Select the scheduler by CLI name (`vanilla` | `band` | `adms` |
-    /// `pinned`); an unknown name surfaces as an error at run time.
+    /// `pinned` | `lookahead`); an unknown name surfaces as an error at
+    /// run time.
     pub fn scheduler_name(mut self, name: &str) -> Self {
         self.sched = SchedChoice::Named(name.to_string());
+        self
+    }
+
+    /// Lookahead rollout depth (`--horizon`): completions each forked
+    /// what-if rollout observes before scoring. `0` (the default) makes
+    /// `lookahead` degenerate to its base policy byte-exactly.
+    pub fn lookahead_horizon(mut self, k: u32) -> Self {
+        self.cfg.lookahead_horizon = k;
+        self
+    }
+
+    /// Candidate processors per lookahead decision (`--beam`); `<= 1`
+    /// degenerates to the base policy.
+    pub fn lookahead_beam(mut self, beam: u32) -> Self {
+        self.cfg.lookahead_beam = beam;
+        self
+    }
+
+    /// Base policy the `lookahead` scheduler refines (`--base`).
+    pub fn lookahead_base(mut self, base: BasePolicy) -> Self {
+        self.cfg.lookahead_base = base;
         self
     }
 
@@ -328,10 +376,14 @@ impl Server {
         }
         let scheduler: Box<dyn Scheduler> = match self.sched {
             SchedChoice::Custom(s) => s,
-            SchedChoice::Named(n) => scheduler_by_name(&n, &self.soc, self.apps.len())?,
+            SchedChoice::Named(n) => {
+                scheduler_by_name(&n, &self.soc, self.apps.len(), &self.cfg)?
+            }
             SchedChoice::Default => Box::new(Adms::default()),
         };
-        let tuned = scheduler.name() == "adms";
+        // Keyed on `tuning_name`, not `name`: lookahead-over-adms must
+        // partition with the same tuned windows bare adms gets.
+        let tuned = scheduler.tuning_name() == "adms";
         let mut plans = Vec::new();
         for app in &self.apps {
             let g = zoo::by_name(&app.model)

@@ -30,7 +30,7 @@ use std::collections::{BinaryHeap, HashMap};
 /// resident for the contention model.
 const SESSION_WINDOW_MS: f64 = 100.0;
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Ev {
     Timer(u64),
     Complete { proc: usize, token: RunToken },
@@ -45,7 +45,7 @@ enum Ev {
 /// much earlier, from the replay schedule) process equal-time events in
 /// the same order — the foundation of trace record/replay
 /// (`scenario::trace`).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct QEv {
     t: OrdF64,
     seq: u64,
@@ -98,6 +98,7 @@ struct Running {
 }
 
 /// Dynamic per-processor state.
+#[derive(Clone)]
 struct ProcState {
     thermal: ThermalState,
     running: Vec<Running>,
@@ -160,6 +161,14 @@ impl ProcState {
 }
 
 /// Discrete-event SoC backend on a virtual clock.
+///
+/// The whole backend is `Clone`: every field is plain owned data (the
+/// event heap, per-processor state, meters, series), so [`fork`]
+/// (`SimBackend::fork`) is a deep copy whose future evolution is
+/// byte-identical to the original's — the fidelity contract behind the
+/// lookahead scheduler's what-if rollouts, pinned by
+/// `prop_fork_is_byte_identical`.
+#[derive(Clone)]
 pub struct SimBackend {
     soc: SocSpec,
     cfg: SimConfig,
@@ -254,6 +263,21 @@ impl SimBackend {
         self.last_tick = now;
         let next = now + self.cfg.tick_ms;
         self.push(next, Ev::Tick);
+    }
+
+    /// Snapshot the full simulation state — heap, clocks, occupancy,
+    /// thermal/DVFS, energy meters, series, timeline. The fork and the
+    /// original evolve independently and identically from this instant
+    /// (`req_units` is keyed-access-only, so `HashMap` iteration order
+    /// cannot leak into either timeline).
+    pub fn fork(&self) -> SimBackend {
+        self.clone()
+    }
+
+    /// Rewind to a previously taken [`fork`](SimBackend::fork) snapshot,
+    /// reusing this backend's allocations where the lengths line up.
+    pub fn restore(&mut self, snap: &SimBackend) {
+        self.clone_from(snap);
     }
 }
 
@@ -374,6 +398,10 @@ impl ExecutionBackend for SimBackend {
 
     fn running_units(&self, req: ReqId) -> usize {
         self.req_units.get(&req).copied().unwrap_or(0) as usize
+    }
+
+    fn fork(&self) -> Option<Box<dyn ExecutionBackend>> {
+        Some(Box::new(self.clone()))
     }
 
     fn next_event(&mut self) -> ExecEvent {

@@ -31,6 +31,10 @@
 //! partitioning per (model, SoC, ws) instead of recomputing it per
 //! device.
 
+pub mod tournament;
+
+pub use tournament::{run_tournament, TournamentReport, TournamentRow, TournamentSpec};
+
 use crate::exec::{RunSpec, SimConfig, SCHEDULER_NAMES};
 use crate::sim::SimReport;
 use crate::soc::soc_by_name;
@@ -297,7 +301,7 @@ impl FleetAgg {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let num_or_zero = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
         Json::obj(vec![
             ("devices", Json::Num(self.devices as f64)),

@@ -1,0 +1,224 @@
+//! Scheduler tournament: every scheduler × SoC preset × scenario, one
+//! mergeable table — scheduler comparison as a single regenerable
+//! experiment (`adms tournament`, written to `TOURNAMENT.json`).
+//!
+//! A tournament is a thin shape over the fleet layer: the (soc, sched,
+//! scenario) cross product becomes one [`ArmSpec`] per cell with
+//! `devices_per_arm` devices each, and the whole population runs through
+//! [`run_fleet`] — so worker-count byte-determinism, per-device seeding,
+//! and the digest merge order are all inherited rather than re-proven
+//! (`tests/fleet_rt.rs` pins the inherited guarantee on the tournament
+//! surface too). Rows come out sorted by (soc, sched, scenario), making
+//! two tournaments over different cells trivially mergeable by
+//! concatenation.
+
+use super::{run_fleet, ArmSpec, FleetAgg, FleetSpec};
+use crate::exec::SimConfig;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// The cross product to evaluate. Name lists are sorted and deduplicated
+/// at run time, so the row order of the output table is a function of the
+/// *set* of cells, not of CLI argument order.
+#[derive(Debug, Clone)]
+pub struct TournamentSpec {
+    /// SoC preset names (`soc::SOC_NAMES`).
+    pub socs: Vec<String>,
+    /// Scheduler names (`exec::SCHEDULER_NAMES`); `lookahead` arms take
+    /// their horizon/beam/base from `cfg`.
+    pub scheds: Vec<String>,
+    /// Scenario names or spec files (`scenario::resolve`).
+    pub scenarios: Vec<String>,
+    /// Simulated devices per (soc, sched, scenario) cell.
+    pub devices_per_arm: usize,
+    pub seed: u64,
+    /// Per-device execution config (`cfg.seed` is overwritten per device).
+    pub cfg: SimConfig,
+}
+
+/// One (soc, sched, scenario) cell's merged result.
+#[derive(Debug, Clone)]
+pub struct TournamentRow {
+    pub soc: String,
+    pub sched: String,
+    pub scenario: String,
+    pub agg: FleetAgg,
+}
+
+/// The whole table, in (soc, sched, scenario) row order.
+#[derive(Debug, Clone)]
+pub struct TournamentReport {
+    pub devices_per_arm: usize,
+    pub seed: u64,
+    pub rows: Vec<TournamentRow>,
+}
+
+impl TournamentReport {
+    /// Find a cell (exact names, post-sort spelling).
+    pub fn row(&self, soc: &str, sched: &str, scenario: &str) -> Option<&TournamentRow> {
+        self.rows
+            .iter()
+            .find(|r| r.soc == soc && r.sched == sched && r.scenario == scenario)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj = match r.agg.to_json() {
+                    Json::Obj(o) => o,
+                    _ => unreachable!("agg serializes as an object"),
+                };
+                obj.insert("soc".into(), Json::Str(r.soc.clone()));
+                obj.insert("sched".into(), Json::Str(r.sched.clone()));
+                obj.insert("scenario".into(), Json::Str(r.scenario.clone()));
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::obj(vec![
+            ("devices_per_arm", Json::Num(self.devices_per_arm as f64)),
+            // String for the same reason as the fleet report: u64 seeds
+            // above 2^53 would round through f64.
+            ("seed", Json::Str(self.seed.to_string())),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Render the table for the CLI, grouped by (soc, scenario) so the
+    /// scheduler comparison reads down the column.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:14} {:16} {:10} {:>9} {:>7} {:>8} {:>8} {:>9} {:>6}",
+            "soc", "scenario", "sched", "completed", "failed", "p50 ms", "p95 ms", "req/s",
+            "thrtl"
+        );
+        for r in &self.rows {
+            let a = &r.agg;
+            let approx = if a.latency.is_subsampled() { "~" } else { "" };
+            let _ = writeln!(
+                out,
+                "{:14} {:16} {:10} {:>9} {:>7} {:>8} {:>8} {:>9.2} {:>6}",
+                r.soc,
+                r.scenario,
+                r.sched,
+                a.completed,
+                a.failed,
+                format!(
+                    "{approx}{:.2}",
+                    if a.latency.is_empty() { 0.0 } else { a.latency.p50() }
+                ),
+                format!(
+                    "{approx}{:.2}",
+                    if a.latency.is_empty() { 0.0 } else { a.latency.p95() }
+                ),
+                a.throughput_rps(),
+                a.throttle_events,
+            );
+        }
+        out
+    }
+}
+
+/// Run the full cross product, `devices_per_arm` devices per cell,
+/// sharded over `workers` threads. Byte-deterministic across worker
+/// counts (inherited from [`run_fleet`]).
+pub fn run_tournament(spec: &TournamentSpec, workers: usize) -> Result<TournamentReport> {
+    if spec.socs.is_empty() || spec.scheds.is_empty() || spec.scenarios.is_empty() {
+        bail!("tournament needs at least one soc, one scheduler, and one scenario");
+    }
+    if spec.devices_per_arm == 0 {
+        bail!("tournament needs at least one device per arm");
+    }
+    let canon = |names: &[String]| -> Vec<String> {
+        let mut v = names.to_vec();
+        v.sort();
+        v.dedup();
+        v
+    };
+    let socs = canon(&spec.socs);
+    let scheds = canon(&spec.scheds);
+    let scenarios = canon(&spec.scenarios);
+    // Row order = arm order = (soc, sched, scenario) lexicographic.
+    let mut arms = Vec::new();
+    let mut cells = Vec::new();
+    for soc in &socs {
+        for sched in &scheds {
+            for scenario in &scenarios {
+                arms.push(ArmSpec::new(soc, sched, &format!("scenario:{scenario}")));
+                cells.push((soc.clone(), sched.clone(), scenario.clone()));
+            }
+        }
+    }
+    let fleet = FleetSpec {
+        devices: arms.len() * spec.devices_per_arm,
+        arms,
+        seed: spec.seed,
+        cfg: spec.cfg.clone(),
+    };
+    let report = run_fleet(&fleet, workers)?;
+    // Device d runs arm d % arms, so with devices = cells × per_arm every
+    // cell gets exactly `devices_per_arm` devices; fleet arm order is the
+    // arm vector's order, which is the cell order built above.
+    let rows = report
+        .arms
+        .into_iter()
+        .zip(cells)
+        .map(|(a, (soc, sched, scenario))| TournamentRow { soc, sched, scenario, agg: a.agg })
+        .collect();
+    Ok(TournamentReport { devices_per_arm: spec.devices_per_arm, seed: spec.seed, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_lists_are_canonicalized_and_rows_ordered() {
+        let spec = TournamentSpec {
+            socs: vec!["kirin970".into(), "dimensity9000".into(), "kirin970".into()],
+            scheds: vec!["band".into(), "adms".into()],
+            scenarios: vec!["frs_burst".into()],
+            devices_per_arm: 1,
+            seed: 7,
+            cfg: SimConfig {
+                duration_ms: 400.0,
+                max_requests: Some(2),
+                ..SimConfig::default()
+            },
+        };
+        let report = run_tournament(&spec, 2).unwrap();
+        // Duplicate soc deduped: 2 socs × 2 scheds × 1 scenario = 4 rows.
+        assert_eq!(report.rows.len(), 4);
+        let keys: Vec<(String, String, String)> = report
+            .rows
+            .iter()
+            .map(|r| (r.soc.clone(), r.sched.clone(), r.scenario.clone()))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "rows must come out (soc, sched, scenario)-sorted");
+        assert!(report.row("kirin970", "band", "frs_burst").is_some());
+        assert!(report.row("kirin970", "nope", "frs_burst").is_none());
+        // Every cell simulated its devices.
+        for r in &report.rows {
+            assert_eq!(r.agg.devices, 1, "cell {:?} device count", (&r.soc, &r.sched));
+        }
+    }
+
+    #[test]
+    fn empty_cells_are_rejected() {
+        let spec = TournamentSpec {
+            socs: vec![],
+            scheds: vec!["adms".into()],
+            scenarios: vec!["frs_burst".into()],
+            devices_per_arm: 1,
+            seed: 1,
+            cfg: SimConfig::default(),
+        };
+        assert!(run_tournament(&spec, 1).is_err());
+    }
+}

@@ -15,6 +15,9 @@
 //!   fleet                 simulate a population of devices — (SoC ×
 //!                         scheduler × workload) arms sharded across
 //!                         worker threads, merged into one FleetReport
+//!   tournament            scheduler tournament: every scheduler × SoC ×
+//!                         scenario cell as a fleet arm, one sorted,
+//!                         mergeable table written to TOURNAMENT.json
 //!   bench                 run the simulator throughput suite and write
 //!                         BENCH_sim.json (the tracked perf trajectory)
 //!   models | socs         list the zoo (with weight/activation
@@ -58,7 +61,7 @@ fn env_logger_lite() {
 }
 
 const USAGE: &str =
-    "adms <experiment|partition|tune|simulate|serve|scenario|fleet|bench|models|socs> [options]";
+    "adms <experiment|partition|tune|simulate|serve|scenario|fleet|tournament|bench|models|socs> [options]";
 
 fn dispatch(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first().map(String::as_str) else {
@@ -75,6 +78,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "scenario" => cmd_scenario(rest),
         "fleet" => cmd_fleet(rest),
+        "tournament" => cmd_tournament(rest),
         "bench" => cmd_bench(rest),
         "models" => cmd_models(rest),
         "socs" => {
@@ -203,6 +207,13 @@ fn parse_mem_budget(s: &str) -> Result<u64> {
 fn parse_mem_policy(s: &str) -> Result<adms::weights::MemPolicy> {
     adms::weights::MemPolicy::parse(s)
         .ok_or_else(|| anyhow::anyhow!("--mem-policy: expected 'cost' or 'lru', got '{s}'"))
+}
+
+/// Parse `--base` for the `lookahead` scheduler: any of the four bare
+/// policies (the `tflite` alias for vanilla included).
+fn parse_base(s: &str) -> Result<adms::sched::BasePolicy> {
+    adms::sched::BasePolicy::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("--base: expected vanilla|band|adms|pinned, got '{s}'"))
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
@@ -355,7 +366,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     use adms::exec::Server;
     use adms::scenario::RunTrace;
     let specs = [
-        OptSpec { name: "sched", takes_value: true, help: "vanilla|band|adms|pinned", default: Some("adms") },
+        OptSpec { name: "sched", takes_value: true, help: "vanilla|band|adms|pinned|lookahead", default: Some("adms") },
         OptSpec { name: "workload", takes_value: true, help: "frs|ros|stress[:n]|copies:<model>[:n]|slo[:mult] or comma-separated zoo models", default: Some("frs") },
         OptSpec { name: "scenario", takes_value: true, help: "dynamic scenario: a name (adms scenario list) or a JSON file; overrides --workload/--slo", default: None },
         OptSpec { name: "record", takes_value: true, help: "write the run trace (arrivals + dispatches) to this JSON file", default: None },
@@ -369,6 +380,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms: how long a batchable task may wait for peers", default: Some("0") },
         OptSpec { name: "mem-budget", takes_value: true, help: "per-processor weight-residency budget: BYTES[K|M|G], 'spec' (SoC preset budgets), or 'off' (0 = residency modeling disabled)", default: Some("0") },
         OptSpec { name: "mem-policy", takes_value: true, help: "weight-cache eviction policy: cost (GreedyDual-Size) | lru", default: Some("cost") },
+        OptSpec { name: "horizon", takes_value: true, help: "lookahead: completions each forked rollout observes before scoring (0 = rollouts off; lookahead degenerates to --base)", default: Some("2") },
+        OptSpec { name: "beam", takes_value: true, help: "lookahead: candidate processors evaluated per decision (1 likewise degenerates)", default: Some("3") },
+        OptSpec { name: "base", takes_value: true, help: "lookahead: base policy to refine (vanilla|band|adms|pinned)", default: Some("adms") },
         OptSpec { name: "pace", takes_value: true, help: "synthetic payload pace multiplier", default: Some("1") },
         OptSpec { name: "seed", takes_value: true, help: "rng seed", default: Some("42") },
         OptSpec { name: "probe", takes_value: false, help: "legacy: serve the AOT numerics probe (PJRT)", default: None },
@@ -474,6 +488,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .batch_window_ms(batch_window)
         .mem_budget_bytes(parse_mem_budget(&args.get_or("mem-budget", "0"))?)
         .mem_policy(parse_mem_policy(&args.get_or("mem-policy", "cost"))?)
+        .lookahead_horizon(args.get_u64("horizon", 2)? as u32)
+        .lookahead_beam(args.get_u64("beam", 3)? as u32)
+        .lookahead_base(parse_base(&args.get_or("base", "adms"))?)
         .pace(pace);
     // Scenarios control their own lifecycle: an implicit quota would end
     // the run before the declared churn plays out, so only an explicit
@@ -611,7 +628,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "seed", takes_value: true, help: "fleet seed (per-device seeds derive from it)", default: Some("42") },
         OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = ADMS_FLEET_WORKERS or available parallelism; never affects results)", default: Some("0") },
         OptSpec { name: "socs", takes_value: true, help: "comma-separated SoC presets", default: Some("dimensity9000") },
-        OptSpec { name: "scheds", takes_value: true, help: "comma-separated schedulers (vanilla|band|adms|pinned)", default: Some("adms") },
+        OptSpec { name: "scheds", takes_value: true, help: "comma-separated schedulers (vanilla|band|adms|pinned|lookahead)", default: Some("adms") },
         OptSpec { name: "workloads", takes_value: true, help: "comma-separated workloads: names, model lists (use + within an arm, e.g. retinaface+east), or scenario:<name-or-file>", default: Some("frs") },
         OptSpec { name: "duration", takes_value: true, help: "per-device horizon, simulated ms", default: Some("5000") },
         OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
@@ -619,6 +636,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms for batchable tasks", default: Some("0") },
         OptSpec { name: "mem-budget", takes_value: true, help: "per-processor weight-residency budget, all arms: BYTES[K|M|G], 'spec', or 'off'", default: Some("0") },
         OptSpec { name: "mem-policy", takes_value: true, help: "weight-cache eviction policy: cost | lru", default: Some("cost") },
+        OptSpec { name: "horizon", takes_value: true, help: "lookahead arms: rollout completions observed before scoring (0 = degenerate to --base)", default: Some("2") },
+        OptSpec { name: "beam", takes_value: true, help: "lookahead arms: candidate processors per decision", default: Some("3") },
+        OptSpec { name: "base", takes_value: true, help: "lookahead arms: base policy (vanilla|band|adms|pinned)", default: Some("adms") },
         OptSpec { name: "json", takes_value: true, help: "also write the FleetReport as JSON here", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
@@ -668,6 +688,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         batch_window_ms: args.get_f64("batch-window", 0.0)?.max(0.0),
         mem_budget_bytes: parse_mem_budget(&args.get_or("mem-budget", "0"))?,
         mem_policy: parse_mem_policy(&args.get_or("mem-policy", "cost"))?,
+        lookahead_horizon: args.get_u64("horizon", 2)? as u32,
+        lookahead_beam: args.get_u64("beam", 3)? as u32,
+        lookahead_base: parse_base(&args.get_or("base", "adms"))?,
         ..Default::default()
     };
     let spec = FleetSpec {
@@ -705,6 +728,94 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("--json '{path}': {e}"))?;
         println!("wrote FleetReport to {path}");
     }
+    Ok(())
+}
+
+/// `adms tournament`: the scheduler tournament — every requested
+/// scheduler × SoC preset × scenario cell becomes one fleet arm with
+/// `--devices-per-arm` devices, and the merged table lands in
+/// `TOURNAMENT.json`. `all` (the default) expands each axis to its full
+/// registry; rows come out (soc, sched, scenario)-sorted regardless of
+/// argument order, so tables from different runs merge by concatenation.
+fn cmd_tournament(argv: &[String]) -> Result<()> {
+    use adms::fleet::{run_tournament, TournamentSpec};
+    let specs = [
+        OptSpec { name: "socs", takes_value: true, help: "comma-separated SoC presets, or 'all'", default: Some("all") },
+        OptSpec { name: "scheds", takes_value: true, help: "comma-separated schedulers, or 'all'", default: Some("all") },
+        OptSpec { name: "scenarios", takes_value: true, help: "comma-separated scenario names or spec files, or 'all' (named scenarios)", default: Some("all") },
+        OptSpec { name: "devices-per-arm", takes_value: true, help: "simulated devices per (soc, sched, scenario) cell", default: Some("2") },
+        OptSpec { name: "seed", takes_value: true, help: "tournament seed (per-device seeds derive from it)", default: Some("42") },
+        OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = ADMS_FLEET_WORKERS or available parallelism; never affects results)", default: Some("0") },
+        OptSpec { name: "duration", takes_value: true, help: "per-device horizon, simulated ms", default: Some("3000") },
+        OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
+        OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse, all cells (1 = off)", default: Some("1") },
+        OptSpec { name: "batch-window", takes_value: true, help: "coalescing window in ms for batchable tasks", default: Some("0") },
+        OptSpec { name: "mem-budget", takes_value: true, help: "per-processor weight-residency budget, all cells: BYTES[K|M|G], 'spec', or 'off'", default: Some("0") },
+        OptSpec { name: "mem-policy", takes_value: true, help: "weight-cache eviction policy: cost | lru", default: Some("cost") },
+        OptSpec { name: "horizon", takes_value: true, help: "lookahead cells: rollout completions observed before scoring (0 = degenerate to --base)", default: Some("2") },
+        OptSpec { name: "beam", takes_value: true, help: "lookahead cells: candidate processors per decision", default: Some("3") },
+        OptSpec { name: "base", takes_value: true, help: "lookahead cells: base policy (vanilla|band|adms|pinned)", default: Some("adms") },
+        OptSpec { name: "out", takes_value: true, help: "write the TournamentReport as JSON here", default: Some("TOURNAMENT.json") },
+        OptSpec { name: "help", takes_value: false, help: "show help", default: None },
+    ];
+    let args = parse(argv, &specs)?;
+    if args.flag("help") {
+        println!("{}", render_help("adms tournament [options]", &specs));
+        println!("socs: {}", SOC_NAMES.join(", "));
+        println!("schedulers: {}", adms::exec::SCHEDULER_NAMES.join(", "));
+        println!("named scenarios: {}", adms::scenario::SCENARIO_NAMES.join(", "));
+        return Ok(());
+    }
+    let expand = |key: &str, all: &[&str]| -> Vec<String> {
+        let raw = args.get_or(key, "all");
+        if raw == "all" {
+            all.iter().map(|s| s.to_string()).collect()
+        } else {
+            raw.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect()
+        }
+    };
+    let requests = args.get_u64("requests", 0)?;
+    let spec = TournamentSpec {
+        socs: expand("socs", &SOC_NAMES),
+        scheds: expand("scheds", &adms::exec::SCHEDULER_NAMES),
+        scenarios: expand("scenarios", &adms::scenario::SCENARIO_NAMES),
+        devices_per_arm: args.get_usize("devices-per-arm", 2)?,
+        seed: args.get_u64("seed", 42)?,
+        cfg: adms::exec::SimConfig {
+            duration_ms: args.get_f64("duration", 3_000.0)?,
+            max_requests: (requests > 0).then_some(requests),
+            batch_max: args.get_usize("batch-max", 1)?.max(1),
+            batch_window_ms: args.get_f64("batch-window", 0.0)?.max(0.0),
+            mem_budget_bytes: parse_mem_budget(&args.get_or("mem-budget", "0"))?,
+            mem_policy: parse_mem_policy(&args.get_or("mem-policy", "cost"))?,
+            lookahead_horizon: args.get_u64("horizon", 2)? as u32,
+            lookahead_beam: args.get_u64("beam", 3)? as u32,
+            lookahead_base: parse_base(&args.get_or("base", "adms"))?,
+            ..Default::default()
+        },
+    };
+    let workers = match args.get_usize("workers", 0)? {
+        0 => adms::util::env::fleet_workers().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(usize::from).unwrap_or(4).min(8)
+        }),
+        n => n,
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_tournament(&spec, workers)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    println!(
+        "tournament: {} cell(s) × {} device(s), seed {}, {} workers, {:.2} s wall",
+        report.rows.len(),
+        spec.devices_per_arm,
+        spec.seed,
+        workers,
+        wall_s
+    );
+    print!("{}", report.render());
+    let path = args.get_or("out", "TOURNAMENT.json");
+    std::fs::write(&path, report.to_json().to_pretty())
+        .map_err(|e| anyhow::anyhow!("--out '{path}': {e}"))?;
+    println!("wrote TournamentReport to {path}");
     Ok(())
 }
 

@@ -1,0 +1,175 @@
+//! Sim-in-the-loop lookahead scheduling: a wrapper policy that refines a
+//! base policy's placements with forked what-if rollouts.
+//!
+//! The wrapper itself makes no placement decisions. [`Lookahead`]
+//! delegates `schedule` (and every cost hook) to its base policy
+//! unchanged; what it adds is [`Scheduler::rollout_params`], which tells
+//! the [`Driver`](crate::exec::Driver) to evaluate up to `beam` candidate
+//! processors for each accepted assignment on a
+//! [forked](crate::exec::SimBackend::fork) simulation before committing —
+//! OmniBoost's estimator-in-the-scheduler idea (PAPERS.md) on this repo's
+//! calibrated discrete-event model. Rollout scoring and candidate
+//! enumeration live in the driver (`exec/driver.rs`), next to the pricing
+//! they must agree with.
+//!
+//! Honesty note: rollouts are charged *zero* in-model decision overhead —
+//! `decision_overhead_ms` delegates to the base policy, so simulated
+//! lookahead wins are net of placement quality only, not of the (real)
+//! cost of running k·beam forked simulations per decision. The bench
+//! suite's `lookahead` row tracks that wall-clock cost instead.
+
+use super::{Assignment, ModelPlan, PendingTask, SchedCtx, Scheduler};
+use crate::soc::{ProcId, SocSpec};
+use crate::TimeMs;
+
+/// Rollout depth/width handed to the driver by
+/// [`Scheduler::rollout_params`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RolloutParams {
+    /// Completions to observe on each forked rollout before scoring
+    /// (`--horizon`). `0` never reaches the driver: the server builds the
+    /// bare base policy instead (the no-op-by-construction guarantee).
+    pub horizon: u32,
+    /// Candidate processors evaluated per decision (`--beam`; `<= 1`
+    /// likewise degenerates at build time).
+    pub beam: u32,
+}
+
+/// Which existing policy a [`Lookahead`] refines (`--base`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BasePolicy {
+    Vanilla,
+    Band,
+    Adms,
+    Pinned,
+}
+
+impl BasePolicy {
+    pub const ALL: [BasePolicy; 4] =
+        [BasePolicy::Vanilla, BasePolicy::Band, BasePolicy::Adms, BasePolicy::Pinned];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BasePolicy::Vanilla => "vanilla",
+            BasePolicy::Band => "band",
+            BasePolicy::Adms => "adms",
+            BasePolicy::Pinned => "pinned",
+        }
+    }
+
+    /// Parse a CLI spelling (the same names `--sched` accepts for the
+    /// bare policies).
+    pub fn parse(s: &str) -> Option<BasePolicy> {
+        Some(match s {
+            "vanilla" | "tflite" => BasePolicy::Vanilla,
+            "band" => BasePolicy::Band,
+            "adms" => BasePolicy::Adms,
+            "pinned" => BasePolicy::Pinned,
+            _ => None?,
+        })
+    }
+
+    /// Build the base policy exactly as
+    /// [`scheduler_by_name`](crate::exec::scheduler_by_name) would.
+    pub fn build(self, soc: &SocSpec, sessions: usize) -> Box<dyn Scheduler> {
+        match self {
+            BasePolicy::Vanilla => {
+                Box::new(super::VanillaTflite::default_for(soc, sessions))
+            }
+            BasePolicy::Band => Box::new(super::Band::new()),
+            BasePolicy::Adms => Box::<super::Adms>::default(),
+            BasePolicy::Pinned => {
+                let target = soc.best_accelerator().unwrap_or_else(|| soc.cpu_id());
+                Box::new(super::Pinned::new(target, soc.cpu_id()))
+            }
+        }
+    }
+}
+
+/// The fifth scheduler arm: a base policy plus driver-side rollouts.
+pub struct Lookahead {
+    base: Box<dyn Scheduler>,
+    params: RolloutParams,
+}
+
+impl Lookahead {
+    /// Wrap `base`. Callers (the server) must only construct this with
+    /// `horizon > 0 && beam > 1` — degenerate configurations return the
+    /// bare base policy instead, keeping `--horizon 0` a no-op by
+    /// construction rather than by code path.
+    pub fn new(base: Box<dyn Scheduler>, params: RolloutParams) -> Self {
+        Lookahead { base, params }
+    }
+}
+
+impl Scheduler for Lookahead {
+    fn name(&self) -> &'static str {
+        "lookahead"
+    }
+
+    /// Window tuning keys on the base policy: lookahead-over-adms must
+    /// partition with the same tuned windows bare adms uses, or the
+    /// placement comparison would be confounded by partitioning.
+    fn tuning_name(&self) -> &'static str {
+        self.base.name()
+    }
+
+    fn rollout_params(&self) -> Option<RolloutParams> {
+        Some(self.params)
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx, ready: &[PendingTask], out: &mut Vec<Assignment>) {
+        self.base.schedule(ctx, ready, out);
+    }
+
+    fn decision_overhead_ms(&self, plan: &ModelPlan) -> TimeMs {
+        self.base.decision_overhead_ms(plan)
+    }
+
+    fn serializes_sessions(&self) -> bool {
+        self.base.serializes_sessions()
+    }
+
+    fn transfer_cost_ms(&self, soc: &SocSpec, from: ProcId, to: ProcId, bytes: u64) -> TimeMs {
+        self.base.transfer_cost_ms(soc, from, to, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::dimensity9000;
+
+    /// The wrapper is a pure pass-through around its base: same
+    /// serialization contract, same overheads, base-keyed tuning — only
+    /// the name and the rollout advertisement differ.
+    #[test]
+    fn lookahead_delegates_everything_but_name() {
+        let soc = dimensity9000();
+        for policy in BasePolicy::ALL {
+            let base = policy.build(&soc, 2);
+            let serializes = base.serializes_sessions();
+            let la = Lookahead::new(
+                policy.build(&soc, 2),
+                RolloutParams { horizon: 2, beam: 3 },
+            );
+            assert_eq!(la.name(), "lookahead");
+            assert_eq!(la.tuning_name(), policy.name());
+            assert_eq!(la.serializes_sessions(), serializes);
+            assert_eq!(
+                la.rollout_params(),
+                Some(RolloutParams { horizon: 2, beam: 3 })
+            );
+            assert!(base.rollout_params().is_none());
+        }
+    }
+
+    #[test]
+    fn base_policy_names_round_trip() {
+        for policy in BasePolicy::ALL {
+            assert_eq!(BasePolicy::parse(policy.name()), Some(policy));
+        }
+        assert_eq!(BasePolicy::parse("tflite"), Some(BasePolicy::Vanilla));
+        assert_eq!(BasePolicy::parse("lookahead"), None);
+    }
+}

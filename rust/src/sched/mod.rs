@@ -18,9 +18,11 @@ pub mod vanilla;
 pub mod band;
 pub mod adms;
 pub mod pinned;
+pub mod lookahead;
 
 pub use adms::Adms;
 pub use band::Band;
+pub use lookahead::{BasePolicy, Lookahead, RolloutParams};
 pub use pinned::Pinned;
 pub use plan::ModelPlan;
 pub use vanilla::VanillaTflite;
@@ -299,6 +301,20 @@ pub trait Scheduler: Send {
         bytes: u64,
     ) -> TimeMs {
         crate::soc::cost::transfer_ms(soc, from, to, bytes)
+    }
+
+    /// Rollout parameters when this policy wants the driver to refine its
+    /// placements with forked what-if rollouts ([`Lookahead`] overrides;
+    /// `None` keeps the classic dispatch path byte-exact).
+    fn rollout_params(&self) -> Option<RolloutParams> {
+        None
+    }
+
+    /// The name window-size tuning keys on. [`Lookahead`] reports its
+    /// *base* policy here so lookahead-over-adms gets the same tuned
+    /// windows bare adms does; everyone else tunes under their own name.
+    fn tuning_name(&self) -> &'static str {
+        self.name()
     }
 }
 

@@ -276,6 +276,45 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             completed: completed.get(),
         });
     }
+    // Lookahead rollout cost (ISSUE 7): the same churn scenario under
+    // `lookahead` over the adms base, rollouts live. Rollouts are charged
+    // ZERO in-model decision overhead (see `sched::lookahead`), so this
+    // row is where their real cost shows up: the wall-clock price of
+    // forking the sim and rolling candidate placements at every decision,
+    // directly comparable to the base-policy `churn_1s/mem` row above.
+    {
+        use crate::exec::Server;
+        use crate::scenario::model_churn;
+        let (apps, events_list) = model_churn().compile().expect("model_churn compiles");
+        let cfg = SimConfig {
+            duration_ms: 1_000.0,
+            lookahead_horizon: 2,
+            lookahead_beam: 3,
+            ..Default::default()
+        };
+        let name = "churn_1s/lookahead".to_string();
+        let events = Cell::new(0u64);
+        let completed = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = Server::new(soc.clone())
+                .scheduler_name("lookahead")
+                .apps(apps.clone())
+                .events(events_list.clone())
+                .config(cfg.clone())
+                .run_sim()
+                .expect("churn lookahead bench run");
+            events.set(r.events);
+            completed.set(r.total_completed());
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry {
+            name,
+            stats,
+            sim_ms: 1_000.0,
+            events: events.get(),
+            completed: completed.get(),
+        });
+    }
     // Fleet throughput: a sharded device population per measured run
     // (`sim_ms` is summed over devices, so the headline figure stays
     // simulated-ms per wall-second — now aggregated across shards).

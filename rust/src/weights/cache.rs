@@ -391,6 +391,73 @@ mod tests {
         assert_eq!(c.price(&soc, 400.0, 0, 0, 0), 0.0, "resident shard untouched");
     }
 
+    /// All-bypass domain: a budget smaller than EVERY shard. Nothing can
+    /// ever become resident, yet every dispatch must still proceed —
+    /// charged the full streamed load each time — rather than wedging.
+    /// The counters stay honest: all misses, zero hits, zero evictions
+    /// (there is never anyone to evict), zero resident bytes, and
+    /// `bytes_loaded` counts every re-stream of the same shard.
+    #[test]
+    fn budget_below_every_shard_bypasses_all_loads() {
+        let sizes = [4 * MIB, 6 * MIB, 9 * MIB];
+        let (soc, mut c) = cache(2 * MIB, MemPolicy::CostLru, &sizes);
+        let mut t = 0.0;
+        for round in 0..3u64 {
+            for (sess, &bytes) in sizes.iter().enumerate() {
+                let full = cold_load_ms(&soc, bytes);
+                let charged = c.commit(&soc, t, sess, 0, 0);
+                assert!(
+                    (charged - full).abs() < 1e-9,
+                    "round {round} session {sess}: bypass must charge the full load"
+                );
+                // Unpin immediately: even fully unpinned, nothing fits.
+                c.unpin(sess, 0, 0);
+                t += charged + 1.0;
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.hits, 0, "a shard became warm inside an all-bypass domain");
+        assert_eq!(s.misses, 9);
+        assert_eq!(s.evictions, 0, "evicted from an always-empty domain");
+        assert_eq!(s.bytes_resident, 0);
+        // Every dispatch re-streamed its shard: 3 rounds × Σ sizes.
+        assert_eq!(s.bytes_loaded, 3 * (4 + 6 + 9) * MIB);
+    }
+
+    /// Pin starvation: the domain is full of PINNED shards (all in
+    /// flight, none unpinned yet). A new session's dispatch must not
+    /// deadlock or evict a pinned entry — it bypasses with the full load
+    /// charged, residents untouched. Once a pin releases, the same
+    /// session's next dispatch gets residency normally.
+    #[test]
+    fn pin_starved_domain_charges_bypass_and_recovers_after_unpin() {
+        // Two 4 MiB shards fill the 8 MiB domain exactly, both pinned.
+        let (soc, mut c) = cache(8 * MIB, MemPolicy::CostLru, &[4 * MIB, 4 * MIB, 3 * MIB]);
+        c.commit(&soc, 0.0, 0, 0, 0);
+        c.commit(&soc, 0.0, 1, 0, 0);
+        assert_eq!(c.resident_bytes(0), 8 * MIB);
+        // Starved: session 2 cannot make room anywhere.
+        let charged = c.commit(&soc, 500.0, 2, 0, 0);
+        assert!((charged - cold_load_ms(&soc, 3 * MIB)).abs() < 1e-9);
+        let s = c.stats();
+        assert_eq!(s.evictions, 0, "evicted a pinned shard");
+        assert_eq!(s.bytes_resident, 8 * MIB, "bypass must leave residents untouched");
+        // Both pinned shards are still warm for their owners.
+        assert_eq!(c.price(&soc, 600.0, 0, 0, 0), 0.0);
+        assert_eq!(c.price(&soc, 600.0, 1, 0, 0), 0.0);
+        // One pin releases -> the starved session gets residency.
+        c.unpin(0, 0, 0);
+        let reload = c.commit(&soc, 700.0, 2, 0, 0);
+        assert!(reload > 0.0, "still cold after the bypass");
+        assert_eq!(c.stats().evictions, 1, "the unpinned shard is now evictable");
+        assert_eq!(c.resident_bytes(0), 7 * MIB, "4 (pinned) + 3 (new) MiB resident");
+        assert_eq!(
+            c.price(&soc, 700.0 + reload, 2, 0, 0),
+            0.0,
+            "starved session's shard finally warm"
+        );
+    }
+
     #[test]
     fn eviction_order_is_deterministic_across_identical_runs() {
         let drive = |c: &mut WeightCache, soc: &SocSpec| {

@@ -127,6 +127,51 @@ fn all_three_schedulers_run_on_both_backends() {
     }
 }
 
+/// The fifth scheduler arm runs on both backends (ISSUE 7). On the sim
+/// the driver runs real rollouts — `SimBackend::fork` returns a
+/// snapshot. On the wall-clock pool `ExecutionBackend::fork` is `None`
+/// (real time cannot be forked), so the same configuration silently
+/// degenerates to base-policy behavior: the run must complete normally,
+/// not panic or stall, with the scheduler still reporting itself as
+/// `lookahead` (it WAS built — only the rollouts are unavailable).
+#[test]
+fn lookahead_runs_on_both_backends() {
+    let soc = dimensity9000();
+    let sim = Server::new(soc.clone())
+        .scheduler_name("lookahead")
+        .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+        .session("east", ArrivalMode::ClosedLoop, None)
+        .duration_ms(600.0)
+        .lookahead_horizon(2)
+        .lookahead_beam(3)
+        .run_sim()
+        .unwrap();
+    assert!(sim.total_completed() > 0, "lookahead on sim completed nothing");
+    assert_eq!(sim.scheduler, "lookahead");
+    for s in &sim.sessions {
+        assert_eq!(s.issued, s.completed + s.failed + s.cancelled, "lookahead on sim");
+    }
+
+    let pool = Server::new(soc)
+        .scheduler_name("lookahead")
+        .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+        .session("east", ArrivalMode::ClosedLoop, None)
+        .requests(2)
+        .duration_ms(60_000.0)
+        .lookahead_horizon(2)
+        .lookahead_beam(3)
+        .pace(0.02)
+        .run_threadpool()
+        .unwrap();
+    assert_eq!(
+        pool.total_completed(),
+        4,
+        "lookahead on threadpool: expected 2 requests × 2 sessions"
+    );
+    assert_eq!(pool.exec_errors, 0);
+    assert_eq!(pool.scheduler, "lookahead");
+}
+
 #[test]
 fn server_without_sessions_is_an_error() {
     let err = Server::new(dimensity9000()).run_sim().unwrap_err();

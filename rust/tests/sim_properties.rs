@@ -4,9 +4,9 @@
 //! `adms::testing::prop`).
 
 use adms::analyzer;
-use adms::exec::{ReadyQueue, Server};
+use adms::exec::{DispatchCmd, ExecutionBackend, ReadyQueue, Server, SimBackend};
 use adms::scenario::{self, GenConfig};
-use adms::sched::{Adms, Band, ModelPlan, PendingTask, Pinned, Scheduler, VanillaTflite};
+use adms::sched::{Adms, Band, BasePolicy, ModelPlan, PendingTask, Pinned, Scheduler, VanillaTflite};
 use adms::sim::{App, ArrivalMode, Engine, SimConfig, SimReport};
 use adms::soc::{soc_by_name, SOC_NAMES};
 use adms::testing::prop::{check, iters, Gen};
@@ -691,5 +691,313 @@ fn cache_aware_adms_beats_blind_vanilla_on_cold_start_storm() {
         "adms p95 {:.2} ms ≥ vanilla {:.2} ms on cold_start_storm",
         p95(&adms),
         p95(&vanilla)
+    );
+}
+
+/// Golden-equivalence referee for the forkable sim backend (ISSUE 7):
+/// `SimBackend::fork` must be a byte-faithful snapshot. A randomized op
+/// script (dispatches, timers, event pulls) drives a fresh backend to a
+/// reference `BackendReport`; then a second backend runs the script's
+/// prefix, forks (inherent, trait-object, and fork-then-restore forms),
+/// and every lineage — the forked copies, the restored copy, and the
+/// original that was forked from — independently runs the suffix. All of
+/// them must reproduce the reference report exactly (compared through
+/// `Debug`, which covers clocks, occupancy, thermal/DVFS-driven proc
+/// stats, the energy meter, the power series, and the timeline — f64s
+/// print shortest-roundtrip, so string equality is bit equality).
+#[test]
+fn prop_fork_is_byte_identical() {
+    #[derive(Clone)]
+    enum Op {
+        Dispatch { token: u64, unit: usize, proc: usize, exec: f64, xfer: f64, mgmt: f64, load: f64 },
+        Timer { at: f64, key: u64 },
+        Advance,
+    }
+    fn apply(be: &mut dyn ExecutionBackend, op: &Op) {
+        match *op {
+            Op::Dispatch { token, unit, proc, exec, xfer, mgmt, load } => {
+                let _ = be.try_dispatch(DispatchCmd {
+                    token,
+                    req: token,
+                    session: unit % 3,
+                    unit,
+                    proc,
+                    exec_full_ms: exec,
+                    xfer_ms: xfer,
+                    mgmt_ms: mgmt,
+                    load_ms: load,
+                    extra: Vec::new(),
+                });
+            }
+            Op::Timer { at, key } => be.arm_timer(at, key),
+            Op::Advance => {
+                let _ = be.next_event();
+            }
+        }
+    }
+    check("fork ≡ unforked fresh run (full BackendReport)", iters(10), |g| {
+        let soc = soc_by_name(*g.pick(&SOC_NAMES)).unwrap();
+        let nproc = soc.num_processors();
+        let cfg = SimConfig {
+            duration_ms: g.f64(300.0, 1_200.0),
+            seed: g.u64(0..1_000_000),
+            ..Default::default()
+        };
+        let mut ops = Vec::new();
+        let mut token = 0u64;
+        for _ in 0..g.usize(12..60) {
+            ops.push(match g.usize(0..10) {
+                0..=3 => {
+                    token += 1;
+                    Op::Dispatch {
+                        token,
+                        unit: g.usize(0..6),
+                        proc: g.usize(0..nproc),
+                        exec: g.f64(0.5, 30.0),
+                        xfer: g.f64(0.0, 5.0),
+                        mgmt: g.f64(0.0, 1.0),
+                        load: g.f64(0.0, 10.0),
+                    }
+                }
+                4 | 5 => Op::Timer { at: g.f64(0.0, cfg.duration_ms), key: g.u64(0..1_000) },
+                _ => Op::Advance,
+            });
+        }
+        let split = g.usize(0..ops.len() + 1);
+        let finish =
+            |be: SimBackend| format!("{:?}", Box::new(be).finish(cfg.duration_ms));
+
+        // Reference: an unforked fresh run over the whole script.
+        let mut reference = SimBackend::new(soc.clone(), cfg.clone());
+        for op in &ops {
+            apply(&mut reference, op);
+        }
+        let want = finish(reference);
+
+        // Mid-run churn, then fork in every supported form.
+        let mut original = SimBackend::new(soc.clone(), cfg.clone());
+        for op in &ops[..split] {
+            apply(&mut original, op);
+        }
+        let mut forked = original.fork();
+        let snapshot = original.fork();
+        let mut dyn_forked =
+            ExecutionBackend::fork(&original).expect("sim backend must fork");
+
+        for op in &ops[split..] {
+            apply(&mut original, op);
+        }
+        assert_eq!(finish(original), want, "original diverged after being forked");
+
+        for op in &ops[split..] {
+            apply(&mut forked, op);
+        }
+        assert_eq!(finish(forked), want, "fork diverged from the unforked run");
+
+        for op in &ops[split..] {
+            apply(dyn_forked.as_mut(), op);
+        }
+        assert_eq!(
+            format!("{:?}", dyn_forked.finish(cfg.duration_ms)),
+            want,
+            "trait-object fork diverged from the unforked run"
+        );
+
+        // restore(): perturb a copy past the snapshot, rewind, replay.
+        let mut restored = snapshot.fork();
+        for _ in 0..3 {
+            let _ = restored.next_event();
+        }
+        apply(
+            &mut restored,
+            &Op::Dispatch {
+                token: 999_999,
+                unit: 0,
+                proc: 0,
+                exec: 5.0,
+                xfer: 0.0,
+                mgmt: 0.0,
+                load: 0.0,
+            },
+        );
+        restored.restore(&snapshot);
+        for op in &ops[split..] {
+            apply(&mut restored, op);
+        }
+        assert_eq!(finish(restored), want, "restore() failed to rewind the perturbation");
+    });
+}
+
+/// Golden-equivalence referee for lookahead (ISSUE 7): `--sched
+/// lookahead` with `--horizon 0` — or `--beam 1` — must be a bit-exact
+/// no-op. Both degenerate configurations make the server build the BARE
+/// base policy (the `Lookahead` wrapper is never constructed, so there
+/// is no rollout code path left to diverge on), and the report's
+/// `scheduler` field then names the base — the honest description of
+/// what ran — so whole-report byte equality against a direct base-policy
+/// run is exactly the guarantee. Randomized churn scenarios across all
+/// four base policies, mirroring the `--batch-max 1` / `--mem-budget 0`
+/// referees above.
+#[test]
+fn prop_lookahead_degenerate_is_byte_identical_noop() {
+    check("lookahead horizon-0/beam-1 ≡ base policy (full-report JSON)", iters(8), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(1..4),
+            duration_ms: g.f64(400.0, 1_500.0),
+            churn: 0.6,
+            rate_change: 0.6,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let base = *g.pick(&["vanilla", "band", "adms", "pinned"]);
+        let seed = g.u64(0..1_000_000);
+        let run = |sched: &str, horizon: u32, beam: u32| -> SimReport {
+            Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.clone())
+                .events(events.clone())
+                .window_size(4)
+                .duration_ms(cfg.duration_ms)
+                .seed(seed)
+                .lookahead_base(BasePolicy::parse(base).unwrap())
+                .lookahead_horizon(horizon)
+                .lookahead_beam(beam)
+                .run_sim()
+                .unwrap()
+        };
+        let bare = run(base, 2, 3).to_json().to_pretty();
+        let horizon_zero = run("lookahead", 0, g.usize(2..6) as u32);
+        assert_eq!(
+            bare,
+            horizon_zero.to_json().to_pretty(),
+            "{base}: --sched lookahead --horizon 0 diverged from the bare policy"
+        );
+        let beam_one = run("lookahead", g.usize(1..4) as u32, 1);
+        assert_eq!(
+            bare,
+            beam_one.to_json().to_pretty(),
+            "{base}: --sched lookahead --beam 1 diverged from the bare policy"
+        );
+    });
+}
+
+/// Weight-cache counter consistency across record → replay (ISSUE 7):
+/// replaying a budgeted run's own trace must reproduce not just the
+/// dispatch sequence but the whole residency ledger — cache hit/miss/
+/// eviction/byte counters and the per-processor `cold_loads` charge
+/// counts — exactly. A drift here would mean the cache's behavior
+/// depends on something outside the recorded (arrivals, seed, config)
+/// tuple.
+#[test]
+fn prop_cache_counters_survive_trace_replay() {
+    check("cache stats + cold_loads identical across record → replay", iters(6), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(2..5),
+            duration_ms: g.f64(500.0, 1_200.0),
+            churn: 0.6,
+            rate_change: 0.5,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned"]);
+        let seed = g.u64(0..1_000_000);
+        let budget = (g.usize(4..64) as u64) << 20;
+        let run = |sched: &str,
+                   apps: &[App],
+                   events: &[adms::exec::SessionEvent],
+                   dur: f64,
+                   seed: u64|
+         -> SimReport {
+            Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.to_vec())
+                .events(events.to_vec())
+                .window_size(4)
+                .duration_ms(dur)
+                .seed(seed)
+                .mem_budget_bytes(budget)
+                .run_sim()
+                .unwrap()
+        };
+        let a = run(sched, &apps, &events, cfg.duration_ms, seed);
+        let trace = scenario::RunTrace::record("dimensity9000", &apps, &events, &a, seed);
+        let (rapps, revents) = trace.to_replay_scenario().compile().unwrap();
+        let r = run(&trace.scheduler, &rapps, &revents, trace.duration_ms, trace.seed);
+        assert_eq!(a.assignments, r.assignments, "{sched}: dispatch trace");
+        assert_eq!(a.cache, r.cache, "{sched}: cache counters diverged under replay");
+        let cold = |rep: &SimReport| -> Vec<u64> {
+            rep.procs.iter().map(|p| p.cold_loads).collect()
+        };
+        assert_eq!(cold(&a), cold(&r), "{sched}: per-proc cold_loads diverged");
+        assert!(
+            cold(&a).iter().sum::<u64>() <= a.cache.misses,
+            "{sched}: more charged dispatches than cache misses"
+        );
+    });
+}
+
+/// Acceptance criterion (ISSUE 7): the lookahead scheduler beats its
+/// base policy on at least one contention-heavy (SoC, scenario) arm —
+/// more completions, or equal completions at strictly better worst-case
+/// p95. The rollout sees what the base policies cannot: the base pick
+/// and its alternatives each play out on a forked copy of the *live*
+/// simulation (DVFS state, thermal headroom, slot occupancy, in-flight
+/// completions), and the commit goes to the candidate with the earliest
+/// simulated completion horizon. The scan covers both contention-bound
+/// SoCs and two RNG-driven scenarios for the state-blind bases
+/// (`vanilla` pins sessions to the best accelerator; `band` ignores
+/// DVFS/thermal state) — one strict win anywhere passes, every arm's
+/// scoreboard prints on failure.
+#[test]
+fn lookahead_beats_its_base_on_a_contended_arm() {
+    let run = |soc_name: &str, scen: &str, sched: &str, base: &str| -> SimReport {
+        let (apps, events) = scenario::by_name(scen).unwrap().compile().unwrap();
+        Server::new(soc_by_name(soc_name).unwrap())
+            .scheduler_name(sched)
+            .apps(apps)
+            .events(events)
+            .duration_ms(3_000.0)
+            .seed(42)
+            .lookahead_base(BasePolicy::parse(base).unwrap())
+            .lookahead_horizon(2)
+            .lookahead_beam(4)
+            .run_sim()
+            .unwrap()
+    };
+    let p95 = |r: &SimReport| -> f64 {
+        let mut worst: f64 = 0.0;
+        for s in &r.sessions {
+            if s.completed > 0 {
+                worst = worst.max(s.latency.p95());
+            }
+        }
+        worst
+    };
+    let mut scoreboard = Vec::new();
+    let mut won = false;
+    for soc in ["kirin970", "dimensity9000"] {
+        for scen in ["frs_burst", "churn_mix"] {
+            for base in ["vanilla", "band"] {
+                let b = run(soc, scen, base, base);
+                let la = run(soc, scen, "lookahead", base);
+                let improved = la.total_completed() > b.total_completed()
+                    || (la.total_completed() == b.total_completed()
+                        && p95(&la) < p95(&b));
+                won |= improved;
+                scoreboard.push(format!(
+                    "{soc}/{scen}/{base}: base {} done p95 {:.1} ms, lookahead {} done p95 {:.1} ms{}",
+                    b.total_completed(),
+                    p95(&b),
+                    la.total_completed(),
+                    p95(&la),
+                    if improved { "  <- win" } else { "" }
+                ));
+            }
+        }
+    }
+    assert!(
+        won,
+        "lookahead never strictly beat its base policy on any arm:\n  {}",
+        scoreboard.join("\n  ")
     );
 }
