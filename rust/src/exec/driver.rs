@@ -27,7 +27,7 @@ use super::{
     App, ArrivalMode, ArrivalRecord, AssignRecord, DispatchCmd, EventKind, ExecEvent,
     ExecutionBackend, ReadyQueue, RunToken, SessionEvent, SimConfig,
 };
-use crate::monitor::HardwareMonitor;
+use crate::monitor::{HardwareMonitor, Health};
 use crate::sched::{Assignment, ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
 use crate::sim::report::{SessionStats, SimReport};
 use crate::util::rng::Pcg32;
@@ -49,6 +49,14 @@ const EVENT_KEY: u64 = 1 << 63;
 /// list can reach, so it can never be mistaken for an arrival key or a
 /// scenario event.
 const BATCH_POKE: u64 = EVENT_KEY | (1 << 62);
+
+/// Retry-backoff timer namespace: bit 61 inside the [`EVENT_KEY`]
+/// namespace, low bits a per-run retry sequence number. Distinct from
+/// [`BATCH_POKE`] (bit 62) and unreachable by real scenario-event indices
+/// (an event list would need 2^61 entries), and matched *before* the
+/// generic scenario-event arm — the same precedence discipline
+/// `BATCH_POKE` established.
+const RETRY_KEY: u64 = EVENT_KEY | (1 << 61);
 
 /// Session arrival epochs live in 31 bits (wrap on overflow). The epoch
 /// only needs to distinguish a timer's arrival process from the session's
@@ -85,6 +93,9 @@ struct ReqState {
     /// Aborted — failed (budget/exec error) or cancelled (session stop /
     /// run end). Units still resident on processors drain silently.
     dead: bool,
+    /// Remaining fault/timeout retry budget (starts at
+    /// `SimConfig::retry_limit`; only the fault layer consumes it).
+    retries_left: u32,
 }
 
 /// Recycled `ReqState` vectors: requests arrive and retire on every
@@ -114,6 +125,10 @@ struct Inflight {
     unit: usize,
     proc: usize,
     extra: Vec<(ReqId, SessId)>,
+    /// Dispatch deadline (fault layer with `dispatch_timeout_mult > 0`
+    /// only): still inflight past this instant → aborted by the tick
+    /// sweep and retried. `None` whenever the deadline sweep is off.
+    deadline: Option<TimeMs>,
 }
 
 /// Live per-session state (stats + arrival process).
@@ -128,6 +143,16 @@ struct Sess {
     completed: u64,
     failed: u64,
     cancelled: u64,
+    /// Failure-reason split: `failed` stays the total, these four
+    /// partition it exactly (`failed == budget + exec + faulted +
+    /// retries_exhausted` — pinned by the chaos conservation property).
+    failed_budget: u64,
+    failed_exec: u64,
+    faulted: u64,
+    retries_exhausted: u64,
+    /// Fault/timeout retries granted (audited separately from `issued`:
+    /// a retried unit is the same request, not a new one).
+    retries: u64,
     lat: Summary,
     slo_ok: u64,
     slo_n: u64,
@@ -148,6 +173,11 @@ impl Sess {
             completed: 0,
             failed: 0,
             cancelled: 0,
+            failed_budget: 0,
+            failed_exec: 0,
+            faulted: 0,
+            retries_exhausted: 0,
+            retries: 0,
             lat: Summary::new(),
             slo_ok: 0,
             slo_n: 0,
@@ -276,6 +306,173 @@ fn rearm_closed_loop(
     }
 }
 
+/// Why a request failed — the reason split `SessionStats` audits
+/// (satellite of the fault layer: `failed` alone cannot distinguish "the
+/// model was too slow" from "the DSP died under it").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FailReason {
+    /// Aged past `fail_mult ×` budget (the pre-existing failure sweep).
+    Budget,
+    /// Genuine payload execution error (never retried — as before).
+    Exec,
+    /// Fault/timeout abort with no retry machinery available
+    /// (fault-blind, or `retry_limit = 0`).
+    Faulted,
+    /// Fault/timeout abort after the retry budget was consumed.
+    RetriesExhausted,
+}
+
+fn fail_session(sess: &mut Sess, reason: FailReason, has_slo: bool) {
+    sess.failed += 1;
+    match reason {
+        FailReason::Budget => sess.failed_budget += 1,
+        FailReason::Exec => sess.failed_exec += 1,
+        FailReason::Faulted => sess.faulted += 1,
+        FailReason::RetriesExhausted => sess.retries_exhausted += 1,
+    }
+    if has_slo {
+        sess.slo_n += 1;
+    }
+}
+
+/// A fault/timeout-aborted unit waiting out its backoff timer.
+#[derive(Debug)]
+struct RetryTask {
+    req: ReqId,
+    session: SessId,
+    unit: usize,
+}
+
+/// Driver-side fault layer (DESIGN.md §3g). Constructed only when the
+/// compiled event list carries processor-fault events or the config's
+/// fault knobs are engaged — faults-off runs never allocate it, which is
+/// the structural half of the byte-identity no-op argument
+/// (`prop_faults_off_is_byte_identical_noop` is the observational half).
+struct FaultCtx {
+    /// The driver's *belief* per processor — overlaid onto the monitor
+    /// snapshot so schedulers react to a crash synchronously instead of
+    /// at the cache interval. Backends keep reporting `Up`: they model
+    /// hardware, not beliefs.
+    health: Vec<Health>,
+    /// Deadline at which a `Degraded` (quarantined) processor is trusted
+    /// as `Up` again; promoted on the housekeeping tick.
+    quarantine_until: Vec<TimeMs>,
+    /// Armed transient faults: the next group completion on the
+    /// processor is treated as a (retryable) execution error. Injected
+    /// driver-side so both backends fail identically.
+    transient_pending: Vec<u32>,
+    /// Backoff timers armed but not yet fired, keyed by their
+    /// `RETRY_KEY | seq` timer key.
+    pending_retries: HashMap<u64, RetryTask>,
+    retry_seq: u64,
+    /// Fault-blind ablation: hardware still fails, but no health is
+    /// tracked and nothing is retried.
+    blind: bool,
+    proc_fails: u64,
+    proc_recovers: u64,
+    timeouts: u64,
+}
+
+impl FaultCtx {
+    fn new(nprocs: usize, blind: bool) -> Self {
+        FaultCtx {
+            health: vec![Health::Up; nprocs],
+            quarantine_until: vec![f64::NEG_INFINITY; nprocs],
+            transient_pending: vec![0; nprocs],
+            pending_retries: Default::default(),
+            retry_seq: 0,
+            blind,
+            proc_fails: 0,
+            proc_recovers: 0,
+            timeouts: 0,
+        }
+    }
+}
+
+/// What happened to one group member in [`abort_member`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MemberAbort {
+    /// Re-enqueued behind a backoff timer; the unit will run again.
+    Retried,
+    /// Marked dead and accounted as failed.
+    Failed,
+    /// Request unknown or already dead — nothing to do.
+    Gone,
+}
+
+/// Abort one member of an aborted group: retry it if the fault layer can
+/// (retryable abort, health-aware, budget left), otherwise fail it with
+/// the right reason. This is the ONE implementation behind all three
+/// abort paths — genuine/transient exec errors on completion
+/// (`floor_extra = 1`: the triggering completion decrements afterwards),
+/// crash aborts and the timeout sweep (`floor_extra = 0`: the backend
+/// abort already dropped the unit) — so the two backends cannot drift in
+/// their error accounting again (the cross-backend error-path trace test
+/// pins this).
+#[allow(clippy::too_many_arguments)]
+fn abort_member(
+    reqs: &mut HashMap<ReqId, ReqState>,
+    sess: &mut [Sess],
+    ready: &mut ReadyQueue,
+    backend: &mut dyn ExecutionBackend,
+    pool: &mut ReqStatePool,
+    fault: &mut Option<FaultCtx>,
+    cfg: &SimConfig,
+    quota: u64,
+    now: TimeMs,
+    m_req: ReqId,
+    unit: usize,
+    floor_extra: usize,
+    retryable: bool,
+    reason: FailReason,
+) -> MemberAbort {
+    let Some(st) = reqs.get_mut(&m_req) else {
+        return MemberAbort::Gone;
+    };
+    if st.dead {
+        return MemberAbort::Gone;
+    }
+    if retryable {
+        if let Some(fs) = fault.as_mut() {
+            if !fs.blind && st.retries_left > 0 {
+                // Attempt index before this consumption: 0 for the first
+                // retry, doubling the backoff each attempt after.
+                let attempt = cfg.retry_limit.saturating_sub(st.retries_left);
+                st.retries_left -= 1;
+                let s = st.session;
+                sess[s].retries += 1;
+                fs.retry_seq += 1;
+                let key = RETRY_KEY | fs.retry_seq;
+                let backoff =
+                    cfg.retry_backoff_ms.max(0.0) * (1u64 << attempt.min(32)) as f64;
+                fs.pending_retries.insert(key, RetryTask { req: m_req, session: s, unit });
+                backend.arm_timer(now + backoff, key);
+                return MemberAbort::Retried;
+            }
+        }
+    }
+    // No retry available: fail, with the reason refined by *why* no
+    // retry was available.
+    let reason = if retryable {
+        match fault.as_ref() {
+            Some(fs) if !fs.blind && cfg.retry_limit > 0 => FailReason::RetriesExhausted,
+            _ => FailReason::Faulted,
+        }
+    } else {
+        reason
+    };
+    st.dead = true;
+    let s = st.session;
+    let has_slo = st.slo_ms.is_some();
+    let epoch = st.epoch;
+    fail_session(&mut sess[s], reason, has_slo);
+    ready.cancel_request(m_req);
+    let running = backend.running_units(m_req);
+    clamp_dead_request(reqs, m_req, running + floor_extra, pool);
+    rearm_closed_loop(backend, &sess[s], s, epoch, quota, now);
+    MemberAbort::Failed
+}
+
 /// Scheduler-driven execution of a multi-session workload on one backend.
 pub struct Driver {
     cfg: SimConfig,
@@ -313,6 +510,34 @@ impl Driver {
         let soc = self.backend.soc().clone();
 
         let mut sess: Vec<Sess> = self.apps.iter().cloned().map(Sess::new).collect();
+
+        // Fault layer (DESIGN.md §3g). A configured fault profile is
+        // expanded into ordinary timed events up front — ONE merge
+        // point, so lookahead forks, record/replay, and fleet workers
+        // all see plain timers riding the same heap as everything else.
+        // Appended after the scenario's own events: distinct list
+        // indices keep every `EVENT_KEY | i` timer unique.
+        if let Some(profile) = self.cfg.fault_profile.clone().filter(|p| !p.is_off()) {
+            let fseed = self.cfg.fault_seed.unwrap_or(self.cfg.seed);
+            let mut storm =
+                crate::faults::plan(&profile, &soc, fseed, self.cfg.duration_ms);
+            self.events.append(&mut storm);
+        }
+        // The layer engages on explicit scenario fault events too, not
+        // just config knobs — a `flaky_dsp` scenario needs no flags.
+        let fault_events = self.events.iter().any(|e| {
+            matches!(
+                e.kind,
+                EventKind::ProcFail { .. }
+                    | EventKind::ProcRecover { .. }
+                    | EventKind::ProcTransient { .. }
+            )
+        });
+        let mut fault: Option<FaultCtx> = if fault_events || self.cfg.faults_configured() {
+            Some(FaultCtx::new(soc.processors.len(), self.cfg.fault_blind))
+        } else {
+            None
+        };
 
         // Weight residency (memory-budgeted runs only). With
         // `mem_budget_bytes = 0` no cache is ever constructed, no load
@@ -381,6 +606,8 @@ impl Driver {
         let mut exposed_tasks: Vec<PendingTask> = Vec::new();
         let mut aborted: Vec<ReqId> = Vec::new();
         let mut open_scratch: Vec<ReqId> = Vec::new();
+        // Fault-layer scratch (touched only when the layer is active).
+        let mut overdue: Vec<RunToken> = Vec::new();
         // Batching scratch (touched only when `batching`).
         let mut cand_kinds: Vec<u64> = Vec::new();
         let mut cand_taken: Vec<bool> = Vec::new();
@@ -464,6 +691,51 @@ impl Driver {
                     // predicate is now false for the expired task.
                     armed_pokes.retain(|&bits| f64::from_bits(bits) > now);
                 }
+                ExecEvent::Timer { key, .. } if key & RETRY_KEY == RETRY_KEY => {
+                    // A backoff timer fired: re-enqueue the aborted unit
+                    // if its request is still worth running. A request
+                    // that was budget-failed, cancelled, or whose session
+                    // stopped while the timer was pending is simply left
+                    // alone (its own abort path already accounted it).
+                    let task =
+                        fault.as_mut().and_then(|fs| fs.pending_retries.remove(&key));
+                    let alive = task.as_ref().is_some_and(|rt| {
+                        !sess[rt.session].stopped
+                            && reqs.get(&rt.req).is_some_and(|st| !st.dead)
+                    });
+                    match task {
+                        Some(rt) if alive => {
+                            let plan = &self.plans[rt.session];
+                            let st = &reqs[&rt.req];
+                            let nu = plan.num_units();
+                            let mut dep_procs = ready.take_deps_buf();
+                            // Every dependency of a once-ready unit has a
+                            // recorded placement; the fallback is purely
+                            // defensive (and deterministic).
+                            dep_procs.extend(
+                                plan.deps[rt.unit]
+                                    .iter()
+                                    .map(|&d| (d, st.unit_proc[d].unwrap_or(0))),
+                            );
+                            let remaining = plan.remaining_ms((0..nu).filter(|&u| {
+                                u != rt.unit && st.unit_proc[u].is_none()
+                            }));
+                            ready.push(PendingTask {
+                                req: rt.req,
+                                session: rt.session,
+                                unit: rt.unit,
+                                ready_at: now,
+                                req_arrival: st.arrival,
+                                slo_ms: st.slo_ms,
+                                remaining_ms: remaining,
+                                dep_procs,
+                            });
+                        }
+                        _ => {
+                            dispatch_after = false;
+                        }
+                    }
+                }
                 ExecEvent::Timer { key, .. } if key & EVENT_KEY != 0 => {
                     let idx = (key & !EVENT_KEY) as usize;
                     let Some(tev) = self.events.get(idx).cloned() else {
@@ -522,6 +794,94 @@ impl Driver {
                                 }
                             }
                         }
+                        EventKind::ProcFail { proc: p, hang } => {
+                            // Out-of-range processors are ignored so fault
+                            // scenarios stay SoC-portable (an NPU blackout
+                            // is vacuous on a 3-processor chip).
+                            if p < soc.processors.len() {
+                                if let Some(fs) = fault.as_mut() {
+                                    fs.proc_fails += 1;
+                                    if !fs.blind {
+                                        fs.health[p] = Health::Down;
+                                    }
+                                }
+                                self.backend.set_proc_down(p, true);
+                                // The dead processor's resident weights are
+                                // gone with its driver context.
+                                if let Some(c) = wcache.as_mut() {
+                                    c.purge_proc(p);
+                                }
+                                // Resident groups, in token (dispatch)
+                                // order for a deterministic abort sequence.
+                                overdue.clear();
+                                overdue.extend(
+                                    inflight
+                                        .iter()
+                                        .filter(|(_, f)| f.proc == p)
+                                        .map(|(&t, _)| t),
+                                );
+                                overdue.sort_unstable();
+                                for i in 0..overdue.len() {
+                                    let tk = overdue[i];
+                                    // Free the slot and suppress the
+                                    // completion on the backend either way.
+                                    self.backend.abort(tk);
+                                    if hang {
+                                        // A hung group stays in the
+                                        // driver's books — exactly how a
+                                        // wedged vendor driver presents.
+                                        // The timeout sweep (or run-end
+                                        // cancellation) pays for it.
+                                        continue;
+                                    }
+                                    let done = inflight.remove(&tk).unwrap();
+                                    fanout.clear();
+                                    fanout.push((done.req, done.session));
+                                    fanout.extend(done.extra.iter().copied());
+                                    for &(m_req, _) in fanout.iter() {
+                                        abort_member(
+                                            &mut reqs,
+                                            &mut sess,
+                                            &mut ready,
+                                            self.backend.as_mut(),
+                                            &mut pool,
+                                            &mut fault,
+                                            &self.cfg,
+                                            quota,
+                                            now,
+                                            m_req,
+                                            done.unit,
+                                            0,
+                                            true,
+                                            FailReason::Faulted,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        EventKind::ProcRecover { proc: p } => {
+                            if p < soc.processors.len() {
+                                if let Some(fs) = fault.as_mut() {
+                                    fs.proc_recovers += 1;
+                                    // Quarantine-and-probe: schedulable
+                                    // again, but Degraded (re-priced) until
+                                    // it has stayed up for the quarantine.
+                                    if !fs.blind && fs.health[p] == Health::Down {
+                                        fs.health[p] = Health::Degraded;
+                                        fs.quarantine_until[p] =
+                                            now + self.cfg.fault_quarantine_ms.max(0.0);
+                                    }
+                                }
+                                self.backend.set_proc_down(p, false);
+                            }
+                        }
+                        EventKind::ProcTransient { proc: p } => {
+                            if p < soc.processors.len() {
+                                if let Some(fs) = fault.as_mut() {
+                                    fs.transient_pending[p] += 1;
+                                }
+                            }
+                        }
                     }
                 }
                 ExecEvent::Timer { key, .. } => {
@@ -556,6 +916,7 @@ impl Driver {
                             unit_proc,
                             units_left: nu,
                             dead: false,
+                            retries_left: self.cfg.retry_limit,
                         };
                         // Enqueue units with no dependencies.
                         for u in 0..nu {
@@ -604,48 +965,60 @@ impl Driver {
                     // first then members in member order — for a
                     // single-task dispatch this loop runs exactly once
                     // over exactly the old body.
+                    // Transient fault injection: consume one armed
+                    // transient on this processor, turning an otherwise
+                    // successful completion into a *retryable* execution
+                    // error. Driver-side by design, so both backends fail
+                    // bit-identically (the cross-backend error-path trace
+                    // test rides this).
+                    let mut transient = false;
+                    if let Some(fs) = fault.as_mut() {
+                        if fs.transient_pending.get(done.proc).copied().unwrap_or(0) > 0 {
+                            fs.transient_pending[done.proc] -= 1;
+                            if !error {
+                                transient = true;
+                            }
+                        }
+                    }
                     fanout.clear();
                     fanout.push((done.req, done.session));
                     fanout.extend(done.extra.iter().copied());
                     let mut processed = 0usize;
                     for &(m_req, m_session) in fanout.iter() {
-                        if error {
+                        if error || transient {
                             // Payload execution failed: abort the request
                             // (mirroring the failure sweep) so it is
                             // reported as failed, never as
                             // completed-within-SLO. A group error aborts
                             // every member — the fused execution is one
-                            // payload.
-                            let newly_dead = match reqs.get_mut(&m_req) {
-                                Some(st) if !st.dead => {
-                                    st.dead = true;
-                                    Some((st.session, st.slo_ms.is_some(), st.epoch))
-                                }
-                                _ => None,
-                            };
-                            if let Some((s, has_slo, epoch)) = newly_dead {
-                                sess[s].failed += 1;
-                                if has_slo {
-                                    sess[s].slo_n += 1;
-                                }
-                                ready.cancel_request(m_req);
-                                // Not-yet-dispatched units will never run;
-                                // only units still resident on processors
-                                // (plus this one, decremented below) keep
-                                // the request alive.
-                                let running = self.backend.running_units(m_req);
-                                // +1: this event's own completion is
-                                // decremented just below, in the shared
-                                // retirement block.
-                                clamp_dead_request(&mut reqs, m_req, running + 1, &mut pool);
-                                rearm_closed_loop(
-                                    self.backend.as_mut(),
-                                    &sess[s],
-                                    s,
-                                    epoch,
-                                    quota,
-                                    now,
-                                );
+                            // payload. Genuine payload errors are final
+                            // (as they always were); injected transients
+                            // are retryable. `floor_extra = 1`: this
+                            // event's own completion is decremented just
+                            // below, in the shared retirement block.
+                            let outcome = abort_member(
+                                &mut reqs,
+                                &mut sess,
+                                &mut ready,
+                                self.backend.as_mut(),
+                                &mut pool,
+                                &mut fault,
+                                &self.cfg,
+                                quota,
+                                now,
+                                m_req,
+                                done.unit,
+                                1,
+                                transient,
+                                if transient { FailReason::Faulted } else { FailReason::Exec },
+                            );
+                            if outcome == MemberAbort::Retried {
+                                // The unit did NOT complete — it will run
+                                // again after the backoff, so skip the
+                                // retirement block (no `units_left`
+                                // decrement, no consumer unlocks).
+                                processed += 1;
+                                continue;
                             }
                         }
                         let finished = {
@@ -730,6 +1103,73 @@ impl Driver {
                     }
                 }
                 ExecEvent::Tick { .. } => {
+                    if let Some(fs) = fault.as_mut() {
+                        // Quarantine-and-probe promotion: a Degraded
+                        // processor that has stayed up through its
+                        // quarantine is trusted as Up again.
+                        if !fs.blind {
+                            for p in 0..fs.health.len() {
+                                if fs.health[p] == Health::Degraded
+                                    && now >= fs.quarantine_until[p]
+                                {
+                                    fs.health[p] = Health::Up;
+                                }
+                            }
+                        }
+                    }
+                    {
+                        // Dispatch-deadline sweep: groups inflight past
+                        // `mult ×` their predicted latency are presumed
+                        // lost (hung driver, silently dropped completion)
+                        // — abort on the backend, retry the members.
+                        // Token order keeps the abort sequence
+                        // deterministic.
+                        if fault.is_some() && self.cfg.dispatch_timeout_mult > 0.0 {
+                            overdue.clear();
+                            overdue.extend(
+                                inflight
+                                    .iter()
+                                    .filter(|(_, f)| f.deadline.is_some_and(|d| now > d))
+                                    .map(|(&t, _)| t),
+                            );
+                            overdue.sort_unstable();
+                            for i in 0..overdue.len() {
+                                let tk = overdue[i];
+                                let done = inflight.remove(&tk).unwrap();
+                                if let Some(fs) = fault.as_mut() {
+                                    fs.timeouts += 1;
+                                }
+                                // `abort` returns false for a group whose
+                                // backend residency is already gone (hang
+                                // abort at ProcFail time) — benign.
+                                self.backend.abort(tk);
+                                if let Some(c) = wcache.as_mut() {
+                                    c.unpin(done.session, done.unit, done.proc);
+                                }
+                                fanout.clear();
+                                fanout.push((done.req, done.session));
+                                fanout.extend(done.extra.iter().copied());
+                                for &(m_req, _) in fanout.iter() {
+                                    abort_member(
+                                        &mut reqs,
+                                        &mut sess,
+                                        &mut ready,
+                                        self.backend.as_mut(),
+                                        &mut pool,
+                                        &mut fault,
+                                        &self.cfg,
+                                        quota,
+                                        now,
+                                        m_req,
+                                        done.unit,
+                                        0,
+                                        true,
+                                        FailReason::Faulted,
+                                    );
+                                }
+                            }
+                        }
+                    }
                     // Failure sweep: abort requests far past their budget.
                     aborted.clear();
                     for (&id, st) in reqs.iter_mut() {
@@ -742,10 +1182,11 @@ impl Driver {
                             * self.cfg.fail_mult;
                         if now - st.arrival > budget {
                             st.dead = true;
-                            sess[st.session].failed += 1;
-                            if st.slo_ms.is_some() {
-                                sess[st.session].slo_n += 1;
-                            }
+                            fail_session(
+                                &mut sess[st.session],
+                                FailReason::Budget,
+                                st.slo_ms.is_some(),
+                            );
                             aborted.push(id);
                         }
                     }
@@ -787,7 +1228,21 @@ impl Driver {
                 // Monitor snapshot (respecting the cache interval) —
                 // borrowed from the cache; a refresh fills it in place.
                 let backend = &mut self.backend;
-                let views = monitor.sample_with(now, |buf| backend.fill_proc_views(buf));
+                monitor.sample_with(now, |buf| backend.fill_proc_views(buf));
+                // Health overlay: the driver's beliefs ride on top of the
+                // (possibly cached) snapshot, so a crash masks its
+                // processor from scheduling synchronously instead of at
+                // the cache interval. Faults-off runs never overlay (and
+                // the backend always reports `Up`), so the snapshot is
+                // bit-identical to the pre-fault-layer one; fault-blind
+                // runs skip it on purpose — that arm schedules into the
+                // hole.
+                if let Some(fs) = fault.as_ref() {
+                    if !fs.blind {
+                        monitor.overlay_health(&fs.health);
+                    }
+                }
+                let views = monitor.cached_views();
                 // Serialized policies see only each session's earliest
                 // ready unit; other policies see the queue directly (no
                 // copy — this loop is the hot path).
@@ -1167,7 +1622,23 @@ impl Driver {
                         taken_stamp[mpos] = round;
                         dispatched.push(mpos);
                     }
-                    inflight.insert(token, Inflight { req, session, unit, proc: target, extra });
+                    // Deadline for the timeout sweep: a multiple of the
+                    // full predicted latency the backend was just charged.
+                    // `None` (no sweep) whenever the fault layer or the
+                    // timeout knob is off.
+                    let deadline = if fault.is_some() && self.cfg.dispatch_timeout_mult > 0.0
+                    {
+                        Some(
+                            now + self.cfg.dispatch_timeout_mult
+                                * (exec_full + xfer + mgmt + load),
+                        )
+                    } else {
+                        None
+                    };
+                    inflight.insert(
+                        token,
+                        Inflight { req, session, unit, proc: target, extra, deadline },
+                    );
                 }
                 if dispatched.is_empty() {
                     break;
@@ -1221,6 +1692,11 @@ impl Driver {
                     completed: se.completed,
                     failed: se.failed,
                     cancelled: se.cancelled,
+                    failed_budget: se.failed_budget,
+                    failed_exec: se.failed_exec,
+                    faulted: se.faulted,
+                    retries_exhausted: se.retries_exhausted,
+                    retries: se.retries,
                     latency: se.lat.clone(),
                     fps: if active_ms > 0.0 {
                         se.completed as f64 / (active_ms / 1e3)
@@ -1252,6 +1728,11 @@ impl Driver {
             timeline: be.timeline,
             monitor_refreshes: monitor.refresh_count(),
             exec_errors: be.exec_errors,
+            faults: fault.as_ref().map(|fs| crate::sim::report::FaultStats {
+                proc_fails: fs.proc_fails,
+                proc_recovers: fs.proc_recovers,
+                timeouts: fs.timeouts,
+            }),
             // All-zero on unbudgeted runs (no cache constructed), so the
             // report serializes identically either way.
             cache: wcache.as_ref().map(|c| c.stats()).unwrap_or_default(),

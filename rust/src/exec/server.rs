@@ -331,6 +331,57 @@ impl Server {
         self
     }
 
+    /// Dispatch-timeout multiplier (`--dispatch-timeout`): a dispatched
+    /// group is declared lost once it has been in flight longer than this
+    /// multiple of its predicted latency. `0` (the default) disables the
+    /// sweep bit-exactly.
+    pub fn dispatch_timeout(mut self, mult: f64) -> Self {
+        self.cfg.dispatch_timeout_mult = mult.max(0.0);
+        self
+    }
+
+    /// Per-request retry budget for fault-aborted work (`--retry-limit`).
+    pub fn retry_limit(mut self, n: u32) -> Self {
+        self.cfg.retry_limit = n;
+        self
+    }
+
+    /// Base retry backoff in ms (`--retry-backoff`), doubled per attempt.
+    pub fn retry_backoff_ms(mut self, ms: f64) -> Self {
+        self.cfg.retry_backoff_ms = ms.max(0.0);
+        self
+    }
+
+    /// Quarantine window after a recovery (`--quarantine`): the processor
+    /// re-enters scheduling as `Degraded` (re-priced by cost-aware
+    /// policies) for this long before being trusted as `Up` again.
+    pub fn fault_quarantine_ms(mut self, ms: f64) -> Self {
+        self.cfg.fault_quarantine_ms = ms.max(0.0);
+        self
+    }
+
+    /// Generative fault profile (`--fault-profile`): seeded crash/hang/
+    /// transient injection planned over the run horizon. `None` or an
+    /// all-zero profile injects nothing.
+    pub fn fault_profile(mut self, p: Option<crate::faults::FaultProfile>) -> Self {
+        self.cfg.fault_profile = p;
+        self
+    }
+
+    /// Dedicated fault-plan seed (`--fault-seed`; default: the run seed),
+    /// so fault timing can vary while arrivals stay fixed.
+    pub fn fault_seed(mut self, seed: Option<u64>) -> Self {
+        self.cfg.fault_seed = seed;
+        self
+    }
+
+    /// Fault-blind mode (`--fault-blind`): faults still happen, but the
+    /// driver neither marks health nor retries — the ablation baseline.
+    pub fn fault_blind(mut self, blind: bool) -> Self {
+        self.cfg.fault_blind = blind;
+        self
+    }
+
     /// Replace the whole execution config (advanced).
     pub fn config(mut self, cfg: SimConfig) -> Self {
         self.cfg = cfg;
@@ -364,6 +415,12 @@ impl Server {
                 EventKind::Start { session }
                 | EventKind::Stop { session }
                 | EventKind::Rate { session, .. } => session,
+                // Processor fault events carry no session reference, and
+                // the processor id is validated at runtime by the driver
+                // (out-of-range = no-op) so scenarios stay SoC-portable.
+                EventKind::ProcFail { .. }
+                | EventKind::ProcRecover { .. }
+                | EventKind::ProcTransient { .. } => continue,
             };
             if s >= self.apps.len() {
                 bail!(

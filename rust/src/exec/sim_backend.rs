@@ -15,7 +15,7 @@ use super::{
     proc_slots, BackendReport, DispatchCmd, ExecEvent, ExecutionBackend, OrdF64, RunToken,
     SimConfig,
 };
-use crate::monitor::ProcView;
+use crate::monitor::{Health, ProcView};
 use crate::power::{processor_power_w, EnergyMeter, BOARD_BASELINE_W};
 use crate::sched::{ReqId, SessId};
 use crate::sim::report::{ProcStats, TimelineEvent};
@@ -102,6 +102,10 @@ struct Running {
 struct ProcState {
     thermal: ThermalState,
     running: Vec<Running>,
+    /// Failed by the fault layer: refuses all dispatches until recovered
+    /// (distinct from thermal `offline`, which the SoC imposes on
+    /// itself). Never set on faults-off runs.
+    down: bool,
     /// Estimated ms of work resident (running remainder + committed).
     backlog_ms: f64,
     /// Distinct sessions currently running here, with residency counts
@@ -202,6 +206,7 @@ impl SimBackend {
             .map(|_| ProcState {
                 thermal: ThermalState::new(ambient),
                 running: Vec::new(),
+                down: false,
                 backlog_ms: 0.0,
                 run_sessions: Vec::new(),
                 recent_sessions: Vec::new(),
@@ -342,6 +347,10 @@ impl ExecutionBackend for SimBackend {
                 active_sessions: active_sessions(p, now),
                 util,
                 headroom_c: p.thermal.headroom_c(spec),
+                // Hardware truth carries no beliefs: the driver overlays
+                // its health state onto the monitor cache when the fault
+                // layer is active.
+                health: Health::Up,
             }
         }));
     }
@@ -350,7 +359,7 @@ impl ExecutionBackend for SimBackend {
         let now = self.now;
         let spec = &self.soc.processors[cmd.proc];
         let pstate = &self.procs[cmd.proc];
-        if pstate.thermal.offline || pstate.running.len() >= proc_slots(spec) {
+        if pstate.down || pstate.thermal.offline || pstate.running.len() >= proc_slots(spec) {
             return false;
         }
         // Service time: exec at current frequency × contention
@@ -400,6 +409,42 @@ impl ExecutionBackend for SimBackend {
         self.req_units.get(&req).copied().unwrap_or(0) as usize
     }
 
+    fn set_proc_down(&mut self, proc: usize, down: bool) {
+        if let Some(p) = self.procs.get_mut(proc) {
+            p.down = down;
+        }
+    }
+
+    /// Abort a resident group: free its slot, drop every member's unit
+    /// from the running census, and leave its heaped `Ev::Complete` as a
+    /// stale no-op (`next_event` already skips completions whose token no
+    /// longer matches a resident run — the same tolerance that lets a
+    /// cancelled request's completion pass silently). Aborted work leaves
+    /// no timeline entry: it never finished.
+    fn abort(&mut self, token: RunToken) -> bool {
+        let now = self.now;
+        for proc in 0..self.procs.len() {
+            let Some(pos) = self.procs[proc].running.iter().position(|r| r.token == token)
+            else {
+                continue;
+            };
+            // Occupancy changes: settle the interval at the old count.
+            self.procs[proc].account(now);
+            let dead = self.procs[proc].running.remove(pos);
+            self.procs[proc].run_sub(dead.session);
+            drop_unit(dead.req, &mut self.req_units);
+            for &(r, _) in &dead.extra {
+                drop_unit(r, &mut self.req_units);
+            }
+            // Same decrement a completion would apply: backlog was charged
+            // the full service time at dispatch.
+            self.procs[proc].backlog_ms =
+                (self.procs[proc].backlog_ms - (dead.end - dead.start)).max(0.0);
+            return true;
+        }
+        false
+    }
+
     fn fork(&self) -> Option<Box<dyn ExecutionBackend>> {
         Some(Box::new(self.clone()))
     }
@@ -441,14 +486,6 @@ impl ExecutionBackend for SimBackend {
                     self.procs[proc].account(now);
                     let done = self.procs[proc].running.remove(pos);
                     self.procs[proc].run_sub(done.session);
-                    let drop_unit = |req: ReqId, units: &mut HashMap<ReqId, u32>| {
-                        if let Some(n) = units.get_mut(&req) {
-                            *n -= 1;
-                            if *n == 0 {
-                                units.remove(&req);
-                            }
-                        }
-                    };
                     drop_unit(done.req, &mut self.req_units);
                     for &(r, _) in &done.extra {
                         drop_unit(r, &mut self.req_units);
@@ -537,6 +574,16 @@ impl ExecutionBackend for SimBackend {
             energy_j: this.energy.joules(),
             timeline: this.timeline,
             exec_errors: 0,
+        }
+    }
+}
+
+/// Decrement a request's resident-unit count, removing the entry at 0.
+fn drop_unit(req: ReqId, units: &mut HashMap<ReqId, u32>) {
+    if let Some(n) = units.get_mut(&req) {
+        *n -= 1;
+        if *n == 0 {
+            units.remove(&req);
         }
     }
 }
@@ -682,6 +729,50 @@ mod tests {
         for r in 0..3u64 {
             assert_eq!(be.running_units(r), 0, "req {r} leaked a resident unit");
         }
+    }
+
+    /// Fault surface: a down processor refuses dispatches; aborting a
+    /// resident group frees the slot, drains every member's unit, and the
+    /// orphaned completion event never surfaces.
+    #[test]
+    fn down_proc_refuses_and_abort_suppresses_completion() {
+        let soc = dimensity9000();
+        let cfg = SimConfig { duration_ms: 10_000.0, ..SimConfig::default() };
+        let mut be = SimBackend::new(soc, cfg);
+        let cmd = |token: u64| DispatchCmd {
+            token,
+            req: token,
+            session: 0,
+            unit: 0,
+            proc: 2,
+            exec_full_ms: 5.0,
+            xfer_ms: 0.0,
+            mgmt_ms: 0.0,
+            load_ms: 0.0,
+            extra: if token == 1 { vec![(10, 1)] } else { Vec::new() },
+        };
+        assert!(be.try_dispatch(cmd(1)));
+        be.set_proc_down(2, true);
+        assert!(!be.try_dispatch(cmd(2)), "down processor accepted a dispatch");
+        assert_eq!(be.running_units(1), 1);
+        assert_eq!(be.running_units(10), 1);
+        assert!(be.abort(1), "abort must find the resident group");
+        assert!(!be.abort(1), "double abort must be a no-op");
+        assert_eq!(be.running_units(1), 0);
+        assert_eq!(be.running_units(10), 0);
+        // The heaped completion for token 1 must never surface; the run
+        // drains (ticks keep firing until past-horizon, so stop there).
+        loop {
+            match be.next_event() {
+                ExecEvent::Completed { token, .. } => panic!("orphan completion {token}"),
+                ExecEvent::Drained { .. } => break,
+                ev if ev.at() > 10_000.0 => break,
+                _ => {}
+            }
+        }
+        // Recovery restores dispatchability.
+        be.set_proc_down(2, false);
+        assert!(be.try_dispatch(cmd(3)));
     }
 
     /// Regression for the mid-tick utilization bug: a processor saturated

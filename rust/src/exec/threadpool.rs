@@ -15,7 +15,7 @@ use super::{
     proc_slots, BackendReport, DispatchCmd, ExecEvent, ExecutionBackend, OrdF64, RunToken,
     SimConfig,
 };
-use crate::monitor::ProcView;
+use crate::monitor::{Health, ProcView};
 use crate::runtime::StageExec;
 use crate::sched::{ReqId, SessId};
 use crate::sim::report::{ProcStats, TimelineEvent};
@@ -83,6 +83,10 @@ struct ProcPool {
     dispatches: u64,
     /// Dispatches that paid a weight cold-load (`cmd.load_ms > 0`).
     cold_loads: u64,
+    /// Failed by the fault layer: refuses all dispatches until recovered.
+    /// The worker threads stay alive (a real wedged driver keeps its
+    /// process too); only admission is cut.
+    down: bool,
 }
 
 /// Wall-clock serving backend.
@@ -164,6 +168,7 @@ impl ThreadPoolBackend {
                     busy_since: None,
                     dispatches: 0,
                     cold_loads: 0,
+                    down: false,
                 }
             })
             .collect();
@@ -298,6 +303,9 @@ impl ExecutionBackend for ThreadPoolBackend {
                     active_sessions: sessions.len(),
                     util: (pool.inflight as f64 / slots).min(1.0),
                     headroom_c: spec.throttle_temp_c - ambient,
+                    // Beliefs are the driver's: it overlays health onto
+                    // the monitor cache when the fault layer is active.
+                    health: Health::Up,
                 }
             })
             .collect()
@@ -305,7 +313,7 @@ impl ExecutionBackend for ThreadPoolBackend {
 
     fn try_dispatch(&mut self, cmd: DispatchCmd) -> bool {
         let slots = proc_slots(&self.soc.processors[cmd.proc]);
-        if self.pools[cmd.proc].inflight >= slots {
+        if self.pools[cmd.proc].down || self.pools[cmd.proc].inflight >= slots {
             return false;
         }
         // Cold weight loads pace the synthetic payload too: the thread
@@ -364,6 +372,37 @@ impl ExecutionBackend for ThreadPoolBackend {
             .values()
             .filter(|f| f.req == req || f.extra.iter().any(|&(r, _)| r == req))
             .count()
+    }
+
+    fn set_proc_down(&mut self, proc: usize, down: bool) {
+        if let Some(p) = self.pools.get_mut(proc) {
+            p.down = down;
+        }
+    }
+
+    /// Abort an inflight group: drop the backend's bookkeeping and close
+    /// the pool accounting exactly where `handle_done` would. The worker
+    /// thread cannot be interrupted mid-payload — its eventual
+    /// `WorkerMsg` finds no `Inflight` entry and surfaces as a completion
+    /// for a token the driver no longer tracks, which the driver ignores
+    /// (the same tolerance the sim backend's stale-completion skip
+    /// provides on the virtual clock). Aborted work leaves no timeline
+    /// entry.
+    fn abort(&mut self, token: RunToken) -> bool {
+        let Some(info) = self.inflight.remove(&token) else {
+            return false;
+        };
+        let at = self.wall_ms();
+        self.buffers.remove(&info.req);
+        let pool = &mut self.pools[info.proc];
+        pool.inflight = pool.inflight.saturating_sub(1);
+        pool.slot_ms += at - info.start_ms;
+        if pool.inflight == 0 {
+            if let Some(t0) = pool.busy_since.take() {
+                pool.busy_ms += at - t0;
+            }
+        }
+        true
     }
 
     fn next_event(&mut self) -> ExecEvent {

@@ -1,0 +1,261 @@
+//! Deterministic fault injection: processor failure as a first-class,
+//! schedulable event.
+//!
+//! "Potentials and Pitfalls" (PAPERS.md) documents that mobile
+//! accelerator drivers crash, hang, and mis-execute routinely; a fleet of
+//! millions of devices makes per-device flakiness a population-level
+//! certainty. This module turns that into something the simulator can
+//! reproduce bit-exactly: a [`FaultProfile`] describes per-processor
+//! crash / hang / transient-error processes, and [`plan`] expands it into
+//! plain [`SessionEvent`]s (`ProcFail` / `ProcRecover` / `ProcTransient`)
+//! *before* the run starts — SplitMix64-seeded per processor exactly like
+//! the fleet's `device_seed`, so the same `(seed, soc, profile, duration)`
+//! always yields the same storm, forks and record/replay see ordinary
+//! timer events, and a fleet report stays byte-identical across worker
+//! counts.
+//!
+//! The driver consumes the events (see `exec::driver`): `ProcFail` marks
+//! the processor down on the backend and aborts (crash) or strands (hang)
+//! its resident groups; `ProcRecover` brings it back through a
+//! `Degraded` quarantine; `ProcTransient` turns the next completion on
+//! that processor into an execution error. Everything downstream —
+//! timeout sweep, bounded retries with exponential backoff, health-masked
+//! scheduling — is driver/scheduler policy, not part of the fault model.
+
+use crate::exec::{EventKind, SessionEvent};
+use crate::soc::{ProcKind, SocSpec};
+use crate::util::rng::{splitmix64, Pcg32};
+use crate::TimeMs;
+
+/// Named per-processor fault process. All rates are events per second of
+/// (sim) time per processor; `mttr_ms` is the mean down time after a
+/// crash or hang. The CPU is always spared: it is the one processor with
+/// full op support, and a phone whose CPU is gone is not a scheduling
+/// problem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultProfile {
+    pub name: String,
+    /// Crash rate (events/s): resident work is aborted immediately.
+    pub crash_per_s: f64,
+    /// Hang rate (events/s): resident work is stranded until the
+    /// dispatch-timeout sweep notices (or the run ends).
+    pub hang_per_s: f64,
+    /// Transient-error rate (events/s): one completion on the processor
+    /// fails without taking the processor down.
+    pub transient_per_s: f64,
+    /// Mean time to recovery, ms (exponentially distributed).
+    pub mttr_ms: f64,
+}
+
+impl FaultProfile {
+    pub fn off() -> Self {
+        FaultProfile {
+            name: "off".into(),
+            crash_per_s: 0.0,
+            hang_per_s: 0.0,
+            transient_per_s: 0.0,
+            mttr_ms: 0.0,
+        }
+    }
+
+    /// Occasional flakiness: roughly one crash per processor per 10 s.
+    pub fn light() -> Self {
+        FaultProfile {
+            name: "light".into(),
+            crash_per_s: 0.1,
+            hang_per_s: 0.02,
+            transient_per_s: 0.2,
+            mttr_ms: 400.0,
+        }
+    }
+
+    /// A hostile device: sub-second failure inter-arrivals per processor.
+    pub fn heavy() -> Self {
+        FaultProfile {
+            name: "heavy".into(),
+            crash_per_s: 0.5,
+            hang_per_s: 0.1,
+            transient_per_s: 1.0,
+            mttr_ms: 300.0,
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.crash_per_s <= 0.0 && self.hang_per_s <= 0.0 && self.transient_per_s <= 0.0
+    }
+
+    /// Parse a CLI/fleet-arm spelling: `off` | `light` | `heavy`, or a
+    /// custom `k=v` list (`crash=0.3,hang=0.05,transient=0.5,mttr=300`,
+    /// any subset; unset keys default to 0 except `mttr` which defaults
+    /// to 300 ms).
+    pub fn parse(s: &str) -> Option<FaultProfile> {
+        match s {
+            "off" | "none" => return Some(FaultProfile::off()),
+            "light" => return Some(FaultProfile::light()),
+            "heavy" => return Some(FaultProfile::heavy()),
+            _ => {}
+        }
+        let mut p = FaultProfile { name: s.to_string(), mttr_ms: 300.0, ..FaultProfile::off() };
+        for kv in s.split(',') {
+            let (k, v) = kv.split_once('=')?;
+            let v: f64 = v.trim().parse().ok()?;
+            if !v.is_finite() || v < 0.0 {
+                return None;
+            }
+            match k.trim() {
+                "crash" => p.crash_per_s = v,
+                "hang" => p.hang_per_s = v,
+                "transient" => p.transient_per_s = v,
+                "mttr" => p.mttr_ms = v,
+                _ => return None,
+            }
+        }
+        Some(p)
+    }
+}
+
+/// Expand a profile into a sorted event list over `[0, duration_ms)`.
+///
+/// Each non-CPU processor gets its own PRNG stream derived from `seed`
+/// via SplitMix64 (the `device_seed` construction), so adding or removing
+/// a processor never perturbs another processor's storm. Crashes and
+/// hangs form one alternating fail→recover renewal process (a processor
+/// is never failed twice without recovering in between); transients are
+/// an independent Poisson process drawn from the same per-processor
+/// stream after it.
+pub fn plan(
+    profile: &FaultProfile,
+    soc: &SocSpec,
+    seed: u64,
+    duration_ms: TimeMs,
+) -> Vec<SessionEvent> {
+    let mut evs: Vec<SessionEvent> = Vec::new();
+    if profile.is_off() || duration_ms <= 0.0 {
+        return evs;
+    }
+    let base = splitmix64(seed ^ 0xfa17_c0de_5eed_0001);
+    for (p, spec) in soc.processors.iter().enumerate() {
+        if spec.kind == ProcKind::Cpu {
+            continue;
+        }
+        let stream = splitmix64(base ^ splitmix64(p as u64 ^ 0x9e37_79b9_7f4a_7c15));
+        let mut rng = Pcg32::new(stream, p as u64);
+        let fail_rate = profile.crash_per_s + profile.hang_per_s;
+        if fail_rate > 0.0 {
+            let mut t = 0.0;
+            loop {
+                t += rng.exp(fail_rate) * 1000.0;
+                if t >= duration_ms {
+                    break;
+                }
+                let hang = rng.next_f64() * fail_rate < profile.hang_per_s;
+                evs.push(SessionEvent { at_ms: t, kind: EventKind::ProcFail { proc: p, hang } });
+                if profile.mttr_ms > 0.0 {
+                    t += rng.exp(1.0 / profile.mttr_ms);
+                }
+                if t >= duration_ms {
+                    break;
+                }
+                evs.push(SessionEvent { at_ms: t, kind: EventKind::ProcRecover { proc: p } });
+            }
+        }
+        if profile.transient_per_s > 0.0 {
+            let mut t = 0.0;
+            loop {
+                t += rng.exp(profile.transient_per_s) * 1000.0;
+                if t >= duration_ms {
+                    break;
+                }
+                evs.push(SessionEvent { at_ms: t, kind: EventKind::ProcTransient { proc: p } });
+            }
+        }
+    }
+    // Stable sort: equal-time events keep generation order (ascending
+    // processor id), so the driver's arming order — and therefore the
+    // event heap's sequence tiebreak — is deterministic.
+    evs.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).expect("NaN fault time"));
+    evs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::presets::dimensity9000;
+
+    fn fmt(evs: &[SessionEvent]) -> String {
+        format!("{evs:?}")
+    }
+
+    #[test]
+    fn off_profile_plans_nothing() {
+        let soc = dimensity9000();
+        assert!(plan(&FaultProfile::off(), &soc, 42, 60_000.0).is_empty());
+        assert!(plan(&FaultProfile::heavy(), &soc, 42, 0.0).is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic_in_seed() {
+        let soc = dimensity9000();
+        let a = plan(&FaultProfile::heavy(), &soc, 7, 10_000.0);
+        let b = plan(&FaultProfile::heavy(), &soc, 7, 10_000.0);
+        assert!(!a.is_empty());
+        assert_eq!(fmt(&a), fmt(&b));
+        let c = plan(&FaultProfile::heavy(), &soc, 8, 10_000.0);
+        assert_ne!(fmt(&a), fmt(&c), "different seeds should give different storms");
+    }
+
+    #[test]
+    fn plan_is_sorted_in_window_and_spares_cpu() {
+        let soc = dimensity9000();
+        let cpu = soc.cpu_id();
+        let evs = plan(&FaultProfile::heavy(), &soc, 42, 20_000.0);
+        let mut last = 0.0;
+        for ev in &evs {
+            assert!(ev.at_ms >= last && ev.at_ms < 20_000.0, "out of window: {ev:?}");
+            last = ev.at_ms;
+            let proc = match ev.kind {
+                EventKind::ProcFail { proc, .. }
+                | EventKind::ProcRecover { proc }
+                | EventKind::ProcTransient { proc } => proc,
+                _ => panic!("non-fault event in plan: {ev:?}"),
+            };
+            assert_ne!(proc, cpu, "the CPU must be spared");
+        }
+    }
+
+    #[test]
+    fn fail_and_recover_alternate_per_proc() {
+        let soc = dimensity9000();
+        let evs = plan(&FaultProfile::heavy(), &soc, 123, 30_000.0);
+        for p in 0..soc.processors.len() {
+            let mut down = false;
+            for ev in &evs {
+                match ev.kind {
+                    EventKind::ProcFail { proc, .. } if proc == p => {
+                        assert!(!down, "double fail on proc {p}");
+                        down = true;
+                    }
+                    EventKind::ProcRecover { proc } if proc == p => {
+                        assert!(down, "recover without fail on proc {p}");
+                        down = false;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_named_and_custom_profiles() {
+        assert_eq!(FaultProfile::parse("off").unwrap(), FaultProfile::off());
+        assert_eq!(FaultProfile::parse("light").unwrap(), FaultProfile::light());
+        assert_eq!(FaultProfile::parse("heavy").unwrap(), FaultProfile::heavy());
+        let p = FaultProfile::parse("crash=0.3,mttr=250").unwrap();
+        assert_eq!(p.crash_per_s, 0.3);
+        assert_eq!(p.hang_per_s, 0.0);
+        assert_eq!(p.mttr_ms, 250.0);
+        assert!(!p.is_off());
+        assert!(FaultProfile::parse("bogus").is_none());
+        assert!(FaultProfile::parse("crash=-1").is_none());
+    }
+}

@@ -63,6 +63,10 @@ pub struct ArmSpec {
     /// Per-arm `batch_window_ms` override (`None` = the fleet-wide
     /// config's).
     pub batch_window_ms: Option<f64>,
+    /// Per-arm fault-profile override in the `faults::FaultProfile::parse`
+    /// grammar (`None` = the fleet-wide config's), so faulted and
+    /// fault-free arms can ride one fleet.
+    pub fault_profile: Option<String>,
 }
 
 impl ArmSpec {
@@ -74,6 +78,7 @@ impl ArmSpec {
             workload: workload.into(),
             batch_max: None,
             batch_window_ms: None,
+            fault_profile: None,
         }
     }
 
@@ -84,13 +89,24 @@ impl ArmSpec {
         self
     }
 
+    /// Builder: run this arm under a fault profile (`"light"`, `"heavy"`,
+    /// or a `crash=..,hang=..,transient=..,mttr=..` spec).
+    pub fn faulty(mut self, profile: &str) -> Self {
+        self.fault_profile = Some(profile.to_string());
+        self
+    }
+
     pub fn label(&self) -> String {
-        match self.batch_max {
-            Some(b) if b > 1 => {
-                format!("{}/{}/{} (batch {b})", self.soc, self.scheduler, self.workload)
+        let mut l = format!("{}/{}/{}", self.soc, self.scheduler, self.workload);
+        if let Some(b) = self.batch_max {
+            if b > 1 {
+                l.push_str(&format!(" (batch {b})"));
             }
-            _ => format!("{}/{}/{}", self.soc, self.scheduler, self.workload),
         }
+        if let Some(p) = &self.fault_profile {
+            l.push_str(&format!(" (faults {p})"));
+        }
+        l
     }
 
     /// Resolve the arm to a cloneable [`RunSpec`] (validating every
@@ -123,6 +139,11 @@ impl ArmSpec {
         }
         if let Some(w) = self.batch_window_ms {
             cfg.batch_window_ms = w.max(0.0);
+        }
+        if let Some(p) = &self.fault_profile {
+            cfg.fault_profile = Some(crate::faults::FaultProfile::parse(p).ok_or_else(|| {
+                anyhow!("arm '{}': bad fault profile '{p}'", self.label())
+            })?);
         }
         Ok(RunSpec {
             soc,
@@ -184,6 +205,17 @@ pub struct DeviceDigest {
     pub cache_evictions: u64,
     pub cache_bytes_loaded: u64,
     pub cold_load_ms: f64,
+    /// Failure-reason split and fault-layer counters (all zero on
+    /// fault-free runs — the driver never constructs the fault layer, so
+    /// the report carries defaults).
+    pub failed_budget: u64,
+    pub failed_exec: u64,
+    pub faulted: u64,
+    pub retries_exhausted: u64,
+    pub retries: u64,
+    pub proc_fails: u64,
+    pub proc_recovers: u64,
+    pub timeouts: u64,
 }
 
 impl DeviceDigest {
@@ -214,6 +246,14 @@ impl DeviceDigest {
             cache_evictions: r.cache.evictions,
             cache_bytes_loaded: r.cache.bytes_loaded,
             cold_load_ms: r.cache.cold_load_ms,
+            failed_budget: r.sessions.iter().map(|s| s.failed_budget).sum(),
+            failed_exec: r.sessions.iter().map(|s| s.failed_exec).sum(),
+            faulted: r.sessions.iter().map(|s| s.faulted).sum(),
+            retries_exhausted: r.sessions.iter().map(|s| s.retries_exhausted).sum(),
+            retries: r.sessions.iter().map(|s| s.retries).sum(),
+            proc_fails: r.faults.map(|f| f.proc_fails).unwrap_or(0),
+            proc_recovers: r.faults.map(|f| f.proc_recovers).unwrap_or(0),
+            timeouts: r.faults.map(|f| f.timeouts).unwrap_or(0),
         }
     }
 }
@@ -241,6 +281,14 @@ pub struct FleetAgg {
     pub cache_evictions: u64,
     pub cache_bytes_loaded: u64,
     pub cold_load_ms: f64,
+    pub failed_budget: u64,
+    pub failed_exec: u64,
+    pub faulted: u64,
+    pub retries_exhausted: u64,
+    pub retries: u64,
+    pub proc_fails: u64,
+    pub proc_recovers: u64,
+    pub timeouts: u64,
 }
 
 impl FleetAgg {
@@ -264,6 +312,14 @@ impl FleetAgg {
         self.cache_evictions += d.cache_evictions;
         self.cache_bytes_loaded += d.cache_bytes_loaded;
         self.cold_load_ms += d.cold_load_ms;
+        self.failed_budget += d.failed_budget;
+        self.failed_exec += d.failed_exec;
+        self.faulted += d.faulted;
+        self.retries_exhausted += d.retries_exhausted;
+        self.retries += d.retries;
+        self.proc_fails += d.proc_fails;
+        self.proc_recovers += d.proc_recovers;
+        self.timeouts += d.timeouts;
     }
 
     /// Exact SLO attainment over every SLO-scored request in the set.
@@ -333,6 +389,14 @@ impl FleetAgg {
             ("cache_evictions", Json::Num(self.cache_evictions as f64)),
             ("cache_bytes_loaded", Json::Num(self.cache_bytes_loaded as f64)),
             ("cold_load_ms", Json::Num(self.cold_load_ms)),
+            ("failed_budget", Json::Num(self.failed_budget as f64)),
+            ("failed_exec", Json::Num(self.failed_exec as f64)),
+            ("faulted", Json::Num(self.faulted as f64)),
+            ("retries_exhausted", Json::Num(self.retries_exhausted as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("proc_fails", Json::Num(self.proc_fails as f64)),
+            ("proc_recovers", Json::Num(self.proc_recovers as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
         ])
     }
 }
@@ -454,6 +518,16 @@ impl FleetReport {
                 self.total.cold_load_ms,
             );
         }
+        let t = &self.total;
+        if t.proc_fails + t.faulted + t.retries + t.retries_exhausted + t.timeouts > 0 {
+            let _ = writeln!(
+                out,
+                "faults: {} proc fails / {} recovers / {} timeouts; {} retries, \
+                 {} faulted, {} retries exhausted",
+                t.proc_fails, t.proc_recovers, t.timeouts, t.retries, t.faulted,
+                t.retries_exhausted,
+            );
+        }
         if any_subsampled {
             let _ = writeln!(
                 out,
@@ -560,5 +634,12 @@ mod tests {
         assert_eq!(rs.cfg.batch_max, 4);
         assert_eq!(rs.cfg.batch_window_ms, 5.0);
         assert!(batched.label().contains("batch 4"));
+        // Per-arm fault profiles parse into the run spec's config.
+        let faulty = ArmSpec::new("dimensity9000", "adms", "frs").faulty("light");
+        let rs = faulty.to_run_spec(&cfg).unwrap();
+        assert_eq!(rs.cfg.fault_profile.as_ref().unwrap().name, "light");
+        assert!(faulty.label().contains("faults light"));
+        let bad_profile = ArmSpec::new("dimensity9000", "adms", "frs").faulty("wat");
+        assert!(bad_profile.to_run_spec(&cfg).is_err());
     }
 }

@@ -52,6 +52,7 @@ pub mod thermal;
 pub mod power;
 pub mod monitor;
 pub mod analyzer;
+pub mod faults;
 pub mod sched;
 pub mod weights;
 pub mod exec;

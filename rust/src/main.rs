@@ -209,6 +209,18 @@ fn parse_mem_policy(s: &str) -> Result<adms::weights::MemPolicy> {
         .ok_or_else(|| anyhow::anyhow!("--mem-policy: expected 'cost' or 'lru', got '{s}'"))
 }
 
+/// Parse a `--fault-profile` value in the `faults::FaultProfile` grammar:
+/// a named profile (`off` | `light` | `heavy`) or a
+/// `crash=R,hang=R,transient=R,mttr=MS` spec (rates in events/s).
+fn parse_fault_profile(s: &str) -> Result<adms::faults::FaultProfile> {
+    adms::faults::FaultProfile::parse(s).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--fault-profile: expected off|light|heavy or \
+             crash=R,hang=R,transient=R,mttr=MS, got '{s}'"
+        )
+    })
+}
+
 /// Parse `--base` for the `lookahead` scheduler: any of the four bare
 /// policies (the `tflite` alias for vanilla included).
 fn parse_base(s: &str) -> Result<adms::sched::BasePolicy> {
@@ -385,6 +397,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "base", takes_value: true, help: "lookahead: base policy to refine (vanilla|band|adms|pinned)", default: Some("adms") },
         OptSpec { name: "pace", takes_value: true, help: "synthetic payload pace multiplier", default: Some("1") },
         OptSpec { name: "seed", takes_value: true, help: "rng seed", default: Some("42") },
+        OptSpec { name: "dispatch-timeout", takes_value: true, help: "declare a dispatch lost after this multiple of its predicted latency (0 = detection off)", default: Some("0") },
+        OptSpec { name: "retry-limit", takes_value: true, help: "per-request retry budget for fault-aborted work", default: Some("3") },
+        OptSpec { name: "retry-backoff", takes_value: true, help: "base retry backoff in ms, doubled per attempt", default: Some("25") },
+        OptSpec { name: "quarantine", takes_value: true, help: "ms a recovered processor stays Degraded (re-priced) before being trusted Up", default: Some("500") },
+        OptSpec { name: "fault-profile", takes_value: true, help: "seeded fault injection: off|light|heavy or crash=R,hang=R,transient=R,mttr=MS (rates in events/s)", default: None },
+        OptSpec { name: "fault-seed", takes_value: true, help: "dedicated fault-plan seed (default: --seed), so fault timing varies while arrivals stay fixed", default: None },
+        OptSpec { name: "fault-blind", takes_value: false, help: "ablation: faults still happen but the driver neither marks health nor retries", default: None },
         OptSpec { name: "probe", takes_value: false, help: "legacy: serve the AOT numerics probe (PJRT)", default: None },
         OptSpec { name: "workers", takes_value: true, help: "probe mode: worker threads", default: Some("2") },
         OptSpec { name: "no-verify", takes_value: false, help: "probe mode: skip logits verification", default: None },
@@ -416,7 +435,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let sc = trace.to_replay_scenario();
         let (apps, events) = sc.compile()?;
         // The trace's batch config is run-defining: a batched recording
-        // replayed unbatched would legitimately diverge.
+        // replayed unbatched would legitimately diverge. Same for the
+        // fault layer: scenario-driven faults replay as recorded events,
+        // and a recorded profile re-derives its plan from the recorded
+        // knobs (same profile, SoC, seed, duration → identical plan).
+        let mut replay_cfg = SimConfig::default();
+        if let Some(f) = &trace.faults {
+            f.apply_to(&mut replay_cfg);
+        }
         let server = Server::new(soc)
             .scheduler_name(&trace.scheduler)
             .apps(apps.clone())
@@ -425,6 +451,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             .seed(trace.seed)
             .batch_max(trace.batch_max)
             .batch_window_ms(trace.batch_window_ms)
+            .dispatch_timeout(replay_cfg.dispatch_timeout_mult)
+            .retry_limit(replay_cfg.retry_limit)
+            .retry_backoff_ms(replay_cfg.retry_backoff_ms)
+            .fault_quarantine_ms(replay_cfg.fault_quarantine_ms)
+            .fault_profile(replay_cfg.fault_profile.clone())
+            .fault_seed(replay_cfg.fault_seed)
+            .fault_blind(replay_cfg.fault_blind)
             .pace(pace);
         let report = match trace.backend.as_str() {
             "sim" => server.run_sim()?,
@@ -450,6 +483,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             &report,
             trace.seed,
             (trace.batch_max, trace.batch_window_ms),
+            &replay_cfg,
         )?;
         return Ok(());
     }
@@ -478,6 +512,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let batch_max = args.get_usize("batch-max", 1)?;
     let batch_window = args.get_f64("batch-window", 0.0)?;
+    let fault_profile = match args.get("fault-profile") {
+        Some(p) => Some(parse_fault_profile(p)?),
+        None => None,
+    };
+    let fault_seed = match args.get("fault-seed") {
+        Some(_) => Some(args.get_u64("fault-seed", 0)?),
+        None => None,
+    };
     let mut server = Server::new(soc)
         .scheduler_name(&sched)
         .apps(apps.clone())
@@ -491,7 +533,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .lookahead_horizon(args.get_u64("horizon", 2)? as u32)
         .lookahead_beam(args.get_u64("beam", 3)? as u32)
         .lookahead_base(parse_base(&args.get_or("base", "adms"))?)
+        .dispatch_timeout(args.get_f64("dispatch-timeout", 0.0)?)
+        .retry_limit(args.get_u64("retry-limit", 3)? as u32)
+        .retry_backoff_ms(args.get_f64("retry-backoff", 25.0)?)
+        .fault_quarantine_ms(args.get_f64("quarantine", 500.0)?)
+        .fault_profile(fault_profile.clone())
+        .fault_seed(fault_seed)
+        .fault_blind(args.flag("fault-blind"))
         .pace(pace);
+    // Replica of the fault-layer knobs for trace recording (the server
+    // consumes its config when it runs).
+    let mut fault_cfg = SimConfig::default();
+    fault_cfg.dispatch_timeout_mult = args.get_f64("dispatch-timeout", 0.0)?.max(0.0);
+    fault_cfg.retry_limit = args.get_u64("retry-limit", 3)? as u32;
+    fault_cfg.retry_backoff_ms = args.get_f64("retry-backoff", 25.0)?.max(0.0);
+    fault_cfg.fault_quarantine_ms = args.get_f64("quarantine", 500.0)?.max(0.0);
+    fault_cfg.fault_profile = fault_profile;
+    fault_cfg.fault_seed = fault_seed;
+    fault_cfg.fault_blind = args.flag("fault-blind");
     // Scenarios control their own lifecycle: an implicit quota would end
     // the run before the declared churn plays out, so only an explicit
     // --requests bounds them. Plain workloads keep the finite default.
@@ -506,7 +565,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         other => bail!("unknown backend '{other}' (threadpool|sim)"),
     };
     print_serve_report(&report);
-    maybe_record(&args, &soc_name, &apps, &events, &report, seed, (batch_max, batch_window))?;
+    maybe_record(
+        &args,
+        &soc_name,
+        &apps,
+        &events,
+        &report,
+        seed,
+        (batch_max, batch_window),
+        &fault_cfg,
+    )?;
     Ok(())
 }
 
@@ -553,6 +621,16 @@ fn print_serve_report(report: &adms::sim::SimReport) {
         report.assignments.len(),
         report.events
     );
+    if let Some(f) = &report.faults {
+        let retries: u64 = report.sessions.iter().map(|s| s.retries).sum();
+        let faulted: u64 = report.sessions.iter().map(|s| s.faulted).sum();
+        let exhausted: u64 = report.sessions.iter().map(|s| s.retries_exhausted).sum();
+        println!(
+            "faults: {} proc fails / {} recovers / {} dispatch timeouts; \
+             {} retries, {} requests faulted, {} retries exhausted",
+            f.proc_fails, f.proc_recovers, f.timeouts, retries, faulted, exhausted
+        );
+    }
     if report.latency_subsampled() {
         println!(
             "note: '~' percentiles are reservoir estimates (> 65536 samples per session)"
@@ -593,7 +671,8 @@ fn print_serve_report(report: &adms::sim::SimReport) {
 
 /// Honor `--record <file>`: persist the run trace for later `--replay`.
 /// `batch` is the (batch_max, batch_window_ms) the run executed under —
-/// stamped into the trace so a batched recording replays batched.
+/// stamped into the trace so a batched recording replays batched — and
+/// `fault_cfg` carries the fault-layer knobs the same way.
 fn maybe_record(
     args: &adms::util::cli::Args,
     soc_name: &str,
@@ -602,10 +681,12 @@ fn maybe_record(
     report: &adms::sim::SimReport,
     seed: u64,
     batch: (usize, f64),
+    fault_cfg: &SimConfig,
 ) -> Result<()> {
     if let Some(path) = args.get("record") {
         let trace = adms::scenario::RunTrace::record(soc_name, apps, events, report, seed)
-            .with_batch(batch.0, batch.1);
+            .with_batch(batch.0, batch.1)
+            .with_faults(fault_cfg);
         std::fs::write(path, trace.to_json_string())
             .map_err(|e| anyhow::anyhow!("--record '{path}': {e}"))?;
         println!(
@@ -630,6 +711,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "socs", takes_value: true, help: "comma-separated SoC presets", default: Some("dimensity9000") },
         OptSpec { name: "scheds", takes_value: true, help: "comma-separated schedulers (vanilla|band|adms|pinned|lookahead)", default: Some("adms") },
         OptSpec { name: "workloads", takes_value: true, help: "comma-separated workloads: names, model lists (use + within an arm, e.g. retinaface+east), or scenario:<name-or-file>", default: Some("frs") },
+        OptSpec { name: "fault-profiles", takes_value: true, help: "comma-separated per-arm fault profiles (off|light|heavy or crash=..;hang=..;transient=..;mttr=.. with ';' within an arm); an extra arm axis", default: Some("off") },
+        OptSpec { name: "dispatch-timeout", takes_value: true, help: "all arms: declare a dispatch lost after this multiple of predicted latency (0 = off)", default: Some("0") },
+        OptSpec { name: "retry-limit", takes_value: true, help: "all arms: per-request retry budget for fault-aborted work", default: Some("3") },
+        OptSpec { name: "retry-backoff", takes_value: true, help: "all arms: base retry backoff ms, doubled per attempt", default: Some("25") },
+        OptSpec { name: "quarantine", takes_value: true, help: "all arms: ms a recovered processor stays Degraded", default: Some("500") },
+        OptSpec { name: "fault-blind", takes_value: false, help: "all arms: ablation — faults happen but the driver neither marks health nor retries", default: None },
         OptSpec { name: "duration", takes_value: true, help: "per-device horizon, simulated ms", default: Some("5000") },
         OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
         OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse, all arms (1 = off)", default: Some("1") },
@@ -672,11 +759,22 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             }
         })
         .collect();
+    // `,` separates the fault-profile axis; `;` separates the key=value
+    // fields of a custom spec within one arm (the spec grammar itself
+    // uses ',').
+    let profiles: Vec<String> =
+        csv("fault-profiles", "off").into_iter().map(|p| p.replace(';', ",")).collect();
     let mut arms = Vec::new();
     for soc in &socs {
         for sched in &scheds {
             for wl in &workloads {
-                arms.push(ArmSpec::new(soc, sched, wl));
+                for fp in &profiles {
+                    let mut arm = ArmSpec::new(soc, sched, wl);
+                    if fp != "off" && fp != "none" {
+                        arm = arm.faulty(fp);
+                    }
+                    arms.push(arm);
+                }
             }
         }
     }
@@ -691,6 +789,11 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         lookahead_horizon: args.get_u64("horizon", 2)? as u32,
         lookahead_beam: args.get_u64("beam", 3)? as u32,
         lookahead_base: parse_base(&args.get_or("base", "adms"))?,
+        dispatch_timeout_mult: args.get_f64("dispatch-timeout", 0.0)?.max(0.0),
+        retry_limit: args.get_u64("retry-limit", 3)? as u32,
+        retry_backoff_ms: args.get_f64("retry-backoff", 25.0)?.max(0.0),
+        fault_quarantine_ms: args.get_f64("quarantine", 500.0)?.max(0.0),
+        fault_blind: args.flag("fault-blind"),
         ..Default::default()
     };
     let spec = FleetSpec {

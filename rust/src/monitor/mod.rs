@@ -11,6 +11,32 @@
 use crate::soc::{ProcId, ProcKind, ProcessorSpec};
 use crate::TimeMs;
 
+/// Fault-layer health of a processor, as the scheduler sees it.
+///
+/// Distinct from thermal `offline`: offline is the SoC protecting itself
+/// (critical temperature), health is the *driver's* belief about whether
+/// the processor executes work at all. `Down` processors are masked from
+/// scheduling entirely ([`crate::sched::SchedCtx::free_slots`] reports 0
+/// slots); `Degraded` is the quarantine-and-probe state after a recovery
+/// — schedulable, but cost-aware policies re-price it until it has been
+/// up for `fault_quarantine_ms`. Fault-blind runs never leave `Up`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Up,
+    Degraded,
+    Down,
+}
+
+impl Health {
+    pub fn label(self) -> &'static str {
+        match self {
+            Health::Up => "up",
+            Health::Degraded => "degraded",
+            Health::Down => "down",
+        }
+    }
+}
+
 /// Monitor's view of one processor — what the paper's scheduler reads:
 /// load, temperature, frequency, and operational status.
 #[derive(Debug, Clone)]
@@ -35,6 +61,11 @@ pub struct ProcView {
     pub util: f64,
     /// Thermal headroom before the throttle threshold, °C.
     pub headroom_c: f64,
+    /// Fault-layer health. Backends always report `Up` (they model
+    /// hardware, not beliefs); the driver overlays its health state onto
+    /// the cached snapshot when the fault layer is active — see
+    /// [`HardwareMonitor::overlay_health`].
+    pub health: Health,
 }
 
 impl ProcView {
@@ -56,6 +87,7 @@ impl ProcView {
             active_sessions: 0,
             util: 0.0,
             headroom_c: spec.throttle_temp_c - temp_c,
+            health: Health::Up,
         }
     }
 }
@@ -124,6 +156,28 @@ impl HardwareMonitor {
         self.refreshes += 1;
     }
 
+    /// Overlay the driver's health beliefs onto the cached snapshot
+    /// (positional: `health[i]` applies to cached view `i`). Called by
+    /// the driver after every `sample_with` when the fault layer is
+    /// active, so schedulers see `Down`/`Degraded` *immediately* even
+    /// while the rest of the snapshot is cached-stale — the paper's
+    /// monitor polls hardware, but a driver crash is a synchronous signal
+    /// the runtime gets for free. Faults-off runs never call this, which
+    /// is part of the byte-identity no-op argument.
+    pub fn overlay_health(&mut self, health: &[Health]) {
+        for (v, &h) in self.cached.iter_mut().zip(health) {
+            v.health = h;
+        }
+    }
+
+    /// The current cached snapshot, without staleness accounting. The
+    /// dispatch loop samples (possibly refreshing), overlays health, then
+    /// re-borrows the snapshot through this — a second `sample_with`
+    /// would re-trigger the refresh rule under a zero cache interval.
+    pub fn cached_views(&self) -> &[ProcView] {
+        &self.cached
+    }
+
     pub fn refresh_count(&self) -> u64 {
         self.refreshes
     }
@@ -150,7 +204,22 @@ mod tests {
             active_sessions: 0,
             util: 0.0,
             headroom_c: 68.0 - temp,
+            health: Health::Up,
         }]
+    }
+
+    #[test]
+    fn overlay_health_marks_cached_views() {
+        let mut m = HardwareMonitor::new(1e9);
+        m.sample(0.0, || view(30.0));
+        m.overlay_health(&[Health::Down]);
+        // The overlay survives cache hits (no refresh happens) ...
+        let s = m.sample(10.0, || panic!("cache hit expected"));
+        assert_eq!(s[0].health, Health::Down);
+        // ... and a forced refresh resets it to the backend's Up.
+        m.force_refresh(20.0, view(31.0));
+        let s = m.sample(20.0, || panic!("just refreshed"));
+        assert_eq!(s[0].health, Health::Up);
     }
 
     #[test]

@@ -123,6 +123,17 @@ pub fn scenario_to_json(sc: &Scenario) -> Json {
                 ("session", Json::Num(*session as f64)),
                 ("arrival", mode_to_json(mode)),
             ]),
+            ScenarioEvent::ProcFail { proc, hang } => Json::obj(vec![
+                ("at_ms", Json::Num(te.at_ms)),
+                ("type", Json::Str("proc_fail".into())),
+                ("proc", Json::Num(*proc as f64)),
+                ("hang", Json::Bool(*hang)),
+            ]),
+            ScenarioEvent::ProcRecover { proc } => Json::obj(vec![
+                ("at_ms", Json::Num(te.at_ms)),
+                ("type", Json::Str("proc_recover".into())),
+                ("proc", Json::Num(*proc as f64)),
+            ]),
         })
         .collect();
     Json::obj(vec![
@@ -159,6 +170,22 @@ pub fn scenario_from_json(v: &Json) -> Result<Scenario> {
             "rate_change" => ScenarioEvent::RateChange {
                 session: session()?,
                 mode: mode_from_json(e.get("arrival"))?,
+            },
+            "proc_fail" => ScenarioEvent::ProcFail {
+                proc: e
+                    .get("proc")
+                    .as_u64()
+                    .map(|p| p as usize)
+                    .ok_or_else(|| anyhow!("event {i}: missing integer 'proc'"))?,
+                // Absent "hang" means a crash — old documents stay valid.
+                hang: e.get("hang").as_bool().unwrap_or(false),
+            },
+            "proc_recover" => ScenarioEvent::ProcRecover {
+                proc: e
+                    .get("proc")
+                    .as_u64()
+                    .map(|p| p as usize)
+                    .ok_or_else(|| anyhow!("event {i}: missing integer 'proc'"))?,
             },
             other => bail!("event {i}: unknown type '{other}'"),
         };

@@ -35,6 +35,14 @@ pub enum ScenarioEvent {
     SessionStop { session: usize },
     /// Switch session `session` to a new arrival process.
     RateChange { session: usize, mode: ArrivalMode },
+    /// Processor `proc` fails (crash aborts its resident work; hang
+    /// strands it until the dispatch-timeout sweep). Out-of-range
+    /// processors are driver-side no-ops, so a fault scenario written
+    /// against a 4-processor SoC stays valid on a 3-processor one.
+    ProcFail { proc: usize, hang: bool },
+    /// Processor `proc` comes back (health-aware runs quarantine it as
+    /// `Degraded` first).
+    ProcRecover { proc: usize },
 }
 
 /// A [`ScenarioEvent`] with its firing time.
@@ -74,6 +82,28 @@ impl Scenario {
     pub fn rate(mut self, at_ms: f64, session: usize, mode: ArrivalMode) -> Self {
         self.events
             .push(TimedEvent { at_ms, event: ScenarioEvent::RateChange { session, mode } });
+        self
+    }
+
+    /// Crash processor `proc` at `at_ms` (resident work aborts).
+    pub fn fail(mut self, at_ms: f64, proc: usize) -> Self {
+        self.events
+            .push(TimedEvent { at_ms, event: ScenarioEvent::ProcFail { proc, hang: false } });
+        self
+    }
+
+    /// Hang processor `proc` at `at_ms` (resident work strands until the
+    /// dispatch-timeout sweep or the end of the run).
+    pub fn hang(mut self, at_ms: f64, proc: usize) -> Self {
+        self.events
+            .push(TimedEvent { at_ms, event: ScenarioEvent::ProcFail { proc, hang: true } });
+        self
+    }
+
+    /// Recover processor `proc` at `at_ms`.
+    pub fn recover(mut self, at_ms: f64, proc: usize) -> Self {
+        self.events
+            .push(TimedEvent { at_ms, event: ScenarioEvent::ProcRecover { proc } });
         self
     }
 
@@ -137,6 +167,22 @@ impl Scenario {
                         kind: EventKind::Rate { session: base + session, mode: mode.clone() },
                     });
                 }
+                // Processor ids are deliberately NOT validated here: the
+                // SoC is not known at compile time, and the driver treats
+                // out-of-range processors as no-ops, so one fault scenario
+                // serves every preset.
+                ScenarioEvent::ProcFail { proc, hang } => {
+                    events.push(SessionEvent {
+                        at_ms: te.at_ms,
+                        kind: EventKind::ProcFail { proc: *proc, hang: *hang },
+                    });
+                }
+                ScenarioEvent::ProcRecover { proc } => {
+                    events.push(SessionEvent {
+                        at_ms: te.at_ms,
+                        kind: EventKind::ProcRecover { proc: *proc },
+                    });
+                }
             }
         }
         if apps.is_empty() {
@@ -183,13 +229,16 @@ fn validate_mode(mode: &ArrivalMode) -> Result<()> {
 }
 
 /// Named dynamic scenarios accepted by `adms serve --scenario`.
-pub const SCENARIO_NAMES: [&str; 6] = [
+pub const SCENARIO_NAMES: [&str; 9] = [
     "frs_burst",
     "churn_mix",
     "phase_shift",
     "model_churn",
     "cold_start_storm",
     "cache_thrash",
+    "fault_storm",
+    "flaky_dsp",
+    "npu_blackout",
 ];
 
 /// Look up a named scenario.
@@ -201,6 +250,9 @@ pub fn by_name(name: &str) -> Option<Scenario> {
         "model_churn" => Some(model_churn()),
         "cold_start_storm" => Some(cold_start_storm()),
         "cache_thrash" => Some(cache_thrash()),
+        "fault_storm" => Some(fault_storm()),
+        "flaky_dsp" => Some(flaky_dsp()),
+        "npu_blackout" => Some(npu_blackout()),
         _ => None,
     }
 }
@@ -230,6 +282,9 @@ pub fn describe(name: &str) -> &'static str {
         "model_churn" => "a rotating cast of models joins and retires so delegate weights churn across processors",
         "cold_start_storm" => "six distinct models all admitted within the first two seconds, every shard cold",
         "cache_thrash" => "alternating heavyweight models whose combined weights exceed any residency budget",
+        "fault_storm" => "multi-processor crash/hang/recover churn under a steady multi-DNN mix",
+        "flaky_dsp" => "the DSP crashes mid-run and recovers, twice, under SLO-bound vision load",
+        "npu_blackout" => "the NPU goes dark for a long window while an NPU-friendly mix keeps arriving",
         _ => "",
     }
 }
@@ -384,6 +439,77 @@ pub fn cache_thrash() -> Scenario {
         .stop(9_000.0, 1)
 }
 
+/// Fault storm: a steady three-session mix while the accelerators churn —
+/// the GPU crashes and recovers, the DSP hangs (stranding its resident
+/// work until the dispatch-timeout sweep), the NPU crashes late. Processor
+/// order in every SoC preset is 0=CPU, 1=GPU, 2=DSP, 3=NPU; the CPU is
+/// spared so the run always has a fallback.
+pub fn fault_storm() -> Scenario {
+    Scenario::new("fault_storm")
+        .start(0.0, App::closed_loop("mobilenet_v1"))
+        .start(
+            0.0,
+            App {
+                model: "retinaface".into(),
+                slo_ms: Some(80.0),
+                mode: ArrivalMode::Periodic(50.0),
+            },
+        )
+        .start(
+            500.0,
+            App { model: "east".into(), slo_ms: None, mode: ArrivalMode::Poisson(5.0) },
+        )
+        .fail(2_000.0, 1)
+        .recover(4_000.0, 1)
+        .hang(5_000.0, 2)
+        .recover(8_000.0, 2)
+        .fail(9_000.0, 3)
+        .fail(10_000.0, 1)
+        .recover(12_000.0, 1)
+        .recover(13_000.0, 3)
+}
+
+/// Flaky DSP: the DSP (proc 2) crashes mid-run and recovers, twice, under
+/// an SLO-bound vision mix that would otherwise lean on it. The acceptance
+/// workload for retry + health-aware scheduling: a fault-blind run keeps
+/// placing work on the dead processor and strands it.
+pub fn flaky_dsp() -> Scenario {
+    Scenario::new("flaky_dsp")
+        .start(0.0, App::closed_loop("mobilenet_v2"))
+        .start(
+            0.0,
+            App {
+                model: "arcface_mobile".into(),
+                slo_ms: Some(60.0),
+                mode: ArrivalMode::Periodic(40.0),
+            },
+        )
+        .fail(1_500.0, 2)
+        .recover(4_000.0, 2)
+        .fail(6_000.0, 2)
+        .recover(8_500.0, 2)
+}
+
+/// NPU blackout: the NPU (proc 3) goes dark for most of the run while an
+/// NPU-friendly mix keeps arriving — the long-outage case where degraded-
+/// mode placement (everything re-planned across CPU/GPU/DSP) matters more
+/// than retry. On SoCs without an NPU the fault events are no-ops and this
+/// degenerates to the plain mix.
+pub fn npu_blackout() -> Scenario {
+    Scenario::new("npu_blackout")
+        .start(0.0, App::closed_loop("inception_v4"))
+        .start(
+            0.0,
+            App {
+                model: "mobilenet_v1".into(),
+                slo_ms: Some(50.0),
+                mode: ArrivalMode::Periodic(33.0),
+            },
+        )
+        .fail(1_000.0, 3)
+        .recover(9_000.0, 3)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -439,6 +565,28 @@ mod tests {
                 .rate(10.0, 0, bad.clone());
             assert!(sc.compile().is_err(), "rate change to {bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn fault_events_compile_without_session_validation() {
+        // Processor ids are runtime-checked by the driver, not compile-time
+        // by the scenario — an out-of-range proc must still compile (it is
+        // a driver-side no-op), and `compile_with_base` must not offset
+        // processor ids the way it offsets session ids.
+        let sc = Scenario::new("f")
+            .start(0.0, App::closed_loop("mobilenet_v1"))
+            .fail(100.0, 2)
+            .hang(200.0, 99)
+            .recover(300.0, 2);
+        let (_, events) = sc.compile_with_base(5).unwrap();
+        assert!(matches!(events[1].kind, EventKind::ProcFail { proc: 2, hang: false }));
+        assert!(matches!(events[2].kind, EventKind::ProcFail { proc: 99, hang: true }));
+        assert!(matches!(events[3].kind, EventKind::ProcRecover { proc: 2 }));
+        // Event times are still validated.
+        let sc = Scenario::new("bad")
+            .start(0.0, App::closed_loop("mobilenet_v1"))
+            .fail(-1.0, 2);
+        assert!(sc.compile().is_err(), "negative fault time must be rejected");
     }
 
     #[test]

@@ -56,8 +56,42 @@ pub struct RunTrace {
     /// a missing round would leave queued tasks waiting where the
     /// original dispatched them.
     pub rate_events: Vec<(usize, f64)>,
-    pub arrivals: Vec<ArrivalRecord>,
-    pub assignments: Vec<AssignRecord>,
+    /// Scenario-driven processor fault events, `(at_ms, proc, code)` with
+    /// code 0 = crash, 1 = hang, 2 = recover. Profile-generated faults are
+    /// *not* listed: the driver re-derives them deterministically from the
+    /// [`TraceFaults`] knobs at replay time (same profile, SoC, seed, and
+    /// duration → byte-identical plan).
+    pub fault_events: Vec<(f64, usize, u8)>,
+    /// Fault-layer config the run executed under. `None` = fault layer off
+    /// — omitted from the JSON so faults-off (and pre-fault) traces keep
+    /// their exact bytes.
+    pub faults: Option<TraceFaults>,
+}
+
+/// The fault-layer knobs a replay must restore to reproduce a faulted run:
+/// detection/retry config plus the generative profile (if any).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceFaults {
+    pub dispatch_timeout_mult: f64,
+    pub retry_limit: u32,
+    pub retry_backoff_ms: f64,
+    pub quarantine_ms: f64,
+    pub profile: Option<crate::faults::FaultProfile>,
+    pub fault_seed: Option<u64>,
+    pub blind: bool,
+}
+
+impl TraceFaults {
+    /// Copy the recorded knobs onto a replay config.
+    pub fn apply_to(&self, cfg: &mut crate::exec::SimConfig) {
+        cfg.dispatch_timeout_mult = self.dispatch_timeout_mult;
+        cfg.retry_limit = self.retry_limit;
+        cfg.retry_backoff_ms = self.retry_backoff_ms;
+        cfg.fault_quarantine_ms = self.quarantine_ms;
+        cfg.fault_profile = self.profile.clone();
+        cfg.fault_seed = self.fault_seed;
+        cfg.fault_blind = self.blind;
+    }
 }
 
 impl RunTrace {
@@ -93,6 +127,20 @@ impl RunTrace {
                 _ => None,
             })
             .collect();
+        // Scenario-driven faults replay as scenario events; transients and
+        // profile-generated faults are regenerated from the TraceFaults
+        // knobs instead (see `with_faults`).
+        let fault_events = events
+            .iter()
+            .filter(|e| e.at_ms <= report.duration_ms)
+            .filter_map(|e| match e.kind {
+                EventKind::ProcFail { proc, hang } => {
+                    Some((e.at_ms, proc, if hang { 1 } else { 0 }))
+                }
+                EventKind::ProcRecover { proc } => Some((e.at_ms, proc, 2)),
+                _ => None,
+            })
+            .collect();
         RunTrace {
             scheduler: report.scheduler.clone(),
             backend: report.backend.clone(),
@@ -105,7 +153,26 @@ impl RunTrace {
             rate_events,
             arrivals: report.arrivals.clone(),
             assignments: report.assignments.clone(),
+            fault_events,
+            faults: None,
         }
+    }
+
+    /// Stamp the fault-layer config the run executed under (no-op for a
+    /// faults-off run, so faults-off traces keep their exact bytes).
+    pub fn with_faults(mut self, cfg: &crate::exec::SimConfig) -> Self {
+        if cfg.faults_configured() || !self.fault_events.is_empty() {
+            self.faults = Some(TraceFaults {
+                dispatch_timeout_mult: cfg.dispatch_timeout_mult,
+                retry_limit: cfg.retry_limit,
+                retry_backoff_ms: cfg.retry_backoff_ms,
+                quarantine_ms: cfg.fault_quarantine_ms,
+                profile: cfg.fault_profile.clone(),
+                fault_seed: cfg.fault_seed,
+                blind: cfg.fault_blind,
+            });
+        }
+        self
     }
 
     /// Stamp the group-dispatch config the run executed under, so a
@@ -147,6 +214,13 @@ impl RunTrace {
             if s < schedules.len() {
                 sc = sc.rate(at, s, ArrivalMode::Replay(Arc::clone(&schedules[s])));
             }
+        }
+        for &(at, p, code) in &self.fault_events {
+            sc = match code {
+                0 => sc.fail(at, p),
+                1 => sc.hang(at, p),
+                _ => sc.recover(at, p),
+            };
         }
         sc
     }
@@ -199,6 +273,48 @@ impl RunTrace {
             fields.push(("batch_max", Json::Num(self.batch_max as f64)));
             fields.push(("batch_window_ms", Json::Num(self.batch_window_ms)));
         }
+        // Fault layer only when it was active — same byte-identity rule.
+        let fault_events: Vec<Json> = self
+            .fault_events
+            .iter()
+            .map(|&(at, p, code)| {
+                Json::Arr(vec![Json::Num(at), Json::Num(p as f64), Json::Num(code as f64)])
+            })
+            .collect();
+        if !fault_events.is_empty() {
+            fields.push(("fault_events", Json::Arr(fault_events)));
+        }
+        if let Some(f) = &self.faults {
+            fields.push((
+                "faults",
+                Json::obj(vec![
+                    ("dispatch_timeout_mult", Json::Num(f.dispatch_timeout_mult)),
+                    ("retry_limit", Json::Num(f.retry_limit as f64)),
+                    ("retry_backoff_ms", Json::Num(f.retry_backoff_ms)),
+                    ("quarantine_ms", Json::Num(f.quarantine_ms)),
+                    ("blind", Json::Bool(f.blind)),
+                    (
+                        "fault_seed",
+                        f.fault_seed.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "profile",
+                        f.profile
+                            .as_ref()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(p.name.clone())),
+                                    ("crash_per_s", Json::Num(p.crash_per_s)),
+                                    ("hang_per_s", Json::Num(p.hang_per_s)),
+                                    ("transient_per_s", Json::Num(p.transient_per_s)),
+                                    ("mttr_ms", Json::Num(p.mttr_ms)),
+                                ])
+                            })
+                            .unwrap_or(Json::Null),
+                    ),
+                ]),
+            ));
+        }
         fields.extend([
             ("sessions", Json::Arr(sessions)),
             ("rate_events", Json::Arr(rate_events)),
@@ -249,6 +365,35 @@ impl RunTrace {
                 Ok((t[0] as usize, t[1]))
             })
             .collect::<Result<Vec<_>>>()?;
+        let fault_events = v
+            .get("fault_events")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|a| {
+                let t = tuple(a, 3, "fault_event")?;
+                Ok((t[0], t[1] as usize, t[2] as u8))
+            })
+            .collect::<Result<Vec<(f64, usize, u8)>>>()?;
+        let faults = v.get("faults").as_obj().map(|_| {
+            let f = v.get("faults");
+            let p = f.get("profile");
+            TraceFaults {
+                dispatch_timeout_mult: f.get("dispatch_timeout_mult").as_f64().unwrap_or(0.0),
+                retry_limit: f.get("retry_limit").as_u64().unwrap_or(0) as u32,
+                retry_backoff_ms: f.get("retry_backoff_ms").as_f64().unwrap_or(0.0),
+                quarantine_ms: f.get("quarantine_ms").as_f64().unwrap_or(0.0),
+                blind: f.get("blind").as_bool().unwrap_or(false),
+                fault_seed: f.get("fault_seed").as_u64(),
+                profile: p.as_obj().map(|_| crate::faults::FaultProfile {
+                    name: p.get("name").as_str().unwrap_or("custom").to_string(),
+                    crash_per_s: p.get("crash_per_s").as_f64().unwrap_or(0.0),
+                    hang_per_s: p.get("hang_per_s").as_f64().unwrap_or(0.0),
+                    transient_per_s: p.get("transient_per_s").as_f64().unwrap_or(0.0),
+                    mttr_ms: p.get("mttr_ms").as_f64().unwrap_or(300.0),
+                }),
+            }
+        });
         let arrivals = v
             .get("arrivals")
             .as_arr()
@@ -313,6 +458,8 @@ impl RunTrace {
             batch_window_ms: v.get("batch_window_ms").as_f64().unwrap_or(0.0).max(0.0),
             sessions,
             rate_events,
+            fault_events,
+            faults,
             arrivals,
             assignments,
         })
@@ -347,6 +494,8 @@ mod tests {
                 },
             ],
             rate_events: vec![(0, 500.5)],
+            fault_events: Vec::new(),
+            faults: None,
             arrivals: vec![
                 ArrivalRecord { session: 0, at: 0.0 },
                 ArrivalRecord { session: 1, at: 100.125 },
@@ -387,6 +536,48 @@ mod tests {
         let back = RunTrace::from_json_str(&s).unwrap();
         assert_eq!(back, t);
         assert_eq!(back.assignments[1].group_size(), 3);
+    }
+
+    /// A faulted trace round-trips its fault events and knobs; a faults-off
+    /// trace serializes without any fault keys (byte-identity with
+    /// pre-fault recordings).
+    #[test]
+    fn faulted_trace_roundtrips_and_off_trace_has_no_fault_keys() {
+        let off = tiny_trace().to_json_string();
+        assert!(!off.contains("fault_events") && !off.contains("\"faults\""));
+
+        let mut t = tiny_trace();
+        t.fault_events = vec![(800.0, 2, 0), (900.0, 3, 1), (1_100.5, 2, 2)];
+        t.faults = Some(TraceFaults {
+            dispatch_timeout_mult: 4.0,
+            retry_limit: 3,
+            retry_backoff_ms: 25.0,
+            quarantine_ms: 500.0,
+            profile: Some(crate::faults::FaultProfile::light()),
+            fault_seed: Some(99),
+            blind: false,
+        });
+        let s = t.to_json_string();
+        let back = RunTrace::from_json_str(&s).unwrap();
+        assert_eq!(back, t);
+
+        // Replay re-fires the recorded fault events as scenario events.
+        let (_, events) = t.to_replay_scenario().compile().unwrap();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::ProcFail { proc: 2, hang: false })));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::ProcFail { proc: 3, hang: true })));
+        assert!(events.iter().any(|e| matches!(e.kind, EventKind::ProcRecover { proc: 2 })));
+
+        // The knob copier restores the recorded config.
+        let mut cfg = crate::exec::SimConfig::default();
+        t.faults.as_ref().unwrap().apply_to(&mut cfg);
+        assert_eq!(cfg.dispatch_timeout_mult, 4.0);
+        assert_eq!(cfg.retry_limit, 3);
+        assert_eq!(cfg.fault_seed, Some(99));
+        assert_eq!(cfg.fault_profile.as_ref().unwrap().name, "light");
     }
 
     #[test]

@@ -96,7 +96,7 @@ impl Adms {
     ) -> Option<f64> {
         let plan = &ctx.plans[t.session];
         let view = &ctx.procs[proc];
-        if view.offline {
+        if view.offline || view.health == crate::monitor::Health::Down {
             return None;
         }
         // Price at the monitored frequency, not nameplate. The batch
@@ -133,7 +133,14 @@ impl Adms {
         // makes ADMS cache-aware: a slower processor whose shard is
         // warm can beat a faster one that must stream weights first.
         let load = ctx.residency_miss_ms(t.session, t.unit, proc);
-        Some(view.backlog_ms + extra_backlog + exec + xfer + s_thermal + load)
+        // Quarantine re-pricing: a processor that just recovered from a
+        // fault is schedulable but not yet trusted — price its execution
+        // at double until the driver promotes it back to `Up`, so work
+        // probes it only when it still wins at 2×. `Up` adds exactly 0.0,
+        // keeping faults-off costs bit-identical.
+        let s_health =
+            if view.health == crate::monitor::Health::Degraded { exec } else { 0.0 };
+        Some(view.backlog_ms + extra_backlog + exec + xfer + s_thermal + load + s_health)
     }
 
     /// Eq 4 with the deadline term evaluated on an explicit slack — for
@@ -430,6 +437,37 @@ mod tests {
             s.priority(&ctx, &tight, 0, 5.0) < s.priority(&ctx, &loose, 0, 5.0),
             "tight deadline must rank first"
         );
+    }
+
+    /// Health gating mirrors the offline test: `Down` removes a processor
+    /// from placement entirely; `Degraded` re-prices it (2× exec) so a
+    /// cool alternative wins ties it used to win.
+    #[test]
+    fn down_processor_never_selected_and_degraded_repriced() {
+        use crate::monitor::Health;
+        let soc = dimensity9000();
+        let plan = ModelPlan::build(Arc::new(zoo::mobilenet_v1()), &soc, 5);
+        let plans = vec![plan];
+        let mut v = views(&soc);
+        for view in v.iter_mut().skip(1) {
+            view.health = Health::Down;
+        }
+        let ctx = mk_ctx(0.0, &soc, &plans, &v);
+        let mut s = Adms::default();
+        let ready = vec![pending(0, 0.0)];
+        let a = run_sched(&mut s, &ctx, &ready);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].proc, 0, "only the CPU is Up");
+        assert!(s.placement_cost(&ctx, &ready[0], 1, 0.0, 1).is_none());
+        // Degraded: still placeable, strictly more expensive than Up.
+        let mut v2 = views(&soc);
+        let t = pending(0, 0.0);
+        let ctx_up = mk_ctx(0.0, &soc, &plans, &v2);
+        let up_cost = s.placement_cost(&ctx_up, &t, 1, 0.0, 1).unwrap();
+        v2[1].health = Health::Degraded;
+        let ctx_deg = mk_ctx(0.0, &soc, &plans, &v2);
+        let deg_cost = s.placement_cost(&ctx_deg, &t, 1, 0.0, 1).unwrap();
+        assert!(deg_cost > up_cost, "Degraded must be re-priced: {deg_cost} vs {up_cost}");
     }
 
     #[test]

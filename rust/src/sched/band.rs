@@ -85,7 +85,19 @@ impl Scheduler for Band {
                 // estimate includes the cold-load price — 0.0 exactly on
                 // unbudgeted runs, keeping the sum bit-identical there.
                 let load = ctx.residency_miss_ms(t.session, t.unit, p);
-                let expected = backlog[p] + exec + xfer + load;
+                // Band is state-blind to temperature/frequency, but a
+                // crashed-and-recovered delegate is a runtime signal its
+                // model pool does see (the worker context was torn down):
+                // price a quarantined (Degraded) processor's execution at
+                // 2× until the driver trusts it again. `Up` adds exactly
+                // 0.0, keeping faults-off estimates bit-identical; `Down`
+                // never reaches here (zero free slots).
+                let health = if ctx.procs[p].health == crate::monitor::Health::Degraded {
+                    exec
+                } else {
+                    0.0
+                };
+                let expected = backlog[p] + exec + xfer + load + health;
                 if best.map(|(_, b)| expected < b).unwrap_or(true) {
                     best = Some((p, expected));
                 }

@@ -195,7 +195,7 @@ impl<'a> SchedCtx<'a> {
     /// (they used to disagree: `load < 1.0` called a 4-slot processor at
     /// load 0.9 available while the census rounded its free slots to 0).
     pub fn free_slots(&self, v: &ProcView) -> usize {
-        if v.offline {
+        if v.offline || v.health == crate::monitor::Health::Down {
             0
         } else {
             let total = self.soc.processors[v.id].parallel_slots.max(1) as f64;
@@ -203,7 +203,8 @@ impl<'a> SchedCtx<'a> {
         }
     }
 
-    /// Processors currently able to accept a task (online, ≥ 1 free slot).
+    /// Processors currently able to accept a task (online, healthy
+    /// enough to try — `Down` reports 0 free slots — and ≥ 1 free slot).
     pub fn available_procs(&self) -> Vec<ProcId> {
         self.procs
             .iter()
@@ -352,6 +353,34 @@ mod tests {
         assert!(!avail.contains(&2));
         assert!(avail.contains(&0));
         assert_eq!(soc.processors[0].kind, ProcKind::Cpu);
+    }
+
+    /// A `Down` processor is masked exactly like an offline one: zero
+    /// free slots, absent from `available_procs`; `Degraded` stays
+    /// schedulable (policies re-price it instead).
+    #[test]
+    fn down_health_masks_processor_like_offline() {
+        use crate::monitor::Health;
+        let soc = dimensity9000();
+        let mut views = mk_views(&soc);
+        views[1].health = Health::Down;
+        views[2].health = Health::Degraded;
+        let plans: Vec<ModelPlan> = vec![];
+        let ctx = SchedCtx {
+            now: 0.0,
+            soc: &soc,
+            plans: &plans,
+            procs: &views,
+            batch: BatchCtx::OFF,
+            weights: WeightsView::OFF,
+        };
+        assert_eq!(ctx.free_slots(&views[1]), 0);
+        let census = free_slot_census(&ctx);
+        assert_eq!(census[1], 0);
+        assert!(census[2] > 0, "Degraded must stay schedulable");
+        let avail = ctx.available_procs();
+        assert!(!avail.contains(&1));
+        assert!(avail.contains(&2));
     }
 
     /// Regression: `available_procs` must agree with `free_slot_census`

@@ -52,7 +52,13 @@ impl Scheduler for Pinned {
             } else {
                 self.cpu
             };
-            if ctx.procs[target].offline || free[target] == 0 {
+            // A Down target blocks the pinned session outright (census
+            // reports 0 free slots; the explicit check keeps the rule
+            // visible next to the offline one).
+            if ctx.procs[target].offline
+                || ctx.procs[target].health == crate::monitor::Health::Down
+                || free[target] == 0
+            {
                 continue;
             }
             // Same-(model, unit) tasks of concurrent sessions fuse into

@@ -120,8 +120,14 @@ impl Scheduler for VanillaTflite {
                 self.cpu
             };
             // TFLite blocks until its processor has capacity; it never
-            // migrates work elsewhere.
-            if ctx.procs[target].offline || free[target] == 0 {
+            // migrates work elsewhere. A Down delegate blocks it the same
+            // way a wedged NNAPI driver blocks real TFLite (the census
+            // already reports 0 free slots for Down — the explicit check
+            // keeps the rule visible next to the offline one).
+            if ctx.procs[target].offline
+                || ctx.procs[target].health == crate::monitor::Health::Down
+                || free[target] == 0
+            {
                 continue;
             }
             // Group dispatch models a multi-instance interpreter invoke:

@@ -28,6 +28,22 @@ pub struct SessionStats {
     /// Unlike `failed`, these are not the system's fault and do not count
     /// against SLO satisfaction.
     pub cancelled: u64,
+    /// Failure-reason split (fault layer): the four partition `failed`
+    /// exactly — `failed == failed_budget + failed_exec + faulted +
+    /// retries_exhausted` on every run (the chaos conservation property
+    /// pins it). Serialized only when the fault layer was active, so
+    /// faults-off reports stay byte-identical to pre-fault-layer ones.
+    pub failed_budget: u64,
+    /// Genuine payload execution errors (never retried).
+    pub failed_exec: u64,
+    /// Fault/timeout aborts with no retry machinery available
+    /// (fault-blind or `retry_limit = 0`).
+    pub faulted: u64,
+    /// Fault/timeout aborts after the retry budget ran out.
+    pub retries_exhausted: u64,
+    /// Fault/timeout retries granted — audited separately from `issued`
+    /// (a retried unit re-runs the same request).
+    pub retries: u64,
     pub latency: Summary,
     /// Completed requests per second of the session's *active* window
     /// (admission to retirement; the full run for static sessions).
@@ -69,6 +85,19 @@ pub struct ProcStats {
     pub cold_loads: u64,
 }
 
+/// Fault-layer counters (`None` when the fault layer never engaged —
+/// which is how faults-off reports serialize byte-identically to
+/// pre-fault-layer ones).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// `ProcFail` events applied (crashes + hangs on in-range processors).
+    pub proc_fails: u64,
+    /// `ProcRecover` events applied.
+    pub proc_recovers: u64,
+    /// Groups aborted by the dispatch-deadline sweep.
+    pub timeouts: u64,
+}
+
 /// Full execution report — produced identically by the discrete-event
 /// simulator and the wall-clock thread-pool backend (where thermal/power
 /// signals are zero: real hardware counters are a future backend concern).
@@ -88,6 +117,10 @@ pub struct SimReport {
     pub monitor_refreshes: u64,
     /// Payload execution errors (thread-pool backend).
     pub exec_errors: u64,
+    /// Fault-layer counters; `Some` exactly when the run had the fault
+    /// layer active (fault events in the scenario, a fault profile, or
+    /// the dispatch-timeout sweep).
+    pub faults: Option<FaultStats>,
     /// Weight-residency counters (`--mem-budget`). All-zero on
     /// unbudgeted runs — the cache is never constructed — so the report
     /// (and its JSON form) is identical to pre-residency builds there.
@@ -224,15 +257,32 @@ impl SimReport {
     /// equivalence property compares.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
+        // The failure-reason split and fault block follow the
+        // conditional-emission idiom (`batch_max = 1`, unbudgeted cache):
+        // they appear only when the fault layer was active, so a
+        // faults-off report is byte-identical to a pre-fault-layer one.
+        let fault_layer = self.faults.is_some();
         let sessions: Vec<Json> = self
             .sessions
             .iter()
             .map(|s| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("model", Json::Str(s.model.clone())),
                     ("issued", Json::Num(s.issued as f64)),
                     ("completed", Json::Num(s.completed as f64)),
                     ("failed", Json::Num(s.failed as f64)),
+                ];
+                if fault_layer {
+                    fields.push(("failed_budget", Json::Num(s.failed_budget as f64)));
+                    fields.push(("failed_exec", Json::Num(s.failed_exec as f64)));
+                    fields.push(("faulted", Json::Num(s.faulted as f64)));
+                    fields.push((
+                        "retries_exhausted",
+                        Json::Num(s.retries_exhausted as f64),
+                    ));
+                    fields.push(("retries", Json::Num(s.retries as f64)));
+                }
+                fields.extend(vec![
                     ("cancelled", Json::Num(s.cancelled as f64)),
                     ("lat_count", Json::Num(s.latency.count() as f64)),
                     ("lat_mean", Json::Num(s.latency.mean())),
@@ -251,7 +301,8 @@ impl SimReport {
                     ("start_ms", Json::Num(s.start_ms)),
                     ("stop_ms", s.stop_ms.map(Json::Num).unwrap_or(Json::Null)),
                     ("active_ms", Json::Num(s.active_ms)),
-                ])
+                ]);
+                Json::obj(fields)
             })
             .collect();
         let procs: Vec<Json> = self
@@ -299,7 +350,7 @@ impl SimReport {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut top = vec![
             ("scheduler", Json::Str(self.scheduler.clone())),
             ("backend", Json::Str(self.backend.clone())),
             ("duration_ms", Json::Num(self.duration_ms)),
@@ -310,6 +361,18 @@ impl SimReport {
             ("energy_j", Json::Num(self.energy_j)),
             ("monitor_refreshes", Json::Num(self.monitor_refreshes as f64)),
             ("exec_errors", Json::Num(self.exec_errors as f64)),
+        ];
+        if let Some(f) = &self.faults {
+            top.push((
+                "faults",
+                Json::obj(vec![
+                    ("proc_fails", Json::Num(f.proc_fails as f64)),
+                    ("proc_recovers", Json::Num(f.proc_recovers as f64)),
+                    ("timeouts", Json::Num(f.timeouts as f64)),
+                ]),
+            ));
+        }
+        top.extend(vec![
             (
                 "cache",
                 Json::obj(vec![
@@ -325,6 +388,7 @@ impl SimReport {
             ("assignments", Json::Arr(assignments)),
             ("arrivals", Json::Arr(arrivals)),
             ("timeline", Json::Arr(timeline)),
-        ])
+        ]);
+        Json::obj(top)
     }
 }

@@ -315,6 +315,46 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             completed: completed.get(),
         });
     }
+    // Fault-layer churn (ISSUE 8): the same churn scenario under a heavy
+    // seeded fault profile with the dispatch-timeout sweep and retries
+    // live, so every measured run exercises fault-plan playback, health
+    // overlay, abort/re-enqueue, and backoff timers on the hot path —
+    // directly comparable to the fault-free `churn_1s/mem` row above.
+    {
+        use crate::exec::Server;
+        use crate::faults::FaultProfile;
+        use crate::scenario::model_churn;
+        let (apps, events_list) = model_churn().compile().expect("model_churn compiles");
+        let cfg = SimConfig {
+            duration_ms: 1_000.0,
+            dispatch_timeout_mult: 4.0,
+            fault_profile: Some(FaultProfile::heavy()),
+            fault_seed: Some(7),
+            ..Default::default()
+        };
+        let name = "churn_1s/faults".to_string();
+        let events = Cell::new(0u64);
+        let completed = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = Server::new(soc.clone())
+                .scheduler_name("adms")
+                .apps(apps.clone())
+                .events(events_list.clone())
+                .config(cfg.clone())
+                .run_sim()
+                .expect("churn faults bench run");
+            events.set(r.events);
+            completed.set(r.total_completed());
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry {
+            name,
+            stats,
+            sim_ms: 1_000.0,
+            events: events.get(),
+            completed: completed.get(),
+        });
+    }
     // Fleet throughput: a sharded device population per measured run
     // (`sim_ms` is summed over devices, so the headline figure stays
     // simulated-ms per wall-second — now aggregated across shards).

@@ -262,6 +262,22 @@ impl WeightCache {
         }
     }
 
+    /// Drop every resident (and in-flight) shard on one processor — the
+    /// fault layer calls this when the processor fails: its driver
+    /// context, and the weights staged in it, died with it. Pins vanish
+    /// with their entries (the inflight work holding them was aborted);
+    /// later [`unpin`](WeightCache::unpin) calls from stale bookkeeping
+    /// find nothing and no-op. Purged bytes are NOT counted as
+    /// evictions — eviction measures budget pressure, not hardware
+    /// failure — and the GreedyDual inflation level survives, so
+    /// post-recovery insertions get no artificial head start.
+    pub fn purge_proc(&mut self, proc: ProcId) {
+        if let Some(d) = self.domains.get_mut(proc) {
+            d.entries.clear();
+            d.used = 0;
+        }
+    }
+
     /// Counters snapshot, with `bytes_resident` sampled live.
     pub fn stats(&self) -> CacheStats {
         let mut s = self.stats;
@@ -456,6 +472,27 @@ mod tests {
             0.0,
             "starved session's shard finally warm"
         );
+    }
+
+    #[test]
+    fn purge_proc_clears_one_domain_and_tolerates_stale_unpins() {
+        let (soc, mut c) = cache(64 * MIB, MemPolicy::CostLru, &[4 * MIB, 6 * MIB]);
+        c.commit(&soc, 0.0, 0, 0, 2);
+        c.commit(&soc, 0.0, 1, 0, 2);
+        c.commit(&soc, 0.0, 0, 0, 1);
+        assert_eq!(c.resident_bytes(2), 10 * MIB);
+        c.purge_proc(2);
+        assert_eq!(c.resident_bytes(2), 0, "failed processor's domain must empty");
+        assert_eq!(c.resident_bytes(1), 4 * MIB, "other domains untouched");
+        // Stale unpins from the aborted (pinned) dispatches are no-ops.
+        c.unpin(0, 0, 2);
+        c.unpin(1, 0, 2);
+        // The shard is cold again on the recovered processor, and the
+        // purge is not an eviction.
+        assert!(c.price(&soc, 1.0, 0, 0, 2) > 0.0);
+        let s = c.stats();
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.bytes_resident, 4 * MIB);
     }
 
     #[test]

@@ -359,6 +359,147 @@ fn threadpool_reports_latency_and_slo_metrics() {
     assert!(report.procs.iter().any(|p| p.dispatches > 0));
 }
 
+/// Cross-backend error-path trace identity (ISSUE 8): an injected
+/// `ProcTransient` turns one completion on the pinned CPU into a
+/// retryable execution error *in the driver*, so both backends walk the
+/// identical abort → backoff → re-dispatch path. Same frozen-snapshot
+/// recipe as the four-scheduler trace test above (infinite monitor
+/// cache, one chain session, fixed quota): the assignment traces —
+/// including the extra retry dispatch — must be byte-identical, and the
+/// retry must be visible in the failure-reason split on both backends.
+#[test]
+fn transient_error_trace_identical_on_both_backends() {
+    use adms::exec::{EventKind, SessionEvent};
+    let soc = dimensity9000();
+    let cpu = soc.cpu_id();
+    let build = || {
+        Server::new(soc.clone())
+            .scheduler(Pinned::new(cpu, cpu))
+            .session("mobilenet_v1", ArrivalMode::ClosedLoop, None)
+            .events(vec![SessionEvent {
+                at_ms: 0.0,
+                kind: EventKind::ProcTransient { proc: cpu },
+            }])
+            .window_size(6)
+            .config(SimConfig {
+                monitor_cache_ms: 1e12, // freeze the t=0 snapshot
+                max_requests: Some(3),
+                duration_ms: 60_000.0,
+                ..SimConfig::default()
+            })
+            .pace(0.02)
+    };
+    let sim = build().run_sim().unwrap();
+    let pool = build().run_threadpool().unwrap();
+    // The transient is absorbed by one retry: all three requests finish.
+    assert_eq!(sim.total_completed(), 3, "sim lost a request to the transient");
+    assert_eq!(pool.total_completed(), 3, "pool lost a request to the transient");
+    assert_eq!(
+        sim.assignments, pool.assignments,
+        "transient retry path diverged between backends"
+    );
+    for r in [&sim, &pool] {
+        let s = &r.sessions[0];
+        assert_eq!(s.issued, s.completed + s.failed + s.cancelled, "{}", r.backend);
+        assert_eq!(s.retries, 1, "{}: expected exactly one retry", r.backend);
+        assert_eq!(s.failed_exec, 0, "{}: transient must not count as a payload error", r.backend);
+        assert!(r.faults.is_some(), "{}: fault layer left no stats", r.backend);
+    }
+}
+
+/// Acceptance criterion (ISSUE 8): on the `flaky_dsp` scenario — the
+/// DSP crashes and recovers twice under an SLO-bound vision load — the
+/// retrying, health-aware configuration completes strictly more
+/// requests than the fault-blind ablation (same scheduler, same seeds:
+/// hardware fails identically, but the blind run tracks no health,
+/// retries nothing, and keeps steering work into the dead processor),
+/// and both conserve requests exactly. The wall-clock pool survives the
+/// same crash/recover churn with exact conservation — the strict
+/// throughput comparison stays on the deterministic sim clock.
+#[test]
+fn retry_scheduler_survives_flaky_dsp() {
+    use adms::exec::{EventKind, SessionEvent};
+    use adms::scenario;
+    let (apps, events) = scenario::by_name("flaky_dsp").unwrap().compile().unwrap();
+    let run = |blind: bool| {
+        let mut server = Server::new(dimensity9000())
+            .scheduler_name("adms")
+            .apps(apps.clone())
+            .events(events.clone())
+            .duration_ms(10_000.0)
+            .seed(42)
+            .dispatch_timeout(4.0)
+            .fault_quarantine_ms(500.0);
+        server = if blind {
+            server.fault_blind(true).retry_limit(0)
+        } else {
+            server.retry_limit(3).retry_backoff_ms(25.0)
+        };
+        server.run_sim().unwrap()
+    };
+    let aware = run(false);
+    let blind = run(true);
+    for (r, what) in [(&aware, "aware"), (&blind, "blind")] {
+        let f = r.faults.expect("fault layer inactive on a fault scenario");
+        assert_eq!(f.proc_fails, 2, "{what}: both DSP crashes must apply");
+        assert_eq!(f.proc_recovers, 2, "{what}: both recoveries must apply");
+        for s in &r.sessions {
+            assert_eq!(
+                s.issued,
+                s.completed + s.failed + s.cancelled,
+                "{what}: conservation violated for {}",
+                s.model
+            );
+        }
+    }
+    assert!(
+        aware.total_completed() > blind.total_completed(),
+        "health-aware retry completed {} ≤ fault-blind {} on flaky_dsp",
+        aware.total_completed(),
+        blind.total_completed()
+    );
+    // Retries actually happened and were audited, not silently folded
+    // into `issued`.
+    let retries: u64 = aware.sessions.iter().map(|s| s.retries).sum();
+    let blind_faulted: u64 = blind.sessions.iter().map(|s| s.faulted).sum();
+    assert!(retries > 0, "aware run never retried");
+    assert!(blind_faulted > 0, "blind run never faulted a request");
+
+    // The wall-clock pool rides the same crash/recover churn: a DSP
+    // crash early in the run, recovery mid-run, closed-loop load
+    // throughout. Wall time is jittery, so the assertions here are
+    // survival and exact conservation, not throughput.
+    let mut server = Server::new(dimensity9000())
+        .scheduler_name("adms")
+        .duration_ms(1_200.0)
+        .dispatch_timeout(4.0)
+        .retry_limit(3)
+        .retry_backoff_ms(25.0)
+        .fault_quarantine_ms(200.0)
+        .pace(0.02);
+    for _ in 0..3 {
+        server = server.session("mobilenet_v1", ArrivalMode::ClosedLoop, None);
+    }
+    let pool = server
+        .events(vec![
+            SessionEvent { at_ms: 200.0, kind: EventKind::ProcFail { proc: 2, hang: false } },
+            SessionEvent { at_ms: 700.0, kind: EventKind::ProcRecover { proc: 2 } },
+        ])
+        .run_threadpool()
+        .unwrap();
+    assert!(pool.total_completed() > 0, "pool completed nothing under DSP churn");
+    let f = pool.faults.expect("pool: fault layer inactive");
+    assert_eq!(f.proc_fails, 1, "pool: DSP crash must apply");
+    for s in &pool.sessions {
+        assert_eq!(
+            s.issued,
+            s.completed + s.failed + s.cancelled,
+            "pool: conservation violated for {}",
+            s.model
+        );
+    }
+}
+
 /// `SimConfig::max_requests` bounds the simulated run too (finite
 /// workloads are a core-level concept, not a thread-pool special case).
 #[test]

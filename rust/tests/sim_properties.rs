@@ -86,6 +86,7 @@ fn prop_schedulers_only_assign_supported_online_procs() {
                 active_sessions: g.usize(0..4),
                 util: g.f64(0.0, 1.0),
                 headroom_c: g.f64(-5.0, 40.0),
+                health: adms::monitor::Health::Up,
             })
             .collect();
         let n_ready = g.usize(1..6).min(plans[0].num_units());
@@ -712,6 +713,10 @@ fn prop_fork_is_byte_identical() {
         Dispatch { token: u64, unit: usize, proc: usize, exec: f64, xfer: f64, mgmt: f64, load: f64 },
         Timer { at: f64, key: u64 },
         Advance,
+        // Fault-surface ops (ISSUE 8): down/up flips and mid-flight
+        // aborts must snapshot byte-faithfully like everything else.
+        SetDown { proc: usize, down: bool },
+        Abort { token: u64 },
     }
     fn apply(be: &mut dyn ExecutionBackend, op: &Op) {
         match *op {
@@ -733,6 +738,10 @@ fn prop_fork_is_byte_identical() {
             Op::Advance => {
                 let _ = be.next_event();
             }
+            Op::SetDown { proc, down } => be.set_proc_down(proc, down),
+            Op::Abort { token } => {
+                let _ = be.abort(token);
+            }
         }
     }
     check("fork ≡ unforked fresh run (full BackendReport)", iters(10), |g| {
@@ -746,7 +755,7 @@ fn prop_fork_is_byte_identical() {
         let mut ops = Vec::new();
         let mut token = 0u64;
         for _ in 0..g.usize(12..60) {
-            ops.push(match g.usize(0..10) {
+            ops.push(match g.usize(0..13) {
                 0..=3 => {
                     token += 1;
                     Op::Dispatch {
@@ -760,6 +769,8 @@ fn prop_fork_is_byte_identical() {
                     }
                 }
                 4 | 5 => Op::Timer { at: g.f64(0.0, cfg.duration_ms), key: g.u64(0..1_000) },
+                6 => Op::SetDown { proc: g.usize(0..nproc), down: g.bool() },
+                7 => Op::Abort { token: g.u64(0..token.max(1) + 1) },
                 _ => Op::Advance,
             });
         }
@@ -1000,4 +1011,137 @@ fn lookahead_beats_its_base_on_a_contended_arm() {
         "lookahead never strictly beat its base policy on any arm:\n  {}",
         scoreboard.join("\n  ")
     );
+}
+
+/// Golden-equivalence referee for the fault layer (ISSUE 8): with no
+/// fault events, no fault profile, and no dispatch timeout, the fault
+/// machinery must be invisible — the driver never constructs a
+/// `FaultCtx`, the monitor overlay is never applied, and the report
+/// serializes without any fault keys. For randomized churn scenarios
+/// across all four base schedulers, a run with an explicitly-off
+/// profile (and explicit default retry knobs — necessarily inert)
+/// produces a byte-identical `SimReport` JSON to the default config's
+/// run. Mirrors the `--batch-max 1` / `--mem-budget 0` referees above.
+#[test]
+fn prop_faults_off_is_byte_identical_noop() {
+    check("faults off ≡ default dispatch (full-report JSON)", iters(8), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(1..4),
+            duration_ms: g.f64(400.0, 1_500.0),
+            churn: 0.6,
+            rate_change: 0.6,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned"]);
+        let seed = g.u64(0..1_000_000);
+        let fault_seed = g.u64(0..1_000);
+        let run = |off_profile: bool| -> SimReport {
+            let mut server = Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.clone())
+                .events(events.clone())
+                .window_size(4)
+                .duration_ms(cfg.duration_ms)
+                .seed(seed);
+            if off_profile {
+                // An off profile plus explicit (default) retry knobs must
+                // be inert — `faults_configured()` stays false.
+                server = server
+                    .fault_profile(Some(adms::faults::FaultProfile::off()))
+                    .fault_seed(Some(fault_seed))
+                    .retry_limit(3)
+                    .retry_backoff_ms(25.0)
+                    .fault_quarantine_ms(500.0);
+            }
+            server.run_sim().unwrap()
+        };
+        let default = run(false).to_json().to_pretty();
+        let noop = run(true).to_json().to_pretty();
+        assert_eq!(default, noop, "{sched}: off fault profile diverged from default dispatch");
+        // Faults-off reports carry no fault keys at all — old consumers
+        // see byte-identical documents.
+        assert!(!default.contains("\"faults\""), "{sched}: fault block in faults-off report");
+        assert!(!default.contains("\"retries\""), "{sched}: retry counters in faults-off report");
+    });
+}
+
+/// Faulted runs stay deterministic and conservative (ISSUE 8): under a
+/// seeded fault profile plus the dispatch-timeout sweep, across all
+/// five schedulers, exact request conservation holds per session, the
+/// failure-reason split sums to `failed` exactly, and a rerun with the
+/// same seeds is byte-identical (pins the per-processor SplitMix64
+/// fault streams and the retry/backoff timer order at the run level).
+#[test]
+fn prop_faulted_runs_deterministic_and_conservative() {
+    check("faulted dispatch deterministic + conservative", iters(6), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(2..5),
+            duration_ms: g.f64(500.0, 1_500.0),
+            churn: 0.6,
+            rate_change: 0.5,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned", "lookahead"]);
+        let seed = g.u64(0..1_000_000);
+        let fault_seed = g.u64(0..1_000_000);
+        let profile = if g.bool() {
+            adms::faults::FaultProfile::light()
+        } else {
+            adms::faults::FaultProfile::heavy()
+        };
+        let retry_limit = g.usize(0..4) as u32;
+        let blind = g.chance(0.25);
+        let run = || -> SimReport {
+            Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.clone())
+                .events(events.clone())
+                .window_size(4)
+                .duration_ms(cfg.duration_ms)
+                .seed(seed)
+                .fault_profile(Some(profile.clone()))
+                .fault_seed(Some(fault_seed))
+                .dispatch_timeout(4.0)
+                .retry_limit(retry_limit)
+                .retry_backoff_ms(10.0)
+                .fault_quarantine_ms(200.0)
+                .fault_blind(blind)
+                .run_sim()
+                .unwrap()
+        };
+        let a = run();
+        for s in &a.sessions {
+            assert_eq!(
+                s.issued,
+                s.completed + s.failed + s.cancelled,
+                "{sched}: conservation violated for {} under profile {}",
+                s.model,
+                profile.name
+            );
+            // The failure-reason split is a partition of `failed`.
+            assert_eq!(
+                s.failed,
+                s.failed_budget + s.failed_exec + s.faulted + s.retries_exhausted,
+                "{sched}: failure-reason split does not sum for {}",
+                s.model
+            );
+            if retry_limit == 0 || blind {
+                assert_eq!(s.retries, 0, "{sched}: retries granted with retry path off");
+            }
+        }
+        let f = a.faults.expect("fault layer active but no FaultStats");
+        assert!(
+            f.proc_recovers <= f.proc_fails,
+            "{sched}: more recoveries than failures applied"
+        );
+        let b = run();
+        assert_eq!(
+            a.to_json().to_pretty(),
+            b.to_json().to_pretty(),
+            "{sched}: faulted rerun not bit-identical (profile {}, blind {blind})",
+            profile.name
+        );
+    });
 }
