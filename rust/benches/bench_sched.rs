@@ -50,6 +50,7 @@ fn main() {
         procs: &views,
         batch: adms::sched::BatchCtx::OFF,
         weights: adms::sched::WeightsView::OFF,
+        variants: None,
     };
 
     let mut b = Bench::new("sched");

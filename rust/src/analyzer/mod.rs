@@ -23,7 +23,10 @@ pub mod merge;
 pub mod tuner;
 
 pub use merge::{count_merged_candidates, count_total_subgraphs};
-pub use tuner::{estimate_chain_latency_ms, tune_window_size, tuned_window_size, TunedConfig};
+pub use tuner::{
+    estimate_chain_latency_ms, tune_cache_len, tune_plan_set, tune_window_size,
+    tuned_window_size, TunedConfig,
+};
 
 use crate::graph::{Graph, NodeId, OpKind};
 use crate::soc::{ProcId, SocSpec};

@@ -139,9 +139,16 @@ pub fn sweep_window_sizes(g: &Graph, soc: &SocSpec, max_ws: usize) -> Vec<SweepP
 /// same-name graphs with different structure nor same-name custom SoC
 /// definitions can ever share a tuning — only makes that store implicit.
 /// `Arc` keeps cache hits to a pointer clone.
+static TUNE_CACHE: Memo<(String, u64, String, u64, usize), Arc<(usize, Vec<SweepPoint>)>> =
+    Memo::new();
+
+/// Entries currently resident in the tuning memo (see [`tune_cached`]) —
+/// reported by `adms bench` alongside the plan-memo occupancy.
+pub fn tune_cache_len() -> usize {
+    TUNE_CACHE.len()
+}
+
 fn tune_cached(g: &Graph, soc: &SocSpec, max_ws: usize) -> Arc<(usize, Vec<SweepPoint>)> {
-    static CACHE: Memo<(String, u64, String, u64, usize), Arc<(usize, Vec<SweepPoint>)>> =
-        Memo::new();
     let key = (
         g.name.clone(),
         g.fingerprint(),
@@ -149,7 +156,7 @@ fn tune_cached(g: &Graph, soc: &SocSpec, max_ws: usize) -> Arc<(usize, Vec<Sweep
         soc.fingerprint(),
         max_ws,
     );
-    CACHE.get_or_insert_with(key, || {
+    TUNE_CACHE.get_or_insert_with(key, || {
         let sweep = sweep_window_sizes(g, soc, max_ws);
         let best = sweep
             .iter()
@@ -176,6 +183,34 @@ pub fn tune_window_size(g: &Graph, soc: &SocSpec, max_ws: usize) -> (usize, Vec<
 /// cache — the serving paths only need this.
 pub fn tuned_window_size(g: &Graph, soc: &SocSpec, max_ws: usize) -> usize {
     tune_cached(g, soc, max_ws).0
+}
+
+/// Multi-point tuning for adaptive re-partitioning: the granularity
+/// ladder a `PlanSet` is built from. Three anchor points from the same
+/// memoized sweep:
+///
+/// - **fine** — ws = 1, the maximally spreadable partition (most units,
+///   most scheduling freedom, most management overhead);
+/// - **medium** — the single-model optimum [`tuned_window_size`] picks;
+/// - **coarse** — the smallest window reaching the sweep's minimum unit
+///   count (minimum management overhead; larger windows past that point
+///   only re-merge the same units).
+///
+/// Returned ascending and deduped (for a model whose tuned optimum is
+/// already ws = 1 the ladder may collapse to fewer than three rungs).
+pub fn tune_plan_set(g: &Graph, soc: &SocSpec, max_ws: usize) -> Vec<usize> {
+    let hit = tune_cached(g, soc, max_ws);
+    let (best, sweep) = (hit.0, &hit.1);
+    let min_units = sweep.iter().map(|p| p.units).min().unwrap_or(1);
+    let coarse = sweep
+        .iter()
+        .find(|p| p.units == min_units)
+        .map(|p| p.window_size)
+        .unwrap_or(best);
+    let mut ws = vec![1, best, coarse];
+    ws.sort_unstable();
+    ws.dedup();
+    ws
 }
 
 impl TunedConfig {
@@ -215,16 +250,32 @@ impl TunedConfig {
         Json::Obj(obj)
     }
 
-    pub fn from_json(j: &crate::util::json::Json) -> Self {
+    /// Parse the persisted store. Malformed entries are a hard error, not
+    /// a skip: a tuning file that silently loses entries re-tunes (or
+    /// mis-tunes) at runtime with no visible symptom, which is exactly
+    /// the failure mode a persisted config exists to prevent.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        use anyhow::{anyhow, bail};
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("tuned config: expected a JSON object"))?;
         let mut cfg = TunedConfig::new();
-        if let Some(obj) = j.as_obj() {
-            for (k, v) in obj {
-                if let (Some((m, s)), Some(ws)) = (k.split_once('/'), v.as_u64()) {
-                    cfg.insert(m, s, ws as usize);
-                }
+        for (k, v) in obj {
+            let (m, s) = k
+                .split_once('/')
+                .ok_or_else(|| anyhow!("tuned config: key {k:?} is not \"model/soc\""))?;
+            if m.is_empty() || s.is_empty() {
+                bail!("tuned config: key {k:?} has an empty model or soc name");
             }
+            let ws = v
+                .as_u64()
+                .ok_or_else(|| anyhow!("tuned config: {k:?} has a non-integer window size"))?;
+            if ws == 0 {
+                bail!("tuned config: {k:?} has window size 0 (must be >= 1)");
+            }
+            cfg.insert(m, s, ws as usize);
         }
-        cfg
+        Ok(cfg)
     }
 }
 
@@ -282,9 +333,67 @@ mod tests {
         assert_eq!(ws1, ws2);
         assert_eq!(cfg.len(), 1);
         let j = cfg.to_json();
-        let cfg2 = TunedConfig::from_json(&j);
+        let cfg2 = TunedConfig::from_json(&j).unwrap();
         assert_eq!(cfg2.len(), 1);
         let mut cfg2 = cfg2;
         assert_eq!(cfg2.get_or_tune(&g, &soc), ws1);
+    }
+
+    /// Round trip `to_json` → `from_json` over randomized stores: every
+    /// entry survives with its window size intact.
+    #[test]
+    fn prop_tuned_config_json_roundtrip() {
+        use crate::testing::prop::{check, iters};
+        check("TunedConfig JSON roundtrip", iters(200), |g| {
+            let mut cfg = TunedConfig::new();
+            let n = g.usize(0..12);
+            for i in 0..n {
+                let model = format!("model_{}", g.usize(0..8));
+                let soc = format!("soc_{}", g.usize(0..4));
+                let ws = g.usize(1..40);
+                cfg.insert(&model, &soc, ws);
+                let _ = i;
+            }
+            let text = cfg.to_json().to_string();
+            let back =
+                TunedConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.len(), cfg.len());
+            assert_eq!(back.to_json().to_string(), text, "roundtrip changed the store");
+        });
+    }
+
+    /// Malformed entries must be rejected loudly, not skipped — a store
+    /// that silently loses entries mis-tunes at runtime with no symptom.
+    #[test]
+    fn from_json_rejects_malformed_entries() {
+        use crate::util::json::parse;
+        for bad in [
+            r#"[1,2,3]"#,                         // not an object
+            r#"{"no_slash_key": 4}"#,             // key missing model/soc split
+            r#"{"/soc": 4}"#,                     // empty model name
+            r#"{"model/": 4}"#,                   // empty soc name
+            r#"{"m/s": "four"}"#,                 // non-numeric window
+            r#"{"m/s": 0}"#,                      // zero window
+            r#"{"ok/soc": 3, "broken": 4}"#,      // one bad entry poisons the store
+        ] {
+            let j = parse(bad).unwrap();
+            assert!(
+                TunedConfig::from_json(&j).is_err(),
+                "malformed store accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_set_ladder_is_sorted_and_anchored() {
+        let soc = dimensity9000();
+        for g in [zoo::deeplab_v3(), zoo::mobilenet_v1(), zoo::inception_v4()] {
+            let ladder = tune_plan_set(&g, &soc, 12);
+            assert!(!ladder.is_empty() && ladder.len() <= 3, "{}: {ladder:?}", g.name);
+            assert!(ladder.windows(2).all(|w| w[0] < w[1]), "{}: {ladder:?}", g.name);
+            assert_eq!(ladder[0], 1, "{}: fine rung must be ws=1", g.name);
+            let tuned = tuned_window_size(&g, &soc, 12);
+            assert!(ladder.contains(&tuned), "{}: tuned ws {tuned} not in {ladder:?}", g.name);
+        }
     }
 }

@@ -28,8 +28,11 @@ use super::{
     ExecutionBackend, ReadyQueue, RunToken, SessionEvent, SimConfig,
 };
 use crate::monitor::{HardwareMonitor, Health};
-use crate::sched::{Assignment, ModelPlan, PendingTask, ReqId, SchedCtx, Scheduler, SessId};
-use crate::sim::report::{SessionStats, SimReport};
+use crate::sched::{
+    Assignment, ModelPlan, PendingTask, PlanSet, ReqId, SchedCtx, Scheduler, SessId,
+    VariantsView,
+};
+use crate::sim::report::{ReplanStats, SessionStats, SimReport};
 use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
 use crate::TimeMs;
@@ -389,6 +392,36 @@ impl FaultCtx {
     }
 }
 
+/// EMA smoothing factor for the re-partition controller's pressure
+/// signal: heavy enough to ride out single-tick spikes, light enough
+/// that a sustained phase change crosses the threshold within a few
+/// housekeeping ticks.
+const REPLAN_EMA_ALPHA: f64 = 0.3;
+
+/// Adaptive re-partition controller (DESIGN.md §3h). Constructed only
+/// when `--adaptive-plan` is engaged AND the server handed over a
+/// [`PlanSet`] per session — off runs never allocate it, which is the
+/// structural half of the byte-identity no-op argument
+/// (`prop_adaptive_off_is_byte_identical_noop` is the observational
+/// half). It watches the monitor's pressure signal through an EMA and
+/// steps each session's active granularity variant one rung at a time,
+/// but only at a *safe boundary*: no request of the session in any
+/// lifecycle stage, so every group priced under the old plan has fully
+/// retired before unit ids, dep rows, or residency keys change meaning.
+struct ReplanCtl {
+    /// One granularity ladder per session (fine → coarse).
+    sets: Vec<PlanSet>,
+    /// Active rung per session (index into `sets[s]`).
+    active: Vec<usize>,
+    /// Smoothed pressure signal (see the tick handler for the metric).
+    ema: f64,
+    /// First sample primes the EMA instead of decaying from zero.
+    primed: bool,
+    /// Last switch instant per session (cooldown gate).
+    last_switch: Vec<TimeMs>,
+    stats: ReplanStats,
+}
+
 /// What happened to one group member in [`abort_member`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum MemberAbort {
@@ -481,6 +514,7 @@ pub struct Driver {
     scheduler: Box<dyn Scheduler>,
     backend: Box<dyn ExecutionBackend>,
     events: Vec<SessionEvent>,
+    plan_sets: Option<(Vec<PlanSet>, Vec<usize>)>,
 }
 
 impl Driver {
@@ -492,7 +526,7 @@ impl Driver {
         backend: Box<dyn ExecutionBackend>,
     ) -> Self {
         assert_eq!(apps.len(), plans.len(), "one plan per session");
-        Driver { cfg, apps, plans, scheduler, backend, events: Vec::new() }
+        Driver { cfg, apps, plans, scheduler, backend, events: Vec::new(), plan_sets: None }
     }
 
     /// Attach session-lifecycle events (a compiled scenario). Sessions
@@ -500,6 +534,16 @@ impl Driver {
     /// other sessions are active from t = 0.
     pub fn events(mut self, events: Vec<SessionEvent>) -> Self {
         self.events = events;
+        self
+    }
+
+    /// Attach per-session granularity ladders ([`PlanSet`]s) plus the
+    /// active rung each session starts on (`plans[s]` must equal
+    /// `sets[s].variants[active[s]]`). The re-partition controller only
+    /// engages when this is `Some` AND the config enables
+    /// `--adaptive-plan` — either alone is inert.
+    pub fn plan_sets(mut self, sets: Option<(Vec<PlanSet>, Vec<usize>)>) -> Self {
+        self.plan_sets = sets;
         self
     }
 
@@ -567,19 +611,42 @@ impl Driver {
         let batch_max = self.cfg.batch_max.max(1);
         let batching = batch_max > 1;
         let batch_window = self.cfg.batch_window_ms.max(0.0);
-        // Per-session coalescing kind (the plan graph's structural
-        // fingerprint): sessions with equal kinds run the same model and
-        // may batch with each other.
-        let sess_kinds: Vec<u64> =
-            self.plans.iter().map(|p| p.graph.fingerprint()).collect();
+        // Per-session coalescing kind: graph fingerprint mixed with the
+        // plan's window size. Sessions with equal kinds run the same
+        // model *at the same granularity* — unit ids only line up (and
+        // fused groups only share a shard) when both agree. On static
+        // runs this partitions sessions exactly like the bare graph
+        // fingerprint did (same model ⇒ same window size), so batching
+        // behavior is unchanged; under adaptive re-partitioning it keeps
+        // a switched session out of its unswitched siblings' groups.
+        let mut sess_kinds: Vec<u64> =
+            self.plans.iter().map(|p| p.coalesce_kind()).collect();
         // Whether a session has at least one same-kind sibling — only
         // then can a coalescing window ever pay off (a unique model waits
-        // for peers that cannot exist).
-        let kind_multi: Vec<bool> = sess_kinds
+        // for peers that cannot exist). Recomputed on a granularity
+        // switch (kinds change with the active variant).
+        let mut kind_multi: Vec<bool> = sess_kinds
             .iter()
             .enumerate()
             .map(|(i, k)| sess_kinds.iter().enumerate().any(|(j, k2)| j != i && k2 == k))
             .collect();
+
+        // Adaptive re-partition controller (DESIGN.md §3h): engaged only
+        // when the config asks for it AND the server built granularity
+        // ladders. `--adaptive-plan off` never constructs it, so the
+        // whole layer is a provable no-op by construction.
+        let mut replan: Option<ReplanCtl> = if self.cfg.adaptive_configured() {
+            self.plan_sets.take().map(|(sets, active)| ReplanCtl {
+                last_switch: vec![f64::NEG_INFINITY; napps],
+                sets,
+                active,
+                ema: 0.0,
+                primed: false,
+                stats: ReplanStats::default(),
+            })
+        } else {
+            None
+        };
 
         // Request state.
         let mut reqs: HashMap<ReqId, ReqState> = Default::default();
@@ -1216,6 +1283,125 @@ impl Driver {
                             clamp_dead_request(&mut reqs, id, running, &mut pool);
                         }
                     }
+                    // Re-partition controller (DESIGN.md §3h): ride the
+                    // housekeeping tick, never a timer of its own — the
+                    // tick cadence IS the control cadence, and no new
+                    // timer namespace means record/replay sees the same
+                    // event stream modulo the switches themselves.
+                    if let Some(rc) = replan.as_mut() {
+                        // Pressure signal from the (possibly cached)
+                        // monitor snapshot, with the driver's health
+                        // beliefs overlaid exactly as the dispatch path
+                        // does: max of mean utilization over online
+                        // processors and the impaired fraction (offline,
+                        // degraded, or thermally capped). Mean-util alone
+                        // saturates too slowly when a processor dies;
+                        // impairment alone ignores plain overload.
+                        let backend = &mut self.backend;
+                        monitor.sample_with(now, |buf| backend.fill_proc_views(buf));
+                        if let Some(fs) = fault.as_ref() {
+                            if !fs.blind {
+                                monitor.overlay_health(&fs.health);
+                            }
+                        }
+                        let pressure = {
+                            let views = monitor.cached_views();
+                            let mut online = 0usize;
+                            let mut util_sum = 0.0f64;
+                            let mut impaired = 0usize;
+                            for v in views.iter() {
+                                if v.offline
+                                    || v.health != Health::Up
+                                    || v.freq_scale < 0.999
+                                {
+                                    impaired += 1;
+                                }
+                                if !v.offline {
+                                    online += 1;
+                                    util_sum += v.util;
+                                }
+                            }
+                            let avg_util = if online > 0 {
+                                util_sum / online as f64
+                            } else {
+                                1.0
+                            };
+                            let impaired_frac = if views.is_empty() {
+                                0.0
+                            } else {
+                                impaired as f64 / views.len() as f64
+                            };
+                            avg_util.max(impaired_frac).clamp(0.0, 1.0)
+                        };
+                        if rc.primed {
+                            rc.ema += REPLAN_EMA_ALPHA * (pressure - rc.ema);
+                        } else {
+                            rc.ema = pressure;
+                            rc.primed = true;
+                        }
+                        let thr = self.cfg.replan_threshold;
+                        for s in 0..napps {
+                            if rc.sets[s].len() < 2
+                                || !sess[s].started
+                                || sess[s].stopped
+                                || now - rc.last_switch[s] < self.cfg.replan_cooldown_ms
+                            {
+                                continue;
+                            }
+                            let cur = rc.active[s];
+                            // Sustained pressure → finer (more units, more
+                            // co-execution headroom); a calm system →
+                            // coarser (fewer boundaries, less dispatch and
+                            // transfer overhead). Hysteresis: the coarsen
+                            // threshold sits at half the refine one, so
+                            // the controller cannot oscillate around a
+                            // single operating point.
+                            let next = if rc.ema > thr && cur > 0 {
+                                cur - 1
+                            } else if rc.ema < thr * 0.5 && cur + 1 < rc.sets[s].len() {
+                                cur + 1
+                            } else {
+                                continue;
+                            };
+                            // Safe boundary: no request of this session in
+                            // ANY lifecycle stage — not just "no open
+                            // requests". Dead requests still draining on a
+                            // processor unpin their shard at completion
+                            // time under whatever manifest is then
+                            // current, so the swap must wait until the
+                            // books are empty.
+                            if reqs.values().any(|st| st.session == s) {
+                                continue;
+                            }
+                            let new_plan = rc.sets[s].variants[next].clone();
+                            if batching {
+                                sess_kinds[s] = new_plan.coalesce_kind();
+                                ready.set_kind(s, sess_kinds[s]);
+                                for i in 0..napps {
+                                    kind_multi[i] = sess_kinds.iter().enumerate().any(
+                                        |(j, k2)| j != i && *k2 == sess_kinds[i],
+                                    );
+                                }
+                            }
+                            if let Some(c) = wcache.as_mut() {
+                                c.swap_manifest(
+                                    s,
+                                    crate::weights::ShardManifest::from_plan(&new_plan),
+                                );
+                            }
+                            let new_ws = new_plan.partition.window_size;
+                            self.plans[s] = new_plan;
+                            rc.active[s] = next;
+                            rc.last_switch[s] = now;
+                            rc.stats.replans += 1;
+                            if next < cur {
+                                rc.stats.finer += 1;
+                            } else {
+                                rc.stats.coarser += 1;
+                            }
+                            rc.stats.events.push((now, s, new_ws));
+                        }
+                    }
                 }
             }
 
@@ -1307,6 +1493,9 @@ impl Driver {
                     procs: views,
                     batch: bctx,
                     weights: crate::sched::WeightsView { cache: wcache.as_ref() },
+                    variants: replan
+                        .as_ref()
+                        .map(|rc| VariantsView { sets: &rc.sets, active: &rc.active }),
                 };
                 sched_out.clear();
                 if serialized {
@@ -1736,6 +1925,7 @@ impl Driver {
             // All-zero on unbudgeted runs (no cache constructed), so the
             // report serializes identically either way.
             cache: wcache.as_ref().map(|c| c.stats()).unwrap_or_default(),
+            replans: replan.as_ref().map(|rc| rc.stats.clone()),
             assignments: assignments_trace,
             arrivals: arrivals_trace,
             events: n_events,

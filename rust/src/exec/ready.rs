@@ -109,6 +109,22 @@ impl ReadyQueue {
         q
     }
 
+    /// Rebind one session's model-kind key (adaptive re-partitioning:
+    /// the session's active plan variant changed, and with it its
+    /// batching identity — unit indices shift across granularities).
+    /// Only valid at a safe switch boundary: the session must have no
+    /// queued tasks, so no `by_kind` entries need rekeying
+    /// (debug-asserted). No-op on queues without a coalescing index.
+    pub fn set_kind(&mut self, sess: SessId, kind: u64) {
+        if let Some(kinds) = self.sess_kinds.as_mut() {
+            debug_assert!(
+                self.by_sess[sess].is_empty(),
+                "kind switch for session {sess} with queued tasks"
+            );
+            kinds[sess] = kind;
+        }
+    }
+
     /// The coalescing key of the task at `pos` (meaningless — 0 — when
     /// the queue maintains no kind index).
     pub fn kind_key_at(&self, pos: usize) -> u64 {
@@ -456,6 +472,32 @@ mod tests {
         plain.push(task(1, 1, 0));
         assert_eq!(plain.group_len(0), 1);
         assert!(plain.peers(0).is_empty());
+    }
+
+    /// Rebinding a session's kind at an empty-queue boundary changes its
+    /// future batchability without disturbing other sessions' sets.
+    #[test]
+    fn set_kind_rebinds_batching_identity() {
+        let mut q = ReadyQueue::with_kinds(vec![7, 7]);
+        q.push(task(0, 0, 0));
+        q.push(task(1, 1, 0));
+        assert_eq!(q.group_len(0), 2);
+        q.swap_remove(1); // session 1 drains
+        q.set_kind(1, 42); // its plan variant switched
+        q.push(task(2, 1, 0));
+        // Same unit, same model — but different granularity: no fusion.
+        assert_eq!(q.group_len(0), 1);
+        assert_eq!(q.group_len(1), 1);
+        // Switching back restores batchability.
+        q.swap_remove(1);
+        q.set_kind(1, 7);
+        q.push(task(3, 1, 0));
+        assert_eq!(q.group_len(0), 2);
+        // No-op on un-indexed queues.
+        let mut plain = ReadyQueue::new(2);
+        plain.set_kind(0, 5);
+        plain.push(task(0, 0, 0));
+        assert_eq!(plain.group_len(0), 1);
     }
 
     #[test]

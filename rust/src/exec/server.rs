@@ -28,7 +28,7 @@ use super::{
 use crate::analyzer::tuner;
 use crate::exec::threadpool::SessionWork;
 use crate::sched::{
-    Adms, Band, BasePolicy, Lookahead, ModelPlan, Pinned, RolloutParams, Scheduler,
+    Adms, Band, BasePolicy, Lookahead, ModelPlan, Pinned, PlanSet, RolloutParams, Scheduler,
     VanillaTflite,
 };
 use crate::sim::SimReport;
@@ -382,6 +382,27 @@ impl Server {
         self
     }
 
+    /// Runtime plan-granularity adaptation (`--adaptive-plan`). `Off`
+    /// (the default) never builds a `PlanSet` or the re-partition
+    /// controller — the run is bit-exactly the single-plan one.
+    pub fn adaptive_plan(mut self, mode: super::AdaptivePlan) -> Self {
+        self.cfg.adaptive_plan = mode;
+        self
+    }
+
+    /// Per-session cooldown between plan switches (`--replan-cooldown`).
+    pub fn replan_cooldown_ms(mut self, ms: f64) -> Self {
+        self.cfg.replan_cooldown_ms = ms.max(0.0);
+        self
+    }
+
+    /// Pressure threshold for stepping finer (`--replan-threshold`);
+    /// half of it is the coarser threshold.
+    pub fn replan_threshold(mut self, t: f64) -> Self {
+        self.cfg.replan_threshold = t.clamp(0.0, 1.0);
+        self
+    }
+
     /// Replace the whole execution config (advanced).
     pub fn config(mut self, cfg: SimConfig) -> Self {
         self.cfg = cfg;
@@ -442,6 +463,11 @@ impl Server {
         // partition with the same tuned windows bare adms gets.
         let tuned = scheduler.tuning_name() == "adms";
         let mut plans = Vec::new();
+        let mut plan_sets = if self.cfg.adaptive_configured() {
+            Some((Vec::new(), Vec::new()))
+        } else {
+            None
+        };
         for app in &self.apps {
             let g = zoo::by_name(&app.model)
                 .ok_or_else(|| anyhow!("unknown model '{}'", app.model))?;
@@ -450,12 +476,26 @@ impl Server {
                 None if tuned => tuner::tuned_window_size(&g, &self.soc, 12),
                 None => 1,
             };
-            plans.push(ModelPlan::build_cached(Arc::new(g), &self.soc, ws));
+            let g = Arc::new(g);
+            plans.push(ModelPlan::build_cached(Arc::clone(&g), &self.soc, ws));
+            if let Some((sets, active)) = plan_sets.as_mut() {
+                // The ladder always contains the statically-chosen window,
+                // so the controller starts from exactly the plan a static
+                // run would use and only ever *moves away* on evidence.
+                let mut ladder = tuner::tune_plan_set(&g, &self.soc, 12);
+                if !ladder.contains(&ws) {
+                    ladder.push(ws);
+                }
+                let set = PlanSet::build_cached(g, &self.soc, &ladder);
+                active.push(set.position(ws).expect("chosen ws in its own ladder"));
+                sets.push(set);
+            }
         }
         Ok(Built {
             cfg: self.cfg,
             apps: self.apps,
             plans,
+            plan_sets,
             scheduler,
             soc: self.soc,
             work: self.work,
@@ -470,6 +510,7 @@ impl Server {
         let backend = Box::new(SimBackend::new(b.soc, b.cfg.clone()));
         Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend)
             .events(b.events)
+            .plan_sets(b.plan_sets)
             .run())
     }
 
@@ -484,6 +525,7 @@ impl Server {
         let backend = Box::new(ThreadPoolBackend::new(b.soc, b.cfg.clone(), work, b.pace));
         Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend)
             .events(b.events)
+            .plan_sets(b.plan_sets)
             .run())
     }
 
@@ -492,6 +534,7 @@ impl Server {
         let b = self.build()?;
         Ok(Driver::new(b.cfg, b.apps, b.plans, b.scheduler, backend)
             .events(b.events)
+            .plan_sets(b.plan_sets)
             .run())
     }
 }
@@ -501,6 +544,9 @@ struct Built {
     cfg: SimConfig,
     apps: Vec<App>,
     plans: Vec<ModelPlan>,
+    /// Granularity ladders + initial active rungs, present only on
+    /// adaptive runs (`cfg.adaptive_configured()`).
+    plan_sets: Option<(Vec<PlanSet>, Vec<usize>)>,
     scheduler: Box<dyn Scheduler>,
     soc: SocSpec,
     work: Vec<Option<SessionWork>>,

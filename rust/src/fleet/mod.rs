@@ -67,6 +67,11 @@ pub struct ArmSpec {
     /// grammar (`None` = the fleet-wide config's), so faulted and
     /// fault-free arms can ride one fleet.
     pub fault_profile: Option<String>,
+    /// Per-arm adaptive re-partitioning mode (`exec::AdaptivePlan::parse`
+    /// grammar; `None` = the fleet-wide config's), so static and adaptive
+    /// arms can ride one fleet. Cooldown/threshold knobs ride the shared
+    /// fleet config.
+    pub adaptive: Option<String>,
 }
 
 impl ArmSpec {
@@ -79,6 +84,7 @@ impl ArmSpec {
             batch_max: None,
             batch_window_ms: None,
             fault_profile: None,
+            adaptive: None,
         }
     }
 
@@ -96,6 +102,13 @@ impl ArmSpec {
         self
     }
 
+    /// Builder: run this arm with runtime granularity switching
+    /// (`"reactive"`; `"off"` restores the static default).
+    pub fn adaptive(mut self, mode: &str) -> Self {
+        self.adaptive = Some(mode.to_string());
+        self
+    }
+
     pub fn label(&self) -> String {
         let mut l = format!("{}/{}/{}", self.soc, self.scheduler, self.workload);
         if let Some(b) = self.batch_max {
@@ -105,6 +118,11 @@ impl ArmSpec {
         }
         if let Some(p) = &self.fault_profile {
             l.push_str(&format!(" (faults {p})"));
+        }
+        if let Some(a) = &self.adaptive {
+            if a != "off" {
+                l.push_str(&format!(" (adaptive {a})"));
+            }
         }
         l
     }
@@ -144,6 +162,11 @@ impl ArmSpec {
             cfg.fault_profile = Some(crate::faults::FaultProfile::parse(p).ok_or_else(|| {
                 anyhow!("arm '{}': bad fault profile '{p}'", self.label())
             })?);
+        }
+        if let Some(a) = &self.adaptive {
+            cfg.adaptive_plan = crate::exec::AdaptivePlan::parse(a).ok_or_else(|| {
+                anyhow!("arm '{}': bad adaptive mode '{a}' (off | reactive)", self.label())
+            })?;
         }
         Ok(RunSpec {
             soc,
@@ -216,6 +239,12 @@ pub struct DeviceDigest {
     pub proc_fails: u64,
     pub proc_recovers: u64,
     pub timeouts: u64,
+    /// Adaptive re-partitioning counters (all zero when `--adaptive-plan
+    /// off` — the driver never constructs the controller, so the report
+    /// carries no `replans` block).
+    pub replans: u64,
+    pub replans_finer: u64,
+    pub replans_coarser: u64,
 }
 
 impl DeviceDigest {
@@ -254,6 +283,9 @@ impl DeviceDigest {
             proc_fails: r.faults.map(|f| f.proc_fails).unwrap_or(0),
             proc_recovers: r.faults.map(|f| f.proc_recovers).unwrap_or(0),
             timeouts: r.faults.map(|f| f.timeouts).unwrap_or(0),
+            replans: r.replans.as_ref().map(|p| p.replans).unwrap_or(0),
+            replans_finer: r.replans.as_ref().map(|p| p.finer).unwrap_or(0),
+            replans_coarser: r.replans.as_ref().map(|p| p.coarser).unwrap_or(0),
         }
     }
 }
@@ -289,6 +321,9 @@ pub struct FleetAgg {
     pub proc_fails: u64,
     pub proc_recovers: u64,
     pub timeouts: u64,
+    pub replans: u64,
+    pub replans_finer: u64,
+    pub replans_coarser: u64,
 }
 
 impl FleetAgg {
@@ -320,6 +355,9 @@ impl FleetAgg {
         self.proc_fails += d.proc_fails;
         self.proc_recovers += d.proc_recovers;
         self.timeouts += d.timeouts;
+        self.replans += d.replans;
+        self.replans_finer += d.replans_finer;
+        self.replans_coarser += d.replans_coarser;
     }
 
     /// Exact SLO attainment over every SLO-scored request in the set.
@@ -397,6 +435,9 @@ impl FleetAgg {
             ("proc_fails", Json::Num(self.proc_fails as f64)),
             ("proc_recovers", Json::Num(self.proc_recovers as f64)),
             ("timeouts", Json::Num(self.timeouts as f64)),
+            ("replans", Json::Num(self.replans as f64)),
+            ("replans_finer", Json::Num(self.replans_finer as f64)),
+            ("replans_coarser", Json::Num(self.replans_coarser as f64)),
         ])
     }
 }
@@ -528,6 +569,13 @@ impl FleetReport {
                 t.retries_exhausted,
             );
         }
+        if t.replans > 0 {
+            let _ = writeln!(
+                out,
+                "replans: {} granularity switch(es) ({} finer, {} coarser)",
+                t.replans, t.replans_finer, t.replans_coarser,
+            );
+        }
         if any_subsampled {
             let _ = writeln!(
                 out,
@@ -641,5 +689,12 @@ mod tests {
         assert!(faulty.label().contains("faults light"));
         let bad_profile = ArmSpec::new("dimensity9000", "adms", "frs").faulty("wat");
         assert!(bad_profile.to_run_spec(&cfg).is_err());
+        // Per-arm adaptive modes parse into the run spec's config.
+        let adaptive = ArmSpec::new("dimensity9000", "adms", "frs").adaptive("reactive");
+        let rs = adaptive.to_run_spec(&cfg).unwrap();
+        assert!(rs.cfg.adaptive_configured());
+        assert!(adaptive.label().contains("adaptive reactive"));
+        let bad_mode = ArmSpec::new("dimensity9000", "adms", "frs").adaptive("wat");
+        assert!(bad_mode.to_run_spec(&cfg).is_err());
     }
 }

@@ -116,11 +116,15 @@ fn cmd_models(argv: &[String]) -> Result<()> {
         OptSpec { name: "model", takes_value: true, help: "print the per-unit shard table for one model", default: None },
         OptSpec { name: "soc", takes_value: true, help: "SoC whose partition defines the units", default: Some("dimensity9000") },
         OptSpec { name: "ws", takes_value: true, help: "partition window size", default: Some("1") },
+        OptSpec { name: "plan-set", takes_value: false, help: "with --model: print the adaptive granularity ladder (one row per plan variant)", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
     let args = parse(argv, &specs)?;
     if args.flag("help") {
-        println!("{}", render_help("adms models [--model NAME] [--soc SOC] [--ws N]", &specs));
+        println!(
+            "{}",
+            render_help("adms models [--model NAME [--plan-set]] [--soc SOC] [--ws N]", &specs)
+        );
         println!("models: {}", zoo::MODEL_NAMES.join(", "));
         return Ok(());
     }
@@ -132,6 +136,35 @@ fn cmd_models(argv: &[String]) -> Result<()> {
     if let Some(name) = args.get("model") {
         let g = zoo::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (`adms models` lists them)"))?;
+        if args.flag("plan-set") {
+            // The granularity ladder the adaptive controller switches
+            // over: one row per variant, with the totals a switch trades
+            // off (unit count vs. estimated single-request chain latency).
+            let ladder = analyzer::tune_plan_set(&g, &soc, 12);
+            println!(
+                "{} — plan set on {soc_name}: {} variant(s), window sizes {:?}",
+                zoo::display_name(name),
+                ladder.len(),
+                ladder
+            );
+            println!(
+                "{:>6} {:>5} {:>11} {:>12} {:>18}",
+                "window", "units", "weights MiB", "est chain ms", "manifest fp"
+            );
+            for &w in &ladder {
+                let p = analyzer::partition(&g, &soc, w);
+                let m = adms::weights::ShardManifest::build(&g, &p);
+                println!(
+                    "{:>6} {:>5} {:>11.2} {:>12} {:>18}",
+                    w,
+                    p.units.len(),
+                    m.total_weight_bytes() as f64 / MIB,
+                    fnum(analyzer::estimate_chain_latency_ms(&g, &soc, &p), 2),
+                    format!("{:016x}", m.fingerprint)
+                );
+            }
+            return Ok(());
+        }
         let m = adms::weights::ShardManifest::build(&g, &analyzer::partition(&g, &soc, ws));
         println!(
             "{} — {} unit(s) at window {ws} on {soc_name}, manifest fingerprint {:016x}",
@@ -226,6 +259,11 @@ fn parse_fault_profile(s: &str) -> Result<adms::faults::FaultProfile> {
 fn parse_base(s: &str) -> Result<adms::sched::BasePolicy> {
     adms::sched::BasePolicy::parse(s)
         .ok_or_else(|| anyhow::anyhow!("--base: expected vanilla|band|adms|pinned, got '{s}'"))
+}
+
+fn parse_adaptive(s: &str) -> Result<adms::exec::AdaptivePlan> {
+    adms::exec::AdaptivePlan::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("--adaptive-plan: expected off|reactive, got '{s}'"))
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {
@@ -404,6 +442,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "fault-profile", takes_value: true, help: "seeded fault injection: off|light|heavy or crash=R,hang=R,transient=R,mttr=MS (rates in events/s)", default: None },
         OptSpec { name: "fault-seed", takes_value: true, help: "dedicated fault-plan seed (default: --seed), so fault timing varies while arrivals stay fixed", default: None },
         OptSpec { name: "fault-blind", takes_value: false, help: "ablation: faults still happen but the driver neither marks health nor retries", default: None },
+        OptSpec { name: "ws", takes_value: true, help: "freeze the partition window size for every session (default: per-policy tuned)", default: None },
+        OptSpec { name: "adaptive-plan", takes_value: true, help: "runtime granularity switching: off | reactive (per-model plan-set, re-partitioned at safe boundaries under pressure)", default: Some("off") },
+        OptSpec { name: "replan-cooldown", takes_value: true, help: "adaptive: min ms between granularity switches of one session", default: Some("1000") },
+        OptSpec { name: "replan-threshold", takes_value: true, help: "adaptive: smoothed pressure above which the controller refines (coarsens below half of it)", default: Some("0.5") },
         OptSpec { name: "probe", takes_value: false, help: "legacy: serve the AOT numerics probe (PJRT)", default: None },
         OptSpec { name: "workers", takes_value: true, help: "probe mode: worker threads", default: Some("2") },
         OptSpec { name: "no-verify", takes_value: false, help: "probe mode: skip logits verification", default: None },
@@ -443,6 +485,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         if let Some(f) = &trace.faults {
             f.apply_to(&mut replay_cfg);
         }
+        // Adaptive knobs are run-defining the same way: the controller
+        // re-derives every switch deterministically from them.
+        if let Some(a) = &trace.adaptive {
+            a.apply_to(&mut replay_cfg);
+        }
         let server = Server::new(soc)
             .scheduler_name(&trace.scheduler)
             .apps(apps.clone())
@@ -458,6 +505,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             .fault_profile(replay_cfg.fault_profile.clone())
             .fault_seed(replay_cfg.fault_seed)
             .fault_blind(replay_cfg.fault_blind)
+            .adaptive_plan(replay_cfg.adaptive_plan)
+            .replan_cooldown_ms(replay_cfg.replan_cooldown_ms)
+            .replan_threshold(replay_cfg.replan_threshold)
             .pace(pace);
         let report = match trace.backend.as_str() {
             "sim" => server.run_sim()?,
@@ -540,9 +590,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .fault_profile(fault_profile.clone())
         .fault_seed(fault_seed)
         .fault_blind(args.flag("fault-blind"))
+        .adaptive_plan(parse_adaptive(&args.get_or("adaptive-plan", "off"))?)
+        .replan_cooldown_ms(args.get_f64("replan-cooldown", 1000.0)?)
+        .replan_threshold(args.get_f64("replan-threshold", 0.5)?)
         .pace(pace);
-    // Replica of the fault-layer knobs for trace recording (the server
-    // consumes its config when it runs).
+    if args.get("ws").is_some() {
+        server = server.window_size(args.get_usize("ws", 1)?.max(1));
+    }
+    // Replica of the fault-layer and adaptive knobs for trace recording
+    // (the server consumes its config when it runs).
     let mut fault_cfg = SimConfig::default();
     fault_cfg.dispatch_timeout_mult = args.get_f64("dispatch-timeout", 0.0)?.max(0.0);
     fault_cfg.retry_limit = args.get_u64("retry-limit", 3)? as u32;
@@ -551,6 +607,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     fault_cfg.fault_profile = fault_profile;
     fault_cfg.fault_seed = fault_seed;
     fault_cfg.fault_blind = args.flag("fault-blind");
+    fault_cfg.adaptive_plan = parse_adaptive(&args.get_or("adaptive-plan", "off"))?;
+    fault_cfg.replan_cooldown_ms = args.get_f64("replan-cooldown", 1000.0)?.max(0.0);
+    fault_cfg.replan_threshold = args.get_f64("replan-threshold", 0.5)?.clamp(0.0, 1.0);
     // Scenarios control their own lifecycle: an implicit quota would end
     // the run before the declared churn plays out, so only an explicit
     // --requests bounds them. Plain workloads keep the finite default.
@@ -631,6 +690,15 @@ fn print_serve_report(report: &adms::sim::SimReport) {
             f.proc_fails, f.proc_recovers, f.timeouts, retries, faulted, exhausted
         );
     }
+    if let Some(r) = &report.replans {
+        println!(
+            "replans: {} granularity switch(es) ({} finer, {} coarser)",
+            r.replans, r.finer, r.coarser
+        );
+        for &(at, s, ws) in &r.events {
+            println!("  t={:.0} ms  session {s} -> window {ws}", at);
+        }
+    }
     if report.latency_subsampled() {
         println!(
             "note: '~' percentiles are reservoir estimates (> 65536 samples per session)"
@@ -686,7 +754,8 @@ fn maybe_record(
     if let Some(path) = args.get("record") {
         let trace = adms::scenario::RunTrace::record(soc_name, apps, events, report, seed)
             .with_batch(batch.0, batch.1)
-            .with_faults(fault_cfg);
+            .with_faults(fault_cfg)
+            .with_adaptive(fault_cfg, report);
         std::fs::write(path, trace.to_json_string())
             .map_err(|e| anyhow::anyhow!("--record '{path}': {e}"))?;
         println!(
@@ -717,6 +786,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "retry-backoff", takes_value: true, help: "all arms: base retry backoff ms, doubled per attempt", default: Some("25") },
         OptSpec { name: "quarantine", takes_value: true, help: "all arms: ms a recovered processor stays Degraded", default: Some("500") },
         OptSpec { name: "fault-blind", takes_value: false, help: "all arms: ablation — faults happen but the driver neither marks health nor retries", default: None },
+        OptSpec { name: "adaptive-plans", takes_value: true, help: "comma-separated per-arm adaptive modes (off|reactive); an extra arm axis", default: Some("off") },
+        OptSpec { name: "replan-cooldown", takes_value: true, help: "adaptive arms: min ms between granularity switches of one session", default: Some("1000") },
+        OptSpec { name: "replan-threshold", takes_value: true, help: "adaptive arms: smoothed pressure above which the controller refines", default: Some("0.5") },
         OptSpec { name: "duration", takes_value: true, help: "per-device horizon, simulated ms", default: Some("5000") },
         OptSpec { name: "requests", takes_value: true, help: "per-session request quota per device; 0 = unbounded", default: Some("0") },
         OptSpec { name: "batch-max", takes_value: true, help: "largest task group one dispatch may fuse, all arms (1 = off)", default: Some("1") },
@@ -764,16 +836,27 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     // uses ',').
     let profiles: Vec<String> =
         csv("fault-profiles", "off").into_iter().map(|p| p.replace(';', ",")).collect();
+    let adaptives = csv("adaptive-plans", "off");
+    for ap in &adaptives {
+        if adms::exec::AdaptivePlan::parse(ap).is_none() {
+            bail!("--adaptive-plans: expected off|reactive entries, got '{ap}'");
+        }
+    }
     let mut arms = Vec::new();
     for soc in &socs {
         for sched in &scheds {
             for wl in &workloads {
                 for fp in &profiles {
-                    let mut arm = ArmSpec::new(soc, sched, wl);
-                    if fp != "off" && fp != "none" {
-                        arm = arm.faulty(fp);
+                    for ap in &adaptives {
+                        let mut arm = ArmSpec::new(soc, sched, wl);
+                        if fp != "off" && fp != "none" {
+                            arm = arm.faulty(fp);
+                        }
+                        if ap != "off" {
+                            arm = arm.adaptive(ap);
+                        }
+                        arms.push(arm);
                     }
-                    arms.push(arm);
                 }
             }
         }
@@ -794,6 +877,8 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         retry_backoff_ms: args.get_f64("retry-backoff", 25.0)?.max(0.0),
         fault_quarantine_ms: args.get_f64("quarantine", 500.0)?.max(0.0),
         fault_blind: args.flag("fault-blind"),
+        replan_cooldown_ms: args.get_f64("replan-cooldown", 1000.0)?.max(0.0),
+        replan_threshold: args.get_f64("replan-threshold", 0.5)?.clamp(0.0, 1.0),
         ..Default::default()
     };
     let spec = FleetSpec {
@@ -858,6 +943,9 @@ fn cmd_tournament(argv: &[String]) -> Result<()> {
         OptSpec { name: "horizon", takes_value: true, help: "lookahead cells: rollout completions observed before scoring (0 = degenerate to --base)", default: Some("2") },
         OptSpec { name: "beam", takes_value: true, help: "lookahead cells: candidate processors per decision", default: Some("3") },
         OptSpec { name: "base", takes_value: true, help: "lookahead cells: base policy (vanilla|band|adms|pinned)", default: Some("adms") },
+        OptSpec { name: "adaptive-plan", takes_value: true, help: "all cells: runtime granularity switching (off | reactive)", default: Some("off") },
+        OptSpec { name: "replan-cooldown", takes_value: true, help: "adaptive cells: min ms between granularity switches of one session", default: Some("1000") },
+        OptSpec { name: "replan-threshold", takes_value: true, help: "adaptive cells: smoothed pressure above which the controller refines", default: Some("0.5") },
         OptSpec { name: "out", takes_value: true, help: "write the TournamentReport as JSON here", default: Some("TOURNAMENT.json") },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
@@ -894,6 +982,9 @@ fn cmd_tournament(argv: &[String]) -> Result<()> {
             lookahead_horizon: args.get_u64("horizon", 2)? as u32,
             lookahead_beam: args.get_u64("beam", 3)? as u32,
             lookahead_base: parse_base(&args.get_or("base", "adms"))?,
+            adaptive_plan: parse_adaptive(&args.get_or("adaptive-plan", "off"))?,
+            replan_cooldown_ms: args.get_f64("replan-cooldown", 1_000.0)?.max(0.0),
+            replan_threshold: args.get_f64("replan-threshold", 0.5)?.clamp(0.0, 1.0),
             ..Default::default()
         },
     };
@@ -956,6 +1047,11 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     let (budget_ms, entries) = adms::testing::bench::run_sim_suite();
     println!();
     adms::testing::bench::print_sim_suite(&entries);
+    println!(
+        "memo: {} plan-cache entr(ies), {} tuner-cache entr(ies)",
+        adms::sched::plan_cache_len(),
+        adms::analyzer::tune_cache_len()
+    );
     let json = adms::testing::bench::sim_suite_json(budget_ms, &entries).to_pretty();
     std::fs::write(&path, &json).map_err(|e| anyhow::anyhow!("--out '{path}': {e}"))?;
     println!("\nwrote {} bench entries to {path}", entries.len());

@@ -66,6 +66,10 @@ pub struct RunTrace {
     /// — omitted from the JSON so faults-off (and pre-fault) traces keep
     /// their exact bytes.
     pub faults: Option<TraceFaults>,
+    /// Adaptive re-partition config (and the switch schedule the run
+    /// produced, for audits). `None` = adaptive off — omitted from the
+    /// JSON so static traces keep their exact bytes.
+    pub adaptive: Option<TraceAdaptive>,
 }
 
 /// The fault-layer knobs a replay must restore to reproduce a faulted run:
@@ -91,6 +95,32 @@ impl TraceFaults {
         cfg.fault_profile = self.profile.clone();
         cfg.fault_seed = self.fault_seed;
         cfg.fault_blind = self.blind;
+    }
+}
+
+/// The adaptive re-partition knobs a replay must restore, plus the
+/// switch events the recorded run applied. The events are *not* replayed
+/// as inputs — the controller re-derives every switch deterministically
+/// from the same knobs, monitor signal, and seed — they are recorded so
+/// replay audits can compare the reproduced schedule bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceAdaptive {
+    /// `AdaptivePlan` CLI spelling (`"reactive"`).
+    pub mode: String,
+    pub cooldown_ms: f64,
+    pub threshold: f64,
+    /// `(time_ms, session, new_window_size)` per applied switch.
+    pub events: Vec<(f64, usize, usize)>,
+}
+
+impl TraceAdaptive {
+    /// Copy the recorded knobs onto a replay config.
+    pub fn apply_to(&self, cfg: &mut crate::exec::SimConfig) {
+        if let Some(mode) = crate::exec::AdaptivePlan::parse(&self.mode) {
+            cfg.adaptive_plan = mode;
+        }
+        cfg.replan_cooldown_ms = self.cooldown_ms;
+        cfg.replan_threshold = self.threshold;
     }
 }
 
@@ -155,6 +185,7 @@ impl RunTrace {
             assignments: report.assignments.clone(),
             fault_events,
             faults: None,
+            adaptive: None,
         }
     }
 
@@ -170,6 +201,29 @@ impl RunTrace {
                 profile: cfg.fault_profile.clone(),
                 fault_seed: cfg.fault_seed,
                 blind: cfg.fault_blind,
+            });
+        }
+        self
+    }
+
+    /// Stamp the adaptive re-partition config the run executed under and
+    /// the switch schedule it produced (no-op for an adaptive-off run, so
+    /// static traces keep their exact bytes).
+    pub fn with_adaptive(
+        mut self,
+        cfg: &crate::exec::SimConfig,
+        report: &SimReport,
+    ) -> Self {
+        if cfg.adaptive_configured() {
+            self.adaptive = Some(TraceAdaptive {
+                mode: cfg.adaptive_plan.name().to_string(),
+                cooldown_ms: cfg.replan_cooldown_ms,
+                threshold: cfg.replan_threshold,
+                events: report
+                    .replans
+                    .as_ref()
+                    .map(|r| r.events.clone())
+                    .unwrap_or_default(),
             });
         }
         self
@@ -315,6 +369,30 @@ impl RunTrace {
                 ]),
             ));
         }
+        // Adaptive re-partitioning only when it was engaged — same
+        // byte-identity rule as the batch and fault blocks.
+        if let Some(a) = &self.adaptive {
+            let events: Vec<Json> = a
+                .events
+                .iter()
+                .map(|&(at, s, ws)| {
+                    Json::Arr(vec![
+                        Json::Num(at),
+                        Json::Num(s as f64),
+                        Json::Num(ws as f64),
+                    ])
+                })
+                .collect();
+            fields.push((
+                "adaptive",
+                Json::obj(vec![
+                    ("mode", Json::Str(a.mode.clone())),
+                    ("cooldown_ms", Json::Num(a.cooldown_ms)),
+                    ("threshold", Json::Num(a.threshold)),
+                    ("events", Json::Arr(events)),
+                ]),
+            ));
+        }
         fields.extend([
             ("sessions", Json::Arr(sessions)),
             ("rate_events", Json::Arr(rate_events)),
@@ -394,6 +472,28 @@ impl RunTrace {
                 }),
             }
         });
+        let adaptive = match v.get("adaptive").as_obj() {
+            Some(_) => {
+                let a = v.get("adaptive");
+                let events = a
+                    .get("events")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|e| {
+                        let t = tuple(e, 3, "adaptive event")?;
+                        Ok((t[0], t[1] as usize, t[2] as usize))
+                    })
+                    .collect::<Result<Vec<(f64, usize, usize)>>>()?;
+                Some(TraceAdaptive {
+                    mode: a.get("mode").as_str().unwrap_or("reactive").to_string(),
+                    cooldown_ms: a.get("cooldown_ms").as_f64().unwrap_or(0.0),
+                    threshold: a.get("threshold").as_f64().unwrap_or(0.5),
+                    events,
+                })
+            }
+            None => None,
+        };
         let arrivals = v
             .get("arrivals")
             .as_arr()
@@ -460,6 +560,7 @@ impl RunTrace {
             rate_events,
             fault_events,
             faults,
+            adaptive,
             arrivals,
             assignments,
         })
@@ -496,6 +597,7 @@ mod tests {
             rate_events: vec![(0, 500.5)],
             fault_events: Vec::new(),
             faults: None,
+            adaptive: None,
             arrivals: vec![
                 ArrivalRecord { session: 0, at: 0.0 },
                 ArrivalRecord { session: 1, at: 100.125 },
@@ -578,6 +680,33 @@ mod tests {
         assert_eq!(cfg.retry_limit, 3);
         assert_eq!(cfg.fault_seed, Some(99));
         assert_eq!(cfg.fault_profile.as_ref().unwrap().name, "light");
+    }
+
+    /// An adaptive trace round-trips its knobs and switch schedule; an
+    /// adaptive-off trace serializes without the key (byte-identity with
+    /// pre-adaptive recordings).
+    #[test]
+    fn adaptive_trace_roundtrips_and_off_trace_has_no_adaptive_key() {
+        let off = tiny_trace().to_json_string();
+        assert!(!off.contains("\"adaptive\""));
+
+        let mut t = tiny_trace();
+        t.adaptive = Some(TraceAdaptive {
+            mode: "reactive".into(),
+            cooldown_ms: 750.0,
+            threshold: 0.6,
+            events: vec![(1000.0, 0, 4), (2500.0, 1, 1)],
+        });
+        let s = t.to_json_string();
+        let back = RunTrace::from_json_str(&s).unwrap();
+        assert_eq!(back, t);
+
+        // The knob copier restores the recorded config.
+        let mut cfg = crate::exec::SimConfig::default();
+        t.adaptive.as_ref().unwrap().apply_to(&mut cfg);
+        assert_eq!(cfg.adaptive_plan, crate::exec::AdaptivePlan::Reactive);
+        assert_eq!(cfg.replan_cooldown_ms, 750.0);
+        assert_eq!(cfg.replan_threshold, 0.6);
     }
 
     #[test]

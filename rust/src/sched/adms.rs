@@ -316,6 +316,7 @@ mod tests {
             procs,
             batch: crate::sched::BatchCtx::OFF,
             weights: crate::sched::WeightsView::OFF,
+            variants: None,
         }
     }
 

@@ -24,7 +24,7 @@ pub use adms::Adms;
 pub use band::Band;
 pub use lookahead::{BasePolicy, Lookahead, RolloutParams};
 pub use pinned::Pinned;
-pub use plan::ModelPlan;
+pub use plan::{plan_cache_len, ModelPlan, PlanSet};
 pub use vanilla::VanillaTflite;
 
 use crate::monitor::ProcView;
@@ -172,6 +172,18 @@ impl WeightsView<'_> {
     pub const OFF: WeightsView<'static> = WeightsView { cache: None };
 }
 
+/// Plan-granularity context the driver hands the scheduler on adaptive
+/// runs: the per-session variant ladder and which rung is active. Absent
+/// (`SchedCtx::variants == None`) on static runs — the pre-PlanSet
+/// scheduler contract.
+#[derive(Clone, Copy)]
+pub struct VariantsView<'a> {
+    /// One granularity ladder per session (index = session id).
+    pub sets: &'a [PlanSet],
+    /// Active rung per session, indexing into the ladder.
+    pub active: &'a [usize],
+}
+
 /// What the scheduler sees when asked for a decision.
 pub struct SchedCtx<'a> {
     pub now: TimeMs,
@@ -185,6 +197,12 @@ pub struct SchedCtx<'a> {
     /// Per-processor weight residency ([`WeightsView::OFF`] when the run
     /// has no memory budget).
     pub weights: WeightsView<'a>,
+    /// Granularity ladders on adaptive runs (`None` on static runs —
+    /// `plans[s]` is then the session's one and only plan). When present,
+    /// `plans[s]` still IS the active variant: the driver swaps it on a
+    /// switch, so policies that ignore this field automatically price the
+    /// active granularity.
+    pub variants: Option<VariantsView<'a>>,
 }
 
 impl<'a> SchedCtx<'a> {
@@ -222,6 +240,30 @@ impl<'a> SchedCtx<'a> {
         match self.weights.cache {
             Some(c) => c.price(self.soc, self.now, session, unit, proc),
             None => 0.0,
+        }
+    }
+
+    /// Window size of the session's active plan (the one `plans[s]` holds
+    /// — valid on static and adaptive runs alike).
+    pub fn active_window_size(&self, session: SessId) -> usize {
+        self.plans[session].partition.window_size
+    }
+
+    /// The granularity rungs the controller could switch `session` to
+    /// (window sizes other than the active one). Empty on static runs.
+    pub fn switch_candidates(&self, session: SessId) -> Vec<usize> {
+        match &self.variants {
+            Some(v) => {
+                let active = v.active[session];
+                v.sets[session]
+                    .window_sizes
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != active)
+                    .map(|(_, &w)| w)
+                    .collect()
+            }
+            None => Vec::new(),
         }
     }
 }
@@ -347,6 +389,7 @@ mod tests {
             procs: &views,
             batch: BatchCtx::OFF,
             weights: WeightsView::OFF,
+            variants: None,
         };
         let avail = ctx.available_procs();
         assert!(!avail.contains(&1));
@@ -373,6 +416,7 @@ mod tests {
             procs: &views,
             batch: BatchCtx::OFF,
             weights: WeightsView::OFF,
+            variants: None,
         };
         assert_eq!(ctx.free_slots(&views[1]), 0);
         let census = free_slot_census(&ctx);
@@ -407,6 +451,7 @@ mod tests {
             procs: &views,
             batch: BatchCtx::OFF,
             weights: WeightsView::OFF,
+            variants: None,
         };
         let census = free_slot_census(&ctx);
         let avail = ctx.available_procs();

@@ -8,8 +8,20 @@ use crate::analyzer::{self, Partition};
 use crate::graph::Graph;
 use crate::soc::{cost, ProcId, SocSpec};
 use crate::util::memo::Memo;
+use crate::util::rng::splitmix64;
 use crate::TimeMs;
 use std::sync::Arc;
+
+/// The process-wide plan memo (see [`ModelPlan::build_cached`]). Module
+/// scope so `adms bench` can report its occupancy via
+/// [`plan_cache_len`].
+static PLAN_CACHE: Memo<(String, u64, String, u64, usize), ModelPlan> = Memo::new();
+
+/// Entries currently resident in the plan memo — with PlanSets the
+/// window-size axis multiplies, so growth here is worth watching.
+pub fn plan_cache_len() -> usize {
+    PLAN_CACHE.len()
+}
 
 /// A partitioned, cost-annotated model ready for scheduling.
 #[derive(Debug, Clone)]
@@ -111,7 +123,6 @@ impl ModelPlan {
     /// content nor two same-name SoCs with different processor/support/
     /// thermal definitions can ever share a cached plan.
     pub fn build_cached(graph: Arc<Graph>, soc: &SocSpec, window_size: usize) -> Self {
-        static CACHE: Memo<(String, u64, String, u64, usize), ModelPlan> = Memo::new();
         let key = (
             graph.name.clone(),
             graph.fingerprint(),
@@ -119,7 +130,23 @@ impl ModelPlan {
             soc.fingerprint(),
             window_size,
         );
-        CACHE.get_or_insert_with(key, || ModelPlan::build(graph, soc, window_size))
+        PLAN_CACHE.get_or_insert_with(key, || ModelPlan::build(graph, soc, window_size))
+    }
+
+    /// Batching coalescing identity of this plan: the graph's structural
+    /// fingerprint mixed with the partition's window size. Two sessions
+    /// may fuse group dispatches only when BOTH coincide — unit indices
+    /// shift across granularity variants, so same-model sessions on
+    /// different variants must never coalesce (unit 3 of a fine plan and
+    /// unit 3 of a coarse plan are different subgraphs). On static runs
+    /// this partitions sessions exactly like the bare graph fingerprint
+    /// did, because same-model sessions always share one window size
+    /// there.
+    pub fn coalesce_kind(&self) -> u64 {
+        splitmix64(
+            self.graph.fingerprint()
+                ^ (self.partition.window_size as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        )
     }
 
     pub fn num_units(&self) -> usize {
@@ -156,6 +183,48 @@ impl ModelPlan {
             })
             .filter(|t| t.is_finite())
             .sum()
+    }
+}
+
+/// A per-model ladder of granularity variants (adaptive re-partitioning,
+/// DESIGN.md §3h): the same graph partitioned at several window sizes,
+/// finest first. Each variant is built through [`ModelPlan::build_cached`],
+/// so variants stay fingerprint-keyed in the process-wide memo and two
+/// sessions (or two PlanSets) of the same model share one plan per rung.
+#[derive(Debug, Clone)]
+pub struct PlanSet {
+    /// Window sizes, ascending — index 0 is the finest partition (most
+    /// units, most spread), the last index the coarsest. Deduped.
+    pub window_sizes: Vec<usize>,
+    /// One plan per window size, aligned with `window_sizes`.
+    pub variants: Vec<ModelPlan>,
+}
+
+impl PlanSet {
+    /// Build one variant per requested window size (clamped ≥ 1, sorted
+    /// ascending, deduped) through the shared plan memo.
+    pub fn build_cached(graph: Arc<Graph>, soc: &SocSpec, window_sizes: &[usize]) -> Self {
+        let mut ws: Vec<usize> = window_sizes.iter().map(|&w| w.max(1)).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        let variants = ws
+            .iter()
+            .map(|&w| ModelPlan::build_cached(Arc::clone(&graph), soc, w))
+            .collect();
+        PlanSet { window_sizes: ws, variants }
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// Ladder index of a window size, if present.
+    pub fn position(&self, window_size: usize) -> Option<usize> {
+        self.window_sizes.iter().position(|&w| w == window_size)
     }
 }
 
@@ -283,6 +352,42 @@ mod tests {
             (pb.num_units(), pb.est_total_ms),
             "same-name SoC variants shared a cached plan"
         );
+    }
+
+    #[test]
+    fn plan_set_sorts_dedupes_and_shares_the_memo() {
+        let soc = dimensity9000();
+        let g = Arc::new(zoo::mobilenet_v1());
+        let set = PlanSet::build_cached(Arc::clone(&g), &soc, &[6, 1, 3, 6, 0]);
+        // 0 clamps to 1; duplicates collapse; order is fine → coarse.
+        assert_eq!(set.window_sizes, vec![1, 3, 6]);
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.position(3), Some(1));
+        assert_eq!(set.position(4), None);
+        // Finer rungs never have fewer units than coarser ones.
+        for w in set.variants.windows(2) {
+            assert!(w[0].num_units() >= w[1].num_units());
+        }
+        // Each rung is the same artifact the single-plan path builds.
+        let lone = ModelPlan::build_cached(Arc::clone(&g), &soc, 3);
+        assert_eq!(set.variants[1].num_units(), lone.num_units());
+        assert_eq!(set.variants[1].est_total_ms, lone.est_total_ms);
+    }
+
+    #[test]
+    fn coalesce_kind_separates_variants_of_one_model() {
+        let soc = dimensity9000();
+        let g = Arc::new(zoo::mobilenet_v1());
+        let fine = ModelPlan::build_cached(Arc::clone(&g), &soc, 1);
+        let coarse = ModelPlan::build_cached(Arc::clone(&g), &soc, 6);
+        // Same model, different granularity → must never coalesce.
+        assert_ne!(fine.coalesce_kind(), coarse.coalesce_kind());
+        // Same model, same granularity → same kind (sessions may fuse).
+        let fine2 = ModelPlan::build_cached(Arc::clone(&g), &soc, 1);
+        assert_eq!(fine.coalesce_kind(), fine2.coalesce_kind());
+        // Different models at the same granularity stay apart.
+        let other = ModelPlan::build_cached(Arc::new(zoo::east()), &soc, 1);
+        assert_ne!(fine.coalesce_kind(), other.coalesce_kind());
     }
 
     #[test]

@@ -98,6 +98,22 @@ pub struct FaultStats {
     pub timeouts: u64,
 }
 
+/// Adaptive re-partition counters (`None` when the controller never
+/// engaged — `--adaptive-plan off` reports serialize byte-identically
+/// to pre-adaptive ones, the same idiom as [`FaultStats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplanStats {
+    /// Granularity switches applied (finer + coarser).
+    pub replans: u64,
+    /// Switches toward a finer partition (more units).
+    pub finer: u64,
+    /// Switches toward a coarser partition (fewer units).
+    pub coarser: u64,
+    /// Every switch: `(time_ms, session, new_window_size)` — recorded so
+    /// traces can carry the switch schedule for bit-exact replay audits.
+    pub events: Vec<(TimeMs, usize, usize)>,
+}
+
 /// Full execution report — produced identically by the discrete-event
 /// simulator and the wall-clock thread-pool backend (where thermal/power
 /// signals are zero: real hardware counters are a future backend concern).
@@ -125,6 +141,10 @@ pub struct SimReport {
     /// unbudgeted runs — the cache is never constructed — so the report
     /// (and its JSON form) is identical to pre-residency builds there.
     pub cache: crate::weights::CacheStats,
+    /// Adaptive re-partition counters; `Some` exactly when the
+    /// controller was constructed (`--adaptive-plan reactive` with
+    /// granularity ladders attached).
+    pub replans: Option<ReplanStats>,
     /// Scheduling decisions in dispatch order — the cross-backend
     /// determinism witness.
     pub assignments: Vec<crate::exec::AssignRecord>,
@@ -369,6 +389,28 @@ impl SimReport {
                     ("proc_fails", Json::Num(f.proc_fails as f64)),
                     ("proc_recovers", Json::Num(f.proc_recovers as f64)),
                     ("timeouts", Json::Num(f.timeouts as f64)),
+                ]),
+            ));
+        }
+        if let Some(r) = &self.replans {
+            let events: Vec<Json> = r
+                .events
+                .iter()
+                .map(|&(at, s, ws)| {
+                    Json::Arr(vec![
+                        Json::Num(at),
+                        Json::Num(s as f64),
+                        Json::Num(ws as f64),
+                    ])
+                })
+                .collect();
+            top.push((
+                "replans",
+                Json::obj(vec![
+                    ("replans", Json::Num(r.replans as f64)),
+                    ("finer", Json::Num(r.finer as f64)),
+                    ("coarser", Json::Num(r.coarser as f64)),
+                    ("events", Json::Arr(events)),
                 ]),
             ));
         }

@@ -355,6 +355,44 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             completed: completed.get(),
         });
     }
+    // Adaptive re-partitioning (ISSUE 9): the phase_shift scenario with
+    // the reactive granularity controller live, so every measured run
+    // exercises pressure sampling, the EMA, safe-boundary checks, and
+    // (when pressure crosses the threshold) the plan swap itself on the
+    // hot path — directly comparable to a static run of the same scenario.
+    {
+        use crate::exec::{AdaptivePlan, Server};
+        use crate::scenario::phase_shift;
+        let (apps, events_list) = phase_shift().compile().expect("phase_shift compiles");
+        let cfg = SimConfig {
+            duration_ms: 1_000.0,
+            adaptive_plan: AdaptivePlan::Reactive,
+            replan_cooldown_ms: 200.0,
+            ..Default::default()
+        };
+        let name = "phase_1s/adaptive".to_string();
+        let events = Cell::new(0u64);
+        let completed = Cell::new(0u64);
+        let stats = b.bench(&name, || {
+            let r = Server::new(soc.clone())
+                .scheduler_name("adms")
+                .apps(apps.clone())
+                .events(events_list.clone())
+                .config(cfg.clone())
+                .run_sim()
+                .expect("phase adaptive bench run");
+            events.set(r.events);
+            completed.set(r.total_completed());
+            std::hint::black_box(&r);
+        });
+        entries.push(SimSuiteEntry {
+            name,
+            stats,
+            sim_ms: 1_000.0,
+            events: events.get(),
+            completed: completed.get(),
+        });
+    }
     // Fleet throughput: a sharded device population per measured run
     // (`sim_ms` is summed over devices, so the headline figure stays
     // simulated-ms per wall-second — now aggregated across shards).

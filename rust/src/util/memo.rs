@@ -6,6 +6,26 @@ use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Mutex, OnceLock};
 
+/// Default entry cap for a [`Memo`] table. Plans are now memoized per
+/// (model, SoC, window-size) — with PlanSets multiplying the window-size
+/// axis, an unbounded table would grow for the life of the process (fleet
+/// sweeps cross SoCs × models × granularities). 1024 is far above any
+/// single run's working set, so eviction only fires on pathological
+/// cross-run accumulation.
+pub const DEFAULT_MEMO_CAP: usize = 1024;
+
+struct Inner<K, V> {
+    map: HashMap<K, (V, u64)>,
+    /// Monotone insertion counter — the eviction order.
+    seq: u64,
+}
+
+impl<K, V> Default for Inner<K, V> {
+    fn default() -> Self {
+        Inner { map: HashMap::new(), seq: 0 }
+    }
+}
+
 /// A lazy, mutex-guarded memo table. Declare as a `static` next to the
 /// function it caches:
 ///
@@ -18,29 +38,70 @@ use std::sync::{Mutex, OnceLock};
 /// `Arc`). A racing miss may compute twice; last insert wins, which is
 /// fine for pure functions. The compute closure runs *outside* the
 /// lock, so the critical section is only the lookup/insert.
+///
+/// The table is bounded: inserting a new key at capacity evicts the
+/// oldest-inserted entry (FIFO by insertion sequence — deterministic,
+/// unlike anything derived from `HashMap` iteration order alone).
+/// Re-computing an evicted key is always safe because entries are pure
+/// functions of their key.
 pub struct Memo<K, V> {
-    map: OnceLock<Mutex<HashMap<K, V>>>,
+    map: OnceLock<Mutex<Inner<K, V>>>,
+    cap: usize,
 }
 
-impl<K: Eq + Hash, V: Clone> Default for Memo<K, V> {
+impl<K: Eq + Hash + Clone, V: Clone> Default for Memo<K, V> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<K: Eq + Hash, V: Clone> Memo<K, V> {
+impl<K: Eq + Hash + Clone, V: Clone> Memo<K, V> {
     pub const fn new() -> Self {
-        Memo { map: OnceLock::new() }
+        Self::with_cap(DEFAULT_MEMO_CAP)
+    }
+
+    /// A table with an explicit entry cap (0 is treated as 1 — a memo
+    /// that can never hold an entry would silently defeat its purpose).
+    pub const fn with_cap(cap: usize) -> Self {
+        Memo { map: OnceLock::new(), cap }
     }
 
     pub fn get_or_insert_with(&self, key: K, compute: impl FnOnce() -> V) -> V {
         let map = self.map.get_or_init(Default::default);
-        if let Some(v) = map.lock().unwrap().get(&key) {
+        if let Some((v, _)) = map.lock().unwrap().map.get(&key) {
             return v.clone();
         }
         let v = compute();
-        map.lock().unwrap().insert(key, v.clone());
+        let mut inner = map.lock().unwrap();
+        let cap = self.cap.max(1);
+        if !inner.map.contains_key(&key) && inner.map.len() >= cap {
+            // Evict the oldest insertion (min seq). O(n) scan, but the
+            // table is small and eviction is the rare path.
+            if let Some(oldest) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (_, s))| *s)
+                .map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&oldest);
+            }
+        }
+        let seq = inner.seq;
+        inner.seq += 1;
+        inner.map.insert(key, (v.clone(), seq));
         v
+    }
+
+    /// Number of entries currently resident (0 if never touched).
+    pub fn len(&self) -> usize {
+        self.map
+            .get()
+            .map(|m| m.lock().unwrap().map.len())
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -62,5 +123,42 @@ mod tests {
         }
         assert_eq!(calls, 1);
         assert_eq!(CACHE.get_or_insert_with(8, || 43), 43);
+        assert!(CACHE.len() >= 2);
+    }
+
+    #[test]
+    fn cap_evicts_oldest_insertion_deterministically() {
+        static SMALL: Memo<u32, u32> = Memo::with_cap(3);
+        for k in 0..3 {
+            SMALL.get_or_insert_with(k, || k * 10);
+        }
+        assert_eq!(SMALL.len(), 3);
+        // Hitting an existing key must not evict anything.
+        SMALL.get_or_insert_with(1, || 999);
+        assert_eq!(SMALL.len(), 3);
+        // A fourth key evicts the oldest insertion (key 0)...
+        SMALL.get_or_insert_with(3, || 30);
+        assert_eq!(SMALL.len(), 3);
+        // ...so key 0 recomputes while 1 and 2 are still cached.
+        let mut recomputed = false;
+        assert_eq!(
+            SMALL.get_or_insert_with(0, || {
+                recomputed = true;
+                77
+            }),
+            77
+        );
+        assert!(recomputed, "oldest entry should have been evicted");
+        assert_eq!(SMALL.get_or_insert_with(2, || 999), 20, "newer entry was evicted");
+        assert_eq!(SMALL.len(), 3);
+    }
+
+    #[test]
+    fn zero_cap_behaves_as_one() {
+        static ZERO: Memo<u32, u32> = Memo::with_cap(0);
+        assert_eq!(ZERO.get_or_insert_with(1, || 10), 10);
+        assert_eq!(ZERO.len(), 1);
+        assert_eq!(ZERO.get_or_insert_with(2, || 20), 20);
+        assert_eq!(ZERO.len(), 1);
     }
 }

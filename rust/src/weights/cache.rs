@@ -278,6 +278,61 @@ impl WeightCache {
         }
     }
 
+    /// Replace one session's manifest after an adaptive granularity
+    /// switch. The driver only calls this at a safe boundary (no request
+    /// of the session open, so no pins of its shards outstanding), but
+    /// warm bytes are worth keeping: in every domain, entries of the old
+    /// manifest whose shard *content* survives in the new one (same unit
+    /// index, same shard fingerprint — the shard fp mixes bytes and ops,
+    /// so a match means the bytes on flash are the same) are re-keyed to
+    /// the new `(fingerprint, unit)` and stay resident. Entries with no
+    /// surviving counterpart are dropped — NOT counted as evictions
+    /// (eviction measures budget pressure, not re-partitioning; the
+    /// `purge_proc` precedent). If another session still runs the old
+    /// manifest, every entry stays: the keys are still live under that
+    /// session.
+    pub fn swap_manifest(&mut self, session: SessId, manifest: ShardManifest) {
+        let Some(slot) = self.manifests.get_mut(session) else { return };
+        let old_fp = slot.fingerprint;
+        let old = std::mem::replace(slot, manifest);
+        let new = self.manifests[session].clone();
+        if old_fp == new.fingerprint {
+            return;
+        }
+        if self
+            .manifests
+            .iter()
+            .enumerate()
+            .any(|(s, m)| s != session && m.fingerprint == old_fp)
+        {
+            return;
+        }
+        for d in self.domains.iter_mut() {
+            let stale: Vec<(u64, usize)> = d
+                .entries
+                .range((old_fp, 0)..(old_fp, usize::MAX))
+                .map(|(k, _)| *k)
+                .collect();
+            for k in stale {
+                let mut e = d.entries.remove(&k).expect("ranged key resident");
+                d.used -= e.bytes;
+                let survives = old
+                    .shards
+                    .get(k.1)
+                    .zip(new.shards.get(k.1))
+                    .is_some_and(|(a, b)| a.fingerprint == b.fingerprint);
+                let new_key = (new.fingerprint, k.1);
+                if survives && !d.entries.contains_key(&new_key) {
+                    // Safe-boundary contract: nothing inflight references
+                    // the old key, so a surviving entry carries no pins.
+                    e.pins = 0;
+                    d.used += e.bytes;
+                    d.entries.insert(new_key, e);
+                }
+            }
+        }
+    }
+
     /// Counters snapshot, with `bytes_resident` sampled live.
     pub fn stats(&self) -> CacheStats {
         let mut s = self.stats;
@@ -528,6 +583,65 @@ mod tests {
         for i in 0..soc.processors.len() {
             assert_eq!(u.budget(i), 16 * MIB);
         }
+    }
+
+    /// Two-shard manifest with per-shard fingerprints — the
+    /// `swap_manifest` re-key rule keys off these.
+    fn mfst2(fp: u64, shard_fps: [u64; 2], bytes: [u64; 2]) -> ShardManifest {
+        ShardManifest {
+            model: format!("m{fp}"),
+            graph_fp: fp,
+            dtype_bytes: 4,
+            window_size: 1,
+            shards: (0..2)
+                .map(|u| Shard {
+                    unit: u,
+                    weight_bytes: bytes[u],
+                    activation_bytes: 0,
+                    ops: 1,
+                    fingerprint: shard_fps[u],
+                })
+                .collect(),
+            fingerprint: fp,
+        }
+    }
+
+    #[test]
+    fn swap_manifest_rekeys_surviving_shards_and_drops_the_rest() {
+        let soc = dimensity9000();
+        let old = mfst2(100, [11, 12], [4 * MIB, 2 * MIB]);
+        let mut c = WeightCache::new(&soc, 64 * MIB, MemPolicy::CostLru, vec![old]);
+        c.commit(&soc, 0.0, 0, 0, 0);
+        c.commit(&soc, 0.0, 0, 1, 0);
+        c.unpin(0, 0, 0);
+        c.unpin(0, 1, 0);
+        assert_eq!(c.resident_bytes(0), 6 * MIB);
+        // New variant: unit 0's content survives (same shard fp), unit 1
+        // was re-cut (different fp).
+        c.swap_manifest(0, mfst2(200, [11, 99], [4 * MIB, 2 * MIB]));
+        assert_eq!(c.price(&soc, 1000.0, 0, 0, 0), 0.0, "surviving shard stays warm");
+        assert!(c.price(&soc, 1000.0, 0, 1, 0) > 0.0, "re-cut shard is cold");
+        let s = c.stats();
+        assert_eq!(s.evictions, 0, "a swap is not budget pressure");
+        assert_eq!(s.bytes_resident, 4 * MIB);
+        // Identity swap is a no-op.
+        c.swap_manifest(0, mfst2(200, [11, 99], [4 * MIB, 2 * MIB]));
+        assert_eq!(c.stats().bytes_resident, 4 * MIB);
+    }
+
+    #[test]
+    fn swap_manifest_spares_entries_shared_with_a_sibling_session() {
+        let soc = dimensity9000();
+        let m = mfst2(100, [11, 12], [4 * MIB, 2 * MIB]);
+        let mut c =
+            WeightCache::new(&soc, 64 * MIB, MemPolicy::CostLru, vec![m.clone(), m]);
+        c.commit(&soc, 0.0, 0, 0, 0);
+        c.unpin(0, 0, 0);
+        // Session 0 switches variants; session 1 still runs the old
+        // manifest, so the old keys must stay live for it.
+        c.swap_manifest(0, mfst2(200, [11, 99], [4 * MIB, 2 * MIB]));
+        assert_eq!(c.price(&soc, 100.0, 1, 0, 0), 0.0, "sibling's shard still warm");
+        assert_eq!(c.resident_bytes(0), 4 * MIB);
     }
 
     #[test]

@@ -109,6 +109,7 @@ fn prop_schedulers_only_assign_supported_online_procs() {
             procs: &views,
             batch: adms::sched::BatchCtx::OFF,
             weights: adms::sched::WeightsView::OFF,
+            variants: None,
         };
         let mut scheds: Vec<Box<dyn Scheduler>> = vec![
             Box::new(Adms::default()),
@@ -1063,6 +1064,56 @@ fn prop_faults_off_is_byte_identical_noop() {
         // see byte-identical documents.
         assert!(!default.contains("\"faults\""), "{sched}: fault block in faults-off report");
         assert!(!default.contains("\"retries\""), "{sched}: retry counters in faults-off report");
+    });
+}
+
+/// Golden-equivalence referee for adaptive re-partitioning (ISSUE 9):
+/// with `--adaptive-plan off`, the granularity machinery must be
+/// invisible — the driver never constructs the re-partition controller,
+/// no `PlanSet` is built, and the report serializes without a `replans`
+/// key. For randomized churn scenarios across all five schedulers, a run
+/// with an explicitly-off mode (and explicit cooldown/threshold knobs —
+/// necessarily inert) produces a byte-identical `SimReport` JSON to the
+/// default config's run. Mirrors the faults/batching/residency referees
+/// above.
+#[test]
+fn prop_adaptive_off_is_byte_identical_noop() {
+    check("adaptive off ≡ static plans (full-report JSON)", iters(8), |g| {
+        let cfg = GenConfig {
+            sessions: g.usize(1..4),
+            duration_ms: g.f64(400.0, 1_500.0),
+            churn: 0.6,
+            rate_change: 0.6,
+        };
+        let sc = scenario::generate(g.u64(0..1_000_000), &cfg);
+        let (apps, events) = sc.compile().unwrap();
+        let sched = *g.pick(&["vanilla", "band", "adms", "pinned", "lookahead"]);
+        let seed = g.u64(0..1_000_000);
+        let knobs = (g.f64(0.0, 2_000.0), g.f64(0.0, 1.0));
+        let run = |off_mode: bool| -> SimReport {
+            let mut server = Server::new(soc_by_name("dimensity9000").unwrap())
+                .scheduler_name(sched)
+                .apps(apps.clone())
+                .events(events.clone())
+                .window_size(4)
+                .duration_ms(cfg.duration_ms)
+                .seed(seed);
+            if off_mode {
+                // An explicit off mode plus explicit replan knobs must be
+                // inert — `adaptive_configured()` stays false.
+                server = server
+                    .adaptive_plan(adms::exec::AdaptivePlan::Off)
+                    .replan_cooldown_ms(knobs.0)
+                    .replan_threshold(knobs.1);
+            }
+            server.run_sim().unwrap()
+        };
+        let default = run(false).to_json().to_pretty();
+        let noop = run(true).to_json().to_pretty();
+        assert_eq!(default, noop, "{sched}: off adaptive mode diverged from static dispatch");
+        // Adaptive-off reports carry no replans key at all — old
+        // consumers see byte-identical documents.
+        assert!(!default.contains("\"replans\""), "{sched}: replans block in adaptive-off report");
     });
 }
 
