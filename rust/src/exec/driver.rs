@@ -688,6 +688,12 @@ impl Driver {
         let mut armed_pokes: Vec<u64> = Vec::new();
         // Lookahead scratch (touched only when rollouts are active).
         let mut cand_procs: Vec<usize> = Vec::new();
+        // Persistent scratch slot for lookahead rollout forks: the first
+        // candidate of the run pays one deep clone, every later candidate
+        // restores the same backend in place (`fork_into` →
+        // `SimBackend::restore`), recycling the snapshot's allocations
+        // across candidates AND decisions for the whole run.
+        let mut rollout_scratch: Option<Box<dyn ExecutionBackend>> = None;
 
         let quota = self.cfg.max_requests.unwrap_or(u64::MAX);
 
@@ -1673,8 +1679,11 @@ impl Driver {
                     // that cannot fork (wall clock) skip the whole block,
                     // degenerating lookahead to its base policy. This is
                     // a documented hot-path carve-out (DESIGN.md §3b):
-                    // O(beam) deep clones per decision buy placement
-                    // quality, and only the `lookahead` arm pays them.
+                    // O(beam) snapshot *copies* per decision buy placement
+                    // quality, and only the `lookahead` arm pays them —
+                    // the copies recycle one persistent scratch backend's
+                    // allocations (`rollout_scratch` above), so the old
+                    // per-candidate deep-clone allocation churn is gone.
                     let mut target = a.proc;
                     if let Some(rp) = rollout {
                         cand_procs.clear();
@@ -1694,9 +1703,11 @@ impl Driver {
                             let need = (rp.horizon as usize).min(inflight.len() + 1).max(1);
                             let mut best = f64::INFINITY;
                             for &p in &cand_procs {
-                                let Some(mut fb) = self.backend.fork() else {
+                                if !self.backend.fork_into(&mut rollout_scratch) {
                                     break;
-                                };
+                                }
+                                let fb =
+                                    rollout_scratch.as_mut().expect("fork_into filled scratch");
                                 let Some(exec_p) = plan.exec_ms[unit][p] else {
                                     continue;
                                 };

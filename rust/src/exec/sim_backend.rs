@@ -85,7 +85,7 @@ impl Ord for QEv {
 /// resident execution for the contention census (the lead's session),
 /// and is metered once — but every member request's unit is tracked in
 /// `req_units` so the driver's abort bookkeeping sees it as resident.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 struct Running {
     token: RunToken,
     req: ReqId,
@@ -97,8 +97,30 @@ struct Running {
     extra: Vec<(ReqId, SessId)>,
 }
 
+impl Clone for Running {
+    fn clone(&self) -> Self {
+        Running {
+            token: self.token,
+            req: self.req,
+            session: self.session,
+            unit: self.unit,
+            start: self.start,
+            end: self.end,
+            extra: self.extra.clone(),
+        }
+    }
+    fn clone_from(&mut self, src: &Self) {
+        self.token = src.token;
+        self.req = src.req;
+        self.session = src.session;
+        self.unit = src.unit;
+        self.start = src.start;
+        self.end = src.end;
+        self.extra.clone_from(&src.extra);
+    }
+}
+
 /// Dynamic per-processor state.
-#[derive(Clone)]
 struct ProcState {
     thermal: ThermalState,
     running: Vec<Running>,
@@ -164,6 +186,48 @@ impl ProcState {
     }
 }
 
+impl Clone for ProcState {
+    fn clone(&self) -> Self {
+        ProcState {
+            thermal: self.thermal.clone(),
+            running: self.running.clone(),
+            down: self.down,
+            backlog_ms: self.backlog_ms,
+            run_sessions: self.run_sessions.clone(),
+            recent_sessions: self.recent_sessions.clone(),
+            last_acct: self.last_acct,
+            busy_ms: self.busy_ms,
+            slot_ms: self.slot_ms,
+            tick_busy_ms: self.tick_busy_ms,
+            tick_slot_ms: self.tick_slot_ms,
+            dispatches: self.dispatches,
+            cold_loads: self.cold_loads,
+            temp_series: self.temp_series.clone(),
+            freq_series: self.freq_series.clone(),
+        }
+    }
+    /// Field-wise `clone_from`: `Vec`/`TimeSeries` buffers are recycled,
+    /// which is what makes [`SimBackend::restore`] (and the lookahead
+    /// scratch fork) allocation-recycling instead of a fresh deep copy.
+    fn clone_from(&mut self, src: &Self) {
+        self.thermal = src.thermal.clone();
+        self.running.clone_from(&src.running);
+        self.down = src.down;
+        self.backlog_ms = src.backlog_ms;
+        self.run_sessions.clone_from(&src.run_sessions);
+        self.recent_sessions.clone_from(&src.recent_sessions);
+        self.last_acct = src.last_acct;
+        self.busy_ms = src.busy_ms;
+        self.slot_ms = src.slot_ms;
+        self.tick_busy_ms = src.tick_busy_ms;
+        self.tick_slot_ms = src.tick_slot_ms;
+        self.dispatches = src.dispatches;
+        self.cold_loads = src.cold_loads;
+        self.temp_series.clone_from(&src.temp_series);
+        self.freq_series.clone_from(&src.freq_series);
+    }
+}
+
 /// Discrete-event SoC backend on a virtual clock.
 ///
 /// The whole backend is `Clone`: every field is plain owned data (the
@@ -172,7 +236,6 @@ impl ProcState {
 /// byte-identical to the original's — the fidelity contract behind the
 /// lookahead scheduler's what-if rollouts, pinned by
 /// `prop_fork_is_byte_identical`.
-#[derive(Clone)]
 pub struct SimBackend {
     soc: SocSpec,
     cfg: SimConfig,
@@ -197,6 +260,45 @@ pub struct SimBackend {
     energy: EnergyMeter,
     power_series: TimeSeries,
     timeline: Vec<TimelineEvent>,
+}
+
+impl Clone for SimBackend {
+    fn clone(&self) -> Self {
+        SimBackend {
+            soc: self.soc.clone(),
+            cfg: self.cfg.clone(),
+            ambient: self.ambient,
+            procs: self.procs.clone(),
+            heap: self.heap.clone(),
+            seq: self.seq,
+            now: self.now,
+            last_tick: self.last_tick,
+            req_units: self.req_units.clone(),
+            energy: self.energy.clone(),
+            power_series: self.power_series.clone(),
+            timeline: self.timeline.clone(),
+        }
+    }
+    /// Field-wise `clone_from` so restoring into an existing backend
+    /// recycles its allocations (`Vec::clone_from` reuses element slots
+    /// and calls the elements' own `clone_from`; `BinaryHeap`/`HashMap`
+    /// likewise keep their buffers). A `#[derive(Clone)]` would fall back
+    /// to `*self = src.clone()` here — a full fresh deep copy — which is
+    /// exactly the per-candidate rollout cost this impl removes.
+    fn clone_from(&mut self, src: &Self) {
+        self.soc = src.soc.clone();
+        self.cfg = src.cfg.clone();
+        self.ambient = src.ambient;
+        self.procs.clone_from(&src.procs);
+        self.heap.clone_from(&src.heap);
+        self.seq = src.seq;
+        self.now = src.now;
+        self.last_tick = src.last_tick;
+        self.req_units.clone_from(&src.req_units);
+        self.energy = src.energy.clone();
+        self.power_series.clone_from(&src.power_series);
+        self.timeline.clone_from(&src.timeline);
+    }
 }
 
 impl SimBackend {
@@ -279,8 +381,14 @@ impl SimBackend {
         self.clone()
     }
 
-    /// Rewind to a previously taken [`fork`](SimBackend::fork) snapshot,
-    /// reusing this backend's allocations where the lengths line up.
+    /// Rewind to a previously taken [`fork`](SimBackend::fork) snapshot.
+    /// This is the allocation-recycling path: the manual
+    /// [`Clone::clone_from`] above copies field-wise, so the event heap,
+    /// per-processor vectors, series buffers, and the request census all
+    /// reuse this backend's existing storage — restoring a scratch fork
+    /// across lookahead candidates costs copies, not allocations. The
+    /// resulting state is byte-identical to a fresh `snap.clone()`
+    /// (`prop_fork_is_byte_identical` drives this through dirty reuse).
     pub fn restore(&mut self, snap: &SimBackend) {
         self.clone_from(snap);
     }
@@ -371,11 +479,19 @@ impl ExecutionBackend for SimBackend {
         let nsess =
             active_sessions_with(pstate, now, cmd.session).max(pstate.running.len() + 1);
         let mult = spec.contention_mult(nsess);
+        // Background device load (population heterogeneity): unmodeled
+        // co-resident work steals a fraction of the processor, stretching
+        // execution by 1/(1−bg). Guarded so bg_load = 0 leaves the
+        // computation untouched — byte-identical to the pre-knob sim.
+        let mut exec_c = exec * mult;
+        if self.cfg.bg_load > 0.0 {
+            exec_c /= 1.0 - self.cfg.bg_load.clamp(0.0, 0.95);
+        }
         // Weight cold-load latency is flash streaming — serialized
         // before execution, unscaled by DVFS or contention (0.0 on
         // unbudgeted runs, keeping this line bit-exact with the
         // pre-residency service time).
-        let service = exec * mult + cmd.load_ms + cmd.xfer_ms + cmd.mgmt_ms;
+        let service = exec_c + cmd.load_ms + cmd.xfer_ms + cmd.mgmt_ms;
         let run = Running {
             token: cmd.token,
             req: cmd.req,
@@ -447,6 +563,25 @@ impl ExecutionBackend for SimBackend {
 
     fn fork(&self) -> Option<Box<dyn ExecutionBackend>> {
         Some(Box::new(self.clone()))
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+
+    /// Recycling fork: when the scratch slot already holds a `SimBackend`
+    /// (the usual case — the driver keeps one slot across every rollout
+    /// candidate of a run), overwrite it in place via
+    /// [`restore`](SimBackend::restore) instead of deep-cloning.
+    fn fork_into(&self, scratch: &mut Option<Box<dyn ExecutionBackend>>) -> bool {
+        if let Some(b) = scratch.as_mut() {
+            if let Some(sb) = b.as_any_mut().and_then(|a| a.downcast_mut::<SimBackend>()) {
+                sb.restore(self);
+                return true;
+            }
+        }
+        *scratch = Some(Box::new(self.clone()));
+        true
     }
 
     fn next_event(&mut self) -> ExecEvent {

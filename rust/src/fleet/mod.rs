@@ -6,42 +6,60 @@
 //! device. This layer runs **N independent devices** — each one an
 //! evaluation *arm* ([`ArmSpec`]: SoC preset × scheduler × workload or
 //! scenario) with a per-device seed derived deterministically from the
-//! fleet seed — sharded across worker threads, and merges the per-device
-//! results into a [`FleetReport`] without ever shipping raw sample
-//! vectors between threads (per-device latency populations collapse into
-//! the fixed-size [`Digest`] histograms of `util::stats`).
+//! fleet seed — sharded across worker threads, and **streams** each
+//! per-device result into a per-arm [`FleetAgg`] the moment the device
+//! completes. Nothing per-device is ever materialized or shipped between
+//! threads: memory stays O(arms × workers) whether the fleet is six
+//! devices or six hundred thousand (the per-device latency population
+//! collapses into the fixed-size [`Digest`] histograms of `util::stats`,
+//! and the digest live-gauge test in `tests/fleet_rt.rs` pins the bound).
 //!
 //! ## Determinism
 //!
 //! `adms fleet --devices N --seed S` is bit-deterministic across worker
-//! counts, by construction:
+//! counts *and* across sharding orders, by construction:
 //!
 //! 1. device `d` always runs arm `d % arms` with seed
-//!    [`device_seed`]`(S, d)` — independent of which worker executes it;
+//!    [`device_seed`]`(S, d)` — independent of which worker executes it.
+//!    Workers claim *chunks* of device ids from a shared atomic cursor
+//!    (dynamic load balancing for uneven arms), but the claim order only
+//!    decides *who* runs a device, never *what* it runs;
 //! 2. each device simulation is seed-deterministic (the PR-2/PR-3
-//!    record-replay and rerun-identity properties);
-//! 3. per-device digests land in a slot indexed by device id, and the
-//!    final merge folds them **in device-id order on one thread** — so
-//!    every floating-point accumulation happens in the same order no
-//!    matter how the devices were sharded. Worker threads only decide
-//!    *when* a digest is produced, never how it is combined.
+//!    record-replay and rerun-identity properties), and population
+//!    sampling ([`PopulationSpec`]) draws from salted streams off the
+//!    device's own seed — a pure function of `(S, d)`;
+//! 3. the fold is **order-independent, not order-pinned**: every counter
+//!    is an exact u64/min/max fold, and every floating-point accumulator
+//!    ([`FleetAgg`]'s sums and the [`Digest`] mean) is a
+//!    [`util::stats::ExactSum`](crate::util::stats::ExactSum), whose
+//!    reported f64 is the correctly-rounded value of the *mathematical*
+//!    sum of its inputs. Racing workers may therefore absorb devices in
+//!    any interleaving and merge partials in any grouping — the bytes of
+//!    [`FleetReport::to_json`] cannot tell the difference. The
+//!    `#[doc(hidden)]` [`run_fleet_materialized`] referee (the old
+//!    collect-then-fold-in-device-order path) exists so the test suite
+//!    can prove that claim rather than assume it.
 //!
 //! The plan / window-tuning memo tables (`util::memo`) are mutex-guarded
 //! and keyed by graph fingerprint, so shards share one cached
 //! partitioning per (model, SoC, ws) instead of recomputing it per
 //! device.
 
+pub mod population;
 pub mod tournament;
 
+pub use population::PopulationSpec;
 pub use tournament::{run_tournament, TournamentReport, TournamentRow, TournamentSpec};
 
 use crate::exec::{RunSpec, SimConfig, SCHEDULER_NAMES};
+use crate::scenario::FleetEnvelope;
 use crate::sim::SimReport;
 use crate::soc::soc_by_name;
 use crate::util::json::Json;
 use crate::util::rng::splitmix64;
-use crate::util::stats::Digest;
+use crate::util::stats::{Digest, ExactSum};
 use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
 
 /// One evaluation arm of the fleet: which SoC preset the device is, which
 /// scheduling policy it runs, and what workload its user drives — plus an
@@ -189,6 +207,28 @@ pub struct FleetSpec {
     pub seed: u64,
     /// Per-device execution config; `cfg.seed` is overwritten per device.
     pub cfg: SimConfig,
+    /// Device-population heterogeneity: per-device SoC mix and
+    /// ambient/background-load jitter, sampled from each device's seed
+    /// stream. `None` = every device is exactly its arm's nominal spec.
+    pub population: Option<PopulationSpec>,
+    /// Fleet-wide arrival-rate envelope (diurnal cycle / flash crowd)
+    /// modulating every device's open-loop sessions on a shared
+    /// wall-clock schedule. `None` = arrivals as compiled.
+    pub envelope: Option<FleetEnvelope>,
+}
+
+/// Execution knobs for [`run_fleet_opts`] that change *how fast* the
+/// fleet runs, never *what* it computes.
+#[derive(Debug, Clone, Default)]
+pub struct FleetOptions {
+    /// Emit a stderr heartbeat (devices done / total, devices per
+    /// second) roughly once a second while the fleet runs.
+    pub progress: bool,
+    /// Devices claimed per cursor grab (`0` = auto:
+    /// `devices / (workers × 16)` clamped to `[1, 512]` — small enough
+    /// that uneven arms load-balance at 100k devices, large enough that
+    /// the cursor is not contended).
+    pub chunk: usize,
 }
 
 /// The seed device `d` simulates under in a fleet seeded `fleet_seed`:
@@ -198,9 +238,11 @@ pub fn device_seed(fleet_seed: u64, device: usize) -> u64 {
     splitmix64(splitmix64(fleet_seed) ^ splitmix64(device as u64 ^ 0x9e37_79b9_7f4a_7c15))
 }
 
-/// Everything the fleet keeps per device: counters and fixed-size
-/// digests, never raw samples — a thousand-device fleet ships a thousand
-/// of these across threads, not a thousand latency vectors.
+/// Everything the fleet extracts from one device's run: counters and a
+/// fixed-size latency digest, never raw samples. A digest is *transient*
+/// — built when the device's simulation returns, absorbed into the
+/// worker's per-arm [`FleetAgg`], and dropped — so live instances stay
+/// O(arms × workers) no matter the fleet size.
 #[derive(Debug, Clone)]
 pub struct DeviceDigest {
     pub device: usize,
@@ -292,10 +334,17 @@ impl DeviceDigest {
 
 /// Aggregate over a set of devices (one arm, or the whole fleet).
 /// (`Default` is the empty aggregate: zero devices, empty digest.)
+///
+/// The floating-point fields are [`ExactSum`] accumulators, so both
+/// [`absorb`](FleetAgg::absorb)ing devices and [`merge`](FleetAgg::merge)ing
+/// worker partials are order-independent down to the bit — the exactness
+/// the fleet's dynamic sharding leans on (module docs, point 3). Read
+/// them through the same-named accessor methods ([`sim_ms`](FleetAgg::sim_ms)
+/// etc.), which round the exact sum to f64 once.
 #[derive(Debug, Clone, Default)]
 pub struct FleetAgg {
     pub devices: u64,
-    pub sim_ms: f64,
+    pub sim_ms: ExactSum,
     pub issued: u64,
     pub completed: u64,
     pub failed: u64,
@@ -303,16 +352,16 @@ pub struct FleetAgg {
     pub latency: Digest,
     pub slo_ok: u64,
     pub slo_n: u64,
-    pub energy_j: f64,
+    pub energy_j: ExactSum,
     pub throttle_events: u64,
-    pub busy_frac_sum: f64,
+    pub busy_frac_sum: ExactSum,
     pub procs: u64,
     pub events: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
     pub cache_bytes_loaded: u64,
-    pub cold_load_ms: f64,
+    pub cold_load_ms: ExactSum,
     pub failed_budget: u64,
     pub failed_exec: u64,
     pub faulted: u64,
@@ -327,9 +376,11 @@ pub struct FleetAgg {
 }
 
 impl FleetAgg {
-    fn absorb(&mut self, d: &DeviceDigest) {
+    /// Fold one device in (streaming path — the digest is dropped by the
+    /// caller right after).
+    pub fn absorb(&mut self, d: &DeviceDigest) {
         self.devices += 1;
-        self.sim_ms += d.sim_ms;
+        self.sim_ms.add(d.sim_ms);
         self.issued += d.issued;
         self.completed += d.completed;
         self.failed += d.failed;
@@ -337,16 +388,16 @@ impl FleetAgg {
         self.latency.merge(&d.latency);
         self.slo_ok += d.slo_ok;
         self.slo_n += d.slo_n;
-        self.energy_j += d.energy_j;
+        self.energy_j.add(d.energy_j);
         self.throttle_events += d.throttle_events;
-        self.busy_frac_sum += d.busy_frac_sum;
+        self.busy_frac_sum.add(d.busy_frac_sum);
         self.procs += d.procs;
         self.events += d.events;
         self.cache_hits += d.cache_hits;
         self.cache_misses += d.cache_misses;
         self.cache_evictions += d.cache_evictions;
         self.cache_bytes_loaded += d.cache_bytes_loaded;
-        self.cold_load_ms += d.cold_load_ms;
+        self.cold_load_ms.add(d.cold_load_ms);
         self.failed_budget += d.failed_budget;
         self.failed_exec += d.failed_exec;
         self.faulted += d.faulted;
@@ -360,6 +411,61 @@ impl FleetAgg {
         self.replans_coarser += d.replans_coarser;
     }
 
+    /// Fold another aggregate in (worker-partial merge). Exact in every
+    /// field, so `a.merge(b)` and `b.merge(a)` report identical values.
+    pub fn merge(&mut self, o: &FleetAgg) {
+        self.devices += o.devices;
+        self.sim_ms.merge(&o.sim_ms);
+        self.issued += o.issued;
+        self.completed += o.completed;
+        self.failed += o.failed;
+        self.cancelled += o.cancelled;
+        self.latency.merge(&o.latency);
+        self.slo_ok += o.slo_ok;
+        self.slo_n += o.slo_n;
+        self.energy_j.merge(&o.energy_j);
+        self.throttle_events += o.throttle_events;
+        self.busy_frac_sum.merge(&o.busy_frac_sum);
+        self.procs += o.procs;
+        self.events += o.events;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.cache_evictions += o.cache_evictions;
+        self.cache_bytes_loaded += o.cache_bytes_loaded;
+        self.cold_load_ms.merge(&o.cold_load_ms);
+        self.failed_budget += o.failed_budget;
+        self.failed_exec += o.failed_exec;
+        self.faulted += o.faulted;
+        self.retries_exhausted += o.retries_exhausted;
+        self.retries += o.retries;
+        self.proc_fails += o.proc_fails;
+        self.proc_recovers += o.proc_recovers;
+        self.timeouts += o.timeouts;
+        self.replans += o.replans;
+        self.replans_finer += o.replans_finer;
+        self.replans_coarser += o.replans_coarser;
+    }
+
+    /// Total simulated span across the set's devices, ms.
+    pub fn sim_ms(&self) -> f64 {
+        self.sim_ms.value()
+    }
+
+    /// Total energy across the set's devices, J.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j.value()
+    }
+
+    /// Σ busy fraction over every (device × processor) in the set.
+    pub fn busy_frac_sum(&self) -> f64 {
+        self.busy_frac_sum.value()
+    }
+
+    /// Total cold-load stall across the set's devices, ms.
+    pub fn cold_load_ms(&self) -> f64 {
+        self.cold_load_ms.value()
+    }
+
     /// Exact SLO attainment over every SLO-scored request in the set.
     pub fn slo_satisfaction(&self) -> Option<f64> {
         if self.slo_n > 0 {
@@ -371,8 +477,9 @@ impl FleetAgg {
 
     /// Completed requests per simulated device-second.
     pub fn throughput_rps(&self) -> f64 {
-        if self.sim_ms > 0.0 {
-            self.completed as f64 / (self.sim_ms / 1e3)
+        let sim_ms = self.sim_ms();
+        if sim_ms > 0.0 {
+            self.completed as f64 / (sim_ms / 1e3)
         } else {
             0.0
         }
@@ -380,8 +487,9 @@ impl FleetAgg {
 
     /// Mean device power over the set, W.
     pub fn avg_watts(&self) -> f64 {
-        if self.sim_ms > 0.0 {
-            self.energy_j / (self.sim_ms / 1e3)
+        let sim_ms = self.sim_ms();
+        if sim_ms > 0.0 {
+            self.energy_j() / (sim_ms / 1e3)
         } else {
             0.0
         }
@@ -389,7 +497,7 @@ impl FleetAgg {
 
     pub fn avg_busy_frac(&self) -> f64 {
         if self.procs > 0 {
-            self.busy_frac_sum / self.procs as f64
+            self.busy_frac_sum() / self.procs as f64
         } else {
             0.0
         }
@@ -399,7 +507,7 @@ impl FleetAgg {
         let num_or_zero = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
         Json::obj(vec![
             ("devices", Json::Num(self.devices as f64)),
-            ("sim_ms", Json::Num(self.sim_ms)),
+            ("sim_ms", Json::Num(self.sim_ms())),
             ("issued", Json::Num(self.issued as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("failed", Json::Num(self.failed as f64)),
@@ -416,7 +524,7 @@ impl FleetAgg {
             ("latency_subsampled", Json::Bool(self.latency.is_subsampled())),
             ("slo_ok", Json::Num(self.slo_ok as f64)),
             ("slo_n", Json::Num(self.slo_n as f64)),
-            ("energy_j", Json::Num(self.energy_j)),
+            ("energy_j", Json::Num(self.energy_j())),
             ("avg_watts", Json::Num(self.avg_watts())),
             ("throughput_rps", Json::Num(self.throughput_rps())),
             ("throttle_events", Json::Num(self.throttle_events as f64)),
@@ -426,7 +534,7 @@ impl FleetAgg {
             ("cache_misses", Json::Num(self.cache_misses as f64)),
             ("cache_evictions", Json::Num(self.cache_evictions as f64)),
             ("cache_bytes_loaded", Json::Num(self.cache_bytes_loaded as f64)),
-            ("cold_load_ms", Json::Num(self.cold_load_ms)),
+            ("cold_load_ms", Json::Num(self.cold_load_ms())),
             ("failed_budget", Json::Num(self.failed_budget as f64)),
             ("failed_exec", Json::Num(self.failed_exec as f64)),
             ("faulted", Json::Num(self.faulted as f64)),
@@ -455,30 +563,62 @@ pub struct FleetReport {
     pub devices: usize,
     pub seed: u64,
     pub arms: Vec<ArmReport>,
-    /// Fleet-wide aggregate — folded over raw device digests in
-    /// device-id order (NOT over per-arm aggregates): that fold order is
-    /// what the bit-determinism guarantee and `tests/fleet_rt.rs`'s
-    /// byte-equality assertions pin down, so don't "simplify" it to an
-    /// arm-order fold (it would reorder the f64 accumulations).
+    /// Fleet-wide aggregate. Folded from the per-arm aggregates in arm
+    /// order — safe *because* every [`FleetAgg`] accumulator is exact
+    /// (the old device-id-order fold produces identical bytes; the
+    /// streaming-vs-materialized referee test holds both paths to that).
     pub total: FleetAgg,
+    /// The population the devices were drawn from, when heterogeneous.
+    pub population: Option<PopulationSpec>,
+    /// Label of the applied fleet-wide arrival envelope, if any.
+    pub envelope: Option<String>,
 }
 
 impl FleetReport {
-    fn merge(spec: &FleetSpec, digests: Vec<DeviceDigest>) -> Self {
+    /// The old materialized fold, kept verbatim as the streaming path's
+    /// referee: absorb raw device digests in device-id order.
+    fn merge_materialized(spec: &FleetSpec, digests: Vec<DeviceDigest>) -> Self {
         let mut arms: Vec<ArmReport> = spec
             .arms
             .iter()
             .map(|a| ArmReport { spec: a.clone(), agg: FleetAgg::default() })
             .collect();
         let mut total = FleetAgg::default();
-        // Device-id order: `digests` is indexed by device id, so both the
-        // per-arm and the fleet-wide folds see every device in the same
-        // order regardless of worker count.
         for d in &digests {
             arms[d.arm].agg.absorb(d);
             total.absorb(d);
         }
-        FleetReport { devices: spec.devices, seed: spec.seed, arms, total }
+        FleetReport {
+            devices: spec.devices,
+            seed: spec.seed,
+            arms,
+            total,
+            population: spec.population.clone(),
+            envelope: spec.envelope.as_ref().map(|e| e.label()),
+        }
+    }
+
+    /// Assemble the report from per-arm aggregates (streaming path): the
+    /// fleet total folds the arms in arm order.
+    fn from_arm_aggs(spec: &FleetSpec, aggs: Vec<FleetAgg>) -> Self {
+        let mut total = FleetAgg::default();
+        for a in &aggs {
+            total.merge(a);
+        }
+        let arms = spec
+            .arms
+            .iter()
+            .zip(aggs)
+            .map(|(s, agg)| ArmReport { spec: s.clone(), agg })
+            .collect();
+        FleetReport {
+            devices: spec.devices,
+            seed: spec.seed,
+            arms,
+            total,
+            population: spec.population.clone(),
+            envelope: spec.envelope.as_ref().map(|e| e.label()),
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -494,14 +634,26 @@ impl FleetReport {
                 Json::Obj(obj)
             })
             .collect();
-        Json::obj(vec![
+        let mut obj = match Json::obj(vec![
             ("devices", Json::Num(self.devices as f64)),
             // A string, not a number: the report is a reproducibility
             // record, and u64 seeds above 2^53 would round through f64.
             ("seed", Json::Str(self.seed.to_string())),
             ("arms", Json::Arr(arms)),
             ("total", self.total.to_json()),
-        ])
+        ]) {
+            Json::Obj(o) => o,
+            _ => unreachable!("report serializes as an object"),
+        };
+        // Only present when configured, so homogeneous-fleet reports keep
+        // their exact historical bytes.
+        if let Some(p) = &self.population {
+            obj.insert("population".into(), p.to_json());
+        }
+        if let Some(e) = &self.envelope {
+            obj.insert("fleet_scenario".into(), Json::Str(e.clone()));
+        }
+        Json::Obj(obj)
     }
 
     /// Render the per-arm table plus fleet totals for the CLI.
@@ -547,6 +699,12 @@ impl FleetReport {
             row(&a.spec.label(), &a.agg);
         }
         row("fleet total", &self.total);
+        if let Some(p) = &self.population {
+            let _ = writeln!(out, "population: {}", p.label());
+        }
+        if let Some(e) = &self.envelope {
+            let _ = writeln!(out, "fleet scenario: {e}");
+        }
         if self.total.cache_hits + self.total.cache_misses > 0 {
             let _ = writeln!(
                 out,
@@ -556,7 +714,7 @@ impl FleetReport {
                 self.total.cache_misses,
                 self.total.cache_evictions,
                 self.total.cache_bytes_loaded as f64 / (1u64 << 20) as f64,
-                self.total.cold_load_ms,
+                self.total.cold_load_ms(),
             );
         }
         let t = &self.total;
@@ -587,64 +745,221 @@ impl FleetReport {
     }
 }
 
-/// What one worker shard returns: (device id, digest) pairs, or the
-/// first device error it hit.
-type ShardResult = Result<Vec<(usize, DeviceDigest)>>;
+/// The fleet's shared, pre-resolved execution state: one warmed
+/// [`RunSpec`] per (arm × population-SoC) variant, built once on one
+/// thread before any worker starts. `run_device` is a pure function of
+/// the device id from here on — that is the whole determinism story.
+struct FleetRuntime<'a> {
+    spec: &'a FleetSpec,
+    /// `variants[arm][v]`: `v` indexes the population's SoC mix
+    /// (declaration order), or the single nominal spec when homogeneous.
+    variants: Vec<Vec<RunSpec>>,
+}
 
-/// Run the fleet, sharded over `workers` threads. Device `d` runs arm
-/// `d % arms` under seed [`device_seed`]`(spec.seed, d)`; results merge
-/// in device-id order (see the module docs for the determinism argument).
+impl<'a> FleetRuntime<'a> {
+    fn prepare(spec: &'a FleetSpec) -> Result<Self> {
+        if spec.arms.is_empty() {
+            bail!("fleet has no arms: give at least one (soc, scheduler, workload) triple");
+        }
+        if spec.devices == 0 {
+            bail!("fleet has no devices (--devices must be ≥ 1)");
+        }
+        if let Some(p) = &spec.population {
+            p.validate()?;
+        }
+        // Resolve and validate every variant up front, on one thread, and
+        // warm the plan/tuning memo tables (`RunSpec::warm_caches` really
+        // builds the plans) so the shards start from shared cached
+        // partitionings instead of racing to compute them N ways on a
+        // cold process. The fleet envelope is applied here, once per
+        // variant — it is a pure function of (compiled workload,
+        // envelope, horizon), so every device of a variant shares the
+        // same modulated event schedule.
+        let mut variants = Vec::with_capacity(spec.arms.len());
+        for arm in &spec.arms {
+            // An empty mix means "conditions only": each arm keeps its
+            // nominal SoC and every device lands on variant 0.
+            let socs: Vec<String> = match &spec.population {
+                Some(p) if !p.soc_mix.is_empty() => {
+                    p.soc_names().iter().map(|s| s.to_string()).collect()
+                }
+                _ => vec![arm.soc.clone()],
+            };
+            let mut v = Vec::with_capacity(socs.len());
+            for soc in socs {
+                let variant = ArmSpec { soc, ..arm.clone() };
+                let mut rs = variant.to_run_spec(&spec.cfg)?;
+                if let Some(env) = &spec.envelope {
+                    env.apply(&mut rs.apps, &mut rs.events, rs.cfg.duration_ms);
+                }
+                rs.warm_caches().map_err(|e| anyhow!("arm '{}': {e}", variant.label()))?;
+                v.push(rs);
+            }
+            variants.push(v);
+        }
+        Ok(FleetRuntime { spec, variants })
+    }
+
+    /// Simulate device `d` and collapse its report to a digest. Same
+    /// output for the same `d` no matter which worker calls this, when.
+    fn run_device(&self, d: usize) -> Result<DeviceDigest> {
+        let arm = d % self.variants.len();
+        let dseed = device_seed(self.spec.seed, d);
+        let variant = match &self.spec.population {
+            Some(p) => p.sample_soc_index(dseed),
+            None => 0,
+        };
+        let mut rs = self.variants[arm][variant].clone();
+        rs.cfg.seed = dseed;
+        if let Some(p) = &self.spec.population {
+            let preset = rs.cfg.ambient_c.unwrap_or(rs.soc.ambient_c);
+            if let Some(a) = p.sample_ambient_c(dseed, preset) {
+                rs.cfg.ambient_c = Some(a);
+            }
+            if let Some(bg) = p.sample_bg_load(dseed) {
+                rs.cfg.bg_load = bg;
+            }
+        }
+        let report = rs
+            .run_sim()
+            .map_err(|e| anyhow!("device {d} (arm '{}'): {e}", self.spec.arms[arm].label()))?;
+        Ok(DeviceDigest::from_report(d, arm, dseed, &report))
+    }
+}
+
+/// Decrements a counter on scope exit — including panic unwind, so the
+/// progress poller can never spin on a dead worker.
+struct DecOnDrop<'a>(&'a AtomicUsize);
+
+impl Drop for DecOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Relaxed);
+    }
+}
+
+/// Poll the shared progress counters from the coordinating thread,
+/// printing a stderr heartbeat about once a second until the fleet
+/// drains, errors, or every worker exits.
+fn progress_loop(total: u64, done: &AtomicU64, failed: &AtomicBool, live: &AtomicUsize) {
+    let t0 = std::time::Instant::now();
+    let mut ticks = 0u32;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        let dn = done.load(Relaxed);
+        if dn >= total || failed.load(Relaxed) || live.load(Relaxed) == 0 {
+            break;
+        }
+        ticks += 1;
+        if ticks % 4 == 0 {
+            let rate = dn as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+            eprintln!("fleet: {dn}/{total} devices ({rate:.0} dev/s)");
+        }
+    }
+    let dn = done.load(Relaxed);
+    let secs = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "fleet: {dn}/{total} devices done in {secs:.1}s ({:.0} dev/s)",
+        dn as f64 / secs.max(1e-9)
+    );
+}
+
+/// Run the fleet with default [`FleetOptions`]. Device `d` runs arm
+/// `d % arms` under seed [`device_seed`]`(spec.seed, d)`; per-device
+/// results stream into per-arm aggregates (see the module docs for the
+/// determinism argument and the O(arms × workers) memory bound).
 pub fn run_fleet(spec: &FleetSpec, workers: usize) -> Result<FleetReport> {
-    if spec.arms.is_empty() {
-        bail!("fleet has no arms: give at least one (soc, scheduler, workload) triple");
-    }
-    if spec.devices == 0 {
-        bail!("fleet has no devices (--devices must be ≥ 1)");
-    }
-    // Resolve and validate every arm up front, on one thread, and warm
-    // the plan/tuning memo tables (`RunSpec::warm_caches` really builds
-    // the plans) so the shards start from shared cached partitionings
-    // instead of racing to compute them N ways on a cold process.
-    let run_specs: Vec<RunSpec> =
-        spec.arms.iter().map(|a| a.to_run_spec(&spec.cfg)).collect::<Result<_>>()?;
-    for (rs, arm) in run_specs.iter().zip(&spec.arms) {
-        rs.warm_caches().map_err(|e| anyhow!("arm '{}': {e}", arm.label()))?;
-    }
-    let workers = workers.clamp(1, spec.devices);
+    run_fleet_opts(spec, workers, &FleetOptions::default())
+}
 
-    let results: Vec<ShardResult> = std::thread::scope(|scope| {
-        let run_specs = &run_specs;
+/// [`run_fleet`] with execution knobs (progress heartbeat, claim-chunk
+/// size). The knobs never change the report's bytes.
+pub fn run_fleet_opts(
+    spec: &FleetSpec,
+    workers: usize,
+    opts: &FleetOptions,
+) -> Result<FleetReport> {
+    let rt = FleetRuntime::prepare(spec)?;
+    let n_arms = spec.arms.len();
+    let workers = workers.clamp(1, spec.devices);
+    let chunk = if opts.chunk > 0 {
+        opts.chunk
+    } else {
+        (spec.devices / (workers * 16)).clamp(1, 512)
+    };
+
+    // Dynamic sharding: workers claim half-open chunks [start, start+chunk)
+    // of device ids from a shared cursor until it passes the end. A slow
+    // chunk (heavy arm, hot device) just means that worker claims fewer
+    // chunks — no static assignment to straggle on.
+    let cursor = AtomicUsize::new(0);
+    let done = AtomicU64::new(0);
+    let failed = AtomicBool::new(false);
+    let live = AtomicUsize::new(workers);
+
+    let results: Vec<Result<Vec<FleetAgg>>> = std::thread::scope(|scope| {
+        let rt = &rt;
+        let (cursor, done, failed, live) = (&cursor, &done, &failed, &live);
         let handles: Vec<_> = (0..workers)
-            .map(|w| {
+            .map(|_| {
                 scope.spawn(move || {
-                    let mut out = Vec::new();
-                    let mut d = w;
-                    while d < spec.devices {
-                        let arm = d % run_specs.len();
-                        let mut rs = run_specs[arm].clone();
-                        rs.cfg.seed = device_seed(spec.seed, d);
-                        let report = rs.run_sim().map_err(|e| {
-                            anyhow!("device {d} (arm '{}'): {e}", spec.arms[arm].label())
-                        })?;
-                        out.push((d, DeviceDigest::from_report(d, arm, rs.cfg.seed, &report)));
-                        d += workers;
+                    let _live = DecOnDrop(live);
+                    let mut aggs: Vec<FleetAgg> =
+                        (0..n_arms).map(|_| FleetAgg::default()).collect();
+                    loop {
+                        let start = cursor.fetch_add(chunk, Relaxed);
+                        if start >= spec.devices {
+                            return Ok(aggs);
+                        }
+                        for d in start..(start + chunk).min(spec.devices) {
+                            if failed.load(Relaxed) {
+                                return Ok(aggs);
+                            }
+                            match rt.run_device(d) {
+                                Ok(dig) => {
+                                    aggs[dig.arm].absorb(&dig);
+                                    done.fetch_add(1, Relaxed);
+                                }
+                                Err(e) => {
+                                    failed.store(true, Relaxed);
+                                    return Err(e);
+                                }
+                            }
+                        }
                     }
-                    Ok(out)
                 })
             })
             .collect();
+        if opts.progress {
+            progress_loop(spec.devices as u64, done, failed, live);
+        }
         handles.into_iter().map(|h| h.join().expect("fleet worker panicked")).collect()
     });
 
-    let mut digests: Vec<Option<DeviceDigest>> = vec![None; spec.devices];
+    // Merge worker partials per arm. Exactness makes the worker order
+    // irrelevant; we still iterate in spawn order because it is the
+    // natural one.
+    let mut arm_aggs: Vec<FleetAgg> = (0..n_arms).map(|_| FleetAgg::default()).collect();
     for r in results {
-        for (d, dig) in r? {
-            digests[d] = Some(dig);
+        for (a, p) in arm_aggs.iter_mut().zip(&r?) {
+            a.merge(p);
         }
     }
-    let digests: Vec<DeviceDigest> =
-        digests.into_iter().map(|d| d.expect("every device simulated")).collect();
-    Ok(FleetReport::merge(spec, digests))
+    Ok(FleetReport::from_arm_aggs(spec, arm_aggs))
+}
+
+/// Reference implementation: run every device on the calling thread,
+/// materialize all digests, and fold them in device-id order — the
+/// pre-streaming semantics, O(devices) memory and all. Exists so
+/// `tests/fleet_rt.rs` can hold [`run_fleet`]'s byte-exactness to an
+/// independent implementation; never call it for real work.
+#[doc(hidden)]
+pub fn run_fleet_materialized(spec: &FleetSpec) -> Result<FleetReport> {
+    let rt = FleetRuntime::prepare(spec)?;
+    let mut digests = Vec::with_capacity(spec.devices);
+    for d in 0..spec.devices {
+        digests.push(rt.run_device(d)?);
+    }
+    Ok(FleetReport::merge_materialized(spec, digests))
 }
 
 #[cfg(test)]
@@ -696,5 +1011,71 @@ mod tests {
         assert!(adaptive.label().contains("adaptive reactive"));
         let bad_mode = ArmSpec::new("dimensity9000", "adms", "frs").adaptive("wat");
         assert!(bad_mode.to_run_spec(&cfg).is_err());
+    }
+
+    #[test]
+    fn agg_merge_equals_absorb_for_split_sets() {
+        // Synthesize digests with adversarial float magnitudes and check
+        // that (absorb all) == (absorb halves, merge) on the exact sums.
+        let mk = |i: usize| {
+            let mut latency = Digest::new();
+            latency.add(0.5 + i as f64);
+            DeviceDigest {
+                device: i,
+                arm: 0,
+                seed: device_seed(1, i),
+                sim_ms: if i % 2 == 0 { 1e16 } else { 1e-8 },
+                issued: 3,
+                completed: 2,
+                failed: 1,
+                cancelled: 0,
+                latency,
+                slo_ok: 1,
+                slo_n: 2,
+                energy_j: 0.1 * (i as f64 + 1.0),
+                throttle_events: 0,
+                busy_frac_sum: (i as f64).sin(),
+                procs: 4,
+                events: 10,
+                cache_hits: 0,
+                cache_misses: 0,
+                cache_evictions: 0,
+                cache_bytes_loaded: 0,
+                cold_load_ms: 1.0 / (i as f64 + 3.0),
+                failed_budget: 0,
+                failed_exec: 1,
+                faulted: 0,
+                retries_exhausted: 0,
+                retries: 0,
+                proc_fails: 0,
+                proc_recovers: 0,
+                timeouts: 0,
+                replans: 0,
+                replans_finer: 0,
+                replans_coarser: 0,
+            }
+        };
+        let digests: Vec<DeviceDigest> = (0..64).map(mk).collect();
+        let mut whole = FleetAgg::default();
+        for d in &digests {
+            whole.absorb(d);
+        }
+        let mut lo = FleetAgg::default();
+        let mut hi = FleetAgg::default();
+        for d in &digests[..31] {
+            lo.absorb(d);
+        }
+        for d in &digests[31..] {
+            hi.absorb(d);
+        }
+        // Merge in the "wrong" (hi-first) order on purpose.
+        let mut merged = FleetAgg::default();
+        merged.merge(&hi);
+        merged.merge(&lo);
+        assert_eq!(whole.sim_ms().to_bits(), merged.sim_ms().to_bits());
+        assert_eq!(whole.energy_j().to_bits(), merged.energy_j().to_bits());
+        assert_eq!(whole.busy_frac_sum().to_bits(), merged.busy_frac_sum().to_bits());
+        assert_eq!(whole.cold_load_ms().to_bits(), merged.cold_load_ms().to_bits());
+        assert_eq!(whole.devices, merged.devices);
     }
 }

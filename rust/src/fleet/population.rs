@@ -1,0 +1,292 @@
+//! Samplable device-population heterogeneity for fleet runs.
+//!
+//! The "Potentials and Pitfalls" paper's field observation is that
+//! per-device variability — which SoC a user actually has, how hot their
+//! pocket is, what else their phone is doing — dominates real-world
+//! inference latency distributions. A [`PopulationSpec`] makes that
+//! variability samplable: a weighted device-mix over SoC presets plus
+//! per-device ambient-temperature and background-load jitter, every draw
+//! taken from a salted stream off the device's own
+//! [`device_seed`](super::device_seed) — so the population a device
+//! lands on is a pure function of `(fleet seed, device id)`, independent
+//! of sharding, worker count, and completion order, exactly like its
+//! arrival sequence.
+//!
+//! No-op discipline: a population of one SoC equal to the arm's own,
+//! with no ambient override and zero jitter, leaves every `RunSpec`
+//! byte-identical to the population-free build (`fleet_rt::
+//! degenerate_population_is_byte_identical_noop` pins this): the SoC
+//! sample picks variant 0 = the base spec, and the jitter path never
+//! touches `cfg.ambient_c` / `cfg.bg_load`.
+
+use crate::soc::{soc_by_name, SOC_NAMES};
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+use anyhow::{bail, Context, Result};
+
+/// Background load is capped below 1.0 (a device fully consumed by
+/// background work would never finish anything — and the sim's service
+/// scaling 1/(1−bg) diverges).
+const BG_MAX: f64 = 0.9;
+
+/// A device-population distribution: who actually runs the fleet's
+/// workload, and under what local conditions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PopulationSpec {
+    /// Weighted SoC mix: `(preset name, weight > 0)`. Sampling replaces
+    /// each arm's nominal SoC per device. Empty = keep every arm's own
+    /// SoC (conditions-only population).
+    pub soc_mix: Vec<(String, f64)>,
+    /// Ambient mean, °C (`None` = each sampled SoC's own preset ambient).
+    pub ambient_mean_c: Option<f64>,
+    /// Uniform ambient jitter half-width, °C: each device draws ambient
+    /// in `mean ± jitter`.
+    pub ambient_jitter_c: f64,
+    /// Mean background load fraction in `[0, 0.9]` (see
+    /// [`SimConfig::bg_load`](crate::exec::SimConfig)).
+    pub bg_mean: f64,
+    /// Uniform background-load jitter half-width (draws clamp to
+    /// `[0, 0.9]`).
+    pub bg_jitter: f64,
+}
+
+impl PopulationSpec {
+    /// A uniform mix over the given presets, conditions at defaults.
+    pub fn uniform(socs: &[&str]) -> Self {
+        PopulationSpec {
+            soc_mix: socs.iter().map(|s| (s.to_string(), 1.0)).collect(),
+            ambient_mean_c: None,
+            ambient_jitter_c: 0.0,
+            bg_mean: 0.0,
+            bg_jitter: 0.0,
+        }
+    }
+
+    /// Parse the CLI mix grammar: `all` (every preset, equal weight) or
+    /// `name[:weight],name[:weight],...` (weights default to 1).
+    pub fn parse_mix(s: &str) -> Result<Self> {
+        if s == "all" {
+            return Ok(Self::uniform(&SOC_NAMES));
+        }
+        let mut mix = Vec::new();
+        if s.is_empty() {
+            bail!("population mix is empty (try --population all)");
+        }
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (name, w) = match part.split_once(':') {
+                Some((n, w)) => {
+                    (n, w.parse::<f64>().with_context(|| format!("mix weight in '{part}'"))?)
+                }
+                None => (part, 1.0),
+            };
+            mix.push((name.to_string(), w));
+        }
+        let spec = PopulationSpec { soc_mix: mix, ..Self::uniform(&[]) };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, w) in &self.soc_mix {
+            if soc_by_name(name).is_none() {
+                bail!(
+                    "population mix: unknown soc '{name}' (expected one of: {})",
+                    SOC_NAMES.join(", ")
+                );
+            }
+            if !w.is_finite() || *w <= 0.0 {
+                bail!("population mix: weight for '{name}' must be positive, got {w}");
+            }
+        }
+        if !self.ambient_jitter_c.is_finite() || self.ambient_jitter_c < 0.0 {
+            bail!("ambient jitter must be a finite non-negative °C value");
+        }
+        if let Some(m) = self.ambient_mean_c {
+            if !m.is_finite() {
+                bail!("ambient mean must be finite");
+            }
+        }
+        if !(0.0..=BG_MAX).contains(&self.bg_mean) {
+            bail!("bg load mean must be in [0, {BG_MAX}], got {}", self.bg_mean);
+        }
+        if !self.bg_jitter.is_finite() || self.bg_jitter < 0.0 {
+            bail!("bg load jitter must be finite and non-negative");
+        }
+        Ok(())
+    }
+
+    /// The mix's preset names, in declaration order (variant indices for
+    /// the fleet's pre-resolved per-arm `RunSpec` table follow this).
+    pub fn soc_names(&self) -> Vec<&str> {
+        self.soc_mix.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Which mix variant device with seed `dev_seed` lands on: a weighted
+    /// draw from the device's salted population stream.
+    pub fn sample_soc_index(&self, dev_seed: u64) -> usize {
+        if self.soc_mix.len() <= 1 {
+            return 0;
+        }
+        let total: f64 = self.soc_mix.iter().map(|(_, w)| w).sum();
+        let mut x = unit_draw(dev_seed, SALT_SOC) * total;
+        for (i, (_, w)) in self.soc_mix.iter().enumerate() {
+            if x < *w {
+                return i;
+            }
+            x -= w;
+        }
+        self.soc_mix.len() - 1
+    }
+
+    /// Per-device ambient draw, °C, around `mean ± jitter` (`None` when
+    /// the spec leaves ambient entirely at the preset default — the
+    /// caller must then not touch `cfg.ambient_c`, preserving the no-op).
+    pub fn sample_ambient_c(&self, dev_seed: u64, preset_ambient_c: f64) -> Option<f64> {
+        if self.ambient_mean_c.is_none() && self.ambient_jitter_c == 0.0 {
+            return None;
+        }
+        let mean = self.ambient_mean_c.unwrap_or(preset_ambient_c);
+        Some(mean + (2.0 * unit_draw(dev_seed, SALT_AMBIENT) - 1.0) * self.ambient_jitter_c)
+    }
+
+    /// Per-device background-load draw in `[0, 0.9]` (`None` when the
+    /// spec models no background load at all).
+    pub fn sample_bg_load(&self, dev_seed: u64) -> Option<f64> {
+        if self.bg_mean == 0.0 && self.bg_jitter == 0.0 {
+            return None;
+        }
+        let bg = self.bg_mean + (2.0 * unit_draw(dev_seed, SALT_BG) - 1.0) * self.bg_jitter;
+        Some(bg.clamp(0.0, BG_MAX))
+    }
+
+    /// Human label for reports.
+    pub fn label(&self) -> String {
+        let mut l = if self.soc_mix.is_empty() {
+            "nominal socs".to_string()
+        } else {
+            let mix = self
+                .soc_mix
+                .iter()
+                .map(|(n, w)| format!("{n}:{w}"))
+                .collect::<Vec<_>>()
+                .join(",");
+            format!("mix {mix}")
+        };
+        if self.ambient_mean_c.is_some() || self.ambient_jitter_c > 0.0 {
+            let mean = self
+                .ambient_mean_c
+                .map(|m| format!("{m}"))
+                .unwrap_or_else(|| "preset".into());
+            l.push_str(&format!(", ambient {mean}±{} °C", self.ambient_jitter_c));
+        }
+        if self.bg_mean > 0.0 || self.bg_jitter > 0.0 {
+            l.push_str(&format!(", bg {}±{}", self.bg_mean, self.bg_jitter));
+        }
+        l
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "soc_mix",
+                Json::Arr(
+                    self.soc_mix
+                        .iter()
+                        .map(|(n, w)| {
+                            Json::obj(vec![
+                                ("soc", Json::Str(n.clone())),
+                                ("weight", Json::Num(*w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "ambient_mean_c",
+                self.ambient_mean_c.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("ambient_jitter_c", Json::Num(self.ambient_jitter_c)),
+            ("bg_mean", Json::Num(self.bg_mean)),
+            ("bg_jitter", Json::Num(self.bg_jitter)),
+        ])
+    }
+}
+
+// Distinct salts keep the population draws decorrelated from each other
+// AND from the device's simulation streams (which consume the unsalted
+// device seed through Pcg32).
+const SALT_SOC: u64 = 0x5ca1ab1e_0000_0001;
+const SALT_AMBIENT: u64 = 0x5ca1ab1e_0000_0002;
+const SALT_BG: u64 = 0x5ca1ab1e_0000_0003;
+
+/// One uniform draw in `[0, 1)` from the device's salted stream — a pure
+/// function of `(device seed, salt)`.
+fn unit_draw(dev_seed: u64, salt: u64) -> f64 {
+    let u = splitmix64(dev_seed ^ splitmix64(salt));
+    (u >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_mix_grammar() {
+        let all = PopulationSpec::parse_mix("all").unwrap();
+        assert_eq!(all.soc_mix.len(), SOC_NAMES.len());
+        let two = PopulationSpec::parse_mix("dimensity9000:3,kirin970").unwrap();
+        assert_eq!(
+            two.soc_mix,
+            vec![("dimensity9000".to_string(), 3.0), ("kirin970".to_string(), 1.0)]
+        );
+        assert!(PopulationSpec::parse_mix("").is_err());
+        assert!(PopulationSpec::parse_mix("notasoc").is_err());
+        assert!(PopulationSpec::parse_mix("kirin970:-1").is_err());
+        assert!(PopulationSpec::parse_mix("kirin970:wat").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_weighted() {
+        let p = PopulationSpec::parse_mix("dimensity9000:9,snapdragon835:1").unwrap();
+        let mut counts = [0usize; 2];
+        for d in 0..2000u64 {
+            let seed = crate::fleet::device_seed(42, d as usize);
+            let i = p.sample_soc_index(seed);
+            assert_eq!(i, p.sample_soc_index(seed), "sampling must be pure");
+            counts[i] += 1;
+        }
+        // 9:1 mix: the heavy preset dominates (loose bound, seeded draw).
+        assert!(counts[0] > counts[1] * 4, "mix weights ignored: {counts:?}");
+    }
+
+    #[test]
+    fn condition_sampling_respects_the_noop_contract() {
+        let quiet = PopulationSpec::uniform(&["kirin970"]);
+        assert_eq!(quiet.sample_ambient_c(123, 25.0), None);
+        assert_eq!(quiet.sample_bg_load(123), None);
+        let mut hot = quiet.clone();
+        hot.ambient_mean_c = Some(35.0);
+        hot.ambient_jitter_c = 5.0;
+        hot.bg_mean = 0.3;
+        hot.bg_jitter = 0.2;
+        hot.validate().unwrap();
+        for d in 0..200u64 {
+            let seed = crate::fleet::device_seed(7, d as usize);
+            let a = hot.sample_ambient_c(seed, 25.0).unwrap();
+            assert!((30.0..=40.0).contains(&a), "ambient {a} out of mean±jitter");
+            let bg = hot.sample_bg_load(seed).unwrap();
+            assert!((0.0..=0.5 + 1e-12).contains(&bg), "bg {bg} out of range");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_conditions() {
+        let mut p = PopulationSpec::uniform(&["kirin970"]);
+        p.bg_mean = 0.95;
+        assert!(p.validate().is_err());
+        p.bg_mean = 0.2;
+        p.validate().unwrap();
+        p.ambient_jitter_c = -1.0;
+        assert!(p.validate().is_err());
+    }
+}

@@ -158,6 +158,8 @@ pub fn run_tournament(spec: &TournamentSpec, workers: usize) -> Result<Tournamen
         arms,
         seed: spec.seed,
         cfg: spec.cfg.clone(),
+        population: None,
+        envelope: None,
     };
     let report = run_fleet(&fleet, workers)?;
     // Device d runs arm d % arms, so with devices = cells × per_arm every

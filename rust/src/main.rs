@@ -770,9 +770,10 @@ fn maybe_record(
 /// `adms fleet`: simulate a population of devices. Arms are the cross
 /// product of `--socs × --scheds × --workloads`; device `i` runs arm
 /// `i % arms` under a seed derived from `--seed` and `i`. The report is
-/// bit-identical for any `--workers` value (the merge is device-ordered).
+/// bit-identical for any `--workers` value (per-device results stream
+/// into exact per-arm accumulators, so the fold order can't show).
 fn cmd_fleet(argv: &[String]) -> Result<()> {
-    use adms::fleet::{run_fleet, ArmSpec, FleetSpec};
+    use adms::fleet::{run_fleet_opts, ArmSpec, FleetOptions, FleetSpec, PopulationSpec};
     let specs = [
         OptSpec { name: "devices", takes_value: true, help: "number of simulated devices", default: Some("8") },
         OptSpec { name: "seed", takes_value: true, help: "fleet seed (per-device seeds derive from it)", default: Some("42") },
@@ -798,6 +799,14 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         OptSpec { name: "horizon", takes_value: true, help: "lookahead arms: rollout completions observed before scoring (0 = degenerate to --base)", default: Some("2") },
         OptSpec { name: "beam", takes_value: true, help: "lookahead arms: candidate processors per decision", default: Some("3") },
         OptSpec { name: "base", takes_value: true, help: "lookahead arms: base policy (vanilla|band|adms|pinned)", default: Some("adms") },
+        OptSpec { name: "population", takes_value: true, help: "device-mix over SoC presets: 'all' or name[:weight],... (overrides each arm's --socs entry per device)", default: None },
+        OptSpec { name: "ambient-mean", takes_value: true, help: "population: mean ambient °C (default: each sampled SoC's preset ambient)", default: None },
+        OptSpec { name: "ambient-jitter", takes_value: true, help: "population: uniform ambient jitter half-width, °C, per device", default: Some("0") },
+        OptSpec { name: "bg-load", takes_value: true, help: "population: mean background-load fraction in [0,0.9] stretching on-device service times", default: Some("0") },
+        OptSpec { name: "bg-jitter", takes_value: true, help: "population: uniform background-load jitter half-width, per device", default: Some("0") },
+        OptSpec { name: "fleet-scenario", takes_value: true, help: "fleet-wide arrival envelope: diurnal[:period=MS,low=F,high=F,steps=N] or flash[:at=MS,width=MS,mult=F,steps=N]", default: None },
+        OptSpec { name: "progress", takes_value: false, help: "stderr heartbeat: devices done/total and devices/sec, about once a second", default: None },
+        OptSpec { name: "chunk", takes_value: true, help: "devices claimed per work-grab (0 = auto; never affects results)", default: Some("0") },
         OptSpec { name: "json", takes_value: true, help: "also write the FleetReport as JSON here", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
@@ -881,11 +890,40 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         replan_threshold: args.get_f64("replan-threshold", 0.5)?.clamp(0.0, 1.0),
         ..Default::default()
     };
+    // Population heterogeneity: a SoC mix and/or per-device condition
+    // jitter. Condition flags work without --population (the mix then
+    // stays each arm's nominal SoC).
+    let population = {
+        let mut p = match args.get("population") {
+            Some(mix) => PopulationSpec::parse_mix(mix)?,
+            None => PopulationSpec::uniform(&[]),
+        };
+        p.ambient_mean_c = match args.get("ambient-mean") {
+            Some(_) => Some(args.get_f64("ambient-mean", 0.0)?),
+            None => None,
+        };
+        p.ambient_jitter_c = args.get_f64("ambient-jitter", 0.0)?;
+        p.bg_mean = args.get_f64("bg-load", 0.0)?;
+        p.bg_jitter = args.get_f64("bg-jitter", 0.0)?;
+        p.validate()?;
+        let configured = !p.soc_mix.is_empty()
+            || p.ambient_mean_c.is_some()
+            || p.ambient_jitter_c > 0.0
+            || p.bg_mean > 0.0
+            || p.bg_jitter > 0.0;
+        configured.then_some(p)
+    };
+    let envelope = args
+        .get("fleet-scenario")
+        .map(adms::scenario::FleetEnvelope::parse)
+        .transpose()?;
     let spec = FleetSpec {
         arms,
         devices: args.get_usize("devices", 8)?,
         seed: args.get_u64("seed", 42)?,
         cfg,
+        population,
+        envelope,
     };
     let workers = match args.get_usize("workers", 0)? {
         0 => adms::util::env::fleet_workers().unwrap_or_else(|| {
@@ -893,8 +931,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         }),
         n => n,
     };
+    let opts = FleetOptions {
+        progress: args.flag("progress"),
+        chunk: args.get_usize("chunk", 0)?,
+    };
     let t0 = std::time::Instant::now();
-    let report = run_fleet(&spec, workers)?;
+    let report = run_fleet_opts(&spec, workers, &opts)?;
     let wall_s = t0.elapsed().as_secs_f64();
     println!(
         "fleet: {} devices × {} arm(s), seed {}, {} workers",
@@ -906,9 +948,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     print!("{}", report.render());
     println!(
         "simulated {:.1} device-seconds in {:.2} s wall ({:.0} sim-ms/wall-s), {} driver events",
-        report.total.sim_ms / 1e3,
+        report.total.sim_ms() / 1e3,
         wall_s,
-        report.total.sim_ms / wall_s.max(1e-9),
+        report.total.sim_ms() / wall_s.max(1e-9),
         report.total.events
     );
     if let Some(path) = args.get("json") {
@@ -1022,11 +1064,15 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         OptSpec { name: "out", takes_value: true, help: "results file (JSON)", default: Some("BENCH_sim.json") },
         OptSpec { name: "json", takes_value: false, help: "also print the JSON to stdout", default: None },
         OptSpec { name: "check", takes_value: false, help: "fail if events/sec regresses >20% vs the existing --out file (read before overwriting)", default: None },
+        OptSpec { name: "strict", takes_value: false, help: "with --check: a missing baseline is an error, not a warning", default: None },
         OptSpec { name: "help", takes_value: false, help: "show help", default: None },
     ];
     let args = parse(argv, &specs)?;
     if args.flag("help") {
-        println!("{}", render_help("adms bench [--out FILE] [--json] [--check]", &specs));
+        println!(
+            "{}",
+            render_help("adms bench [--out FILE] [--json] [--check [--strict]]", &specs)
+        );
         println!("budget per measurement: ADMS_BENCH_MS (ms, default 300)");
         return Ok(());
     }
@@ -1036,8 +1082,17 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     let baseline = if args.flag("check") {
         match std::fs::read_to_string(&path) {
             Ok(text) => Some(bench_baseline(&text)?),
-            Err(_) => {
-                println!("bench --check: no baseline at {path}; measuring without a gate");
+            Err(e) => {
+                if args.flag("strict") {
+                    bail!(
+                        "bench --check --strict: no baseline at {path} ({e}); run `adms \
+                         bench --out {path}` on a quiet machine and commit it first"
+                    );
+                }
+                eprintln!(
+                    "warning: bench --check has no baseline at {path} ({e}) — measuring \
+                     WITHOUT a regression gate (pass --strict to make this fatal)"
+                );
                 None
             }
         }

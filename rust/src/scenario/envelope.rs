@@ -1,0 +1,321 @@
+//! Fleet-level arrival envelopes: diurnal and flash-crowd load shapes
+//! applied on a **shared wall-clock** across every device of a fleet run
+//! (`adms fleet --fleet-scenario`). The envelope multiplies each
+//! session's arrival rate by a time-varying factor, compiled down to the
+//! plain [`EventKind::Rate`] events the driver already understands — so
+//! record/replay, fleet determinism, and both backends see nothing new.
+//!
+//! Determinism: the envelope is applied ONCE per arm `RunSpec` at fleet
+//! setup (a pure function of the compiled workload, the envelope
+//! parameters, and the run duration), then shared by every device of the
+//! arm. Devices differ only through their seeds, exactly as before.
+//!
+//! No-op discipline: a flat envelope (factor ≡ 1) emits no events and
+//! rewrites every rate by ×1.0 (bit-identical f64), so the modulated
+//! run is byte-identical to the unmodulated one by construction —
+//! `fleet_rt::flat_envelope_is_byte_identical_noop` pins this. Rate
+//! events are only emitted when the factor actually changes for a
+//! session, because re-asserting an unchanged mode would re-arm its
+//! arrival timer and perturb the sequence.
+
+use crate::exec::{App, ArrivalMode, EventKind, SessionEvent};
+use anyhow::{bail, Context, Result};
+
+/// The load shape, as a multiplicative factor over base arrival rates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Envelope {
+    /// One sinusoidal day: factor swings `low → high → low` over
+    /// `period_ms` (starting at `low` at t = 0, peaking at half period).
+    Diurnal { period_ms: f64, low: f64, high: f64 },
+    /// A flash crowd: factor 1 everywhere except a raised-cosine pulse
+    /// of total width `width_ms` centered at `at_ms`, peaking at `mult`.
+    Flash { at_ms: f64, width_ms: f64, mult: f64 },
+}
+
+/// A fleet arrival envelope: the shape plus the step resolution at which
+/// it is compiled into discrete [`EventKind::Rate`] events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetEnvelope {
+    pub envelope: Envelope,
+    /// Piecewise-constant steps the run duration is divided into when
+    /// compiling the continuous shape to rate events.
+    pub steps: usize,
+}
+
+/// The factor never reaches zero: a zero rate would wedge arrival
+/// processes (`validate_mode` rejects non-positive rates for the same
+/// reason).
+const FACTOR_FLOOR: f64 = 0.01;
+
+impl FleetEnvelope {
+    /// Parse the CLI grammar:
+    /// `diurnal[:period=MS,low=F,high=F,steps=N]` |
+    /// `flash[:at=MS,width=MS,mult=F,steps=N]`.
+    /// Defaults: diurnal spans the run duration (period 0 = "one day per
+    /// run"), low 0.25, high 2.0; flash at half duration (at 0 = midpoint),
+    /// width a quarter duration (0 = duration/4), mult 4; steps 32.
+    pub fn parse(s: &str) -> Result<FleetEnvelope> {
+        let (kind, params) = match s.split_once(':') {
+            Some((k, p)) => (k, p),
+            None => (s, ""),
+        };
+        let mut kv = std::collections::BTreeMap::new();
+        for part in params.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("envelope param '{part}' is not k=v"))?;
+            let v: f64 = v.parse().with_context(|| format!("envelope param '{part}'"))?;
+            if !v.is_finite() {
+                bail!("envelope param '{part}' must be finite");
+            }
+            kv.insert(k.to_string(), v);
+        }
+        let get = |k: &str, default: f64| kv.get(k).copied().unwrap_or(default);
+        let steps = get("steps", 32.0);
+        if !(1.0..=100_000.0).contains(&steps) {
+            bail!("envelope steps must be in 1..=100000, got {steps}");
+        }
+        let env = match kind {
+            "diurnal" => {
+                let low = get("low", 0.25);
+                let high = get("high", 2.0);
+                if low <= 0.0 || high <= 0.0 {
+                    bail!("diurnal low/high must be positive");
+                }
+                Envelope::Diurnal { period_ms: get("period", 0.0), low, high }
+            }
+            "flash" => {
+                let mult = get("mult", 4.0);
+                if mult <= 0.0 {
+                    bail!("flash mult must be positive");
+                }
+                Envelope::Flash { at_ms: get("at", 0.0), width_ms: get("width", 0.0), mult }
+            }
+            other => bail!("unknown fleet scenario '{other}' (expected diurnal|flash)"),
+        };
+        Ok(FleetEnvelope { envelope: env, steps: steps as usize })
+    }
+
+    /// Human label for reports.
+    pub fn label(&self) -> String {
+        match &self.envelope {
+            Envelope::Diurnal { period_ms, low, high } => {
+                format!("diurnal(period={period_ms},low={low},high={high},steps={})", self.steps)
+            }
+            Envelope::Flash { at_ms, width_ms, mult } => {
+                format!("flash(at={at_ms},width={width_ms},mult={mult},steps={})", self.steps)
+            }
+        }
+    }
+
+    /// The envelope with its duration-relative defaults resolved against
+    /// an actual run horizon (period/at/width of 0 mean "derive from the
+    /// duration" — see [`FleetEnvelope::parse`]).
+    fn resolved(&self, duration_ms: f64) -> Envelope {
+        match self.envelope {
+            Envelope::Diurnal { period_ms, low, high } => Envelope::Diurnal {
+                period_ms: if period_ms > 0.0 { period_ms } else { duration_ms.max(1.0) },
+                low,
+                high,
+            },
+            Envelope::Flash { at_ms, width_ms, mult } => Envelope::Flash {
+                at_ms: if at_ms > 0.0 { at_ms } else { duration_ms * 0.5 },
+                width_ms: if width_ms > 0.0 { width_ms } else { (duration_ms * 0.25).max(1.0) },
+                mult,
+            },
+        }
+    }
+
+    /// The (resolved) arrival-rate factor at wall-clock `t`.
+    pub fn factor_at(&self, t: f64, duration_ms: f64) -> f64 {
+        let f = match self.resolved(duration_ms) {
+            Envelope::Diurnal { period_ms, low, high } => {
+                let phase = (t / period_ms) * std::f64::consts::TAU;
+                low + (high - low) * 0.5 * (1.0 - phase.cos())
+            }
+            Envelope::Flash { at_ms, width_ms, mult } => {
+                let d = t - at_ms;
+                if d.abs() < width_ms * 0.5 {
+                    let phase = (d / width_ms) * std::f64::consts::TAU;
+                    1.0 + (mult - 1.0) * 0.5 * (1.0 + phase.cos())
+                } else {
+                    1.0
+                }
+            }
+        };
+        f.max(FACTOR_FLOOR)
+    }
+
+    /// Compile the envelope onto a compiled workload in place: scale
+    /// every rate-driven arrival process by the factor at the time it
+    /// takes effect, and emit piecewise-constant re-rate events at step
+    /// boundaries where the factor changed. Closed-loop and replay
+    /// sessions are untouched (they have no rate to modulate).
+    pub fn apply(&self, apps: &mut [App], events: &mut Vec<SessionEvent>, duration_ms: f64) {
+        let n = apps.len();
+        // Session lifecycle from the existing event list: start time
+        // (0 unless a Start event admits it later), first stop time, and
+        // the chronological rate-change schedule per session.
+        let mut start = vec![0.0f64; n];
+        let mut stop = vec![f64::INFINITY; n];
+        let mut rates: Vec<Vec<(f64, ArrivalMode)>> = vec![Vec::new(); n];
+        for ev in events.iter() {
+            match &ev.kind {
+                EventKind::Start { session } if *session < n => start[*session] = ev.at_ms,
+                EventKind::Stop { session } if *session < n => {
+                    stop[*session] = stop[*session].min(ev.at_ms);
+                }
+                EventKind::Rate { session, mode } if *session < n => {
+                    rates[*session].push((ev.at_ms, mode.clone()));
+                }
+                _ => {}
+            }
+        }
+        for r in rates.iter_mut() {
+            r.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite event times"));
+        }
+        // Scale the initial modes (take effect at the session's start)
+        // and every existing rate event (takes effect at its own time).
+        for (s, app) in apps.iter_mut().enumerate() {
+            if let Some(m) = scale_mode(&app.mode, self.factor_at(start[s], duration_ms)) {
+                app.mode = m;
+            }
+        }
+        for ev in events.iter_mut() {
+            if let EventKind::Rate { mode, .. } = &mut ev.kind {
+                if let Some(m) = scale_mode(mode, self.factor_at(ev.at_ms, duration_ms)) {
+                    *mode = m;
+                }
+            }
+        }
+        // Step boundaries: emit a re-rate only where the factor actually
+        // changed since the session's last modulation point (start, a
+        // scenario rate change, or a previous boundary) — re-asserting an
+        // unchanged mode would re-arm the arrival timer, so a flat
+        // envelope must emit nothing.
+        let mut last_f: Vec<f64> =
+            (0..n).map(|s| self.factor_at(start[s], duration_ms)).collect();
+        let mut next_rate = vec![0usize; n];
+        for k in 1..self.steps {
+            let t = duration_ms * k as f64 / self.steps as f64;
+            let f = self.factor_at(t, duration_ms);
+            for s in 0..n {
+                // Scenario rate changes up to t reset the session's
+                // applied factor to the factor at their own time.
+                while next_rate[s] < rates[s].len() && rates[s][next_rate[s]].0 <= t {
+                    last_f[s] = self.factor_at(rates[s][next_rate[s]].0, duration_ms);
+                    next_rate[s] += 1;
+                }
+                if start[s] > t || stop[s] <= t || f == last_f[s] {
+                    continue;
+                }
+                // Base (unscaled) mode in force at t: the latest scenario
+                // rate change before t, else the declared app mode.
+                let base = rates[s][..next_rate[s]]
+                    .last()
+                    .map(|(_, m)| m)
+                    .unwrap_or(&apps[s].mode);
+                if let Some(m) = scale_mode(base, f) {
+                    events.push(SessionEvent {
+                        at_ms: t,
+                        kind: EventKind::Rate { session: s, mode: m },
+                    });
+                    last_f[s] = f;
+                }
+            }
+        }
+    }
+}
+
+/// Scale a rate-driven arrival mode by `f`; `None` for modes with no
+/// rate (closed loop, replay). A factor of exactly 1.0 returns the same
+/// numbers bit-for-bit (×1.0 and ÷1.0 are exact), which is what makes
+/// the flat envelope a byte-identical no-op.
+fn scale_mode(mode: &ArrivalMode, f: f64) -> Option<ArrivalMode> {
+    match mode {
+        ArrivalMode::Periodic(p) => Some(ArrivalMode::Periodic(p / f)),
+        ArrivalMode::Poisson(r) => Some(ArrivalMode::Poisson(r * f)),
+        ArrivalMode::Bursty { rate_rps, burst_factor, period_ms } => Some(ArrivalMode::Bursty {
+            rate_rps: rate_rps * f,
+            burst_factor: *burst_factor,
+            period_ms: *period_ms,
+        }),
+        ArrivalMode::ClosedLoop | ArrivalMode::Replay(_) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar_and_defaults() {
+        let d = FleetEnvelope::parse("diurnal").unwrap();
+        assert_eq!(d.steps, 32);
+        assert!(matches!(d.envelope, Envelope::Diurnal { period_ms, .. } if period_ms == 0.0));
+        let d = FleetEnvelope::parse("diurnal:period=60000,low=0.5,high=3,steps=8").unwrap();
+        assert_eq!(d.steps, 8);
+        assert_eq!(
+            d.envelope,
+            Envelope::Diurnal { period_ms: 60_000.0, low: 0.5, high: 3.0 }
+        );
+        let f = FleetEnvelope::parse("flash:at=5000,width=2000,mult=6").unwrap();
+        assert_eq!(f.envelope, Envelope::Flash { at_ms: 5000.0, width_ms: 2000.0, mult: 6.0 });
+        assert!(FleetEnvelope::parse("tsunami").is_err());
+        assert!(FleetEnvelope::parse("diurnal:low=0").is_err());
+        assert!(FleetEnvelope::parse("diurnal:bogus").is_err());
+    }
+
+    #[test]
+    fn diurnal_factor_swings_low_high_low() {
+        let e = FleetEnvelope::parse("diurnal:low=0.5,high=2").unwrap();
+        let d = 10_000.0;
+        assert!((e.factor_at(0.0, d) - 0.5).abs() < 1e-9);
+        assert!((e.factor_at(d / 2.0, d) - 2.0).abs() < 1e-9);
+        assert!((e.factor_at(d, d) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flash_factor_is_one_outside_the_pulse() {
+        let e = FleetEnvelope::parse("flash:at=5000,width=2000,mult=5").unwrap();
+        let d = 10_000.0;
+        assert_eq!(e.factor_at(0.0, d), 1.0);
+        assert_eq!(e.factor_at(3999.0, d), 1.0);
+        assert!((e.factor_at(5000.0, d) - 5.0).abs() < 1e-9);
+        assert_eq!(e.factor_at(6001.0, d), 1.0);
+    }
+
+    #[test]
+    fn apply_emits_rate_events_only_on_factor_change() {
+        let mut apps = vec![
+            App { model: "m".into(), slo_ms: None, mode: ArrivalMode::Poisson(10.0) },
+            App::closed_loop("m"),
+        ];
+        let mut events = Vec::new();
+        let e = FleetEnvelope::parse("diurnal:low=0.5,high=2,steps=4").unwrap();
+        e.apply(&mut apps, &mut events, 8_000.0);
+        // Initial Poisson scaled by factor(0) = low.
+        assert_eq!(apps[0].mode, ArrivalMode::Poisson(5.0));
+        // Closed loop untouched, and no rate events target it.
+        assert_eq!(apps[1].mode, ArrivalMode::ClosedLoop);
+        assert!(events
+            .iter()
+            .all(|ev| matches!(ev.kind, EventKind::Rate { session: 0, .. })));
+        // 3 interior boundaries, each with a changed factor for session 0.
+        assert_eq!(events.len(), 3);
+    }
+
+    #[test]
+    fn flat_envelope_emits_nothing_and_rescales_by_one() {
+        let mut apps = vec![App {
+            model: "m".into(),
+            slo_ms: Some(50.0),
+            mode: ArrivalMode::Periodic(33.0),
+        }];
+        let mut events = Vec::new();
+        let e = FleetEnvelope::parse("diurnal:low=1,high=1,steps=16").unwrap();
+        e.apply(&mut apps, &mut events, 5_000.0);
+        assert!(events.is_empty(), "flat envelope must add no events");
+        assert_eq!(apps[0].mode, ArrivalMode::Periodic(33.0));
+    }
+}

@@ -14,10 +14,12 @@
 //! seed for randomized mixes ([`gen`]), and every run can be recorded and
 //! replayed bit-for-bit on the sim backend ([`trace`]).
 
+pub mod envelope;
 pub mod gen;
 pub mod json;
 pub mod trace;
 
+pub use envelope::{Envelope, FleetEnvelope};
 pub use gen::{generate, GenConfig};
 pub use trace::RunTrace;
 

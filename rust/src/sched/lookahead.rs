@@ -16,7 +16,14 @@
 //! `decision_overhead_ms` delegates to the base policy, so simulated
 //! lookahead wins are net of placement quality only, not of the (real)
 //! cost of running k·beam forked simulations per decision. The bench
-//! suite's `lookahead` row tracks that wall-clock cost instead.
+//! suite's `lookahead` row tracks that wall-clock cost instead. To keep
+//! that cost flat at fleet scale, the driver does not deep-clone the
+//! backend per candidate: it keeps one persistent scratch snapshot per
+//! run and recycles it with
+//! [`fork_into`](crate::exec::ExecutionBackend::fork_into) (an in-place
+//! [`restore`](crate::exec::SimBackend::restore) when the slot already
+//! holds a sim backend), so a decision's k·beam rollouts reuse one
+//! allocation instead of minting k·beam deep copies.
 
 use super::{Assignment, ModelPlan, PendingTask, SchedCtx, Scheduler};
 use crate::soc::{ProcId, SocSpec};

@@ -119,6 +119,9 @@ pub struct SimSuiteEntry {
     /// evidence: batched `copies` must complete ≥ 1.5× the unbatched row
     /// at equal horizon).
     pub completed: u64,
+    /// Simulated devices per run — nonzero only for fleet rows, whose
+    /// headline figure is [`devices_per_sec`](SimSuiteEntry::devices_per_sec).
+    pub devices: u64,
 }
 
 impl SimSuiteEntry {
@@ -132,6 +135,12 @@ impl SimSuiteEntry {
     /// Driver events processed per wall-clock second.
     pub fn events_per_sec(&self) -> f64 {
         self.events as f64 * 1e9 / self.stats.median_ns
+    }
+
+    /// Devices simulated per wall-clock second (fleet rows only — the
+    /// fleet-scale throughput figure EXPERIMENTS.md §Population tracks).
+    pub fn devices_per_sec(&self) -> f64 {
+        self.devices as f64 * 1e9 / self.stats.median_ns
     }
 }
 
@@ -172,6 +181,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: 2_000.0,
             events: events.get(),
             completed: completed.get(),
+            devices: 0,
         });
     }
     // Scaling with concurrency (the Table 7 stress path).
@@ -192,6 +202,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: 1_000.0,
             events: events.get(),
             completed: completed.get(),
+            devices: 0,
         });
     }
     // Batching throughput (ISSUE 5): 8 closed-loop copies of one model,
@@ -236,6 +247,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
                 sim_ms: 1_000.0,
                 events: events.get(),
                 completed: completed.get(),
+                devices: 0,
             });
         }
     }
@@ -274,6 +286,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: 1_000.0,
             events: events.get(),
             completed: completed.get(),
+            devices: 0,
         });
     }
     // Lookahead rollout cost (ISSUE 7): the same churn scenario under
@@ -313,6 +326,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: 1_000.0,
             events: events.get(),
             completed: completed.get(),
+            devices: 0,
         });
     }
     // Fault-layer churn (ISSUE 8): the same churn scenario under a heavy
@@ -353,6 +367,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: 1_000.0,
             events: events.get(),
             completed: completed.get(),
+            devices: 0,
         });
     }
     // Adaptive re-partitioning (ISSUE 9): the phase_shift scenario with
@@ -391,6 +406,7 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: 1_000.0,
             events: events.get(),
             completed: completed.get(),
+            devices: 0,
         });
     }
     // Fleet throughput: a sharded device population per measured run
@@ -404,6 +420,8 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             devices,
             seed: 42,
             cfg: SimConfig { duration_ms: 500.0, ..Default::default() },
+            population: None,
+            envelope: None,
         };
         let name = format!("fleet_0.5s/{devices}dev_{workers}w");
         let events = Cell::new(0u64);
@@ -420,6 +438,49 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
             sim_ms: devices as f64 * 500.0,
             events: events.get(),
             completed: completed.get(),
+            devices: devices as u64,
+        });
+    }
+    // Fleet at scale: one timed 10k-device streaming run. Single-shot —
+    // this is a macro row whose headline is devices per wall-second (the
+    // figure the CI fleet smoke tracks), and batching a multi-second run
+    // under the micro budget would only repeat the same deterministic
+    // work. Per-device work is cut to one request over a short horizon so
+    // the row measures fleet machinery (claiming, streaming fold), not
+    // raw sim depth.
+    {
+        use crate::fleet::{run_fleet, ArmSpec, FleetSpec};
+        let (devices, workers) = (10_000usize, 2usize);
+        let spec = FleetSpec {
+            arms: vec![ArmSpec::new("dimensity9000", "adms", "frs")],
+            devices,
+            seed: 42,
+            cfg: SimConfig {
+                duration_ms: 100.0,
+                max_requests: Some(1),
+                ..Default::default()
+            },
+            population: None,
+            envelope: None,
+        };
+        let name = format!("fleet_10k/{workers}w");
+        let t = Instant::now();
+        let r = run_fleet(&spec, workers).expect("fleet 10k bench run");
+        let ns = t.elapsed().as_secs_f64() * 1e9;
+        let stats = Stats { iters: 1, min_ns: ns, median_ns: ns, mean_ns: ns, p95_ns: ns };
+        println!(
+            "{:<44} {:>12} single-shot  ({} devices)",
+            format!("sim/{name}"),
+            fmt_ns(ns),
+            devices
+        );
+        entries.push(SimSuiteEntry {
+            name,
+            stats,
+            sim_ms: devices as f64 * 100.0,
+            events: r.total.events,
+            completed: r.total.completed,
+            devices: devices as u64,
         });
     }
     b.finish();
@@ -431,8 +492,13 @@ pub fn run_sim_suite() -> (f64, Vec<SimSuiteEntry>) {
 /// drift apart.
 pub fn print_sim_suite(entries: &[SimSuiteEntry]) {
     for e in entries {
+        let devs = if e.devices > 0 {
+            format!("   {:.0} dev/s", e.devices_per_sec())
+        } else {
+            String::new()
+        };
         println!(
-            "{:<28} {:>12.0} sim-ms/wall-s   {:>12.0} events/s   {:>8} completed",
+            "{:<28} {:>12.0} sim-ms/wall-s   {:>12.0} events/s   {:>8} completed{devs}",
             e.name,
             e.sim_ms_per_wall_s(),
             e.events_per_sec(),
@@ -448,7 +514,7 @@ pub fn sim_suite_json(budget_ms: f64, entries: &[SimSuiteEntry]) -> crate::util:
     let rows = entries
         .iter()
         .map(|e| {
-            Json::obj(vec![
+            let mut pairs = vec![
                 ("name", Json::Str(e.name.clone())),
                 ("iters", Json::Num(e.stats.iters as f64)),
                 ("median_ns", Json::Num(e.stats.median_ns)),
@@ -459,7 +525,13 @@ pub fn sim_suite_json(budget_ms: f64, entries: &[SimSuiteEntry]) -> crate::util:
                 ("events", Json::Num(e.events as f64)),
                 ("events_per_sec", Json::Num(e.events_per_sec())),
                 ("completed", Json::Num(e.completed as f64)),
-            ])
+            ];
+            // Only fleet rows count devices; other rows keep their bytes.
+            if e.devices > 0 {
+                pairs.push(("devices", Json::Num(e.devices as f64)));
+                pairs.push(("devices_per_sec", Json::Num(e.devices_per_sec())));
+            }
+            Json::obj(pairs)
         })
         .collect();
     Json::obj(vec![

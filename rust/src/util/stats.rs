@@ -4,6 +4,128 @@
 //! enough that a full sketch (t-digest) is unnecessary.
 
 use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An exact f64 accumulator (Shewchuk partials, the `math.fsum`
+/// algorithm): `add` maintains a list of non-overlapping partials whose
+/// real-number sum is exactly the sum of everything ever added, and
+/// [`ExactSum::value`] rounds that exact sum once. Because f64 addition
+/// of non-overlapping partials is exact, both `add` and [`ExactSum::merge`]
+/// commute: the rounded value is a function of the *mathematical* sum
+/// alone, independent of insertion and merge order. This is what lets
+/// the fleet layer fold device metrics in whatever order dynamic work
+/// claiming completes them and still emit byte-identical reports.
+///
+/// Non-finite inputs (never produced by the sim in practice) fall out of
+/// the exact path into a sticky IEEE accumulator so `value()` still
+/// terminates with the conventional inf/NaN result.
+#[derive(Debug, Default)]
+pub struct ExactSum {
+    partials: Vec<f64>,
+    special: f64,
+}
+
+impl ExactSum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An accumulator holding exactly `x`.
+    pub fn from_value(x: f64) -> Self {
+        let mut s = Self::new();
+        s.add(x);
+        s
+    }
+
+    /// Add one observation exactly (Shewchuk's grow-expansion step).
+    pub fn add(&mut self, mut x: f64) {
+        if !x.is_finite() {
+            self.special += x;
+            return;
+        }
+        let mut i = 0;
+        for j in 0..self.partials.len() {
+            let mut y = self.partials[j];
+            if x.abs() < y.abs() {
+                std::mem::swap(&mut x, &mut y);
+            }
+            let hi = x + y;
+            let lo = y - (hi - x);
+            if lo != 0.0 {
+                self.partials[i] = lo;
+                i += 1;
+            }
+            x = hi;
+        }
+        self.partials.truncate(i);
+        self.partials.push(x);
+    }
+
+    /// Fold another accumulator in. Each of `other`'s partials is added
+    /// exactly, so merging is associative and commutative over the real
+    /// sums — worker partials can combine in any order.
+    pub fn merge(&mut self, other: &ExactSum) {
+        for &p in &other.partials {
+            self.add(p);
+        }
+        self.special += other.special;
+    }
+
+    /// The exact sum rounded once to f64 (round-half-even corrected, as
+    /// in CPython's `math.fsum`): a pure function of the mathematical
+    /// sum, hence independent of add/merge order.
+    pub fn value(&self) -> f64 {
+        if self.special != 0.0 || self.special.is_nan() {
+            return self.special + self.partials.iter().sum::<f64>();
+        }
+        let p = &self.partials;
+        if p.is_empty() {
+            return 0.0;
+        }
+        let mut n = p.len() - 1;
+        let mut hi = p[n];
+        let mut lo = 0.0;
+        while n > 0 {
+            let x = hi;
+            n -= 1;
+            let y = p[n];
+            hi = x + y;
+            let yr = hi - x;
+            lo = y - yr;
+            if lo != 0.0 {
+                break;
+            }
+        }
+        // Round-half-even correction: if the discarded tail is exactly
+        // half an ulp and the next partial pushes it past, bump `hi`.
+        if n > 0 && ((lo < 0.0 && p[n - 1] < 0.0) || (lo > 0.0 && p[n - 1] > 0.0)) {
+            let y = lo * 2.0;
+            let x = hi + y;
+            if y == x - hi {
+                hi = x;
+            }
+        }
+        hi
+    }
+}
+
+impl Clone for ExactSum {
+    fn clone(&self) -> Self {
+        ExactSum { partials: self.partials.clone(), special: self.special }
+    }
+    fn clone_from(&mut self, src: &Self) {
+        self.partials.clone_from(&src.partials);
+        self.special = src.special;
+    }
+}
+
+/// Equality of the *rounded exact sums* — two accumulators that held the
+/// same mathematical total compare equal no matter how it was split.
+impl PartialEq for ExactSum {
+    fn eq(&self, other: &Self) -> bool {
+        self.value() == other.value()
+    }
+}
 
 /// Online mean/variance (Welford) plus a sample reservoir for percentiles.
 #[derive(Debug, Clone)]
@@ -176,11 +298,16 @@ const DIGEST_BINS: usize = DIGEST_DECADES * DIGEST_PER_DECADE + 2;
 /// so a fleet of per-device digests merges into per-arm and fleet-wide
 /// percentiles at a fixed 130-bucket footprint per metric.
 ///
-/// Determinism: `merge` is exact for the integer fields; the f64 `sum`
-/// accumulates in call order, so callers that need bit-identical results
-/// across thread counts must merge in a fixed order (the fleet layer
-/// merges by device id, never by completion order).
-#[derive(Debug, Clone, PartialEq)]
+/// Determinism: every field merges order-independently. Bin counts,
+/// populations, and extrema are exact u64 / min / max folds, and the
+/// f64 `sum` is an [`ExactSum`], so `merge` commutes bit-exactly — the
+/// fleet layer may fold device digests in whatever order its dynamic
+/// work-claiming completes them and still report identical bytes.
+///
+/// Live instances are counted in a process-wide gauge
+/// ([`digest_live`] / [`digest_peak`]) so the fleet's O(arms × workers)
+/// memory claim is testable, not aspirational.
+#[derive(Debug, PartialEq)]
 pub struct Digest {
     counts: Vec<u64>,
     /// Observations represented in the histogram (reservoir-bounded when
@@ -188,9 +315,64 @@ pub struct Digest {
     hist_n: u64,
     /// True population size (may exceed `hist_n` for subsampled sources).
     count: u64,
-    sum: f64,
+    sum: ExactSum,
     min: f64,
     max: f64,
+}
+
+static DIGEST_LIVE: AtomicU64 = AtomicU64::new(0);
+static DIGEST_PEAK: AtomicU64 = AtomicU64::new(0);
+
+fn digest_track_new() {
+    let live = DIGEST_LIVE.fetch_add(1, Ordering::Relaxed) + 1;
+    DIGEST_PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+/// Digest instances currently alive in this process.
+pub fn digest_live() -> u64 {
+    DIGEST_LIVE.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`digest_live`] since process start (or the last
+/// [`digest_peak_reset`]). The fleet memory test asserts this stays
+/// O(arms × workers) through a streaming run, devices notwithstanding.
+pub fn digest_peak() -> u64 {
+    DIGEST_PEAK.load(Ordering::Relaxed)
+}
+
+/// Reset the high-water mark to the current live count (test scaffolding;
+/// concurrent digest creation keeps the gauge conservative, never low).
+pub fn digest_peak_reset() {
+    DIGEST_PEAK.store(DIGEST_LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+impl Clone for Digest {
+    fn clone(&self) -> Self {
+        digest_track_new();
+        Digest {
+            counts: self.counts.clone(),
+            hist_n: self.hist_n,
+            count: self.count,
+            sum: self.sum.clone(),
+            min: self.min,
+            max: self.max,
+        }
+    }
+    fn clone_from(&mut self, src: &Self) {
+        // Recycles allocations and does not mint a new instance.
+        self.counts.clone_from(&src.counts);
+        self.hist_n = src.hist_n;
+        self.count = src.count;
+        self.sum.clone_from(&src.sum);
+        self.min = src.min;
+        self.max = src.max;
+    }
+}
+
+impl Drop for Digest {
+    fn drop(&mut self) {
+        DIGEST_LIVE.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl Default for Digest {
@@ -201,11 +383,12 @@ impl Default for Digest {
 
 impl Digest {
     pub fn new() -> Self {
+        digest_track_new();
         Digest {
             counts: vec![0; DIGEST_BINS],
             hist_n: 0,
             count: 0,
-            sum: 0.0,
+            sum: ExactSum::new(),
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
         }
@@ -236,7 +419,7 @@ impl Digest {
         self.counts[Self::bin(x)] += 1;
         self.hist_n += 1;
         self.count += 1;
-        self.sum += x;
+        self.sum.add(x);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
     }
@@ -253,21 +436,24 @@ impl Digest {
             d.hist_n += 1;
         }
         d.count = s.count();
-        d.sum = if s.count() == 0 { 0.0 } else { s.sum() };
+        if s.count() > 0 {
+            d.sum.add(s.sum());
+        }
         d.min = s.min();
         d.max = s.max();
         d
     }
 
-    /// Fold `other` into `self`. Bin counts and populations add exactly;
-    /// see the type docs for the f64-ordering caveat.
+    /// Fold `other` into `self`. Every field folds order-independently
+    /// (exact u64 adds, min/max, [`ExactSum::merge`]), so merges commute
+    /// bit-exactly — see the type docs.
     pub fn merge(&mut self, other: &Digest) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
         self.hist_n += other.hist_n;
         self.count += other.count;
-        self.sum += other.sum;
+        self.sum.merge(&other.sum);
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
@@ -294,7 +480,7 @@ impl Digest {
         if self.count == 0 {
             f64::NAN
         } else {
-            self.sum / self.count as f64
+            self.sum.value() / self.count as f64
         }
     }
     pub fn min(&self) -> f64 {
@@ -342,10 +528,23 @@ impl Digest {
 
 /// A fixed-interval time series used for power / temperature traces
 /// (paper Figs 11 and 12).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct TimeSeries {
     pub times: Vec<f64>,
     pub values: Vec<f64>,
+}
+
+impl Clone for TimeSeries {
+    fn clone(&self) -> Self {
+        TimeSeries { times: self.times.clone(), values: self.values.clone() }
+    }
+    /// Field-wise `clone_from` so snapshot restores (`SimBackend::restore`,
+    /// the lookahead scratch fork) recycle the series' buffers instead of
+    /// reallocating them.
+    fn clone_from(&mut self, src: &Self) {
+        self.times.clone_from(&src.times);
+        self.values.clone_from(&src.values);
+    }
 }
 
 impl TimeSeries {
@@ -555,6 +754,83 @@ mod tests {
         let e = Digest::from_summary(&Summary::new());
         assert!(e.is_empty());
         assert!(e.p50().is_nan());
+    }
+
+    #[test]
+    fn exact_sum_is_order_and_split_independent() {
+        // Adversarial magnitudes: naive left-to-right f64 folds of these
+        // give different results under reordering; ExactSum must not.
+        let xs = [
+            1e16, 1.0, -1e16, 1e-8, 0.1, 3.0, -0.3, 1e9, 7e-12, -1e9, 2.5e7, 0.7,
+        ];
+        let mut fwd = ExactSum::new();
+        for &x in &xs {
+            fwd.add(x);
+        }
+        let mut rev = ExactSum::new();
+        for &x in xs.iter().rev() {
+            rev.add(x);
+        }
+        assert_eq!(fwd.value().to_bits(), rev.value().to_bits());
+        assert_eq!(fwd, rev);
+        // Arbitrary splits merged in arbitrary order hit the same bits.
+        let mut a = ExactSum::new();
+        let mut b = ExactSum::new();
+        let mut c = ExactSum::new();
+        for (i, &x) in xs.iter().enumerate() {
+            [&mut a, &mut b, &mut c][i % 3].add(x);
+        }
+        let mut m1 = a.clone();
+        m1.merge(&b);
+        m1.merge(&c);
+        let mut m2 = c.clone();
+        m2.merge(&a);
+        m2.merge(&b);
+        assert_eq!(m1.value().to_bits(), fwd.value().to_bits());
+        assert_eq!(m2.value().to_bits(), fwd.value().to_bits());
+        // And the rounding is exact where f64 can represent the truth.
+        let mut s = ExactSum::new();
+        for _ in 0..10 {
+            s.add(0.1);
+        }
+        assert_eq!(s.value(), 1.0, "fsum(0.1 × 10) is exactly 1.0");
+    }
+
+    #[test]
+    fn digest_merge_order_is_bit_exact_on_the_sum() {
+        // The fleet's streaming fold merges device digests in completion
+        // order (racy); the arm digest must not care.
+        let mut parts: Vec<Digest> = Vec::new();
+        for d in 0..7 {
+            let mut g = Digest::new();
+            for i in 0..50 {
+                g.add(((d * 50 + i) as f64).sin().abs() * 40.0 + 0.02);
+            }
+            parts.push(g);
+        }
+        let mut fwd = Digest::new();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = Digest::new();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.mean().to_bits(), rev.mean().to_bits());
+    }
+
+    #[test]
+    fn digest_live_gauge_tracks_creation_and_drop() {
+        // Concurrent tests also mint digests, so use a population large
+        // enough (1000) that the gauge's movement is unambiguous.
+        let before = digest_live();
+        let held: Vec<Digest> = (0..1000).map(|_| Digest::new()).collect();
+        let while_held = digest_live();
+        assert!(while_held >= before + 1000);
+        assert!(digest_peak() >= while_held);
+        drop(held);
+        assert!(digest_live() + 1000 <= while_held + 64, "drops must be counted");
     }
 
     #[test]

@@ -1,9 +1,15 @@
-//! Fleet-layer integration tests: shard-order independence of the digest
-//! merge (the ISSUE-4 acceptance bar), arm assignment, and conservation
-//! of the merged counters.
+//! Fleet-layer integration tests: shard-order independence of the
+//! streaming fold (the ISSUE-4 / PR-10 acceptance bars), arm assignment,
+//! conservation of the merged counters, the streaming-vs-materialized
+//! referee, and the O(arms × workers) live-digest memory bound.
 
 use adms::exec::SimConfig;
-use adms::fleet::{device_seed, run_fleet, run_tournament, ArmSpec, FleetSpec, TournamentSpec};
+use adms::fleet::{
+    device_seed, run_fleet, run_fleet_materialized, run_fleet_opts, run_tournament, ArmSpec,
+    FleetOptions, FleetSpec, PopulationSpec, TournamentSpec,
+};
+use adms::scenario::FleetEnvelope;
+use adms::util::stats::{digest_peak, digest_peak_reset};
 
 fn small_fleet() -> FleetSpec {
     FleetSpec {
@@ -25,6 +31,8 @@ fn small_fleet() -> FleetSpec {
             max_requests: Some(6),
             ..SimConfig::default()
         },
+        population: None,
+        envelope: None,
     }
 }
 
@@ -41,10 +49,78 @@ fn fleet_report_is_bit_identical_across_worker_counts() {
     let j1 = r1.to_json().to_pretty();
     let j8 = r8.to_json().to_pretty();
     assert!(r1.total.issued > 0, "fleet simulated no work");
-    assert_eq!(j1, j8, "digest merge depends on worker count");
-    // A middle worker count agrees too (different shard boundaries).
+    assert_eq!(j1, j8, "streaming fold depends on worker count");
+    // A middle worker count agrees too (different claim interleavings),
+    // as does an adversarially tiny claim chunk (maximum interleaving).
     let r3 = run_fleet(&spec, 3).unwrap();
     assert_eq!(j1, r3.to_json().to_pretty());
+    let opts = FleetOptions { progress: false, chunk: 1 };
+    let rc = run_fleet_opts(&spec, 5, &opts).unwrap();
+    assert_eq!(j1, rc.to_json().to_pretty(), "claim-chunk size leaked into the report");
+}
+
+/// PR-10 tentpole referee: the streaming fold (dynamic claiming, per-arm
+/// exact accumulators, worker partial merge) produces byte-identical
+/// `FleetReport` JSON to the old materialize-then-fold-in-device-order
+/// implementation, at 1k devices, for 1 / 3 / 8 workers — with lookahead
+/// (live rollouts) and adaptive arms in the mix. And the streaming path
+/// really is streaming: the live-digest high-water mark stays
+/// O(arms × workers), nowhere near O(devices), while the materialized
+/// referee demonstrably pays O(devices).
+#[test]
+fn streaming_fold_matches_materialized_referee_at_1k_devices() {
+    let spec = FleetSpec {
+        arms: vec![
+            ArmSpec::new("dimensity9000", "adms", "frs"),
+            ArmSpec::new("kirin970", "lookahead", "scenario:frs_burst"),
+            ArmSpec::new("dimensity9000", "adms", "frs").adaptive("reactive"),
+        ],
+        devices: 1_000,
+        seed: 77,
+        cfg: SimConfig {
+            duration_ms: 200.0,
+            max_requests: Some(2),
+            // Live rollouts in the lookahead arm, not the degenerate
+            // wrapper.
+            lookahead_horizon: 2,
+            lookahead_beam: 2,
+            ..SimConfig::default()
+        },
+        population: None,
+        envelope: None,
+    };
+    digest_peak_reset();
+    let r1 = run_fleet(&spec, 1).unwrap();
+    let r3 = run_fleet(&spec, 3).unwrap();
+    let r8 = run_fleet(&spec, 8).unwrap();
+    let peak_streaming = digest_peak();
+    let j1 = r1.to_json().to_pretty();
+    assert_eq!(j1, r3.to_json().to_pretty(), "streaming fold varies with 3 workers");
+    assert_eq!(j1, r8.to_json().to_pretty(), "streaming fold varies with 8 workers");
+    // Memory bound: 3 arms × ≤8 workers = 24 live worker-agg digests,
+    // plus transient per-device digests in flight, report assembly, and
+    // whatever concurrently-running tests hold. 512 is an order of
+    // magnitude of slack over all of that — and still half the device
+    // count, which is what O(arms × workers) vs O(devices) means here.
+    assert!(
+        peak_streaming <= 512,
+        "streaming fleet peaked at {peak_streaming} live digests for {} devices",
+        spec.devices
+    );
+    // The referee materializes every device digest before folding, so it
+    // must drive the same gauge past the device count — proof the gauge
+    // measures what the bound above claims.
+    let rm = run_fleet_materialized(&spec).unwrap();
+    assert!(
+        digest_peak() >= spec.devices as u64,
+        "materialized referee never held {} digests — gauge broken?",
+        spec.devices
+    );
+    assert_eq!(
+        j1,
+        rm.to_json().to_pretty(),
+        "streaming fold diverged from the materialized device-order referee"
+    );
 }
 
 /// A different fleet seed changes per-device seeds (and so, generically,
@@ -98,12 +174,113 @@ fn fleet_arm_assignment_and_conservation() {
     );
     // Energy flows up from the (tail-window-fixed) sim backend: every
     // device ran ≥ 1.2 simulated seconds at ≥ idle power.
-    assert!(r.total.energy_j > 0.0);
+    assert!(r.total.energy_j() > 0.0);
     assert!(r.total.latency.count() > 0);
     // The batched arm really ran (its per-arm override reached the
     // devices) and labels itself as batched.
     assert!(r.arms[3].spec.label().contains("batch 3"), "{}", r.arms[3].spec.label());
     assert!(r.arms[3].agg.completed > 0, "batched arm completed nothing");
+}
+
+/// A degenerate population — no SoC override, no ambient override, zero
+/// jitter — is a byte-identical no-op, and so is a single-SoC mix naming
+/// exactly the arms' own preset. The jitter path must not so much as
+/// touch `cfg.ambient_c` / `cfg.bg_load`.
+#[test]
+fn degenerate_population_is_byte_identical_noop() {
+    // Conditions-only spec with everything at defaults, on the full
+    // mixed-SoC fleet.
+    let base = small_fleet();
+    let j_base = run_fleet(&base, 3).unwrap().to_json();
+    let mut quiet = small_fleet();
+    quiet.population = Some(PopulationSpec::uniform(&[]));
+    let j_quiet = run_fleet(&quiet, 3).unwrap().to_json();
+    // The report records the population block, so compare the simulated
+    // substance (arms + total), not the record of what was configured.
+    assert_eq!(j_base.get("arms"), j_quiet.get("arms"), "empty population changed results");
+    assert_eq!(j_base.get("total"), j_quiet.get("total"));
+    // Single-SoC mix equal to the arms' own preset, homogeneous fleet.
+    let homog = FleetSpec {
+        arms: vec![
+            ArmSpec::new("dimensity9000", "adms", "frs"),
+            ArmSpec::new("dimensity9000", "band", "scenario:frs_burst"),
+        ],
+        devices: 6,
+        seed: 5,
+        cfg: SimConfig { duration_ms: 800.0, max_requests: Some(4), ..SimConfig::default() },
+        population: None,
+        envelope: None,
+    };
+    let j_none = run_fleet(&homog, 2).unwrap().to_json();
+    let mut same_mix = homog.clone();
+    same_mix.population = Some(PopulationSpec::uniform(&["dimensity9000"]));
+    let j_mix = run_fleet(&same_mix, 2).unwrap().to_json();
+    assert_eq!(j_none.get("arms"), j_mix.get("arms"), "identity SoC mix changed results");
+    assert_eq!(j_none.get("total"), j_mix.get("total"));
+}
+
+/// A real population — SoC mix over every preset plus ambient and
+/// background-load jitter — changes the results (the heterogeneity
+/// reaches the devices), stays worker-count byte-deterministic, and the
+/// sampled conditions show up in the report record.
+#[test]
+fn population_heterogeneity_is_effective_and_deterministic() {
+    let mut spec = small_fleet();
+    let mut pop = PopulationSpec::parse_mix("all").unwrap();
+    pop.ambient_mean_c = Some(32.0);
+    pop.ambient_jitter_c = 8.0;
+    pop.bg_mean = 0.25;
+    pop.bg_jitter = 0.2;
+    pop.validate().unwrap();
+    spec.population = Some(pop);
+    let r2 = run_fleet(&spec, 2).unwrap();
+    let r7 = run_fleet(&spec, 7).unwrap();
+    assert_eq!(
+        r2.to_json().to_pretty(),
+        r7.to_json().to_pretty(),
+        "population sampling depends on sharding"
+    );
+    let plain = run_fleet(&small_fleet(), 2).unwrap();
+    assert_ne!(
+        r2.to_json().get("total"),
+        plain.to_json().get("total"),
+        "population heterogeneity had no effect on any device"
+    );
+    // The record block is present and labeled.
+    assert_ne!(r2.to_json().get("population"), &adms::util::json::Json::Null);
+    assert!(r2.population.as_ref().unwrap().label().contains("bg 0.25"));
+}
+
+/// A flat fleet envelope (diurnal with low = high = 1) emits no events
+/// and rescales nothing: results are byte-identical to no envelope at
+/// all. A real flash-crowd envelope moves the open-loop arms.
+#[test]
+fn fleet_envelope_noop_and_effect() {
+    let base = small_fleet();
+    let j_base = run_fleet(&base, 3).unwrap().to_json();
+    let mut flat = small_fleet();
+    flat.envelope = Some(FleetEnvelope::parse("diurnal:low=1,high=1").unwrap());
+    let j_flat = run_fleet(&flat, 3).unwrap().to_json();
+    assert_eq!(j_base.get("arms"), j_flat.get("arms"), "flat envelope changed results");
+    assert_eq!(j_base.get("total"), j_flat.get("total"));
+    // A 6× flash crowd over the middle of the horizon: the bursty
+    // scenario arm's arrival rate really moves.
+    let mut flash = small_fleet();
+    flash.envelope = Some(FleetEnvelope::parse("flash:at=400,width=600,mult=6").unwrap());
+    let rf2 = run_fleet(&flash, 2).unwrap();
+    let rf5 = run_fleet(&flash, 5).unwrap();
+    assert_eq!(
+        rf2.to_json().to_pretty(),
+        rf5.to_json().to_pretty(),
+        "envelope application depends on sharding"
+    );
+    assert_ne!(
+        rf2.to_json().get("total"),
+        j_base.get("total"),
+        "flash envelope had no effect on any arrival process"
+    );
+    let label = rf2.envelope.as_deref().unwrap();
+    assert!(label.starts_with("flash(at=400,width=600,mult=6"), "{label}");
 }
 
 /// Tournament determinism (ISSUE 7): the same `TournamentSpec` —
@@ -176,4 +353,7 @@ fn fleet_degenerate_shapes() {
     let mut bad = small_fleet();
     bad.arms[0].workload = "definitely_not_a_workload".into();
     assert!(run_fleet(&bad, 2).is_err());
+    let mut bad_pop = small_fleet();
+    bad_pop.population = Some(PopulationSpec::uniform(&["not_a_soc"]));
+    assert!(run_fleet(&bad_pop, 2).is_err());
 }

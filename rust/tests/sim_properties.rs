@@ -837,6 +837,32 @@ fn prop_fork_is_byte_identical() {
             apply(&mut restored, op);
         }
         assert_eq!(finish(restored), want, "restore() failed to rewind the perturbation");
+
+        // fork_into(): the persistent rollout scratch slot (ISSUE 10).
+        // Fill the slot from a *different* backend's state, dirty it
+        // further, then fork_into from the snapshot — the recycled
+        // in-place restore must land byte-identical to a fresh fork, or
+        // rollout candidate #2 would inherit candidate #1's residue.
+        let mut scratch: Option<Box<dyn ExecutionBackend>> = None;
+        let mut decoy = SimBackend::new(soc.clone(), cfg.clone());
+        for op in &ops[..split / 2] {
+            apply(&mut decoy, op);
+        }
+        assert!(ExecutionBackend::fork_into(&decoy, &mut scratch), "sim backend must fork_into");
+        let _ = scratch.as_mut().unwrap().next_event();
+        assert!(
+            ExecutionBackend::fork_into(&snapshot, &mut scratch),
+            "dirty scratch must be recyclable"
+        );
+        let mut reused = scratch.expect("fork_into(true) fills the slot");
+        for op in &ops[split..] {
+            apply(reused.as_mut(), op);
+        }
+        assert_eq!(
+            format!("{:?}", reused.finish(cfg.duration_ms)),
+            want,
+            "dirty-scratch fork_into diverged from a fresh fork"
+        );
     });
 }
 
